@@ -1,0 +1,103 @@
+//! End-to-end serving driver (the repository's E2E validation):
+//!
+//!     make artifacts && cargo run --release --example edge_serving
+//!
+//! Loads the AOT'd demo CNN (JAX/Pallas -> HLO text -> PJRT), serves a
+//! batch of real inference requests through the coordinator's queue on
+//! XLA-CPU — measuring wall-clock latency/throughput — and runs the same
+//! workload through the simulated GAP-8 edge fleet for on-device
+//! latency/energy. Every response is verified bit-exact against the rust
+//! golden model.
+
+use pulpnn_mp::coordinator::{gap8_fleet, server, Policy, Server, Workload};
+use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
+use pulpnn_mp::kernels::netrun::GapBackend;
+use pulpnn_mp::qnn::network::demo_cnn;
+use pulpnn_mp::qnn::tensor::QTensor;
+use pulpnn_mp::runtime::{Manifest, Runtime};
+use pulpnn_mp::util::rng::Rng;
+
+const N_REQUESTS: usize = 64;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let artifact = manifest.find("demo_cnn_mixed").expect("demo artifact");
+    let net = demo_cnn().materialize().unwrap();
+
+    // --- phase 1: real inference over PJRT through the serving queue ---
+    let mut rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let t0 = std::time::Instant::now();
+    let mut srv = Server::new(&mut rt, artifact, 256)?;
+    println!("compiled demo CNN in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    // generate request inputs (each a random packed image) + goldens
+    let inputs: Vec<(u64, QTensor)> = (0..N_REQUESTS as u64)
+        .map(|id| {
+            let mut rng = Rng::new(1000 + id);
+            (id, QTensor::random(&mut rng, net.spec.input, net.spec.input_bits))
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    for (id, x) in &inputs {
+        assert!(srv.submit(*id, x.data.clone()), "queue overflow");
+    }
+    let served = srv.drain()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server::stats(&served, wall);
+    println!("\nserved {} requests over PJRT (XLA-CPU):", stats.served);
+    println!("  throughput : {:.1} req/s", stats.throughput_rps);
+    println!("  mean exec  : {:.2} ms", stats.mean_exec_us / 1e3);
+    println!("  p99 exec   : {:.2} ms", stats.p99_exec_us / 1e3);
+
+    // verify every response against the rust golden model
+    for ((id, x), s) in inputs.iter().zip(&served) {
+        assert_eq!(*id, s.id);
+        let want = net.forward_golden(x).logits.unwrap();
+        let got = s.output.as_logits().expect("logits");
+        assert_eq!(got, want.as_slice(), "request {id}: PJRT != golden");
+    }
+    println!("  all {} responses bit-exact vs the golden model ✓", served.len());
+
+    // --- phase 2: the same workload on the simulated edge fleet ---
+    let mut rng = Rng::new(9);
+    let x = QTensor::random(&mut rng, net.spec.input, net.spec.input_bits);
+    let sim = GapBackend::default().run(&net, &x);
+    println!(
+        "\nsimulated GAP-8 (8 cores): {} cycles/inference = {:.2} ms LP / {:.2} ms HP",
+        sim.total_cycles,
+        GAP8_LP.time_ms(sim.total_cycles),
+        GAP8_HP.time_ms(sim.total_cycles)
+    );
+
+    let mut fleet = gap8_fleet(4, GAP8_LP, sim.total_cycles, Policy::EnergyAware);
+    for (i, d) in fleet.devices.iter_mut().enumerate() {
+        if i % 2 == 1 {
+            d.op = GAP8_HP;
+        }
+    }
+    let reqs = Workload {
+        rate_per_s: 150.0,
+        deadline_us: Some(40_000.0),
+        n_requests: 2000,
+        seed: 7,
+    }
+    .generate();
+    let report = fleet.run(&reqs);
+    println!("\nedge fleet (2x LP + 2x HP, energy-aware routing, 150 rps, 40 ms deadline):");
+    println!("  throughput     : {:.1} req/s", report.throughput_rps);
+    println!("  mean latency   : {:.2} ms", report.mean_latency_us / 1e3);
+    println!("  p99 latency    : {:.2} ms", report.p99_latency_us / 1e3);
+    println!("  energy         : {:.2} mJ total", report.total_energy_uj / 1e3);
+    println!("  deadline misses: {}", report.deadline_misses);
+    println!("  per-device     : {:?}", report.per_device_served);
+    Ok(())
+}

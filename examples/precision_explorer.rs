@@ -1,0 +1,75 @@
+//! Precision design-space explorer: for a user-specified layer shape,
+//! sweep all 27 precision permutations and report the
+//! footprint / throughput / energy Pareto view the paper's mixed-precision
+//! argument rests on.
+//!
+//!     cargo run --release --example precision_explorer -- [H W Cin Cout K]
+
+use pulpnn_mp::energy::GAP8_LP;
+use pulpnn_mp::kernels::{conv_parallel, ConvKernel, GAP8_TCDM_BANKS};
+use pulpnn_mp::qnn::layer::ConvSpec;
+use pulpnn_mp::qnn::tensor::{QTensor, QWeights};
+use pulpnn_mp::qnn::types::{Hwc, Precision};
+use pulpnn_mp::util::rng::Rng;
+use pulpnn_mp::util::table::{f, Table};
+
+fn main() {
+    let args: Vec<usize> =
+        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let (h, w, cin, cout, k) = match args.as_slice() {
+        [h, w, cin, cout, k] => (*h, *w, *cin, *cout, *k),
+        _ => (16, 16, 32, 64, 3), // the Reference Layer
+    };
+    println!("exploring {h}x{w}x{cin} -> {cout} channels, {k}x{k} filters\n");
+
+    let mut t = Table::new(vec![
+        "kernel", "w+act KiB", "8-core MACs/cyc", "latency LP [ms]", "energy LP [uJ]",
+        "eff. [uJ/MMAC]",
+    ]);
+    let mut best_energy = f64::MAX;
+    let mut best_name = String::new();
+    for prec in Precision::all() {
+        let spec = ConvSpec {
+            name: format!("explore_{}", prec.kernel_name()),
+            input: Hwc::new(h, w, cin),
+            cout,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad: k / 2,
+            prec,
+        };
+        if spec.validate().is_err() {
+            continue;
+        }
+        let mut rng = Rng::new(5);
+        let x = QTensor::random(&mut rng, spec.input, prec.x);
+        let wq = QWeights::random(&mut rng, cout, k, k, cin, prec.w);
+        let q = spec.default_quant();
+        let kib = (wq.packed_bytes() + x.packed_bytes() + spec.output().packed_bytes(prec.y))
+            as f64
+            / 1024.0;
+        let kernel = ConvKernel::new(spec.clone(), &wq, q);
+        let run = conv_parallel(&kernel, &x, 8, GAP8_TCDM_BANKS);
+        let uj = GAP8_LP.energy_uj(run.cycles);
+        let eff = uj / (spec.macs() as f64 / 1e6);
+        if uj < best_energy {
+            best_energy = uj;
+            best_name = prec.kernel_name();
+        }
+        t.row(vec![
+            prec.kernel_name(),
+            f(kib, 1),
+            f(run.macs_per_cycle(), 2),
+            f(GAP8_LP.time_ms(run.cycles), 3),
+            f(uj, 1),
+            f(eff, 2),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nlowest-energy kernel: {best_name} ({best_energy:.1} uJ)");
+    println!(
+        "takeaway: 8-bit kernels minimize energy/inference; sub-byte kernels\n\
+         minimize memory — the mixed-precision space trades between them."
+    );
+}

@@ -1,0 +1,77 @@
+//! Quickstart: run one mixed-precision convolution on the simulated GAP-8
+//! cluster and check it against the golden model.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the 60-second tour of the library: build the paper's Reference
+//! Layer at a mixed precision (4-bit ifmaps, 2-bit weights, 4-bit ofmaps),
+//! run it on 1 and 8 cores, print MACs/cycle, latency and energy.
+
+use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
+use pulpnn_mp::kernels::{conv_parallel, ConvKernel, Engine, GAP8_TCDM_BANKS};
+use pulpnn_mp::qnn::golden;
+use pulpnn_mp::qnn::layer::ConvSpec;
+use pulpnn_mp::qnn::tensor::{QTensor, QWeights};
+use pulpnn_mp::qnn::types::{Bits, Precision};
+use pulpnn_mp::util::rng::Rng;
+
+fn main() {
+    // 1. Declare a layer: the paper's Reference Layer at x4/w2/y4.
+    let prec = Precision::new(Bits::B4, Bits::B2, Bits::B4);
+    let spec = ConvSpec::reference_layer(prec);
+    println!(
+        "layer: {} ifmap -> {} ofmap, {}x{} filters, kernel {}",
+        spec.input,
+        spec.output(),
+        spec.kh,
+        spec.kw,
+        prec.kernel_name()
+    );
+
+    // 2. Materialize packed tensors + quantization parameters.
+    let mut rng = Rng::new(42);
+    let x = QTensor::random(&mut rng, spec.input, prec.x);
+    let w = QWeights::random(&mut rng, spec.cout, spec.kh, spec.kw, spec.input.c, prec.w);
+    let q = spec.default_quant();
+    println!(
+        "packed footprints: ifmap {} B, weights {} B (vs {} B at int8)",
+        x.packed_bytes(),
+        w.packed_bytes(),
+        w.elems()
+    );
+
+    // 3. Single-core run with phase breakdown.
+    let kernel = ConvKernel::new(spec.clone(), &w, q.clone());
+    let mut e = Engine::single_core();
+    let (out1, stats) = kernel.run(&mut e, &x);
+    println!("\nsingle core:");
+    println!("  cycles        : {}", stats.cycles);
+    println!("  MACs/cycle    : {:.3}", stats.macs_per_cycle());
+    println!(
+        "  phases        : im2col {} | matmul {} | qntpack {} | overhead {}",
+        stats.phases.im2col, stats.phases.matmul, stats.phases.qntpack, stats.phases.overhead
+    );
+
+    // 4. Octa-core run.
+    let run8 = conv_parallel(&kernel, &x, 8, GAP8_TCDM_BANKS);
+    println!("\n8 cores:");
+    println!("  cycles        : {}", run8.cycles);
+    println!("  MACs/cycle    : {:.3}", run8.macs_per_cycle());
+    println!("  speed-up      : {:.2}x", stats.cycles as f64 / run8.cycles as f64);
+    println!(
+        "  latency       : {:.3} ms (LP) / {:.3} ms (HP)",
+        GAP8_LP.time_ms(run8.cycles),
+        GAP8_HP.time_ms(run8.cycles)
+    );
+    println!(
+        "  energy        : {:.1} uJ (LP) / {:.1} uJ (HP)",
+        GAP8_LP.energy_uj(run8.cycles),
+        GAP8_HP.energy_uj(run8.cycles)
+    );
+
+    // 5. Verify against the golden model.
+    let want = golden::conv2d(&spec, &x, &w, &q);
+    assert_eq!(out1.data, want.data, "single-core kernel != golden");
+    assert_eq!(run8.out.data, want.data, "8-core kernel != golden");
+    println!("\nboth runs match the golden reference bit-exactly ✓");
+}

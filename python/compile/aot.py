@@ -1,0 +1,165 @@
+"""AOT pipeline: lower the L2 JAX graphs to HLO *text* artifacts the rust
+runtime loads via the PJRT C API.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs, per artifact:
+  artifacts/<name>.hlo.txt     the lowered module (return_tuple=True)
+  artifacts/<name>.input.bin   packed uint8 input bytes
+  artifacts/<name>.golden.bin  expected output (packed u8 / i32 LE logits)
+  artifacts/manifest.json      index with shapes, dtypes, precisions
+
+Run once by `make artifacts`; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import packing, qconv, ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big weight
+    # constants as `constant({...})`, which the 0.5.1 text parser reads
+    # back as ZEROS — the artifact would silently compute with zero weights.
+    return comp.as_hlo_text(True)
+
+
+def export_reference_layer(out_dir: str, xbits: int, wbits: int, ybits: int, seed: int):
+    """One of the 27 Reference Layer kernels as a standalone artifact."""
+    spec = ref.reference_layer(xbits, wbits, ybits)
+    x_packed, w_packed, q = ref.make_test_case(seed, spec)
+    golden = ref.conv2d(spec, x_packed, w_packed, q)
+    thr, kl = qconv.quant_operands(q, ybits)
+
+    perx = packing.per_byte(xbits)
+    x_hwc = x_packed.reshape(spec.h, spec.w, spec.c // perx)
+    w2d = w_packed.reshape(spec.cout, -1)
+
+    def fn(x):
+        return (
+            qconv.qconv_layer(
+                x, jnp.asarray(w2d), jnp.asarray(thr), jnp.asarray(kl), spec
+            ),
+        )
+
+    name = f"ref_layer_x{xbits}w{wbits}y{ybits}"
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(x_hwc.shape, jnp.uint8)
+    )
+    _write(out_dir, name, to_hlo_text(lowered), x_hwc.tobytes(), golden.tobytes())
+    pery = packing.per_byte(ybits)
+    return {
+        "name": name,
+        "kind": "reference_layer",
+        "xbits": xbits,
+        "wbits": wbits,
+        "ybits": ybits,
+        "seed": seed,
+        "input_shape": list(x_hwc.shape),
+        "input_dtype": "u8",
+        "output_shape": [spec.out_h, spec.out_w, spec.cout // pery],
+        "output_dtype": "u8",
+        "macs": spec.macs(),
+    }
+
+
+def export_network(out_dir: str, spec_dict: dict, seed: int):
+    """A full network (demo CNN or a user spec file) as one artifact."""
+    m = model_mod.materialize(spec_dict)
+    x = model_mod.random_input(m, seed)
+    golden = model_mod.forward_numpy(m, x)
+
+    def fn(xin):
+        return (model_mod.forward(m, xin),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct(x.shape, jnp.uint8))
+    name = m.name
+    golden_bytes = (
+        golden.astype("<i4").tobytes()
+        if golden.dtype != np.uint8
+        else golden.tobytes()
+    )
+    _write(out_dir, name, to_hlo_text(lowered), x.tobytes(), golden_bytes)
+    head = [l for l in m.layers if isinstance(l, model_mod.DenseHeadLayer)]
+    return {
+        "name": name,
+        "kind": "network",
+        "seed": seed,
+        "input_shape": list(x.shape),
+        "input_dtype": "u8",
+        "output_shape": [head[0].classes] if head else [],
+        "output_dtype": "i32" if head else "u8",
+        "spec": spec_dict,
+    }
+
+
+def _write(out_dir: str, name: str, hlo: str, input_bytes: bytes, golden: bytes):
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{name}.input.bin"), "wb") as f:
+        f.write(input_bytes)
+    with open(os.path.join(out_dir, f"{name}.golden.bin"), "wb") as f:
+        f.write(golden)
+    print(f"  wrote {name}: hlo {len(hlo) // 1024} KiB, "
+          f"input {len(input_bytes)} B, golden {len(golden)} B")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=2020)
+    ap.add_argument(
+        "--ref-combos",
+        default="all",
+        help="'all' (27 permutations) or comma list like 8-8-8,4-2-4",
+    )
+    ap.add_argument("--network-spec", default=None,
+                    help="optional network spec JSON file (default: demo CNN)")
+    ap.add_argument("--skip-network", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"seed": args.seed, "artifacts": []}
+
+    if args.ref_combos == "all":
+        combos = [(x, w, y) for w in (8, 4, 2) for x in (8, 4, 2) for y in (8, 4, 2)]
+    else:
+        combos = [tuple(int(v) for v in c.split("-")) for c in args.ref_combos.split(",")]
+    print(f"exporting {len(combos)} reference-layer artifacts...")
+    for x, w, y in combos:
+        manifest["artifacts"].append(
+            export_reference_layer(args.out_dir, x, w, y, args.seed)
+        )
+
+    if not args.skip_network:
+        spec = (
+            model_mod.load_spec_file(args.network_spec)
+            if args.network_spec
+            else model_mod.demo_cnn_spec()
+        )
+        print(f"exporting network `{spec['name']}`...")
+        manifest["artifacts"].append(export_network(args.out_dir, spec, args.seed))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Shared numeric contract, python side (mirrors rust bit-for-bit).
+
+This module is the python half of DESIGN.md section 4: the xorshift64*
+generator, fnv1a hashing, sub-byte packing and the quantization-parameter
+construction are *exact mirrors* of `rust/src/util/rng.rs`,
+`rust/src/util/check.rs`, `rust/src/qnn/pack.rs` and
+`rust/src/qnn/quant.rs`, so both sides materialize bit-identical weights
+and test tensors from a shared seed (verified by fixtures in
+`python/tests/test_mirror.py` and the rust integration tests against the
+AOT'd artifacts).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    """FNV-1a over bytes, 64-bit wrap-around (mirror of util::check)."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & _MASK64
+    return h
+
+
+class Xorshift:
+    """xorshift64* (mirror of util::rng::Rng)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK64 if seed != 0 else 0x9E3779B97F4A7C15
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & _MASK64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & _MASK64
+
+    def next_u32(self) -> int:
+        return self.next_u64() >> 32
+
+    def below(self, n: int) -> int:
+        assert n > 0
+        return (self.next_u32() * n) >> 32
+
+    def range_i64(self, lo: int, hi: int) -> int:
+        assert lo <= hi
+        span = (hi - lo + 1) & _MASK64
+        if span == 0:
+            v = self.next_u64()
+            return v - (1 << 64) if v >= (1 << 63) else v
+        return lo + self.next_u64() % span
+
+    def range_i32(self, lo: int, hi: int) -> int:
+        return self.range_i64(lo, hi)
+
+
+# --- sub-byte packing (little-endian within byte, C fastest) ---
+
+
+def per_byte(bits: int) -> int:
+    assert bits in (2, 4, 8)
+    return 8 // bits
+
+
+def pack_unsigned(values: np.ndarray, bits: int) -> np.ndarray:
+    """Pack unsigned sub-byte values into bytes (mirror of qnn::pack)."""
+    v = np.asarray(values, dtype=np.int64).ravel()
+    per = per_byte(bits)
+    assert v.size % per == 0, f"{v.size} values not divisible by {per}"
+    assert ((v >= 0) & (v <= (1 << bits) - 1)).all(), "value out of range"
+    groups = v.reshape(-1, per).astype(np.uint64)
+    shifts = (np.arange(per, dtype=np.uint64) * np.uint64(bits))
+    return (groups << shifts).sum(axis=1).astype(np.uint8)
+
+
+def pack_signed(values: np.ndarray, bits: int) -> np.ndarray:
+    v = np.asarray(values, dtype=np.int64).ravel()
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    assert ((v >= lo) & (v <= hi)).all(), "signed value out of range"
+    mask = (1 << bits) - 1
+    return pack_unsigned(v & mask, bits)
+
+
+def unpack_unsigned(data: np.ndarray, bits: int) -> np.ndarray:
+    d = np.asarray(data, dtype=np.uint8).ravel()
+    per = per_byte(bits)
+    mask = (1 << bits) - 1
+    shifts = (np.arange(per, dtype=np.uint8) * np.uint8(bits))
+    out = (d[:, None] >> shifts[None, :]) & mask
+    return out.ravel().astype(np.int32)
+
+
+def unpack_signed(data: np.ndarray, bits: int) -> np.ndarray:
+    u = unpack_unsigned(data, bits).astype(np.int32)
+    sign = 1 << (bits - 1)
+    return ((u ^ sign) - sign).astype(np.int32)
+
+
+# --- quantization parameters (mirror of qnn::quant) ---
+
+
+class QuantParams:
+    """Per-channel integer affine + shift (DESIGN.md section 4)."""
+
+    def __init__(self, kappa, lam, shift: int, ybits: int):
+        self.kappa = np.asarray(kappa, dtype=np.int64)
+        self.lam = np.asarray(lam, dtype=np.int64)
+        self.shift = int(shift)
+        self.ybits = int(ybits)
+
+    def quantize(self, phi: np.ndarray) -> np.ndarray:
+        """phi: [..., channels] int array -> quantized outputs."""
+        p = np.asarray(phi, dtype=np.int64)
+        v = (p * self.kappa + self.lam) >> self.shift
+        return np.clip(v, 0, (1 << self.ybits) - 1).astype(np.int32)
+
+    def thresholds(self) -> np.ndarray:
+        """[channels, 2^ybits - 1], t_k = ceil((k<<shift - lambda)/kappa)."""
+        levels = (1 << self.ybits) - 1
+        k = np.arange(1, levels + 1, dtype=np.int64)[None, :]
+        num = (k << self.shift) - self.lam[:, None]
+        den = self.kappa[:, None]
+        t = -((-num) // den)  # ceil division, kappa > 0
+        return np.clip(t, -(2**31), 2**31 - 1).astype(np.int64)
+
+
+def random_params(
+    rng: Xorshift, channels: int, ybits: int, phi_max: int, k: int
+) -> QuantParams:
+    """Exact mirror of qnn::quant::random_params (same draw order): the
+    affine map targets the *typical* accumulator range phi_max/isqrt(k)
+    so deep networks do not saturate (see the rust doc comment)."""
+    import math
+
+    umax = (1 << ybits) - 1
+    phi_typ = max(phi_max // max(math.isqrt(k), 1), 1)
+    shift = 0
+    while (phi_typ >> shift) > umax and shift < 24:
+        shift += 1
+    kappa_hi = min(max((umax << shift) // phi_typ, 1) * 2, 127)
+    kappa = [rng.range_i32(1, kappa_hi) for _ in range(channels)]
+    center = (umax // 2) << shift
+    jitter = max((umax << shift) // 4, 1)
+    lam = [center + rng.range_i64(-jitter, jitter) for _ in range(channels)]
+    return QuantParams(kappa, lam, shift, ybits)
+
+
+def random_unsigned(rng: Xorshift, n: int, bits: int) -> np.ndarray:
+    """Mirror of QTensor::random's draw order (range_i32(0, umax))."""
+    umax = (1 << bits) - 1
+    return np.array([rng.range_i32(0, umax) for _ in range(n)], dtype=np.int32)
+
+
+def random_signed(rng: Xorshift, n: int, bits: int) -> np.ndarray:
+    """Mirror of QWeights::random: symmetric zero-mean [-smax, smax]."""
+    hi = (1 << (bits - 1)) - 1
+    return np.array([rng.range_i32(-hi, hi) for _ in range(n)], dtype=np.int32)

@@ -1,0 +1,113 @@
+"""Pure-numpy oracle for the mixed-precision quantized convolution.
+
+This is the python golden model the Pallas kernel (`qconv.py`) is tested
+against, with semantics identical to `rust/src/qnn/golden.rs`: HWC ifmaps
+(unsigned), OHWI weights (signed two's complement), i32 accumulation, the
+affine-shift `quant` of Eq. 3 (floor shift, clamp to the unsigned output
+range), little-endian sub-byte packing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import packing
+from .packing import QuantParams
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """Convolution layer geometry + precisions (mirror of qnn::ConvSpec)."""
+
+    h: int
+    w: int
+    c: int
+    cout: int
+    kh: int
+    kw: int
+    stride: int
+    pad: int
+    xbits: int
+    wbits: int
+    ybits: int
+
+    @property
+    def out_h(self) -> int:
+        return (self.h + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.w + 2 * self.pad - self.kw) // self.stride + 1
+
+    @property
+    def im2col_len(self) -> int:
+        return self.kh * self.kw * self.c
+
+    @property
+    def phi_max_abs(self) -> int:
+        return self.im2col_len * ((1 << self.xbits) - 1) * (1 << (self.wbits - 1))
+
+    def macs(self) -> int:
+        return self.out_h * self.out_w * self.cout * self.im2col_len
+
+
+def reference_layer(xbits: int, wbits: int, ybits: int) -> ConvSpec:
+    """The paper's Reference Layer: 32x16x16 in, 64x16x16 out, 3x3."""
+    return ConvSpec(16, 16, 32, 64, 3, 3, 1, 1, xbits, wbits, ybits)
+
+
+def im2col(spec: ConvSpec, x_vals: np.ndarray) -> np.ndarray:
+    """[H,W,C] values -> [P, K] im2col matrix with zero padding."""
+    x = x_vals.reshape(spec.h, spec.w, spec.c)
+    xp = np.pad(x, ((spec.pad, spec.pad), (spec.pad, spec.pad), (0, 0)))
+    rows = []
+    for oh in range(spec.out_h):
+        for ow in range(spec.out_w):
+            win = xp[
+                oh * spec.stride : oh * spec.stride + spec.kh,
+                ow * spec.stride : ow * spec.stride + spec.kw,
+                :,
+            ]
+            rows.append(win.ravel())
+    return np.stack(rows).astype(np.int32)
+
+
+def conv2d_acc(spec: ConvSpec, x_packed: np.ndarray, w_packed: np.ndarray) -> np.ndarray:
+    """Packed inputs -> raw i32 accumulators [P, Cout]."""
+    xv = packing.unpack_unsigned(x_packed, spec.xbits)[: spec.h * spec.w * spec.c]
+    wv = packing.unpack_signed(w_packed, spec.wbits)[: spec.cout * spec.im2col_len]
+    cols = im2col(spec, xv)  # [P, K]
+    wmat = wv.reshape(spec.cout, spec.im2col_len)  # [Cout, K]
+    acc = cols.astype(np.int64) @ wmat.T.astype(np.int64)
+    assert (np.abs(acc) < 2**31).all(), "accumulator overflow"
+    return acc.astype(np.int32)
+
+
+def conv2d(
+    spec: ConvSpec, x_packed: np.ndarray, w_packed: np.ndarray, q: QuantParams
+) -> np.ndarray:
+    """Full layer: returns the packed ofmap bytes ([H*W*Cout/per] u8)."""
+    acc = conv2d_acc(spec, x_packed, w_packed)
+    y = q.quantize(acc)  # [P, Cout]
+    return packing.pack_unsigned(y.ravel(), spec.ybits)
+
+
+def quantize_thresholds(q: QuantParams, acc: np.ndarray) -> np.ndarray:
+    """Threshold formulation: #{k : phi >= t_k} — must equal q.quantize."""
+    t = q.thresholds()  # [C, L]
+    phi = np.asarray(acc, dtype=np.int64)  # [..., C]
+    return (phi[..., None] >= t).sum(axis=-1).astype(np.int32)
+
+
+def make_test_case(seed: int, spec: ConvSpec):
+    """Deterministic (x_packed, w_packed, quant) for a spec — the same
+    draw order as the rust tests use for cross-validation fixtures."""
+    rng = packing.Xorshift(seed)
+    n_x = spec.h * spec.w * spec.c
+    x = packing.pack_unsigned(packing.random_unsigned(rng, n_x, spec.xbits), spec.xbits)
+    n_w = spec.cout * spec.im2col_len
+    w = packing.pack_signed(packing.random_signed(rng, n_w, spec.wbits), spec.wbits)
+    q = packing.random_params(rng, spec.cout, spec.ybits, spec.phi_max_abs, spec.im2col_len)
+    return x, w, q

@@ -1,0 +1,290 @@
+"""Layer 2: the QNN compute graph in JAX, built from the shared network
+spec JSON (the same format `rust/src/qnn/network.rs` parses) and the L1
+Pallas kernels.
+
+Weights and quantization parameters are materialized with the mirrored
+xorshift generator (`kernels.packing`) using the exact per-layer draw
+order of `NetworkSpec::materialize`, so the AOT'd artifact computes with
+bit-identical parameters to the rust golden model — verified end-to-end by
+`rust/tests/artifacts.rs`.
+
+Build-time only: nothing here runs on the request path.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import packing, qconv, ref
+from .kernels.packing import Xorshift, fnv1a
+
+
+@dataclass
+class ConvLayer:
+    spec: ref.ConvSpec
+    name: str
+    w_packed: np.ndarray  # [Cout, K/perw] uint8
+    thr: np.ndarray
+    kl: np.ndarray
+    quant: packing.QuantParams
+
+
+@dataclass
+class PoolLayer:
+    name: str
+    kind: str  # "max" | "avg"
+    h: int
+    w: int
+    c: int
+    window: int
+    stride: int
+    bits: int
+
+    @property
+    def out_h(self):
+        return (self.h - self.window) // self.stride + 1
+
+    @property
+    def out_w(self):
+        return (self.w - self.window) // self.stride + 1
+
+
+@dataclass
+class GlobalAvgLayer:
+    name: str
+    h: int
+    w: int
+    c: int
+    bits: int
+
+
+@dataclass
+class DenseHeadLayer:
+    name: str
+    in_features: int
+    classes: int
+    xbits: int
+    wbits: int
+    weights: np.ndarray  # [classes, in_features] int32
+
+
+@dataclass
+class Model:
+    name: str
+    input_h: int
+    input_w: int
+    input_c: int
+    input_bits: int
+    seed: int
+    layers: list = field(default_factory=list)
+
+
+def demo_cnn_spec() -> dict:
+    """The built-in demo network (mirror of qnn::network::demo_cnn)."""
+    return {
+        "name": "demo_cnn_mixed",
+        "input": {"h": 32, "w": 32, "c": 4, "bits": 8},
+        "seed": 2020,
+        "layers": [
+            {"kind": "conv", "name": "conv0", "cout": 16, "kh": 3, "kw": 3,
+             "stride": 1, "pad": 1, "xbits": 8, "wbits": 8, "ybits": 4},
+            {"kind": "maxpool", "name": "pool0", "window": 2, "stride": 2},
+            {"kind": "conv", "name": "conv1", "cout": 32, "kh": 3, "kw": 3,
+             "stride": 1, "pad": 1, "xbits": 4, "wbits": 4, "ybits": 4},
+            {"kind": "maxpool", "name": "pool1", "window": 2, "stride": 2},
+            {"kind": "conv", "name": "conv2", "cout": 32, "kh": 3, "kw": 3,
+             "stride": 1, "pad": 1, "xbits": 4, "wbits": 2, "ybits": 2},
+            {"kind": "conv", "name": "conv3", "cout": 64, "kh": 3, "kw": 3,
+             "stride": 1, "pad": 1, "xbits": 2, "wbits": 4, "ybits": 8},
+            {"kind": "global_avgpool", "name": "gap"},
+            {"kind": "dense_head", "name": "head", "classes": 10, "wbits": 8},
+        ],
+    }
+
+
+def materialize(spec: dict) -> Model:
+    """Build a Model with deterministic weights (mirror of
+    NetworkSpec::materialize: per-layer seed = spec.seed ^ fnv1a(name);
+    conv draws all OHWI weights, then quant params)."""
+    inp = spec["input"]
+    model = Model(
+        name=spec["name"],
+        input_h=inp["h"],
+        input_w=inp["w"],
+        input_c=inp["c"],
+        input_bits=inp["bits"],
+        seed=spec["seed"],
+    )
+    h, w, c, bits = inp["h"], inp["w"], inp["c"], inp["bits"]
+    for i, ldef in enumerate(spec["layers"]):
+        name = ldef.get("name", f"layer{i}")
+        seed = spec["seed"] ^ fnv1a(name.encode())
+        kind = ldef["kind"]
+        if kind == "conv":
+            cspec = ref.ConvSpec(
+                h, w, c,
+                ldef["cout"], ldef["kh"], ldef["kw"],
+                ldef.get("stride", 1), ldef.get("pad", 0),
+                ldef["xbits"], ldef["wbits"], ldef["ybits"],
+            )
+            assert cspec.xbits == bits, f"{name}: xbits {cspec.xbits} != incoming {bits}"
+            rng = Xorshift(seed)
+            n_w = cspec.cout * cspec.im2col_len
+            wv = packing.random_signed(rng, n_w, cspec.wbits)
+            q = packing.random_params(rng, cspec.cout, cspec.ybits, cspec.phi_max_abs, cspec.im2col_len)
+            w_packed = packing.pack_signed(wv, cspec.wbits).reshape(cspec.cout, -1)
+            thr, kl = qconv.quant_operands(q, cspec.ybits)
+            model.layers.append(ConvLayer(cspec, name, w_packed, thr, kl, q))
+            h, w, c, bits = cspec.out_h, cspec.out_w, cspec.cout, cspec.ybits
+        elif kind in ("maxpool", "avgpool"):
+            lay = PoolLayer(
+                name, "max" if kind == "maxpool" else "avg",
+                h, w, c, ldef["window"], ldef.get("stride", ldef["window"]), bits,
+            )
+            model.layers.append(lay)
+            h, w = lay.out_h, lay.out_w
+        elif kind == "global_avgpool":
+            assert (h * w) & (h * w - 1) == 0, "global_avgpool needs pow2 H*W"
+            model.layers.append(GlobalAvgLayer(name, h, w, c, bits))
+            h, w = 1, 1
+        elif kind == "dense_head":
+            rng = Xorshift(seed)
+            n = h * w * c * ldef["classes"]
+            wv = packing.random_signed(rng, n, ldef["wbits"])
+            model.layers.append(
+                DenseHeadLayer(
+                    name, h * w * c, ldef["classes"], bits, ldef["wbits"],
+                    wv.reshape(ldef["classes"], h * w * c),
+                )
+            )
+            h, w, c = 1, 1, ldef["classes"]
+        else:
+            raise ValueError(f"unknown layer kind {kind}")
+    return model
+
+
+# --- jax forward over packed tensors ---
+
+
+def _unpack_hwc(x_packed, bits):
+    """[H, W, C/per] uint8 -> [H, W, C] int32."""
+    return qconv._unpack_unsigned(x_packed, bits)
+
+
+def _repack_hwc(vals, bits):
+    return qconv._pack_unsigned(vals, bits)
+
+
+def forward(model: Model, x_packed_hwc):
+    """The jittable forward pass: packed uint8 input -> output.
+
+    Returns logits [classes] int32 if the model ends in a head, else the
+    final packed activation.
+    """
+    cur = x_packed_hwc
+    for lay in model.layers:
+        if isinstance(lay, ConvLayer):
+            cur = qconv.qconv_layer(
+                cur,
+                jnp.asarray(lay.w_packed),
+                jnp.asarray(lay.thr),
+                jnp.asarray(lay.kl),
+                lay.spec,
+            )
+        elif isinstance(lay, PoolLayer):
+            v = _unpack_hwc(cur, lay.bits)  # [H, W, C]
+            oh, ow = lay.out_h, lay.out_w
+            init = None
+            for kh in range(lay.window):
+                for kw in range(lay.window):
+                    win = v[kh : kh + oh * lay.stride : lay.stride,
+                            kw : kw + ow * lay.stride : lay.stride, :]
+                    if init is None:
+                        init = win
+                    elif lay.kind == "max":
+                        init = jnp.maximum(init, win)
+                    else:
+                        init = init + win
+            if lay.kind == "avg":
+                shift = (lay.window * lay.window).bit_length() - 1
+                init = jnp.right_shift(init, shift)
+            cur = _repack_hwc(init, lay.bits)
+        elif isinstance(lay, GlobalAvgLayer):
+            v = _unpack_hwc(cur, lay.bits)
+            s = v.reshape(-1, lay.c).sum(axis=0)
+            n = lay.h * lay.w
+            shift = n.bit_length() - 1
+            avg = jnp.right_shift(s + (1 << (shift - 1)), shift)
+            cur = _repack_hwc(avg[None, None, :], lay.bits)
+        elif isinstance(lay, DenseHeadLayer):
+            v = _unpack_hwc(cur, lay.xbits).reshape(-1)  # [in_features]
+            wmat = jnp.asarray(lay.weights, dtype=jnp.int32)
+            cur = wmat @ v  # [classes] int32 logits
+        else:
+            raise TypeError(type(lay))
+    return cur
+
+
+# --- numpy oracle of the same network (mirror of Network::forward_golden) ---
+
+
+def forward_numpy(model: Model, x_packed_hwc: np.ndarray):
+    """Independent numpy forward for golden files (no jax involved)."""
+    cur = np.asarray(x_packed_hwc, dtype=np.uint8).ravel()
+    h, w, c, bits = model.input_h, model.input_w, model.input_c, model.input_bits
+    for lay in model.layers:
+        if isinstance(lay, ConvLayer):
+            cur = ref.conv2d(lay.spec, cur, lay.w_packed.ravel(), lay.quant)
+            h, w, c, bits = lay.spec.out_h, lay.spec.out_w, lay.spec.cout, lay.spec.ybits
+        elif isinstance(lay, PoolLayer):
+            v = packing.unpack_unsigned(cur, bits)[: h * w * c].reshape(h, w, c)
+            oh, ow = lay.out_h, lay.out_w
+            init = None
+            for kh in range(lay.window):
+                for kw in range(lay.window):
+                    win = v[kh : kh + oh * lay.stride : lay.stride,
+                            kw : kw + ow * lay.stride : lay.stride, :]
+                    if init is None:
+                        init = win.copy()
+                    elif lay.kind == "max":
+                        init = np.maximum(init, win)
+                    else:
+                        init = init + win
+            if lay.kind == "avg":
+                init = init >> ((lay.window * lay.window).bit_length() - 1)
+            cur = packing.pack_unsigned(init.ravel(), bits)
+            h, w = oh, ow
+        elif isinstance(lay, GlobalAvgLayer):
+            v = packing.unpack_unsigned(cur, bits)[: h * w * c].reshape(-1, c)
+            s = v.sum(axis=0)
+            shift = (h * w).bit_length() - 1
+            avg = (s + (1 << (shift - 1))) >> shift
+            cur = packing.pack_unsigned(avg, bits)
+            h, w = 1, 1
+        elif isinstance(lay, DenseHeadLayer):
+            v = packing.unpack_unsigned(cur, lay.xbits)[: lay.in_features]
+            cur = (lay.weights.astype(np.int64) @ v.astype(np.int64)).astype(np.int32)
+        else:
+            raise TypeError(type(lay))
+    return cur
+
+
+def random_input(model: Model, seed: int) -> np.ndarray:
+    """Deterministic packed input [H, W, C/per] uint8 (QTensor::random
+    draw order with Xorshift(seed))."""
+    rng = Xorshift(seed)
+    n = model.input_h * model.input_w * model.input_c
+    vals = packing.random_unsigned(rng, n, model.input_bits)
+    per = packing.per_byte(model.input_bits)
+    return packing.pack_unsigned(vals, model.input_bits).reshape(
+        model.input_h, model.input_w, model.input_c // per
+    )
+
+
+def load_spec_file(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

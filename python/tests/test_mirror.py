@@ -1,0 +1,35 @@
+"""Cross-language mirror fixtures: these exact values were produced by the
+rust implementation (util::rng, util::check::fnv1a); if any of these fail,
+the bit-exact weight materialization contract is broken."""
+
+from compile.kernels import packing
+
+
+def test_xorshift_known_vectors():
+    r = packing.Xorshift(42)
+    assert [r.next_u64() for _ in range(4)] == [
+        6255019084209693600,
+        14430073426741505498,
+        14575455857230217846,
+        17414512882241728735,
+    ]
+
+
+def test_below_known_vectors():
+    r = packing.Xorshift(42)
+    assert [r.below(1000) for _ in range(4)] == [339, 782, 790, 944]
+
+
+def test_range_i32_known_vectors():
+    r = packing.Xorshift(42)
+    assert [r.range_i32(-8, 7) for _ in range(6)] == [-8, 2, -2, 7, -2, -5]
+
+
+def test_zero_seed_remap():
+    r = packing.Xorshift(0)
+    assert r.next_u64() == 973819730272012410
+
+
+def test_fnv1a_known_vectors():
+    assert packing.fnv1a(b"conv0") == 7339226432074275701
+    assert packing.fnv1a(b"head") == 760847531035462659

@@ -1,0 +1,87 @@
+"""L2 model tests: the jax forward against the numpy oracle, shapes,
+determinism, and spec parsing."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.kernels import packing
+
+
+@pytest.fixture(scope="module")
+def demo():
+    return model_mod.materialize(model_mod.demo_cnn_spec())
+
+
+def test_demo_materializes(demo):
+    assert len(demo.layers) == 8
+    conv0 = demo.layers[0]
+    assert isinstance(conv0, model_mod.ConvLayer)
+    assert conv0.spec.cout == 16
+    head = demo.layers[-1]
+    assert isinstance(head, model_mod.DenseHeadLayer)
+    assert head.classes == 10
+
+
+def test_materialize_deterministic():
+    m1 = model_mod.materialize(model_mod.demo_cnn_spec())
+    m2 = model_mod.materialize(model_mod.demo_cnn_spec())
+    np.testing.assert_array_equal(m1.layers[0].w_packed, m2.layers[0].w_packed)
+    np.testing.assert_array_equal(m1.layers[-1].weights, m2.layers[-1].weights)
+
+
+def test_jax_forward_matches_numpy_oracle(demo):
+    x = model_mod.random_input(demo, 2020)
+    want = model_mod.forward_numpy(demo, x)
+    got = np.asarray(jax.jit(lambda xin: model_mod.forward(demo, xin))(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_logits_shape_and_dtype(demo):
+    x = model_mod.random_input(demo, 7)
+    logits = model_mod.forward_numpy(demo, x)
+    assert logits.shape == (10,)
+    assert logits.dtype == np.int32
+
+
+def test_different_inputs_different_logits(demo):
+    a = model_mod.forward_numpy(demo, model_mod.random_input(demo, 1))
+    b = model_mod.forward_numpy(demo, model_mod.random_input(demo, 2))
+    assert not np.array_equal(a, b)
+
+
+def test_precision_chain_enforced():
+    spec = model_mod.demo_cnn_spec()
+    spec["layers"][2]["xbits"] = 8  # conv1 expects conv0's 4-bit output
+    with pytest.raises(AssertionError):
+        model_mod.materialize(spec)
+
+
+def test_small_custom_network_forward():
+    spec = {
+        "name": "tiny",
+        "input": {"h": 8, "w": 8, "c": 4, "bits": 8},
+        "seed": 5,
+        "layers": [
+            {"kind": "conv", "name": "c0", "cout": 8, "kh": 3, "kw": 3,
+             "stride": 1, "pad": 1, "xbits": 8, "wbits": 4, "ybits": 4},
+            {"kind": "avgpool", "name": "p0", "window": 2, "stride": 2},
+            {"kind": "global_avgpool", "name": "gap"},
+            {"kind": "dense_head", "name": "head", "classes": 4, "wbits": 8},
+        ],
+    }
+    m = model_mod.materialize(spec)
+    x = model_mod.random_input(m, 1)
+    want = model_mod.forward_numpy(m, x)
+    got = np.asarray(model_mod.forward(m, x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_weight_draws_mirror_contract():
+    """The first weights of conv0 must come from Xorshift(seed ^ fnv1a(name))."""
+    demo = model_mod.materialize(model_mod.demo_cnn_spec())
+    rng = packing.Xorshift(2020 ^ packing.fnv1a(b"conv0"))
+    expect = packing.random_signed(rng, 16 * 9 * 4, 8)
+    got = packing.unpack_signed(demo.layers[0].w_packed.ravel(), 8)
+    np.testing.assert_array_equal(got[: expect.size], expect)

@@ -1,0 +1,68 @@
+"""Packing / quantization contract tests (hypothesis property sweeps)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import packing
+
+BITS = st.sampled_from([2, 4, 8])
+
+
+def test_pack_examples():
+    assert packing.pack_unsigned(np.array([1, 2]), 4).tolist() == [0x21]
+    assert packing.pack_unsigned(np.array([3, 0, 1, 2]), 2).tolist() == [0b10010011]
+    assert packing.pack_signed(np.array([-1, -8]), 4).tolist() == [0x8F]
+    assert packing.unpack_signed(np.array([0x8F], dtype=np.uint8), 4).tolist() == [-1, -8]
+
+
+@settings(max_examples=100, deadline=None)
+@given(BITS, st.integers(1, 64), st.integers(0, 2**32 - 1))
+def test_roundtrip_unsigned(bits, groups, seed):
+    rng = np.random.default_rng(seed)
+    n = groups * packing.per_byte(bits)
+    vals = rng.integers(0, 1 << bits, n)
+    packed = packing.pack_unsigned(vals, bits)
+    assert packed.size == n // packing.per_byte(bits)
+    assert (packing.unpack_unsigned(packed, bits) == vals).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(BITS, st.integers(1, 64), st.integers(0, 2**32 - 1))
+def test_roundtrip_signed(bits, groups, seed):
+    rng = np.random.default_rng(seed)
+    n = groups * packing.per_byte(bits)
+    vals = rng.integers(-(1 << (bits - 1)), 1 << (bits - 1), n)
+    packed = packing.pack_signed(vals, bits)
+    assert (packing.unpack_signed(packed, bits) == vals).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(BITS, st.integers(1, 8), st.integers(0, 2**32 - 1))
+def test_threshold_equals_affine(ybits, channels, seed):
+    rng = packing.Xorshift(seed)
+    phi_max = 1 << 14
+    q = packing.random_params(rng, channels, ybits, phi_max, 64)
+    nrng = np.random.default_rng(seed)
+    phi = nrng.integers(-phi_max, phi_max, (32, channels))
+    affine = q.quantize(phi)
+    from compile.kernels import ref
+
+    ladder = ref.quantize_thresholds(q, phi)
+    assert (affine == ladder).all()
+
+
+def test_thresholds_monotone():
+    rng = packing.Xorshift(5)
+    q = packing.random_params(rng, 4, 4, 10_000, 64)
+    t = q.thresholds()
+    assert (np.diff(t, axis=1) >= 0).all()
+
+
+def test_random_params_no_i32_overflow():
+    for ybits in (2, 4, 8):
+        rng = packing.Xorshift(9)
+        phi_max = 288 * 255 * 128  # the Reference Layer worst case
+        q = packing.random_params(rng, 16, ybits, phi_max, 288)
+        worst = phi_max * q.kappa + np.abs(q.lam)
+        assert (worst < 2**31).all()

@@ -1,0 +1,98 @@
+"""L1 correctness: the Pallas kernel against the numpy oracle, across all
+27 precision permutations and hypothesis-swept shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import packing, qconv, ref
+
+ALL_COMBOS = [(x, w, y) for x in (8, 4, 2) for w in (8, 4, 2) for y in (8, 4, 2)]
+
+
+def run_both(spec: ref.ConvSpec, seed: int):
+    x_packed, w_packed, q = ref.make_test_case(seed, spec)
+    want = ref.conv2d(spec, x_packed, w_packed, q)
+    thr, kl = qconv.quant_operands(q, spec.ybits)
+    perx = packing.per_byte(spec.xbits)
+    x_hwc = jnp.asarray(x_packed.reshape(spec.h, spec.w, spec.c // perx))
+    w2d = jnp.asarray(w_packed.reshape(spec.cout, -1))
+    got = qconv.qconv_layer(x_hwc, w2d, jnp.asarray(thr), jnp.asarray(kl), spec)
+    return np.asarray(got).ravel(), want
+
+
+@pytest.mark.parametrize("xbits,wbits,ybits", ALL_COMBOS)
+def test_all_27_permutations_small(xbits, wbits, ybits):
+    spec = ref.ConvSpec(5, 5, 8, 8, 3, 3, 1, 1, xbits, wbits, ybits)
+    got, want = run_both(spec, seed=xbits * 100 + wbits * 10 + ybits)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("xbits,wbits,ybits", [(8, 8, 8), (4, 2, 4), (2, 4, 2)])
+def test_reference_layer_combos(xbits, wbits, ybits):
+    spec = ref.reference_layer(xbits, wbits, ybits)
+    got, want = run_both(spec, seed=2020)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from([8, 4, 2]),
+    st.sampled_from([8, 4, 2]),
+    st.sampled_from([8, 4, 2]),
+    st.integers(3, 8),
+    st.integers(3, 8),
+    st.sampled_from([4, 8, 12]),
+    st.sampled_from([4, 8]),
+    st.sampled_from([(1, 1), (3, 1), (2, 0)]),  # (k, pad)
+    st.sampled_from([1, 2]),
+    st.integers(0, 2**31 - 1),
+)
+def test_random_shapes(xbits, wbits, ybits, h, w, c, cout, kpad, stride, seed):
+    k, pad = kpad
+    if h + 2 * pad < k or w + 2 * pad < k:
+        return
+    spec = ref.ConvSpec(h, w, c, cout, k, k, stride, pad, xbits, wbits, ybits)
+    got, want = run_both(spec, seed)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_unpack_sign_extension():
+    packed = jnp.asarray(np.array([[0x8F]], dtype=np.uint8))
+    out = np.asarray(qconv._unpack_signed(packed, 4))
+    assert out.tolist() == [[-1, -8]]
+
+
+def test_pack_unpack_jax_roundtrip():
+    for bits in (2, 4, 8):
+        vals = jnp.asarray(
+            np.random.default_rng(1).integers(0, 1 << bits, (4, 8), dtype=np.int32)
+        )
+        packed = qconv._pack_unsigned(vals, bits)
+        back = qconv._unpack_unsigned(packed, bits)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+
+def test_im2col_packed_matches_ref():
+    spec = ref.ConvSpec(5, 6, 8, 4, 3, 3, 1, 1, 4, 8, 8)
+    rng = packing.Xorshift(3)
+    xv = packing.random_unsigned(rng, spec.h * spec.w * spec.c, spec.xbits)
+    xp = packing.pack_unsigned(xv, spec.xbits)
+    perx = packing.per_byte(spec.xbits)
+    cols_packed = qconv.im2col_packed(
+        jnp.asarray(xp.reshape(spec.h, spec.w, spec.c // perx)),
+        spec.h, spec.w, spec.c, spec.kh, spec.kw, spec.stride, spec.pad, spec.xbits,
+    )
+    got = packing.unpack_unsigned(np.asarray(cols_packed), spec.xbits).reshape(
+        spec.out_h * spec.out_w, spec.im2col_len
+    )
+    want = ref.im2col(spec, xv)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pick_tile_divides():
+    assert qconv.pick_tile(256, 32) == 32
+    assert qconv.pick_tile(20, 32) == 20
+    assert qconv.pick_tile(30, 8) == 6

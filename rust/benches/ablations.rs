@@ -1,0 +1,22 @@
+//! Ablation benches (DESIGN.md §5): prints the four ablation reports and
+//! times the TCDM-bank-sweep kernel runs.
+
+use pulpnn_mp::bench::ablate;
+use pulpnn_mp::bench::figures::reference_case;
+use pulpnn_mp::kernels::conv_parallel;
+use pulpnn_mp::qnn::types::{Bits, Precision};
+use pulpnn_mp::util::benchkit::Bench;
+
+fn main() {
+    let seed = 2020;
+    println!("{}", ablate::all(seed));
+
+    let mut b = Bench::new("ablations");
+    let (kernel, x) = reference_case(Precision::new(Bits::B8, Bits::B8, Bits::B8), seed);
+    for banks in [4, 16, 64] {
+        b.run(&format!("conv 8-core, {banks} TCDM banks"), || {
+            conv_parallel(&kernel, &x, 8, banks).cycles
+        });
+    }
+    b.report();
+}

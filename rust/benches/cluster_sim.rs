@@ -1,0 +1,82 @@
+//! ISA-simulator and cluster throughput benchmarks: simulated
+//! instructions per host second (decode/execute loop), TCDM arbitration
+//! overhead, and the ASM-validated MatMul inner loops on the ISA core.
+
+use pulpnn_mp::cluster::{Cluster, Tcdm};
+use pulpnn_mp::isa::asm::assemble;
+use pulpnn_mp::isa::exec::{Core, LinearMemory};
+use pulpnn_mp::kernels::asm_xcheck::run_matmul_asm;
+use pulpnn_mp::qnn::tensor::QWeights;
+use pulpnn_mp::qnn::types::Bits;
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("cluster_sim");
+
+    // raw ISA throughput: tight arithmetic loop
+    let prog = assemble(
+        "
+        li a0, 0
+        li a1, 10000
+    loop:
+        addi a0, a0, 3
+        xor a2, a0, a1
+        and a3, a2, a0
+        addi a1, a1, -1
+        bne a1, zero, loop
+        halt
+    ",
+    )
+    .unwrap();
+    b.run_with_throughput(
+        "isa core: alu loop (50k instrs)",
+        Some(("simInstr".into(), 50_003.0)),
+        || {
+            let mut core = Core::new();
+            let mut mem = LinearMemory::new(1 << 10);
+            core.run(&prog.insts, &mut mem, 100_000);
+            core.cycles
+        },
+    );
+
+    // memory-heavy loop over the banked TCDM, 8 cores
+    let memprog = assemble(
+        "
+        slli t0, a0, 2
+        li t1, 2000
+    loop:
+        lw t2, 0(t0)
+        sw t2, 64(t0)
+        addi t1, t1, -1
+        bne t1, zero, loop
+        halt
+    ",
+    )
+    .unwrap();
+    b.run_with_throughput(
+        "cluster 8-core: ld/st loop over TCDM",
+        Some(("simInstr".into(), 8.0 * 8002.0)),
+        || {
+            let mut cl = Cluster::new(8, Tcdm::new(64 * 1024, 16));
+            let run = cl.run_spmd(&memprog.insts, 100_000);
+            run.cycles
+        },
+    );
+
+    // the validated inner loops on the ISA simulator
+    let mut rng = Rng::new(3);
+    for bits in [Bits::B8, Bits::B4, Bits::B2] {
+        let k = 288;
+        let w = QWeights::random(&mut rng, 4, 1, 1, k, bits);
+        let x0: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let x1: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        b.run_with_throughput(
+            &format!("isa asm matmul inner loop w={bits}"),
+            Some(("simMAC".into(), (8 * k) as f64)),
+            || run_matmul_asm(bits, &w, &x0, &x1, k).loop_cycles,
+        );
+    }
+
+    b.report();
+}

@@ -1,0 +1,58 @@
+//! Wall-clock micro-benchmarks of the simulator hot paths (the §Perf
+//! targets in EXPERIMENTS.md): the MatMul inner loops on the intrinsic
+//! engine, and the full conv-layer run across precision corners.
+//!
+//! Throughput is reported in simulated MACs per host second — the metric
+//! the performance pass optimizes.
+
+use pulpnn_mp::bench::figures::reference_case;
+use pulpnn_mp::kernels::matmul::{matmul_tile, WeightLayout};
+use pulpnn_mp::kernels::Engine;
+use pulpnn_mp::qnn::tensor::QWeights;
+use pulpnn_mp::qnn::types::{Bits, Precision};
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("matmul_hot");
+    let mut rng = Rng::new(1);
+    let k = 288;
+
+    for bits in [Bits::B8, Bits::B4, Bits::B2] {
+        let w = QWeights::random(&mut rng, 4, 1, 1, k, bits);
+        let layout = WeightLayout::prepare(&w);
+        let x0: Vec<u8> = (0..layout.k_padded).map(|_| rng.below(256) as u8).collect();
+        let x1: Vec<u8> = (0..layout.k_padded).map(|_| rng.below(256) as u8).collect();
+        let macs = (4 * 2 * layout.k_padded) as f64;
+        b.run_with_throughput(
+            &format!("matmul_tile 4x2 w={bits} k={k}"),
+            Some(("simMAC".into(), macs)),
+            || {
+                let mut e = Engine::single_core();
+                let mut acc = [0i32; 8];
+                matmul_tile(&mut e, &layout, 0, 4, &[&x0, &x1], &mut acc);
+                (acc[0], e.cycles)
+            },
+        );
+    }
+
+    for prec in [
+        Precision::new(Bits::B8, Bits::B8, Bits::B8),
+        Precision::new(Bits::B4, Bits::B4, Bits::B4),
+        Precision::new(Bits::B2, Bits::B2, Bits::B2),
+    ] {
+        let (kernel, x) = reference_case(prec, 7);
+        let macs = kernel.spec.macs() as f64;
+        b.run_with_throughput(
+            &format!("conv_layer {} (ref layer)", prec.kernel_name()),
+            Some(("simMAC".into(), macs)),
+            || {
+                let mut e = Engine::single_core();
+                let (out, stats) = kernel.run(&mut e, &x);
+                (out.data[0], stats.cycles)
+            },
+        );
+    }
+
+    b.report();
+}

@@ -1,0 +1,24 @@
+//! Regenerates every paper table/figure (the same generators the
+//! `pulpnn figN` commands use) and times each generator.
+
+use pulpnn_mp::bench::figures;
+use pulpnn_mp::util::benchkit::Bench;
+
+fn main() {
+    let seed = 2020;
+    // print the tables themselves first (the bench artifact of record)
+    println!("{}", figures::fig4(seed).1);
+    println!("{}", figures::table1(seed).1);
+    println!("{}", figures::fig5(seed).1);
+    println!("{}", figures::fig6(seed).1);
+    println!("{}", figures::peak(seed).1);
+    println!("{}", figures::speedup(seed).1);
+    println!("{}", figures::innerloop());
+
+    let mut b = Bench::new("paper_tables");
+    b.run("fig4", || figures::fig4(seed).0.len());
+    b.run("table1", || figures::table1(seed).0.len());
+    b.run("fig5 (27 kernels x 3 platforms)", || figures::fig5(seed).0.len());
+    b.run("fig6", || figures::fig6(seed).0.len());
+    b.report();
+}

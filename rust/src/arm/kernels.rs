@@ -1,0 +1,290 @@
+//! The mixed-precision convolution ported to ARMv7E-M, as the paper's
+//! baseline ("the same layer and the same kernels" on STM32H7/STM32L4).
+//!
+//! Structure mirrors the GAP-8 kernel (im2col -> 4x2 MatMul -> QntPack)
+//! but with the Cortex-M instruction vocabulary:
+//!
+//! * q7 operands are expanded to q15 pairs with `SXTB16` and consumed by
+//!   `SMLAD` (2 MACs/instruction — half the throughput of `pv.sdotusp.b`);
+//! * sub-byte weights cost one `SBFX` per element plus one `PKHBT` per
+//!   q15 pair (no single-cycle 8-way unpack);
+//! * loops are `SUBS`+`BNE` (no hardware loops), addresses are updated
+//!   with explicit adds;
+//! * sub-byte outputs use the same threshold ladder with `BFI` packing.
+//!
+//! Numerics are bit-identical to the golden model (asserted in tests); the
+//! instruction counts below are charged per modelled iteration.
+
+use super::machine::{ArmCounts, ArmPlatform};
+use crate::qnn::golden;
+use crate::qnn::layer::ConvSpec;
+use crate::qnn::quant::QuantParams;
+use crate::qnn::tensor::{QTensor, QWeights};
+use crate::qnn::types::Bits;
+
+/// Result of an ARM layer run.
+#[derive(Debug, Clone)]
+pub struct ArmRun {
+    pub out: QTensor,
+    pub counts: ArmCounts,
+    pub cycles: u64,
+    /// Cycle split mirroring the GAP-8 phases.
+    pub linear_cycles: u64,
+    pub qntpack_cycles: u64,
+}
+
+impl ArmRun {
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.counts.macs as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// Per-iteration instruction cost of the 4x2 MatMul inner loop covering
+/// `step` im2col positions, by weight precision (documented in the module
+/// header; MACs = 4 filters x 2 pixels x step).
+fn matmul_iter_counts(wbits: Bits) -> (usize, ArmCounts) {
+    match wbits {
+        // 4 positions: 4 w-ldr + 8 sxtb16 | 2 x-ldr + 4 sxtb16 | 16 smlad
+        // + loop (subs+ptr adds)
+        Bits::B8 => (
+            4,
+            ArmCounts {
+                ldr: 6,
+                sxtb16: 12,
+                smlad: 16,
+                alu: 3,
+                branches: 1,
+                taken_branches: 1,
+                macs: 32,
+                ..Default::default()
+            },
+        ),
+        // 8 positions: 4 w-ldr + 32 sbfx + 16 pkhbt | 4 x-ldr + 8 sxtb16 |
+        // 32 smlad + loop
+        Bits::B4 => (
+            8,
+            ArmCounts {
+                ldr: 8,
+                bitfield: 32,
+                alu: 16 + 3,
+                sxtb16: 8,
+                smlad: 32,
+                branches: 1,
+                taken_branches: 1,
+                macs: 64,
+                ..Default::default()
+            },
+        ),
+        // 16 positions: 4 w-ldr + 64 sbfx + 32 pkhbt | 8 x-ldr + 16 sxtb16
+        // | 64 smlad + loop
+        Bits::B2 => (
+            16,
+            ArmCounts {
+                ldr: 12,
+                bitfield: 64,
+                alu: 32 + 3,
+                sxtb16: 16,
+                smlad: 64,
+                branches: 1,
+                taken_branches: 1,
+                macs: 128,
+                ..Default::default()
+            },
+        ),
+    }
+}
+
+/// Per-element im2col cost by ifmap precision (gathering into a q7
+/// buffer; sub-byte ifmaps pay one UBFX per element).
+fn im2col_elem_counts(xbits: Bits) -> ArmCounts {
+    match xbits {
+        // word copy: ldr+str per 4 elements
+        Bits::B8 => ArmCounts { ldr: 1, str_: 1, alu: 1, ..Default::default() }.scaled_div4(),
+        // per element: amortized ldr/4 + ubfx + strb/4-ish
+        Bits::B4 | Bits::B2 => {
+            ArmCounts { ldr: 1, str_: 1, alu: 1, ..Default::default() }
+                .scaled_div4()
+                .plus(&ArmCounts { bitfield: 1, ..Default::default() })
+        }
+    }
+}
+
+impl ArmCounts {
+    /// Helper: represent a per-4-elements cost as per-element (floats would
+    /// lose determinism; we scale the whole layer instead, so store the
+    /// per-4 cost and divide at charge time).
+    fn scaled_div4(&self) -> ArmCounts {
+        self.clone() // marker; the division happens in charge_im2col
+    }
+    fn plus(&self, o: &ArmCounts) -> ArmCounts {
+        let mut c = self.clone();
+        c.add(o);
+        c
+    }
+}
+
+/// QntPack per-output instruction cost by ofmap precision.
+fn qntpack_output_counts(ybits: Bits, levels_visited: u64, taken: u64) -> ArmCounts {
+    match ybits {
+        // per output: smul+add (2), asr, ssat, strb
+        Bits::B8 => ArmCounts { alu: 4, str_: 1, macs: 0, ..Default::default() },
+        // threshold ladder: ldr+cmp-branch per level + BFI + strb/group
+        Bits::B4 | Bits::B2 => ArmCounts {
+            ldr: levels_visited,
+            branches: levels_visited,
+            taken_branches: taken,
+            bitfield: 1,
+            alu: 1,
+            str_: 1, // charged per output; the byte-combining is in alu/bitfield
+            ..Default::default()
+        },
+    }
+}
+
+/// Run a convolution layer on the ARM model. Output is bit-exact with the
+/// golden model; cycles come from the instruction streams above.
+pub fn conv_arm(
+    spec: &ConvSpec,
+    x: &QTensor,
+    w: &QWeights,
+    q: &QuantParams,
+    platform: &ArmPlatform,
+) -> ArmRun {
+    spec.validate().expect("invalid spec");
+    let out = golden::conv2d(spec, x, w, q);
+    let oshape = spec.output();
+    let n_out_pixels = (oshape.h * oshape.w) as u64;
+    let n_outputs = n_out_pixels * oshape.c as u64;
+
+    // --- linear phase counts ---
+    let mut linear = ArmCounts::default();
+    // im2col: once per output pixel, K elements each
+    let k = spec.im2col_len() as u64;
+    let per4 = im2col_elem_counts(spec.prec.x);
+    // word-granular part: (ldr+str+alu) per 4 elements
+    let words = n_out_pixels * k.div_ceil(4);
+    linear.add(&ArmCounts {
+        ldr: words,
+        str_: words,
+        alu: words,
+        ..Default::default()
+    });
+    if per4.bitfield > 0 {
+        // sub-byte: one UBFX per element
+        linear.add(&ArmCounts { bitfield: n_out_pixels * k, ..Default::default() });
+    }
+    // MatMul: tiles of 4 filters x 2 pixels
+    let (step, iter) = matmul_iter_counts(spec.prec.w);
+    let iters_per_tile = (spec.im2col_len() as u64).div_ceil(step as u64);
+    let tiles = n_out_pixels.div_ceil(2) * (oshape.c as u64).div_ceil(4);
+    linear.add(&iter.scaled(iters_per_tile * tiles));
+    // per-tile setup (acc init, pointers, bias reload)
+    linear.add(&ArmCounts { alu: 12 * tiles, branches: tiles, taken_branches: tiles, ..Default::default() });
+
+    // exact MAC count: the model executes the padded lanes like the kernel
+    linear.macs = tiles * iters_per_tile * step as u64 * 8;
+
+    // --- QntPack counts (threshold ladder walks the real data) ---
+    let mut qnt = ArmCounts::default();
+    match spec.prec.y {
+        Bits::B8 => {
+            qnt.add(&qntpack_output_counts(Bits::B8, 0, 0).scaled(n_outputs));
+        }
+        _ => {
+            // charge the real binary-search path per output
+            let acc = golden::conv2d_acc(spec, x, w);
+            let thresholds = q.thresholds();
+            for (i, &phi) in acc.iter().enumerate() {
+                let c = i % oshape.c;
+                let (_, cmps) =
+                    crate::qnn::quant::quantize_thresholds_bsearch(&thresholds[c], phi);
+                // taken direction ~ the >= outcomes; reuse cmps/2 as a model
+                qnt.add(&qntpack_output_counts(spec.prec.y, cmps as u64, (cmps / 2) as u64));
+            }
+        }
+    }
+
+    let linear_cycles = platform.cycles(&linear);
+    let qntpack_cycles = platform.cycles(&qnt);
+    let mut counts = linear;
+    counts.add(&qnt);
+    ArmRun {
+        out,
+        cycles: linear_cycles + qntpack_cycles,
+        linear_cycles,
+        qntpack_cycles,
+        counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::machine::{STM32H7, STM32L4};
+    use super::*;
+    use crate::qnn::types::Precision;
+    use crate::util::rng::Rng;
+
+    fn reference(prec: Precision, rng: &mut Rng) -> (ConvSpec, QTensor, QWeights, QuantParams) {
+        let spec = ConvSpec::reference_layer(prec);
+        let x = QTensor::random(rng, spec.input, prec.x);
+        let w = QWeights::random(rng, spec.cout, 3, 3, spec.input.c, prec.w);
+        let q = spec.default_quant();
+        (spec, x, w, q)
+    }
+
+    #[test]
+    fn arm_output_is_bit_exact_with_golden() {
+        let mut rng = Rng::new(1);
+        for prec in [
+            Precision::new(Bits::B8, Bits::B8, Bits::B8),
+            Precision::new(Bits::B4, Bits::B2, Bits::B4),
+        ] {
+            let (spec, x, w, q) = reference(prec, &mut rng);
+            let run = conv_arm(&spec, &x, &w, &q, &STM32H7);
+            let want = golden::conv2d(&spec, &x, &w, &q);
+            assert_eq!(run.out.data, want.data);
+        }
+    }
+
+    #[test]
+    fn reference_layer_macs_per_cycle_bands() {
+        // Fig. 5 anchors: H7 ~ 16/25 = 0.64, L4 ~ 16/46 = 0.35 at 8-bit.
+        let mut rng = Rng::new(2);
+        let (spec, x, w, q) = reference(Precision::new(Bits::B8, Bits::B8, Bits::B8), &mut rng);
+        let h7 = conv_arm(&spec, &x, &w, &q, &STM32H7);
+        let l4 = conv_arm(&spec, &x, &w, &q, &STM32L4);
+        let h7_mpc = h7.macs_per_cycle();
+        let l4_mpc = l4.macs_per_cycle();
+        assert!((0.5..0.85).contains(&h7_mpc), "H7 {h7_mpc} (paper ~0.64)");
+        assert!((0.28..0.5).contains(&l4_mpc), "L4 {l4_mpc} (paper ~0.35)");
+    }
+
+    #[test]
+    fn subbyte_weights_cost_more_on_arm() {
+        let mut rng = Rng::new(3);
+        let mut mpc = std::collections::BTreeMap::new();
+        for wbits in Bits::ALL {
+            let (spec, x, w, q) =
+                reference(Precision::new(Bits::B8, wbits, Bits::B8), &mut rng);
+            let run = conv_arm(&spec, &x, &w, &q, &STM32H7);
+            mpc.insert(wbits, run.macs_per_cycle());
+        }
+        assert!(mpc[&Bits::B8] > mpc[&Bits::B4], "{mpc:?}");
+        assert!(mpc[&Bits::B8] > mpc[&Bits::B2], "{mpc:?}");
+        // but the penalty is milder than on GAP-8 (paper: ratios drop from
+        // 25x to ~11x, i.e. ARM loses less than 2.5x)
+        let drop = mpc[&Bits::B8] / mpc[&Bits::B4];
+        assert!((1.05..2.2).contains(&drop), "ARM 4-bit drop {drop}");
+    }
+
+    #[test]
+    fn qntpack_ladder_charged_from_real_data() {
+        let mut rng = Rng::new(4);
+        let (spec, x, w, q) = reference(Precision::new(Bits::B8, Bits::B8, Bits::B4), &mut rng);
+        let run = conv_arm(&spec, &x, &w, &q, &STM32L4);
+        assert!(run.qntpack_cycles > 0);
+        // 4-bit ladder: 4 comparisons per output
+        let outputs = 16 * 16 * 64;
+        assert!(run.counts.branches as i64 >= 4 * outputs as i64);
+    }
+}

@@ -1,0 +1,9 @@
+//! ARM Cortex-M baseline substrate: STM32H7 (M7, dual-issue) and STM32L4
+//! (M4) instruction-stream cost models plus the mixed-precision kernels
+//! ported to the ARMv7E-M vocabulary (the paper's comparison targets).
+
+pub mod kernels;
+pub mod machine;
+
+pub use kernels::{conv_arm, ArmRun};
+pub use machine::{ArmCounts, ArmPlatform, STM32H7, STM32L4};

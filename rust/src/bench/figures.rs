@@ -1,0 +1,405 @@
+//! Regenerators for Fig. 4, Tab. 1, Fig. 5, Fig. 6 and the headline claims
+//! (peak MACs/cycle, 8-core speed-up, inner-loop costs), all on the
+//! paper's Reference Layer: 32x16x16 ifmaps, 64x16x16 ofmaps, 3x3 filters.
+
+use crate::arm::{conv_arm, STM32H7, STM32L4};
+use crate::energy::{OperatingPoint, GAP8_HP, GAP8_LP, STM32H7_OP, STM32L4_OP};
+use crate::kernels::{conv_parallel, ConvKernel, Engine, GAP8_TCDM_BANKS};
+use crate::qnn::layer::ConvSpec;
+use crate::qnn::tensor::{QTensor, QWeights};
+use crate::qnn::types::{Bits, Precision};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::table::{bar_chart, f, Table};
+
+/// Build the Reference Layer test case for a precision combo.
+pub fn reference_case(prec: Precision, seed: u64) -> (ConvKernel, QTensor) {
+    let spec = ConvSpec::reference_layer(prec);
+    let mut rng = Rng::new(seed);
+    let x = QTensor::random(&mut rng, spec.input, prec.x);
+    let w = QWeights::random(&mut rng, spec.cout, spec.kh, spec.kw, spec.input.c, prec.w);
+    let q = crate::qnn::quant::random_params(&mut rng, spec.cout, prec.y, spec.phi_max_abs(), spec.im2col_len());
+    (ConvKernel::new(spec, &w, q), x)
+}
+
+// ---------------------------------------------------------------- Fig. 4
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub wbits: Bits,
+    /// Linear (im2col+MatMul) MACs/cycle, single core, per ifmap precision.
+    pub by_xbits: Vec<(Bits, f64)>,
+}
+
+/// Fig. 4: single-core MACs/cycle of the linear phase per weight
+/// precision, with the fluctuation across ifmap precisions.
+pub fn fig4(seed: u64) -> (Vec<Fig4Row>, String) {
+    let mut rows = Vec::new();
+    for wbits in Bits::ALL {
+        let mut by_x = Vec::new();
+        for xbits in Bits::ALL {
+            let prec = Precision::new(xbits, wbits, Bits::B8);
+            let (kernel, x) = reference_case(prec, seed);
+            let mut e = Engine::single_core();
+            let (_, stats) = kernel.run(&mut e, &x);
+            by_x.push((xbits, stats.linear_macs_per_cycle()));
+        }
+        rows.push(Fig4Row { wbits, by_xbits: by_x });
+    }
+    let mut t = Table::new(vec![
+        "weights", "x=8b", "x=4b", "x=2b", "mean MACs/cyc", "vs 8b-weights",
+    ]);
+    let mean8 = rows[0].by_xbits.iter().map(|v| v.1).sum::<f64>() / 3.0;
+    let mut chart = Vec::new();
+    for r in &rows {
+        let mean = r.by_xbits.iter().map(|v| v.1).sum::<f64>() / 3.0;
+        t.row(vec![
+            r.wbits.to_string(),
+            f(r.by_xbits[0].1, 3),
+            f(r.by_xbits[1].1, 3),
+            f(r.by_xbits[2].1, 3),
+            f(mean, 3),
+            format!("÷{}", f(mean8 / mean, 2)),
+        ]);
+        chart.push((format!("w={}", r.wbits), mean));
+    }
+    let mut out = String::from(
+        "Fig. 4 — single-core linear (im2col+MatMul) MACs/cycle, Reference Layer\n\
+         paper: 8b best; drops ~2.5x (4b) and ~2.43x (2b); x-precision varies little\n\n",
+    );
+    out.push_str(&t.render());
+    out.push('\n');
+    out.push_str(&bar_chart("MACs/cycle by weight precision", &chart, 40));
+    (rows, out)
+}
+
+// ---------------------------------------------------------------- Tab. 1
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub ybits: Bits,
+    pub mean: f64,
+    pub spread: f64,
+    pub samples: Vec<f64>,
+}
+
+/// Tab. 1: QntPack overhead in cycles per output pixel, by ofmap
+/// precision; the variance is the spread across the 9 (w, x) combos.
+pub fn table1(seed: u64) -> (Vec<Table1Row>, String) {
+    let mut rows = Vec::new();
+    for ybits in Bits::ALL {
+        let mut samples = Vec::new();
+        for wbits in Bits::ALL {
+            for xbits in Bits::ALL {
+                let prec = Precision::new(xbits, wbits, ybits);
+                let (kernel, x) = reference_case(prec, seed);
+                let mut e = Engine::single_core();
+                let (_, stats) = kernel.run(&mut e, &x);
+                samples.push(stats.qntpack_per_output());
+            }
+        }
+        let s = Summary::of(&samples);
+        rows.push(Table1Row { ybits, mean: s.mean, spread: s.spread(), samples });
+    }
+    let mut t = Table::new(vec!["ofmaps precision", "cycles/output pixel", "variance", "paper"]);
+    let paper = [(Bits::B8, "2.01 +/- 0.57"), (Bits::B4, "16.64 +/- 4.47"), (Bits::B2, "8.02 +/- 1.15")];
+    for r in &rows {
+        let p = paper.iter().find(|(b, _)| *b == r.ybits).unwrap().1;
+        t.row(vec![
+            r.ybits.to_string(),
+            f(r.mean, 2),
+            format!("+/- {}", f(r.spread, 2)),
+            p.to_string(),
+        ]);
+    }
+    let mut out = String::from(
+        "Tab. 1 — QntPack overhead (cycles per output pixel) by ofmap precision\n\
+         paper trend: 8b << 2b < 4b, 4b ~ 2x 2b (threshold ladder depth)\n\n",
+    );
+    out.push_str(&t.render());
+    (rows, out)
+}
+
+// ---------------------------------------------------------------- Fig. 5
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub prec: Precision,
+    pub gap8_mpc: f64,
+    pub h7_mpc: f64,
+    pub l4_mpc: f64,
+    pub speedup_h7: f64,
+    pub speedup_l4: f64,
+}
+
+/// Fig. 5: cycle/cycle speed-up of octa-core GAP-8 over STM32H7/STM32L4,
+/// all 27 permutations of the Reference Layer.
+pub fn fig5(seed: u64) -> (Vec<Fig5Row>, String) {
+    let mut rows = Vec::new();
+    for prec in Precision::all() {
+        let (kernel, x) = reference_case(prec, seed);
+        let run = conv_parallel(&kernel, &x, 8, GAP8_TCDM_BANKS);
+        let gap_mpc = run.macs_per_cycle();
+        let spec = ConvSpec::reference_layer(prec);
+        let mut rng = Rng::new(seed);
+        let xq = QTensor::random(&mut rng, spec.input, prec.x);
+        let w = QWeights::random(&mut rng, spec.cout, 3, 3, spec.input.c, prec.w);
+        let q = crate::qnn::quant::random_params(&mut rng, spec.cout, prec.y, spec.phi_max_abs(), spec.im2col_len());
+        let h7 = conv_arm(&spec, &xq, &w, &q, &STM32H7);
+        let l4 = conv_arm(&spec, &xq, &w, &q, &STM32L4);
+        rows.push(Fig5Row {
+            prec,
+            gap8_mpc: gap_mpc,
+            h7_mpc: h7.macs_per_cycle(),
+            l4_mpc: l4.macs_per_cycle(),
+            speedup_h7: h7.cycles as f64 / run.cycles as f64,
+            speedup_l4: l4.cycles as f64 / run.cycles as f64,
+        });
+    }
+    let mut t = Table::new(vec![
+        "kernel", "GAP-8 MACs/cyc (8c)", "H7 MACs/cyc", "L4 MACs/cyc", "vs H7", "vs L4",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.prec.kernel_name(),
+            f(r.gap8_mpc, 2),
+            f(r.h7_mpc, 2),
+            f(r.l4_mpc, 2),
+            format!("{}x", f(r.speedup_h7, 1)),
+            format!("{}x", f(r.speedup_l4, 1)),
+        ]);
+    }
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.speedup_l4.partial_cmp(&b.speedup_l4).unwrap())
+        .unwrap();
+    let mut out = String::from(
+        "Fig. 5 — GAP-8 (8 cores) speed-up over STM32H7 / STM32L4, Reference Layer\n\
+         paper: up to 25x (H7) and 46x (L4) at 8-bit; >= 11x / 19x with unpacking\n\n",
+    );
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nbest: {} at {}x (H7) / {}x (L4)\n",
+        best.prec.kernel_name(),
+        f(best.speedup_h7, 1),
+        f(best.speedup_l4, 1)
+    ));
+    (rows, out)
+}
+
+// ---------------------------------------------------------------- Fig. 6
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub prec: Precision,
+    /// (platform name, energy uJ)
+    pub energy_uj: Vec<(&'static str, f64)>,
+}
+
+/// Fig. 6: energy per Reference-Layer execution on GAP-8 (both operating
+/// modes) vs STM32H7 vs STM32L4.
+pub fn fig6(seed: u64) -> (Vec<Fig6Row>, String) {
+    let combos: Vec<Precision> = vec![
+        Precision::new(Bits::B8, Bits::B8, Bits::B8),
+        Precision::new(Bits::B8, Bits::B4, Bits::B4),
+        Precision::new(Bits::B4, Bits::B4, Bits::B4),
+        Precision::new(Bits::B8, Bits::B2, Bits::B2),
+        Precision::new(Bits::B2, Bits::B2, Bits::B2),
+    ];
+    let mut rows = Vec::new();
+    for prec in combos {
+        let (kernel, x) = reference_case(prec, seed);
+        let run = conv_parallel(&kernel, &x, 8, GAP8_TCDM_BANKS);
+        let spec = ConvSpec::reference_layer(prec);
+        let mut rng = Rng::new(seed);
+        let xq = QTensor::random(&mut rng, spec.input, prec.x);
+        let w = QWeights::random(&mut rng, spec.cout, 3, 3, spec.input.c, prec.w);
+        let q = crate::qnn::quant::random_params(&mut rng, spec.cout, prec.y, spec.phi_max_abs(), spec.im2col_len());
+        let h7 = conv_arm(&spec, &xq, &w, &q, &STM32H7);
+        let l4 = conv_arm(&spec, &xq, &w, &q, &STM32L4);
+        rows.push(Fig6Row {
+            prec,
+            energy_uj: vec![
+                ("GAP-8 LP", GAP8_LP.energy_uj(run.cycles)),
+                ("GAP-8 HP", GAP8_HP.energy_uj(run.cycles)),
+                ("STM32H7", STM32H7_OP.energy_uj(h7.cycles)),
+                ("STM32L4", STM32L4_OP.energy_uj(l4.cycles)),
+            ],
+        });
+    }
+    let mut t = Table::new(vec![
+        "kernel", "GAP-8 LP [uJ]", "GAP-8 HP [uJ]", "STM32H7 [uJ]", "STM32L4 [uJ]",
+        "H7/LP", "L4/LP", "H7/HP", "L4/HP",
+    ]);
+    for r in &rows {
+        let e: Vec<f64> = r.energy_uj.iter().map(|v| v.1).collect();
+        t.row(vec![
+            r.prec.kernel_name(),
+            f(e[0], 1),
+            f(e[1], 1),
+            f(e[2], 1),
+            f(e[3], 1),
+            format!("{}x", f(e[2] / e[0], 1)),
+            format!("{}x", f(e[3] / e[0], 1)),
+            format!("{}x", f(e[2] / e[1], 1)),
+            format!("{}x", f(e[3] / e[1], 1)),
+        ]);
+    }
+    let mut out = String::from(
+        "Fig. 6 — Reference-Layer energy: GAP-8 (LP 90MHz/24mW, HP 175MHz/70mW)\n\
+         vs STM32H7 (400MHz/234mW) vs STM32L4 (80MHz/10mW)\n\
+         paper: 45x/21x (LP) and 31x/15x (HP) at 8-bit; 20x/9x and 14x/6x unpacked\n\n",
+    );
+    out.push_str(&t.render());
+    (rows, out)
+}
+
+// ------------------------------------------------------------- headlines
+
+/// Peak performance claim: 16 MACs/cycle on 8 cores (8-bit kernel,
+/// linear-phase metric).
+pub fn peak(seed: u64) -> (f64, String) {
+    let prec = Precision::new(Bits::B8, Bits::B8, Bits::B8);
+    let (kernel, x) = reference_case(prec, seed);
+    let run = conv_parallel(&kernel, &x, 8, GAP8_TCDM_BANKS);
+    let linear = run.total_macs as f64 / (run.phases.linear() as f64 / 8.0);
+    let full = run.macs_per_cycle();
+    let out = format!(
+        "Peak (paper: 16 MACs/cycle on 8 cores, 8-bit kernel)\n\
+         linear-phase MACs/cycle (8 cores): {}\n\
+         full-layer  MACs/cycle (8 cores): {}\n",
+        f(linear, 2),
+        f(full, 2)
+    );
+    (linear, out)
+}
+
+/// Parallel speed-up claim: ~7.5x on 8 cores.
+pub fn speedup(seed: u64) -> (Vec<(usize, f64)>, String) {
+    let prec = Precision::new(Bits::B8, Bits::B8, Bits::B8);
+    let (kernel, x) = reference_case(prec, seed);
+    let base = conv_parallel(&kernel, &x, 1, GAP8_TCDM_BANKS).cycles;
+    let mut rows = Vec::new();
+    let mut chart = Vec::new();
+    for cores in [1, 2, 4, 8] {
+        let run = conv_parallel(&kernel, &x, cores, GAP8_TCDM_BANKS);
+        let s = base as f64 / run.cycles as f64;
+        rows.push((cores, s));
+        chart.push((format!("{cores} cores"), s));
+    }
+    let mut out = String::from("Parallel speed-up on the Reference Layer (paper: ~7.5x at 8 cores)\n");
+    out.push_str(&bar_chart("speed-up vs 1 core", &chart, 40));
+    (rows, out)
+}
+
+/// Inner-loop cost claim: 14 / 72 / 140 cycles per 4x2-tile iteration,
+/// cross-checked on the ISA simulator.
+pub fn innerloop() -> String {
+    use crate::kernels::asm_xcheck::{run_matmul_asm, run_matmul_engine};
+    let mut rng = Rng::new(7);
+    let k = 288;
+    let mut t = Table::new(vec![
+        "weights", "engine cyc/iter", "paper", "ISA-sim asm cyc/iter", "bit-exact",
+    ]);
+    for (bits, paper) in [(Bits::B8, 14u64), (Bits::B4, 72), (Bits::B2, 140)] {
+        let w = QWeights::random(&mut rng, 4, 1, 1, k, bits);
+        let x0: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let x1: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let asm = run_matmul_asm(bits, &w, &x0, &x1, k);
+        let (eng_acc, eng_cycles) = run_matmul_engine(&w, &x0, &x1);
+        let iters = k as u64 / crate::kernels::matmul::step_elems(bits) as u64;
+        t.row(vec![
+            bits.to_string(),
+            (eng_cycles / iters).to_string(),
+            paper.to_string(),
+            format!("{:.1}", asm.loop_cycles as f64 / iters as f64),
+            (asm.acc.to_vec() == eng_acc).to_string(),
+        ]);
+    }
+    format!(
+        "Inner-loop cycles per 4x2-tile iteration (paper §3: 14 / 72 / 140)\n\n{}",
+        t.render()
+    )
+}
+
+/// All the supported operating points (for the CLI).
+pub fn operating_points() -> [OperatingPoint; 4] {
+    [GAP8_LP, GAP8_HP, STM32H7_OP, STM32L4_OP]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_reproduces_paper_ratios() {
+        let (rows, report) = fig4(2020);
+        assert!(report.contains("Fig. 4"));
+        let mean = |r: &Fig4Row| r.by_xbits.iter().map(|v| v.1).sum::<f64>() / 3.0;
+        let m8 = mean(&rows[0]);
+        let m4 = mean(&rows[1]);
+        let m2 = mean(&rows[2]);
+        assert!((2.2..2.8).contains(&(m8 / m4)), "4b drop {}", m8 / m4);
+        assert!((2.1..2.7).contains(&(m8 / m2)), "2b drop {}", m8 / m2);
+        assert!(m2 > m4, "2-bit must beat 4-bit");
+        // x-precision fluctuation is small relative to the w-precision drop
+        for r in &rows {
+            let vals: Vec<f64> = r.by_xbits.iter().map(|v| v.1).collect();
+            let s = Summary::of(&vals);
+            assert!(s.spread() / s.mean < 0.25, "x-fluctuation too large: {s:?}");
+        }
+    }
+
+    #[test]
+    fn table1_reproduces_paper_shape() {
+        let (rows, _) = table1(2020);
+        let by = |b: Bits| rows.iter().find(|r| r.ybits == b).unwrap().mean;
+        assert!(by(Bits::B8) < by(Bits::B2));
+        assert!(by(Bits::B2) < by(Bits::B4));
+        let ratio = by(Bits::B4) / by(Bits::B2);
+        assert!((1.5..2.5).contains(&ratio), "4b/2b {ratio}");
+    }
+
+    #[test]
+    fn fig5_shape_holds() {
+        let (rows, _) = fig5(2020);
+        assert_eq!(rows.len(), 27);
+        let r888 = rows
+            .iter()
+            .find(|r| r.prec == Precision::new(Bits::B8, Bits::B8, Bits::B8))
+            .unwrap();
+        assert!((15.0..32.0).contains(&r888.speedup_h7), "H7 8b {}", r888.speedup_h7);
+        assert!((30.0..55.0).contains(&r888.speedup_l4), "L4 8b {}", r888.speedup_l4);
+        // every permutation must still win by a wide margin
+        for r in &rows {
+            assert!(r.speedup_h7 > 5.0, "{}: H7 {}", r.prec, r.speedup_h7);
+            assert!(r.speedup_l4 > 9.0, "{}: L4 {}", r.prec, r.speedup_l4);
+        }
+    }
+
+    #[test]
+    fn fig6_energy_ratios_hold() {
+        let (rows, _) = fig6(2020);
+        let r888 = &rows[0];
+        let e: Vec<f64> = r888.energy_uj.iter().map(|v| v.1).collect();
+        let (lp, hp, h7, l4) = (e[0], e[1], e[2], e[3]);
+        assert!((30.0..70.0).contains(&(h7 / lp)), "H7/LP {}", h7 / lp);
+        assert!((12.0..32.0).contains(&(l4 / lp)), "L4/LP {}", l4 / lp);
+        assert!((20.0..50.0).contains(&(h7 / hp)), "H7/HP {}", h7 / hp);
+        assert!((8.0..24.0).contains(&(l4 / hp)), "L4/HP {}", l4 / hp);
+        // unpacked kernels keep a clear energy win
+        for r in &rows[1..] {
+            let e: Vec<f64> = r.energy_uj.iter().map(|v| v.1).collect();
+            assert!(e[2] / e[0] > 5.0, "{}: H7/LP {}", r.prec, e[2] / e[0]);
+        }
+    }
+
+    #[test]
+    fn peak_and_speedup_claims() {
+        let (linear, _) = peak(2020);
+        assert!((14.0..18.5).contains(&linear), "peak {linear}");
+        let (rows, _) = speedup(2020);
+        let s8 = rows.iter().find(|r| r.0 == 8).unwrap().1;
+        assert!((7.0..7.9).contains(&s8), "8-core speedup {s8}");
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper-evaluation harness: one generator per table/figure
+//! (DESIGN.md §5). Every function returns the rendered report and the raw
+//! series so both the CLI (`pulpnn figN`) and `cargo bench` reuse them.
+
+pub mod ablate;
+pub mod figures;
+
+pub use figures::{
+    fig4, fig5, fig6, innerloop, peak, speedup, table1, Fig4Row, Fig5Row, Fig6Row, Table1Row,
+};

@@ -1,0 +1,256 @@
+//! The PULP cluster: N RI5CY cores sharing a banked TCDM, synchronized by
+//! the event unit's hardware barrier. Cores are advanced in a
+//! lowest-cycle-first event loop so TCDM bank arbitration sees a coherent
+//! global timeline.
+
+use crate::isa::cost;
+use crate::isa::exec::{Core, StepEvent};
+use crate::isa::inst::Inst;
+
+use super::tcdm::Tcdm;
+
+/// Outcome of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterRun {
+    /// Per-core cycle counts at halt.
+    pub core_cycles: Vec<u64>,
+    /// Makespan: max core cycle.
+    pub cycles: u64,
+    /// Total retired instructions.
+    pub retired: u64,
+    /// TCDM contention stalls.
+    pub tcdm_stalls: u64,
+    pub tcdm_conflict_rate: f64,
+    /// Number of barrier episodes executed.
+    pub barriers: u64,
+}
+
+/// A cluster of `n` cores running (possibly different) programs over a
+/// shared TCDM.
+pub struct Cluster {
+    pub tcdm: Tcdm,
+    pub n_cores: usize,
+}
+
+impl Cluster {
+    pub fn gap8() -> Cluster {
+        Cluster { tcdm: Tcdm::gap8(), n_cores: 8 }
+    }
+
+    pub fn new(n_cores: usize, tcdm: Tcdm) -> Cluster {
+        assert!(n_cores >= 1);
+        Cluster { tcdm, n_cores }
+    }
+
+    /// Run one program on all cores (SPMD). Each core gets its id in `a0`
+    /// (x10) and the core count in `a1` (x11), PULP `rt_core_id()` style.
+    pub fn run_spmd(&mut self, prog: &[Inst], max_insts_per_core: u64) -> ClusterRun {
+        let progs: Vec<&[Inst]> = (0..self.n_cores).map(|_| prog).collect();
+        self.run(&progs, max_insts_per_core)
+    }
+
+    /// Run per-core programs until every core halts. Barriers block a core
+    /// until all cores have arrived, then release them all at the max
+    /// arrival cycle plus the event-unit cost.
+    pub fn run(&mut self, progs: &[&[Inst]], max_insts_per_core: u64) -> ClusterRun {
+        assert_eq!(progs.len(), self.n_cores);
+        let mut cores: Vec<Core> = (0..self.n_cores)
+            .map(|id| {
+                let mut c = Core::new();
+                c.regs[10] = id as u32; // a0 = core id
+                c.regs[11] = self.n_cores as u32; // a1 = n cores
+                c
+            })
+            .collect();
+        let mut waiting: Vec<bool> = vec![false; self.n_cores];
+        let mut barriers = 0u64;
+        let start_stalls = self.tcdm.conflict_stalls;
+
+        loop {
+            // Pick the lowest-cycle runnable (not halted, not at barrier)
+            // core and remember the runner-up: the chosen core can then be
+            // batch-stepped up to that horizon without re-scanning, which
+            // keeps the TCDM arbitration timeline coherent while amortizing
+            // the selection cost (the profile hot spot — EXPERIMENTS §Perf).
+            let mut best: Option<(usize, u64)> = None;
+            let mut horizon = u64::MAX;
+            for (i, c) in cores.iter().enumerate() {
+                if c.halted || waiting[i] {
+                    continue;
+                }
+                match best {
+                    None => best = Some((i, c.cycles)),
+                    Some((_, bc)) if c.cycles < bc => {
+                        horizon = bc;
+                        best = Some((i, c.cycles));
+                    }
+                    Some(_) => horizon = horizon.min(c.cycles),
+                }
+            }
+            let Some((i, _)) = best else {
+                // No runnable core: either all halted (done) or a deadlock of
+                // waiters (a barrier some halted core will never reach).
+                if cores.iter().all(|c| c.halted) {
+                    break;
+                }
+                let stuck: Vec<usize> =
+                    waiting.iter().enumerate().filter(|(_, w)| **w).map(|(i, _)| i).collect();
+                panic!("barrier deadlock: cores {stuck:?} wait but others halted");
+            };
+            // Batch-step core i until it crosses the horizon or blocks.
+            loop {
+                assert!(
+                    cores[i].retired < max_insts_per_core,
+                    "runaway core {i}: > {max_insts_per_core} instructions"
+                );
+                match cores[i].step(progs[i], &mut self.tcdm, i) {
+                    StepEvent::Normal => {
+                        if cores[i].cycles > horizon {
+                            break;
+                        }
+                    }
+                    StepEvent::Halted => break,
+                    StepEvent::Barrier => {
+                        waiting[i] = true;
+                        if waiting.iter().all(|w| *w) {
+                            // All arrived: release at the rendezvous time.
+                            barriers += 1;
+                            let release = cores.iter().map(|c| c.cycles).max().unwrap()
+                                + cost::BARRIER_COST;
+                            for (c, w) in cores.iter_mut().zip(waiting.iter_mut()) {
+                                c.cycles = release;
+                                *w = false;
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+
+        let core_cycles: Vec<u64> = cores.iter().map(|c| c.cycles).collect();
+        ClusterRun {
+            cycles: core_cycles.iter().copied().max().unwrap(),
+            retired: cores.iter().map(|c| c.retired).sum(),
+            core_cycles,
+            tcdm_stalls: self.tcdm.conflict_stalls - start_stalls,
+            tcdm_conflict_rate: self.tcdm.conflict_rate(),
+            barriers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    #[test]
+    fn spmd_cores_see_their_ids() {
+        // each core writes its id to TCDM[id*4]
+        let prog = assemble(
+            "
+            slli t0, a0, 2
+            sw a0, 0(t0)
+            halt
+        ",
+        )
+        .unwrap();
+        let mut cl = Cluster::new(4, Tcdm::new(1024, 16));
+        let run = cl.run_spmd(&prog.insts, 1000);
+        for id in 0..4u32 {
+            assert_eq!(crate::isa::exec::raw_load(&cl.tcdm.bytes, id * 4, 4), id);
+        }
+        assert_eq!(run.core_cycles.len(), 4);
+    }
+
+    #[test]
+    fn barrier_aligns_cores() {
+        // core 0 burns more cycles before the barrier; afterwards both
+        // stamp their post-barrier cycle count — they must match.
+        let prog = assemble(
+            "
+            bne a0, zero, join
+            li t1, 50
+        spin:
+            addi t1, t1, -1
+            bne t1, zero, spin
+        join:
+            barrier
+            nop
+            halt
+        ",
+        )
+        .unwrap();
+        let mut cl = Cluster::new(2, Tcdm::new(256, 4));
+        let run = cl.run_spmd(&prog.insts, 10_000);
+        assert_eq!(run.barriers, 1);
+        // both cores halt within a couple cycles of each other
+        let d = run.core_cycles[0].abs_diff(run.core_cycles[1]);
+        assert!(d <= 2, "cores diverged by {d} cycles: {:?}", run.core_cycles);
+        // the fast core waited: its halt time reflects the slow core's spin
+        assert!(run.cycles > 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "barrier deadlock")]
+    fn missing_barrier_participant_deadlocks() {
+        let prog = assemble(
+            "
+            bne a0, zero, skip
+            barrier
+        skip:
+            halt
+        ",
+        )
+        .unwrap();
+        let mut cl = Cluster::new(2, Tcdm::new(256, 4));
+        cl.run_spmd(&prog.insts, 1000);
+    }
+
+    #[test]
+    fn contention_grows_with_cores_on_one_bank() {
+        // All cores hammer bank 0 (stride 64 bytes = 16 words = bank 0 at 16 banks).
+        let prog = assemble(
+            "
+            li t0, 0
+            li t1, 200
+        loop:
+            lw t2, 0(t0)
+            addi t1, t1, -1
+            bne t1, zero, loop
+            halt
+        ",
+        )
+        .unwrap();
+        let mut one = Cluster::new(1, Tcdm::new(4096, 16));
+        let r1 = one.run_spmd(&prog.insts, 100_000);
+        let mut eight = Cluster::new(8, Tcdm::new(4096, 16));
+        let r8 = eight.run_spmd(&prog.insts, 100_000);
+        assert_eq!(r1.tcdm_stalls, 0);
+        assert!(r8.tcdm_stalls > 500, "expected heavy contention, got {}", r8.tcdm_stalls);
+        assert!(r8.cycles > r1.cycles);
+    }
+
+    #[test]
+    fn disjoint_banks_scale_cleanly() {
+        // Each core touches only its own bank: core i loads addr 4*i.
+        let prog = assemble(
+            "
+            slli t0, a0, 2
+            li t1, 100
+        loop:
+            lw t2, 0(t0)
+            addi t1, t1, -1
+            bne t1, zero, loop
+            halt
+        ",
+        )
+        .unwrap();
+        let mut cl = Cluster::new(8, Tcdm::new(4096, 16));
+        let run = cl.run_spmd(&prog.insts, 100_000);
+        assert_eq!(run.tcdm_stalls, 0, "disjoint banks must not conflict");
+        let spread = run.core_cycles.iter().max().unwrap() - run.core_cycles.iter().min().unwrap();
+        assert!(spread <= 1, "SPMD same-program cores should finish together");
+    }
+}

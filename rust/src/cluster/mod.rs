@@ -1,0 +1,8 @@
+//! The PULP cluster substrate: banked TCDM with contention, event-unit
+//! barriers, and the multi-core lockstep runner (DESIGN.md §2, §7).
+
+pub mod cluster;
+pub mod tcdm;
+
+pub use cluster::{Cluster, ClusterRun};
+pub use tcdm::Tcdm;

@@ -1,0 +1,338 @@
+//! The edge-fleet coordinator: routes inference requests across a fleet of
+//! simulated GAP-8 nodes (per-device FIFO queues, no preemption — an MCU
+//! runs one inference at a time), with latency / throughput / energy
+//! accounting derived from the kernel-library cycle counts.
+
+use crate::energy::OperatingPoint;
+use crate::util::rng::Rng;
+
+use super::request::Request;
+
+/// Routing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    /// Route to the device whose queue drains earliest.
+    LeastLoaded,
+    /// Prefer low-power devices; spill to high-performance ones only when
+    /// the deadline would otherwise be missed.
+    EnergyAware,
+}
+
+/// One simulated edge node.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    pub op: OperatingPoint,
+    /// Cycles one inference takes on this node (from the GAP-8 simulator).
+    pub cycles_per_inference: u64,
+    /// Simulated time at which the device becomes free.
+    free_at_us: f64,
+    pub served: u64,
+    pub energy_uj: f64,
+}
+
+impl Device {
+    pub fn new(name: String, op: OperatingPoint, cycles_per_inference: u64) -> Device {
+        Device { name, op, cycles_per_inference, free_at_us: 0.0, served: 0, energy_uj: 0.0 }
+    }
+
+    pub fn inference_us(&self) -> f64 {
+        self.op.time_ms(self.cycles_per_inference) * 1e3
+    }
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub device: usize,
+    pub arrival_us: f64,
+    pub start_us: f64,
+    pub finish_us: f64,
+    pub deadline_missed: bool,
+}
+
+impl Completion {
+    pub fn latency_us(&self) -> f64 {
+        self.finish_us - self.arrival_us
+    }
+}
+
+/// Aggregated fleet metrics.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub completions: Vec<Completion>,
+    pub throughput_rps: f64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub total_energy_uj: f64,
+    pub deadline_misses: usize,
+    pub per_device_served: Vec<u64>,
+}
+
+/// The coordinator.
+pub struct Fleet {
+    pub devices: Vec<Device>,
+    pub policy: Policy,
+    rr_next: usize,
+}
+
+impl Fleet {
+    pub fn new(devices: Vec<Device>, policy: Policy) -> Fleet {
+        assert!(!devices.is_empty());
+        Fleet { devices, policy, rr_next: 0 }
+    }
+
+    /// Pick a device for a request arriving at `now`.
+    fn route(&mut self, req: &Request, now: f64) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let d = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.devices.len();
+                d
+            }
+            Policy::LeastLoaded => self
+                .devices
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let fa = a.free_at_us.max(now) + a.inference_us();
+                    let fb = b.free_at_us.max(now) + b.inference_us();
+                    fa.partial_cmp(&fb).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap(),
+            Policy::EnergyAware => {
+                // candidate finish time per device, energy-sorted
+                let mut order: Vec<usize> = (0..self.devices.len()).collect();
+                order.sort_by(|&a, &b| {
+                    let ea = self.devices[a].op.energy_uj(self.devices[a].cycles_per_inference);
+                    let eb = self.devices[b].op.energy_uj(self.devices[b].cycles_per_inference);
+                    ea.partial_cmp(&eb).unwrap()
+                });
+                if let Some(dl) = req.deadline_us {
+                    for &d in &order {
+                        let dev = &self.devices[d];
+                        let finish = dev.free_at_us.max(now) + dev.inference_us();
+                        if finish - req.arrival_us <= dl {
+                            return d;
+                        }
+                    }
+                }
+                // no deadline (or none can meet it): cheapest with least load
+                *order
+                    .iter()
+                    .min_by(|&&a, &&b| {
+                        self.devices[a]
+                            .free_at_us
+                            .partial_cmp(&self.devices[b].free_at_us)
+                            .unwrap()
+                    })
+                    .unwrap()
+            }
+        }
+    }
+
+    /// Run the full workload through the fleet (event-driven, requests are
+    /// pre-sorted by arrival).
+    pub fn run(&mut self, requests: &[Request]) -> FleetReport {
+        let mut completions = Vec::with_capacity(requests.len());
+        for req in requests {
+            let d = self.route(req, req.arrival_us);
+            let dev = &mut self.devices[d];
+            let start = dev.free_at_us.max(req.arrival_us);
+            let finish = start + dev.inference_us();
+            dev.free_at_us = finish;
+            dev.served += 1;
+            dev.energy_uj += dev.op.energy_uj(dev.cycles_per_inference);
+            completions.push(Completion {
+                id: req.id,
+                device: d,
+                arrival_us: req.arrival_us,
+                start_us: start,
+                finish_us: finish,
+                deadline_missed: req
+                    .deadline_us
+                    .map(|dl| finish - req.arrival_us > dl)
+                    .unwrap_or(false),
+            });
+        }
+        let span_s = completions
+            .iter()
+            .map(|c| c.finish_us)
+            .fold(0.0f64, f64::max)
+            .max(1e-9)
+            / 1e6;
+        let lats: Vec<f64> = completions.iter().map(|c| c.latency_us()).collect();
+        FleetReport {
+            throughput_rps: completions.len() as f64 / span_s,
+            mean_latency_us: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
+            p99_latency_us: if lats.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::percentile(&lats, 99.0)
+            },
+            total_energy_uj: self.devices.iter().map(|d| d.energy_uj).sum(),
+            deadline_misses: completions.iter().filter(|c| c.deadline_missed).count(),
+            per_device_served: self.devices.iter().map(|d| d.served).collect(),
+            completions,
+        }
+    }
+}
+
+/// Build a homogeneous fleet of GAP-8 nodes.
+pub fn gap8_fleet(n: usize, op: OperatingPoint, cycles_per_inference: u64, policy: Policy) -> Fleet {
+    Fleet::new(
+        (0..n)
+            .map(|i| Device::new(format!("gap8-{i}"), op, cycles_per_inference))
+            .collect(),
+        policy,
+    )
+}
+
+/// Randomized fleet helper for property tests.
+pub fn random_fleet(rng: &mut Rng, policy: Policy) -> Fleet {
+    let n = 1 + rng.below(6) as usize;
+    let devices = (0..n)
+        .map(|i| {
+            let op = if rng.chance(0.5) {
+                crate::energy::GAP8_LP
+            } else {
+                crate::energy::GAP8_HP
+            };
+            Device::new(format!("d{i}"), op, 100_000 + rng.below(400_000) as u64)
+        })
+        .collect();
+    Fleet::new(devices, policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Workload;
+    use crate::energy::{GAP8_HP, GAP8_LP};
+    use crate::util::check::check;
+
+    fn workload(rate: f64, n: usize, deadline: Option<f64>, seed: u64) -> Vec<Request> {
+        Workload { rate_per_s: rate, deadline_us: deadline, n_requests: n, seed }.generate()
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        check("fleet-conservation", 50, |rng, _| {
+            let policy = *rng.pick(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::EnergyAware]);
+            let mut fleet = random_fleet(rng, policy);
+            let reqs = workload(500.0 + rng.below(5000) as f64, 200, Some(1e5), rng.next_u64());
+            let report = fleet.run(&reqs);
+            if report.completions.len() != reqs.len() {
+                return Err("completion count mismatch".into());
+            }
+            let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != reqs.len() {
+                return Err("duplicate or missing ids".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_device_serialization_no_overlap() {
+        check("fleet-fifo-no-overlap", 50, |rng, _| {
+            let policy = *rng.pick(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::EnergyAware]);
+            let mut fleet = random_fleet(rng, policy);
+            let reqs = workload(2000.0, 300, None, rng.next_u64());
+            let report = fleet.run(&reqs);
+            let n_dev = report.per_device_served.len();
+            for d in 0..n_dev {
+                let mut times: Vec<(f64, f64)> = report
+                    .completions
+                    .iter()
+                    .filter(|c| c.device == d)
+                    .map(|c| (c.start_us, c.finish_us))
+                    .collect();
+                times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in times.windows(2) {
+                    if w[1].0 < w[0].1 - 1e-9 {
+                        return Err(format!("device {d}: overlapping runs {w:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_start_after_arrival_and_finish_after_start() {
+        check("fleet-causality", 30, |rng, _| {
+            let mut fleet = random_fleet(rng, Policy::LeastLoaded);
+            let reqs = workload(1000.0, 200, None, rng.next_u64());
+            let report = fleet.run(&reqs);
+            for c in &report.completions {
+                if c.start_us < c.arrival_us - 1e-9 || c.finish_us <= c.start_us {
+                    return Err(format!("causality violation: {c:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn round_robin_balances_homogeneous_fleet() {
+        let mut fleet = gap8_fleet(4, GAP8_LP, 300_000, Policy::RoundRobin);
+        let report = fleet.run(&workload(100.0, 400, None, 3));
+        for served in &report.per_device_served {
+            assert_eq!(*served, 100);
+        }
+    }
+
+    #[test]
+    fn least_loaded_beats_round_robin_on_heterogeneous_fleet() {
+        let devices = |policy| {
+            Fleet::new(
+                vec![
+                    Device::new("lp".into(), GAP8_LP, 600_000),
+                    Device::new("hp".into(), GAP8_HP, 600_000),
+                ],
+                policy,
+            )
+        };
+        let reqs = workload(800.0, 500, None, 9);
+        let rr = devices(Policy::RoundRobin).run(&reqs);
+        let ll = devices(Policy::LeastLoaded).run(&reqs);
+        assert!(ll.mean_latency_us <= rr.mean_latency_us * 1.05);
+    }
+
+    #[test]
+    fn energy_aware_prefers_lp_when_loose_deadlines() {
+        let mut fleet = Fleet::new(
+            vec![
+                Device::new("lp".into(), GAP8_LP, 200_000),
+                Device::new("hp".into(), GAP8_HP, 200_000),
+            ],
+            Policy::EnergyAware,
+        );
+        // slow arrivals, generous deadline: everything should go LP
+        let reqs = workload(50.0, 100, Some(1e6), 5);
+        let report = fleet.run(&reqs);
+        assert_eq!(report.per_device_served[0], 100, "{:?}", report.per_device_served);
+        assert_eq!(report.deadline_misses, 0);
+    }
+
+    #[test]
+    fn energy_aware_spills_to_hp_under_load() {
+        let mut fleet = Fleet::new(
+            vec![
+                Device::new("lp".into(), GAP8_LP, 500_000), // 5.6 ms/inf
+                Device::new("hp".into(), GAP8_HP, 500_000), // 2.9 ms/inf
+            ],
+            Policy::EnergyAware,
+        );
+        // tight deadline forces HP spill
+        let reqs = workload(300.0, 200, Some(8_000.0), 6);
+        let report = fleet.run(&reqs);
+        assert!(report.per_device_served[1] > 0, "HP never used: {:?}", report.per_device_served);
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordination: the edge-fleet request router/scheduler over
+//! simulated GAP-8 nodes (latency/energy accounting from the kernel
+//! library) and the real-time PJRT serving loop the e2e example drives.
+
+pub mod fleet;
+pub mod request;
+pub mod server;
+
+pub use fleet::{gap8_fleet, Device, Fleet, FleetReport, Policy};
+pub use request::{Request, Workload};
+pub use server::{Served, Server, ServeStats};

@@ -1,0 +1,93 @@
+//! Real-time serving loop: batches of inference requests executed through
+//! the PJRT runtime (the AOT'd artifact), with wall-clock latency and
+//! throughput accounting. This is the path `examples/edge_serving.rs`
+//! drives end-to-end: requests enter a bounded queue, a worker drains it,
+//! executes on XLA-CPU, and the device/fleet simulator stamps each reply
+//! with the simulated on-device cycles and energy.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Artifact, ExecOutput, Runtime};
+
+/// A served request: wall-clock measurements plus the simulated-edge cost.
+#[derive(Debug, Clone)]
+pub struct Served {
+    pub id: u64,
+    pub queue_us: f64,
+    pub exec_us: f64,
+    pub output: ExecOutput,
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub served: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub mean_exec_us: f64,
+    pub p99_exec_us: f64,
+    pub mean_queue_us: f64,
+}
+
+/// A single-model inference server over one compiled artifact.
+pub struct Server<'a> {
+    rt: &'a mut Runtime,
+    artifact: &'a Artifact,
+    queue: VecDeque<(u64, Vec<u8>, Instant)>,
+    pub max_queue: usize,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(rt: &'a mut Runtime, artifact: &'a Artifact, max_queue: usize) -> Result<Server<'a>> {
+        rt.load(artifact)?;
+        Ok(Server { rt, artifact, queue: VecDeque::new(), max_queue })
+    }
+
+    /// Enqueue a request; returns false when the queue is full
+    /// (backpressure — the caller should retry or shed load).
+    pub fn submit(&mut self, id: u64, input: Vec<u8>) -> bool {
+        if self.queue.len() >= self.max_queue {
+            return false;
+        }
+        self.queue.push_back((id, input, Instant::now()));
+        true
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the queue, executing every pending request.
+    pub fn drain(&mut self) -> Result<Vec<Served>> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while let Some((id, input, enq)) = self.queue.pop_front() {
+            let queue_us = enq.elapsed().as_secs_f64() * 1e6;
+            let t0 = Instant::now();
+            let output = self.rt.execute(self.artifact, &input)?;
+            let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+            out.push(Served { id, queue_us, exec_us, output });
+        }
+        Ok(out)
+    }
+}
+
+/// Aggregate a batch of serve records.
+pub fn stats(served: &[Served], wall_s: f64) -> ServeStats {
+    let execs: Vec<f64> = served.iter().map(|s| s.exec_us).collect();
+    let queues: Vec<f64> = served.iter().map(|s| s.queue_us).collect();
+    ServeStats {
+        served: served.len(),
+        wall_s,
+        throughput_rps: served.len() as f64 / wall_s.max(1e-9),
+        mean_exec_us: execs.iter().sum::<f64>() / execs.len().max(1) as f64,
+        p99_exec_us: if execs.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::percentile(&execs, 99.0)
+        },
+        mean_queue_us: queues.iter().sum::<f64>() / queues.len().max(1) as f64,
+    }
+}

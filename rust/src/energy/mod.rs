@@ -1,0 +1,90 @@
+//! Platform power/energy models (Fig. 6).
+//!
+//! Energy = cycles / frequency x active power. The power figures are
+//! datasheet/publication values for the paper's exact parts:
+//!
+//! * GAP-8 (GreenWaves, 55 nm): the ASAP'18 paper reports ~4.5 mW/100 MHz
+//!   per-core-cluster scaling; the octa-core cluster draws ~24 mW at the
+//!   1.0 V / 90 MHz low-power point and ~70 mW at 1.2 V / 175 MHz
+//!   high-performance point.
+//! * STM32H743 (40 nm): ~585 uA/MHz at VOS1 from the datasheet — ~234 mW
+//!   at 400 MHz (the paper's "higher frequency" H7 operating point).
+//! * STM32L476 (90 nm ULP): ~120 uA/MHz run mode — ~10 mW at 80 MHz.
+
+/// One platform operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub name: &'static str,
+    pub freq_mhz: f64,
+    pub power_mw: f64,
+}
+
+/// GAP-8 low-power mode: 1.0 V, 90 MHz cluster.
+pub const GAP8_LP: OperatingPoint =
+    OperatingPoint { name: "GAP-8 (low-power)", freq_mhz: 90.0, power_mw: 24.0 };
+
+/// GAP-8 high-performance mode: 1.2 V, 175 MHz cluster.
+pub const GAP8_HP: OperatingPoint =
+    OperatingPoint { name: "GAP-8 (high-perf)", freq_mhz: 175.0, power_mw: 70.0 };
+
+/// STM32H743 at 400 MHz, VOS1.
+pub const STM32H7_OP: OperatingPoint =
+    OperatingPoint { name: "STM32H7", freq_mhz: 400.0, power_mw: 234.0 };
+
+/// STM32L476 at 80 MHz run mode.
+pub const STM32L4_OP: OperatingPoint =
+    OperatingPoint { name: "STM32L4", freq_mhz: 80.0, power_mw: 10.0 };
+
+impl OperatingPoint {
+    /// Execution time for a cycle count, in milliseconds.
+    pub fn time_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz * 1e3)
+    }
+
+    /// Energy for a cycle count, in microjoules.
+    pub fn energy_uj(&self, cycles: u64) -> f64 {
+        self.time_ms(cycles) * self.power_mw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_scales_linearly_with_cycles() {
+        let e1 = GAP8_LP.energy_uj(90_000);
+        let e2 = GAP8_LP.energy_uj(180_000);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+        // 90k cycles at 90 MHz = 1 ms at 24 mW = 24 uJ
+        assert!((e1 - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_energy_ratio_anchors() {
+        // 8-bit Reference Layer: GAP-8 8-core ~ 16 MACs/cycle -> ~295k
+        // cycles for 4.72 MMAC; H7 ~ 0.64 -> 7.37M cycles; L4 ~ 0.35 ->
+        // 13.5M cycles. The paper reports 45x/21x (LP) and 31x/15x (HP).
+        let gap_cycles = 295_000u64;
+        let h7_cycles = 7_370_000u64;
+        let l4_cycles = 13_500_000u64;
+        let lp = GAP8_LP.energy_uj(gap_cycles);
+        let hp = GAP8_HP.energy_uj(gap_cycles);
+        let h7 = STM32H7_OP.energy_uj(h7_cycles);
+        let l4 = STM32L4_OP.energy_uj(l4_cycles);
+        let r_h7_lp = h7 / lp;
+        let r_l4_lp = l4 / lp;
+        let r_h7_hp = h7 / hp;
+        let r_l4_hp = l4 / hp;
+        assert!((35.0..70.0).contains(&r_h7_lp), "H7/LP {r_h7_lp} (paper 45x)");
+        assert!((15.0..30.0).contains(&r_l4_lp), "L4/LP {r_l4_lp} (paper 21x)");
+        assert!((20.0..45.0).contains(&r_h7_hp), "H7/HP {r_h7_hp} (paper 31x)");
+        assert!((8.0..22.0).contains(&r_l4_hp), "L4/HP {r_l4_hp} (paper 15x)");
+    }
+
+    #[test]
+    fn gap8_low_power_is_most_efficient_point() {
+        // same cycle count: LP must beat HP in energy (lower V/f)
+        assert!(GAP8_LP.energy_uj(1000) < GAP8_HP.energy_uj(1000));
+    }
+}

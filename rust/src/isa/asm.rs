@@ -1,0 +1,406 @@
+//! Two-pass text assembler for the RV32IM + XpulpV2 subset.
+//!
+//! Syntax: one instruction per line, `label:` on its own line or before an
+//! instruction, `#` comments. Register names accept both `x5` and ABI
+//! (`t0`). Branch / hardware-loop targets are labels; `lp.setup l, rs,
+//! label` ends the loop body *before* `label` (PULP convention: the label
+//! marks the first instruction after the body).
+
+use std::collections::BTreeMap;
+
+use super::inst::{AluOp, Cond, Inst, SimdOp};
+use super::reg::parse_reg;
+
+/// An assembled program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub insts: Vec<Inst>,
+    pub labels: BTreeMap<String, usize>,
+}
+
+impl Program {
+    pub fn label(&self, name: &str) -> usize {
+        self.labels[name]
+    }
+}
+
+/// Assemble source text.
+pub fn assemble(src: &str) -> Result<Program, String> {
+    // Pass 1: strip comments, collect labels and raw instruction lines.
+    let mut labels = BTreeMap::new();
+    let mut lines: Vec<(usize, String)> = Vec::new(); // (source line no, text)
+    let mut idx = 0usize;
+    for (ln, raw) in src.lines().enumerate() {
+        let mut line = raw;
+        if let Some(p) = line.find('#') {
+            line = &line[..p];
+        }
+        let mut rest = line.trim();
+        while let Some(colon) = rest.find(':') {
+            let (lbl, tail) = rest.split_at(colon);
+            let lbl = lbl.trim();
+            if lbl.is_empty() || lbl.contains(char::is_whitespace) {
+                break; // not a label (e.g. weird operand) — let pass 2 fail
+            }
+            if labels.insert(lbl.to_string(), idx).is_some() {
+                return Err(format!("line {}: duplicate label `{lbl}`", ln + 1));
+            }
+            rest = tail[1..].trim();
+        }
+        if !rest.is_empty() {
+            lines.push((ln + 1, rest.to_string()));
+            idx += 1;
+        }
+    }
+    // Labels pointing past the last instruction are allowed (loop ends).
+    // Pass 2: parse instructions.
+    let mut insts = Vec::with_capacity(lines.len());
+    for (ln, text) in &lines {
+        let inst = parse_line(text, &labels)
+            .map_err(|e| format!("line {ln}: {e} (in `{text}`)"))?;
+        insts.push(inst);
+    }
+    Ok(Program { insts, labels })
+}
+
+fn parse_line(text: &str, labels: &BTreeMap<String, usize>) -> Result<Inst, String> {
+    let (mn, rest) = match text.split_once(char::is_whitespace) {
+        Some((m, r)) => (m.trim(), r.trim()),
+        None => (text.trim(), ""),
+    };
+    let ops: Vec<String> = if rest.is_empty() {
+        vec![]
+    } else {
+        rest.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    let label = |name: &str| -> Result<usize, String> {
+        labels.get(name).copied().ok_or_else(|| format!("unknown label `{name}`"))
+    };
+    let reg = |s: &String| parse_reg(s);
+    let imm = |s: &String| parse_imm(s);
+    let need = |n: usize| -> Result<(), String> {
+        if ops.len() == n {
+            Ok(())
+        } else {
+            Err(format!("expected {n} operands, got {}", ops.len()))
+        }
+    };
+
+    // reg-reg ALU table
+    let rr = |op: AluOp| -> Result<Inst, String> {
+        need(3)?;
+        Ok(Inst::Alu { op, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, rs2: reg(&ops[2])? })
+    };
+    // reg-imm ALU table
+    let ri = |op: AluOp| -> Result<Inst, String> {
+        need(3)?;
+        Ok(Inst::AluImm { op, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: imm(&ops[2])? })
+    };
+    let branch = |cond: Cond| -> Result<Inst, String> {
+        need(3)?;
+        Ok(Inst::Branch { cond, rs1: reg(&ops[0])?, rs2: reg(&ops[1])?, target: label(&ops[2])? })
+    };
+    let load = |size: u8, signed: bool, post: bool| -> Result<Inst, String> {
+        need(2)?;
+        let (i, r, bang) = parse_mem_operand(&ops[1])?;
+        if bang && !post {
+            return Err("`!` post-increment needs the p.-prefixed mnemonic".into());
+        }
+        Ok(Inst::Load { rd: reg(&ops[0])?, rs1: r, imm: i, size, signed, post_inc: post && bang })
+    };
+    let store = |size: u8, post: bool| -> Result<Inst, String> {
+        need(2)?;
+        let (i, r, bang) = parse_mem_operand(&ops[1])?;
+        if bang && !post {
+            return Err("`!` post-increment needs the p.-prefixed mnemonic".into());
+        }
+        Ok(Inst::Store { rs2: reg(&ops[0])?, rs1: r, imm: i, size, post_inc: post && bang })
+    };
+    let simd = |op: SimdOp| -> Result<Inst, String> {
+        need(3)?;
+        Ok(Inst::Simd { op, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, rs2: reg(&ops[2])? })
+    };
+
+    match mn {
+        "add" => rr(AluOp::Add),
+        "sub" => rr(AluOp::Sub),
+        "sll" => rr(AluOp::Sll),
+        "slt" => rr(AluOp::Slt),
+        "sltu" => rr(AluOp::Sltu),
+        "xor" => rr(AluOp::Xor),
+        "srl" => rr(AluOp::Srl),
+        "sra" => rr(AluOp::Sra),
+        "or" => rr(AluOp::Or),
+        "and" => rr(AluOp::And),
+        "mul" => rr(AluOp::Mul),
+        "mulh" => rr(AluOp::Mulh),
+        "mulhu" => rr(AluOp::Mulhu),
+        "div" => rr(AluOp::Div),
+        "divu" => rr(AluOp::Divu),
+        "rem" => rr(AluOp::Rem),
+        "remu" => rr(AluOp::Remu),
+        "p.min" => rr(AluOp::Min),
+        "p.max" => rr(AluOp::Max),
+        "p.minu" => rr(AluOp::Minu),
+        "p.maxu" => rr(AluOp::Maxu),
+
+        "addi" => ri(AluOp::Add),
+        "slti" => ri(AluOp::Slt),
+        "sltiu" => ri(AluOp::Sltu),
+        "xori" => ri(AluOp::Xor),
+        "ori" => ri(AluOp::Or),
+        "andi" => ri(AluOp::And),
+        "slli" => ri(AluOp::Sll),
+        "srli" => ri(AluOp::Srl),
+        "srai" => ri(AluOp::Sra),
+
+        "li" => {
+            need(2)?;
+            Ok(Inst::AluImm { op: AluOp::Add, rd: reg(&ops[0])?, rs1: 0, imm: imm(&ops[1])? })
+        }
+        "mv" => {
+            need(2)?;
+            Ok(Inst::AluImm { op: AluOp::Add, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: 0 })
+        }
+        "nop" => {
+            need(0)?;
+            Ok(Inst::AluImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 })
+        }
+        "lui" => {
+            need(2)?;
+            Ok(Inst::Lui { rd: reg(&ops[0])?, imm: imm(&ops[1])? })
+        }
+
+        "lw" => load(4, false, false),
+        "lh" => load(2, true, false),
+        "lhu" => load(2, false, false),
+        "lb" => load(1, true, false),
+        "lbu" => load(1, false, false),
+        "p.lw" => load(4, false, true),
+        "p.lh" => load(2, true, true),
+        "p.lhu" => load(2, false, true),
+        "p.lb" => load(1, true, true),
+        "p.lbu" => load(1, false, true),
+        "sw" => store(4, false),
+        "sh" => store(2, false),
+        "sb" => store(1, false),
+        "p.sw" => store(4, true),
+        "p.sh" => store(2, true),
+        "p.sb" => store(1, true),
+
+        "beq" => branch(Cond::Eq),
+        "bne" => branch(Cond::Ne),
+        "blt" => branch(Cond::Lt),
+        "bge" => branch(Cond::Ge),
+        "bltu" => branch(Cond::Ltu),
+        "bgeu" => branch(Cond::Geu),
+
+        "j" => {
+            need(1)?;
+            Ok(Inst::Jal { rd: 0, target: label(&ops[0])? })
+        }
+        "jal" => match ops.len() {
+            1 => Ok(Inst::Jal { rd: 1, target: label(&ops[0])? }),
+            2 => Ok(Inst::Jal { rd: reg(&ops[0])?, target: label(&ops[1])? }),
+            n => Err(format!("jal expects 1-2 operands, got {n}")),
+        },
+        "jalr" => {
+            need(3)?;
+            Ok(Inst::Jalr { rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: imm(&ops[2])? })
+        }
+
+        "lp.setup" => {
+            need(3)?;
+            let l = imm(&ops[0])? as u8;
+            if l > 1 {
+                return Err("hardware loop index must be 0 or 1".into());
+            }
+            Ok(Inst::LpSetup { l, count_reg: reg(&ops[1])?, end: label(&ops[2])? })
+        }
+        "lp.setupi" => {
+            need(3)?;
+            let l = imm(&ops[0])? as u8;
+            if l > 1 {
+                return Err("hardware loop index must be 0 or 1".into());
+            }
+            Ok(Inst::LpSetupI { l, count: imm(&ops[1])? as u32, end: label(&ops[2])? })
+        }
+
+        "pv.sdotsp.b" => simd(SimdOp::SdotSpB),
+        "pv.sdotup.b" => simd(SimdOp::SdotUpB),
+        "pv.sdotusp.b" => simd(SimdOp::SdotUspB),
+        "pv.add.b" => simd(SimdOp::AddB),
+        "pv.sub.b" => simd(SimdOp::SubB),
+        "pv.max.b" => simd(SimdOp::MaxB),
+        "pv.min.b" => simd(SimdOp::MinB),
+        "pv.avgu.b" => simd(SimdOp::AvguB),
+
+        "p.bext" | "p.bextu" => {
+            need(4)?;
+            Ok(Inst::BitExtract {
+                rd: reg(&ops[0])?,
+                rs1: reg(&ops[1])?,
+                size: imm(&ops[2])? as u8,
+                off: imm(&ops[3])? as u8,
+                signed: mn == "p.bext",
+            })
+        }
+        "p.bins" => {
+            need(4)?;
+            Ok(Inst::BitInsert {
+                rd: reg(&ops[0])?,
+                rs1: reg(&ops[1])?,
+                size: imm(&ops[2])? as u8,
+                off: imm(&ops[3])? as u8,
+            })
+        }
+        "p.clipu" => {
+            need(3)?;
+            Ok(Inst::ClipU { rd: reg(&ops[0])?, rs1: reg(&ops[1])?, bits: imm(&ops[2])? as u8 })
+        }
+        "p.mac" => {
+            need(3)?;
+            Ok(Inst::Mac { rd: reg(&ops[0])?, rs1: reg(&ops[1])?, rs2: reg(&ops[2])? })
+        }
+
+        "barrier" => {
+            need(0)?;
+            Ok(Inst::Barrier)
+        }
+        "halt" | "ecall" => {
+            need(0)?;
+            Ok(Inst::Halt)
+        }
+        other => Err(format!("unknown mnemonic `{other}`")),
+    }
+}
+
+/// Parse `imm(reg)` / `imm(reg!)`; returns (imm, reg, post_increment).
+fn parse_mem_operand(s: &str) -> Result<(i32, u8, bool), String> {
+    let open = s.find('(').ok_or("expected `imm(reg)` operand")?;
+    let close = s.rfind(')').ok_or("missing `)`")?;
+    let imm = parse_imm(&s[..open])?;
+    let mut rtext = &s[open + 1..close];
+    let bang = rtext.ends_with('!');
+    if bang {
+        rtext = &rtext[..rtext.len() - 1];
+    }
+    Ok((imm, parse_reg(rtext.trim())?, bang))
+}
+
+/// Parse a decimal or 0x-hex immediate (possibly negative).
+pub fn parse_imm(s: &str) -> Result<i32, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty immediate".into());
+    }
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, t),
+    };
+    let v = if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u32::from_str_radix(hex, 16).map_err(|e| format!("bad hex immediate `{s}`: {e}"))? as i64
+    } else {
+        t.parse::<i64>().map_err(|e| format!("bad immediate `{s}`: {e}"))?
+    };
+    let v = if neg { -v } else { v };
+    if v < i32::MIN as i64 || v > u32::MAX as i64 {
+        return Err(format!("immediate `{s}` out of 32-bit range"));
+    }
+    Ok(v as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::{AluOp, Inst};
+
+    #[test]
+    fn labels_resolve_across_lines() {
+        let p = assemble(
+            "
+        start:
+            li a0, 1
+            j end
+            nop
+        end:
+            halt
+        ",
+        )
+        .unwrap();
+        assert_eq!(p.label("start"), 0);
+        assert_eq!(p.label("end"), 3);
+        assert_eq!(p.insts[1], Inst::Jal { rd: 0, target: 3 });
+    }
+
+    #[test]
+    fn label_on_same_line_as_inst() {
+        let p = assemble("top: li a0, 5\n j top").unwrap();
+        assert_eq!(p.label("top"), 0);
+        assert_eq!(p.insts.len(), 2);
+    }
+
+    #[test]
+    fn rejects_duplicate_label() {
+        assert!(assemble("a:\n nop\na:\n halt").unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic_with_line() {
+        let err = assemble("nop\n bogus a0, a1").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_label() {
+        assert!(assemble("beq a0, a1, nowhere").unwrap_err().contains("nowhere"));
+    }
+
+    #[test]
+    fn parses_hex_and_negative_immediates() {
+        assert_eq!(parse_imm("0x10").unwrap(), 16);
+        assert_eq!(parse_imm("-0x10").unwrap(), -16);
+        assert_eq!(parse_imm("0xFFFFFFFF").unwrap(), -1);
+        assert_eq!(parse_imm("-12").unwrap(), -12);
+        assert!(parse_imm("0x1FFFFFFFF").is_err());
+        assert!(parse_imm("twelve").is_err());
+    }
+
+    #[test]
+    fn mem_operands() {
+        let p = assemble("p.lw t0, 4(s0!)\n lw t1, -8(sp)").unwrap();
+        assert_eq!(
+            p.insts[0],
+            Inst::Load { rd: 5, rs1: 8, imm: 4, size: 4, signed: false, post_inc: true }
+        );
+        assert_eq!(
+            p.insts[1],
+            Inst::Load { rd: 6, rs1: 2, imm: -8, size: 4, signed: false, post_inc: false }
+        );
+    }
+
+    #[test]
+    fn post_increment_requires_p_prefix() {
+        assert!(assemble("lw t0, 4(s0!)").is_err());
+    }
+
+    #[test]
+    fn pseudo_instructions_lower() {
+        let p = assemble("li a0, -1\n mv a1, a0\n nop").unwrap();
+        assert_eq!(p.insts[0], Inst::AluImm { op: AluOp::Add, rd: 10, rs1: 0, imm: -1 });
+        assert_eq!(p.insts[1], Inst::AluImm { op: AluOp::Add, rd: 11, rs1: 10, imm: 0 });
+        assert_eq!(p.insts[2], Inst::AluImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 });
+    }
+
+    #[test]
+    fn hwloop_index_validated() {
+        assert!(assemble("x:\n lp.setup 2, a0, x").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let p = assemble("# header\n\n  nop # trailing\n\nhalt").unwrap();
+        assert_eq!(p.insts.len(), 2);
+    }
+}

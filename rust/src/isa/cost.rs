@@ -1,0 +1,29 @@
+//! The GAP-8 / RI5CY cycle-cost table (DESIGN.md §7).
+//!
+//! Single source of truth shared by the ISA executor (`isa::exec`) and the
+//! analytic kernel engine (`kernels::engine`) so the ASM cross-validation in
+//! `kernels::asm` compares like for like. Values follow the RI5CY user
+//! manual (Gautschi et al. [8]) and the PULP-NN paper's reported loop costs.
+
+/// Base cost of any issued instruction (in-order, single-issue).
+pub const BASE: u64 = 1;
+
+/// Extra cycles for a taken branch (fetch bubble of the 4-stage pipeline).
+pub const BRANCH_TAKEN_PENALTY: u64 = 2;
+
+/// Extra cycles for an unconditional jump.
+pub const JUMP_PENALTY: u64 = 1;
+
+/// Extra cycle when an instruction consumes the result of the immediately
+/// preceding load (load-use hazard).
+pub const LOAD_USE_PENALTY: u64 = 1;
+
+/// Iterative divider latency (RI5CY serial divider, worst case).
+pub const DIV_PENALTY: u64 = 31;
+
+/// Event-unit barrier rendezvous cost per core, once all cores arrived.
+pub const BARRIER_COST: u64 = 8;
+
+/// TCDM single-bank conflict: a same-cycle access to a busy bank retries
+/// next cycle (modelled in `cluster::tcdm`).
+pub const TCDM_CONFLICT_STALL: u64 = 1;

@@ -1,0 +1,755 @@
+//! The RV32IM + XpulpV2 executor with the RI5CY 4-stage-pipeline cycle
+//! model: in-order single-issue, taken-branch bubbles, load-use hazards,
+//! zero-overhead hardware loops, single-cycle SIMD dot products and bit
+//! manipulation (DESIGN.md §7).
+
+use super::cost;
+use super::inst::{AluOp, Cond, Inst, SimdOp};
+
+/// Abstract data memory. Returns (value, stall_cycles) for loads and
+/// stall_cycles for stores so banked implementations (TCDM) can model
+/// contention. Addresses are byte addresses; accesses are little-endian and
+/// must be naturally aligned.
+pub trait Memory {
+    fn load(&mut self, core: usize, addr: u32, size: u8, at_cycle: u64) -> (u32, u64);
+    fn store(&mut self, core: usize, addr: u32, size: u8, value: u32, at_cycle: u64) -> u64;
+}
+
+/// Flat byte-addressable memory with no contention (single-core tests).
+pub struct LinearMemory {
+    pub bytes: Vec<u8>,
+}
+
+impl LinearMemory {
+    pub fn new(size: usize) -> LinearMemory {
+        LinearMemory { bytes: vec![0; size] }
+    }
+
+    pub fn write_block(&mut self, addr: u32, data: &[u8]) {
+        self.bytes[addr as usize..addr as usize + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_block(&self, addr: u32, len: usize) -> &[u8] {
+        &self.bytes[addr as usize..addr as usize + len]
+    }
+}
+
+pub fn raw_load(bytes: &[u8], addr: u32, size: u8) -> u32 {
+    let a = addr as usize;
+    debug_assert!(addr % size as u32 == 0, "misaligned load @{addr:#x} size {size}");
+    match size {
+        1 => bytes[a] as u32,
+        2 => u16::from_le_bytes([bytes[a], bytes[a + 1]]) as u32,
+        4 => u32::from_le_bytes([bytes[a], bytes[a + 1], bytes[a + 2], bytes[a + 3]]),
+        _ => panic!("bad load size {size}"),
+    }
+}
+
+pub fn raw_store(bytes: &mut [u8], addr: u32, size: u8, value: u32) {
+    let a = addr as usize;
+    debug_assert!(addr % size as u32 == 0, "misaligned store @{addr:#x} size {size}");
+    match size {
+        1 => bytes[a] = value as u8,
+        2 => bytes[a..a + 2].copy_from_slice(&(value as u16).to_le_bytes()),
+        4 => bytes[a..a + 4].copy_from_slice(&value.to_le_bytes()),
+        _ => panic!("bad store size {size}"),
+    }
+}
+
+impl Memory for LinearMemory {
+    fn load(&mut self, _core: usize, addr: u32, size: u8, _at: u64) -> (u32, u64) {
+        (raw_load(&self.bytes, addr, size), 0)
+    }
+    fn store(&mut self, _core: usize, addr: u32, size: u8, value: u32, _at: u64) -> u64 {
+        raw_store(&mut self.bytes, addr, size, value);
+        0
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct HwLoop {
+    start: usize,
+    end: usize,
+    count: u32,
+    active: bool,
+}
+
+/// What a single step produced — the cluster runner dispatches on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepEvent {
+    Normal,
+    /// Core hit a `barrier` instruction and is now blocked until released.
+    Barrier,
+    Halted,
+}
+
+/// Per-opcode-class retired-instruction counters (profile support).
+#[derive(Debug, Clone, Default)]
+pub struct OpCounts {
+    pub alu: u64,
+    pub load: u64,
+    pub store: u64,
+    pub branch: u64,
+    pub simd: u64,
+    pub bitman: u64,
+    pub other: u64,
+}
+
+/// One RI5CY core.
+pub struct Core {
+    pub regs: [u32; 32],
+    pub pc: usize,
+    pub cycles: u64,
+    pub retired: u64,
+    pub halted: bool,
+    pub counts: OpCounts,
+    hwloop: [HwLoop; 2],
+    /// rd of the immediately preceding load, for load-use hazard checks.
+    pending_load: Option<u8>,
+}
+
+impl Default for Core {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Core {
+    pub fn new() -> Core {
+        Core {
+            regs: [0; 32],
+            pc: 0,
+            cycles: 0,
+            retired: 0,
+            halted: false,
+            counts: OpCounts::default(),
+            hwloop: [HwLoop::default(); 2],
+            pending_load: None,
+        }
+    }
+
+    #[inline]
+    fn r(&self, i: u8) -> u32 {
+        self.regs[i as usize]
+    }
+
+    #[inline]
+    fn w(&mut self, i: u8, v: u32) {
+        if i != 0 {
+            self.regs[i as usize] = v;
+        }
+    }
+
+    /// Execute one instruction; returns the resulting event.
+    pub fn step<M: Memory>(&mut self, prog: &[Inst], mem: &mut M, core_id: usize) -> StepEvent {
+        if self.halted {
+            return StepEvent::Halted;
+        }
+        let inst = prog[self.pc];
+
+        // Load-use hazard: +1 cycle if this instruction reads the register
+        // produced by the immediately preceding load.
+        if let Some(rd) = self.pending_load.take() {
+            if inst.reads().contains(&Some(rd)) {
+                self.cycles += cost::LOAD_USE_PENALTY;
+            }
+        }
+
+        self.cycles += cost::BASE;
+        self.retired += 1;
+        let mut next_pc = self.pc + 1;
+
+        match inst {
+            Inst::Alu { op, rd, rs1, rs2 } => {
+                self.counts.alu += 1;
+                let v = alu(op, self.r(rs1), self.r(rs2));
+                if matches!(op, AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu) {
+                    self.cycles += cost::DIV_PENALTY;
+                }
+                self.w(rd, v);
+            }
+            Inst::AluImm { op, rd, rs1, imm } => {
+                self.counts.alu += 1;
+                let v = alu(op, self.r(rs1), imm as u32);
+                self.w(rd, v);
+            }
+            Inst::Lui { rd, imm } => {
+                self.counts.alu += 1;
+                self.w(rd, (imm as u32) << 12);
+            }
+            Inst::Load { rd, rs1, imm, size, signed, post_inc } => {
+                self.counts.load += 1;
+                let base = self.r(rs1);
+                let addr = if post_inc { base } else { base.wrapping_add(imm as u32) };
+                let (mut v, stall) = mem.load(core_id, addr, size, self.cycles);
+                self.cycles += stall;
+                if signed {
+                    v = match size {
+                        1 => v as u8 as i8 as i32 as u32,
+                        2 => v as u16 as i16 as i32 as u32,
+                        _ => v,
+                    };
+                }
+                if post_inc {
+                    self.w(rs1, base.wrapping_add(imm as u32));
+                }
+                self.w(rd, v);
+                self.pending_load = Some(rd);
+            }
+            Inst::Store { rs2, rs1, imm, size, post_inc } => {
+                self.counts.store += 1;
+                let base = self.r(rs1);
+                let addr = if post_inc { base } else { base.wrapping_add(imm as u32) };
+                let stall = mem.store(core_id, addr, size, self.r(rs2), self.cycles);
+                self.cycles += stall;
+                if post_inc {
+                    self.w(rs1, base.wrapping_add(imm as u32));
+                }
+            }
+            Inst::Branch { cond, rs1, rs2, target } => {
+                self.counts.branch += 1;
+                let (a, b) = (self.r(rs1), self.r(rs2));
+                let taken = match cond {
+                    Cond::Eq => a == b,
+                    Cond::Ne => a != b,
+                    Cond::Lt => (a as i32) < (b as i32),
+                    Cond::Ge => (a as i32) >= (b as i32),
+                    Cond::Ltu => a < b,
+                    Cond::Geu => a >= b,
+                };
+                if taken {
+                    self.cycles += cost::BRANCH_TAKEN_PENALTY;
+                    next_pc = target;
+                }
+            }
+            Inst::Jal { rd, target } => {
+                self.counts.branch += 1;
+                self.cycles += cost::JUMP_PENALTY;
+                self.w(rd, (self.pc as u32 + 1) * 4);
+                next_pc = target;
+            }
+            Inst::Jalr { rd, rs1, imm } => {
+                self.counts.branch += 1;
+                self.cycles += cost::JUMP_PENALTY;
+                let t = self.r(rs1).wrapping_add(imm as u32) / 4;
+                self.w(rd, (self.pc as u32 + 1) * 4);
+                next_pc = t as usize;
+            }
+            Inst::LpSetup { l, count_reg, end } => {
+                self.counts.other += 1;
+                let count = self.r(count_reg);
+                self.hwloop[l as usize] =
+                    HwLoop { start: self.pc + 1, end, count, active: count > 0 };
+                if count == 0 {
+                    next_pc = end; // zero-trip loop: skip the body entirely
+                }
+            }
+            Inst::LpSetupI { l, count, end } => {
+                self.counts.other += 1;
+                self.hwloop[l as usize] =
+                    HwLoop { start: self.pc + 1, end, count, active: count > 0 };
+                if count == 0 {
+                    next_pc = end;
+                }
+            }
+            Inst::Simd { op, rd, rs1, rs2 } => {
+                self.counts.simd += 1;
+                let v = simd(op, self.r(rd), self.r(rs1), self.r(rs2));
+                self.w(rd, v);
+            }
+            Inst::BitExtract { rd, rs1, size, off, signed } => {
+                self.counts.bitman += 1;
+                let v = bext(self.r(rs1), size, off, signed);
+                self.w(rd, v);
+            }
+            Inst::BitInsert { rd, rs1, size, off } => {
+                self.counts.bitman += 1;
+                let mask = low_mask(size) << off;
+                let v = (self.r(rd) & !mask) | ((self.r(rs1) << off) & mask);
+                self.w(rd, v);
+            }
+            Inst::ClipU { rd, rs1, bits } => {
+                self.counts.alu += 1;
+                let hi = (1i32 << bits) - 1;
+                let v = (self.r(rs1) as i32).clamp(0, hi);
+                self.w(rd, v as u32);
+            }
+            Inst::Mac { rd, rs1, rs2 } => {
+                self.counts.alu += 1;
+                let v = (self.r(rd) as i32)
+                    .wrapping_add((self.r(rs1) as i32).wrapping_mul(self.r(rs2) as i32));
+                self.w(rd, v as u32);
+            }
+            Inst::Barrier => {
+                self.counts.other += 1;
+                self.pc = next_pc;
+                return StepEvent::Barrier;
+            }
+            Inst::Halt => {
+                self.halted = true;
+                return StepEvent::Halted;
+            }
+        }
+
+        // Zero-overhead hardware loops: when the fall-through PC reaches an
+        // active loop's end, branch back for free. Loop 0 is innermost.
+        if !matches!(inst, Inst::Branch { .. } | Inst::Jal { .. } | Inst::Jalr { .. }) {
+            for l in 0..2 {
+                let lp = &mut self.hwloop[l];
+                if lp.active && next_pc == lp.end {
+                    lp.count -= 1;
+                    if lp.count > 0 {
+                        next_pc = lp.start;
+                    } else {
+                        lp.active = false;
+                    }
+                    break;
+                }
+            }
+        }
+
+        self.pc = next_pc;
+        StepEvent::Normal
+    }
+
+    /// Run until halt (or `max_insts` as a runaway guard). Returns retired
+    /// instruction count.
+    pub fn run<M: Memory>(&mut self, prog: &[Inst], mem: &mut M, max_insts: u64) -> u64 {
+        let start = self.retired;
+        while !self.halted {
+            assert!(
+                self.retired - start < max_insts,
+                "runaway program: > {max_insts} instructions (pc={})",
+                self.pc
+            );
+            match self.step(prog, mem, 0) {
+                StepEvent::Halted => break,
+                StepEvent::Barrier => {
+                    // single-core run: barriers are free no-ops
+                }
+                StepEvent::Normal => {}
+            }
+        }
+        self.retired - start
+    }
+}
+
+fn low_mask(size: u8) -> u32 {
+    if size >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << size) - 1
+    }
+}
+
+/// `p.bext`/`p.bextu` semantics (Fig. 2 of the paper).
+pub fn bext(v: u32, size: u8, off: u8, signed: bool) -> u32 {
+    let raw = (v >> off) & low_mask(size);
+    if signed && size < 32 {
+        let sh = 32 - size;
+        (((raw << sh) as i32) >> sh) as u32
+    } else {
+        raw
+    }
+}
+
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    let (ai, bi) = (a as i32, b as i32);
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Slt => (ai < bi) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => (ai.wrapping_shr(b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Mulh => (((ai as i64) * (bi as i64)) >> 32) as u32,
+        AluOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+        AluOp::Div => {
+            if b == 0 {
+                u32::MAX
+            } else if ai == i32::MIN && bi == -1 {
+                a
+            } else {
+                (ai / bi) as u32
+            }
+        }
+        AluOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        AluOp::Rem => {
+            if b == 0 {
+                a
+            } else if ai == i32::MIN && bi == -1 {
+                0
+            } else {
+                (ai % bi) as u32
+            }
+        }
+        AluOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+        AluOp::Min => ai.min(bi) as u32,
+        AluOp::Max => ai.max(bi) as u32,
+        AluOp::Minu => a.min(b),
+        AluOp::Maxu => a.max(b),
+    }
+}
+
+fn simd(op: SimdOp, rd: u32, a: u32, b: u32) -> u32 {
+    let ab = a.to_le_bytes();
+    let bb = b.to_le_bytes();
+    match op {
+        SimdOp::SdotSpB => {
+            let mut acc = rd as i32;
+            for i in 0..4 {
+                acc = acc.wrapping_add((ab[i] as i8 as i32).wrapping_mul(bb[i] as i8 as i32));
+            }
+            acc as u32
+        }
+        SimdOp::SdotUpB => {
+            let mut acc = rd as i32;
+            for i in 0..4 {
+                acc = acc.wrapping_add((ab[i] as i32).wrapping_mul(bb[i] as i32));
+            }
+            acc as u32
+        }
+        SimdOp::SdotUspB => {
+            let mut acc = rd as i32;
+            for i in 0..4 {
+                acc = acc.wrapping_add((ab[i] as i32).wrapping_mul(bb[i] as i8 as i32));
+            }
+            acc as u32
+        }
+        SimdOp::AddB | SimdOp::SubB | SimdOp::MaxB | SimdOp::MinB | SimdOp::AvguB => {
+            let mut out = [0u8; 4];
+            for i in 0..4 {
+                let (x, y) = (ab[i] as i8, bb[i] as i8);
+                out[i] = match op {
+                    SimdOp::AddB => x.wrapping_add(y) as u8,
+                    SimdOp::SubB => x.wrapping_sub(y) as u8,
+                    SimdOp::MaxB => x.max(y) as u8,
+                    SimdOp::MinB => x.min(y) as u8,
+                    SimdOp::AvguB => (((ab[i] as u16) + (bb[i] as u16)) >> 1) as u8,
+                    _ => unreachable!(),
+                };
+            }
+            u32::from_le_bytes(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn run_asm(src: &str) -> (Core, LinearMemory) {
+        let prog = assemble(src).expect("assembly failed");
+        let mut core = Core::new();
+        let mut mem = LinearMemory::new(1 << 16);
+        core.run(&prog.insts, &mut mem, 1_000_000);
+        (core, mem)
+    }
+
+    #[test]
+    fn arithmetic_loop_sums() {
+        // sum 1..=10 into a0
+        let (core, _) = run_asm(
+            "
+            li a0, 0
+            li a1, 1
+            li a2, 11
+        loop:
+            add a0, a0, a1
+            addi a1, a1, 1
+            bne a1, a2, loop
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 55);
+    }
+
+    #[test]
+    fn hwloop_matches_branch_loop_result_with_fewer_cycles() {
+        let branch = run_asm(
+            "
+            li a0, 0
+            li a1, 100
+        loop:
+            addi a0, a0, 3
+            addi a1, a1, -1
+            bne a1, zero, loop
+            halt
+        ",
+        )
+        .0;
+        let hw = run_asm(
+            "
+            li a0, 0
+            li a1, 100
+            lp.setup 0, a1, end
+            addi a0, a0, 3
+        end:
+            halt
+        ",
+        )
+        .0;
+        assert_eq!(branch.regs[10], 300);
+        assert_eq!(hw.regs[10], 300);
+        // hwloop: 100 body cycles + 3 setup-ish; branch loop: 100*(2+1+3)-2
+        assert!(
+            hw.cycles + 150 < branch.cycles,
+            "hwloop {} vs branch {}",
+            hw.cycles,
+            branch.cycles
+        );
+    }
+
+    #[test]
+    fn hwloop_zero_count_skips_body() {
+        let (core, _) = run_asm(
+            "
+            li a0, 7
+            li a1, 0
+            lp.setup 0, a1, end
+            li a0, 99
+        end:
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 7);
+    }
+
+    #[test]
+    fn nested_hwloops() {
+        // outer 5 x inner 4 = 20 increments
+        let (core, _) = run_asm(
+            "
+            li a0, 0
+            li a1, 5
+            li a2, 4
+            lp.setup 1, a1, outer_end
+            lp.setup 0, a2, inner_end
+            addi a0, a0, 1
+        inner_end:
+            nop
+        outer_end:
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 20);
+    }
+
+    #[test]
+    fn load_use_hazard_costs_one_cycle() {
+        let dependent = run_asm(
+            "
+            li a1, 256
+            sw a1, 0(a1)
+            lw a0, 0(a1)
+            addi a0, a0, 1
+            halt
+        ",
+        )
+        .0;
+        let independent = run_asm(
+            "
+            li a1, 256
+            sw a1, 0(a1)
+            lw a0, 0(a1)
+            addi a2, a1, 1
+            halt
+        ",
+        )
+        .0;
+        assert_eq!(dependent.cycles, independent.cycles + 1);
+    }
+
+    #[test]
+    fn post_increment_load_walks_memory() {
+        let (core, _) = run_asm(
+            "
+            li a1, 512
+            li a2, 17
+            sw a2, 512(zero)
+            li a3, 34
+            sw a3, 516(zero)
+            p.lw a4, 4(a1!)
+            p.lw a5, 4(a1!)
+            halt
+        ",
+        );
+        assert_eq!(core.regs[14], 17);
+        assert_eq!(core.regs[15], 34);
+        assert_eq!(core.regs[11], 520); // pointer advanced twice
+    }
+
+    #[test]
+    fn sdotusp_accumulates_unsigned_times_signed() {
+        // a = [200, 1, 2, 3] (u8), b = [-1, -2, 3, 4] (i8)
+        // dot = -200 -2 +6 +12 = -184; acc starts at 10 -> -174
+        let (core, _) = run_asm(
+            "
+            li a1, 0x030201C8
+            li a2, 0x0403FEFF
+            li a0, 10
+            pv.sdotusp.b a0, a1, a2
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10] as i32, -174);
+    }
+
+    #[test]
+    fn bext_sign_extends() {
+        // extract nibble at offset 4 from 0x8F -> 0x8 -> signed = -8
+        let (core, _) = run_asm(
+            "
+            li a1, 0x8F
+            p.bext a0, a1, 4, 4
+            p.bextu a2, a1, 4, 4
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10] as i32, -8);
+        assert_eq!(core.regs[12], 8);
+    }
+
+    #[test]
+    fn bins_inserts_field() {
+        // insert low 4 bits of a1 (0xA) into a0[4..8]
+        let (core, _) = run_asm(
+            "
+            li a0, 0xFF
+            li a1, 0xA
+            p.bins a0, a1, 4, 4
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 0xAF);
+    }
+
+    #[test]
+    fn clipu_clamps() {
+        let (core, _) = run_asm(
+            "
+            li a1, 300
+            p.clipu a0, a1, 8
+            li a2, -5
+            p.clipu a3, a2, 8
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 255);
+        assert_eq!(core.regs[13], 0);
+    }
+
+    #[test]
+    fn branch_taken_costs_more() {
+        let taken = run_asm(
+            "
+            li a0, 0
+            beq zero, zero, skip
+            nop
+        skip:
+            halt
+        ",
+        )
+        .0;
+        let not_taken = run_asm(
+            "
+            li a0, 0
+            bne zero, zero, skip
+            nop
+        skip:
+            halt
+        ",
+        )
+        .0;
+        // taken: li(1) + beq(1+2) + halt(1) = 5
+        // not-taken: li(1) + bne(1) + nop(1) + halt(1) = 4
+        assert_eq!(taken.cycles, 5);
+        assert_eq!(not_taken.cycles, 4);
+    }
+
+    #[test]
+    fn division_is_expensive() {
+        let (core, _) = run_asm(
+            "
+            li a1, 100
+            li a2, 7
+            div a0, a1, a2
+            rem a3, a1, a2
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 14);
+        assert_eq!(core.regs[13], 2);
+        assert!(core.cycles >= 2 + 2 * (1 + cost::DIV_PENALTY));
+    }
+
+    #[test]
+    fn division_by_zero_riscv_semantics() {
+        let (core, _) = run_asm(
+            "
+            li a1, 42
+            div a0, a1, zero
+            rem a2, a1, zero
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], u32::MAX);
+        assert_eq!(core.regs[12], 42);
+    }
+
+    #[test]
+    fn simd_lane_ops() {
+        let (core, _) = run_asm(
+            "
+            li a1, 0x04030201
+            li a2, 0x01010101
+            pv.add.b a0, a1, a2
+            pv.max.b a3, a1, a2
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10], 0x05040302);
+        assert_eq!(core.regs[13], 0x04030201);
+    }
+
+    #[test]
+    fn mac_accumulates() {
+        let (core, _) = run_asm(
+            "
+            li a0, 5
+            li a1, -3
+            li a2, 7
+            p.mac a0, a1, a2
+            halt
+        ",
+        );
+        assert_eq!(core.regs[10] as i32, -16);
+    }
+
+    #[test]
+    #[should_panic(expected = "runaway")]
+    fn runaway_guard_fires() {
+        let prog = assemble("loop: j loop").unwrap();
+        let mut core = Core::new();
+        let mut mem = LinearMemory::new(64);
+        core.run(&prog.insts, &mut mem, 1000);
+    }
+}

@@ -1,0 +1,182 @@
+//! Instruction representation for the RV32IM + XpulpV2 subset the kernels
+//! need (DESIGN.md §2). Programs are vectors of `Inst`; the program counter
+//! is an instruction *index* (each instruction is conceptually 4 bytes; the
+//! compressed extension only affects code size, not cycle counts, so it is
+//! not modelled).
+
+/// Scalar ALU operations (reg-reg and reg-imm forms share this set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    // M extension
+    Mul,
+    Mulh,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+    // XpulpV2 scalar
+    Min,
+    Max,
+    Minu,
+    Maxu,
+}
+
+/// Branch conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// XpulpV2 packed-SIMD operations on 4x int8 lanes of a 32-bit register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdOp {
+    /// `pv.sdotsp.b rd, rs1, rs2` — rd += dot(i8x4(rs1), i8x4(rs2)).
+    SdotSpB,
+    /// `pv.sdotup.b` — unsigned x unsigned.
+    SdotUpB,
+    /// `pv.sdotusp.b` — unsigned(rs1) x signed(rs2). This is the workhorse
+    /// of PULP-NN: unsigned activations x signed weights.
+    SdotUspB,
+    /// Lane-wise add/sub/max/min (int8).
+    AddB,
+    SubB,
+    MaxB,
+    MinB,
+    /// `pv.avgu.b` lane-wise unsigned average (used by avg-pool kernels).
+    AvguB,
+}
+
+/// One instruction. Branch/loop targets are pre-resolved instruction
+/// indices (the assembler resolves labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Inst {
+    /// Reg-reg ALU.
+    Alu { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    /// Reg-imm ALU (imm is a full i32: `li` lowers to one of these).
+    AluImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Lui { rd: u8, imm: i32 },
+    /// Load; `post_inc` is the XpulpV2 `p.lw rd, imm(rs1!)` form
+    /// (rs1 += imm after the access). size in {1,2,4}.
+    Load { rd: u8, rs1: u8, imm: i32, size: u8, signed: bool, post_inc: bool },
+    /// Store; `post_inc` is `p.sw rs2, imm(rs1!)`.
+    Store { rs2: u8, rs1: u8, imm: i32, size: u8, post_inc: bool },
+    Branch { cond: Cond, rs1: u8, rs2: u8, target: usize },
+    Jal { rd: u8, target: usize },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    /// Hardware loop setup: `lp.setup l, rs1, end_label` — body runs from
+    /// the next instruction up to (excluding) `end`, `rs1` times total.
+    LpSetup { l: u8, count_reg: u8, end: usize },
+    /// Immediate-count form `lp.setupi`.
+    LpSetupI { l: u8, count: u32, end: usize },
+    /// Packed SIMD.
+    Simd { op: SimdOp, rd: u8, rs1: u8, rs2: u8 },
+    /// `p.bext`/`p.bextu` — extract `size` bits at `off` from rs1 into rd,
+    /// sign-extended if `signed` (1 cycle; the Fig. 2 primitive).
+    BitExtract { rd: u8, rs1: u8, size: u8, off: u8, signed: bool },
+    /// `p.bins rd, rs1, size, off` — insert low `size` bits of rs1 into
+    /// rd[off..off+size] (1 cycle; the Fig. 3 primitive).
+    BitInsert { rd: u8, rs1: u8, size: u8, off: u8 },
+    /// `p.clipu rd, rs1, bits` — clamp to [0, 2^bits - 1] (the 8-bit
+    /// QntPack clamp).
+    ClipU { rd: u8, rs1: u8, bits: u8 },
+    /// `p.mac rd, rs1, rs2` — rd += rs1 * rs2.
+    Mac { rd: u8, rs1: u8, rs2: u8 },
+    /// Event-unit barrier (cluster synchronization point).
+    Barrier,
+    /// Stop the core (models the end-of-kernel `ecall`/event wait).
+    Halt,
+}
+
+impl Inst {
+    /// Registers this instruction reads — used for load-use hazard checks.
+    pub fn reads(&self) -> [Option<u8>; 3] {
+        match *self {
+            Inst::Alu { rs1, rs2, .. } => [Some(rs1), Some(rs2), None],
+            Inst::AluImm { rs1, .. } => [Some(rs1), None, None],
+            Inst::Lui { .. } => [None, None, None],
+            Inst::Load { rs1, .. } => [Some(rs1), None, None],
+            Inst::Store { rs1, rs2, .. } => [Some(rs1), Some(rs2), None],
+            Inst::Branch { rs1, rs2, .. } => [Some(rs1), Some(rs2), None],
+            Inst::Jal { .. } => [None, None, None],
+            Inst::Jalr { rs1, .. } => [Some(rs1), None, None],
+            Inst::LpSetup { count_reg, .. } => [Some(count_reg), None, None],
+            Inst::LpSetupI { .. } => [None, None, None],
+            // SIMD dot products accumulate: they read rd too.
+            Inst::Simd { op, rd, rs1, rs2 } => match op {
+                SimdOp::SdotSpB | SimdOp::SdotUpB | SimdOp::SdotUspB => {
+                    [Some(rd), Some(rs1), Some(rs2)]
+                }
+                _ => [Some(rs1), Some(rs2), None],
+            },
+            Inst::BitExtract { rs1, .. } => [Some(rs1), None, None],
+            Inst::BitInsert { rd, rs1, .. } => [Some(rd), Some(rs1), None],
+            Inst::ClipU { rs1, .. } => [Some(rs1), None, None],
+            Inst::Mac { rd, rs1, rs2 } => [Some(rd), Some(rs1), Some(rs2)],
+            Inst::Barrier | Inst::Halt => [None, None, None],
+        }
+    }
+
+    /// Destination register, if any.
+    pub fn writes(&self) -> Option<u8> {
+        match *self {
+            Inst::Alu { rd, .. }
+            | Inst::AluImm { rd, .. }
+            | Inst::Lui { rd, .. }
+            | Inst::Load { rd, .. }
+            | Inst::Jal { rd, .. }
+            | Inst::Jalr { rd, .. }
+            | Inst::Simd { rd, .. }
+            | Inst::BitExtract { rd, .. }
+            | Inst::BitInsert { rd, .. }
+            | Inst::ClipU { rd, .. }
+            | Inst::Mac { rd, .. } => {
+                if rd == 0 {
+                    None
+                } else {
+                    Some(rd)
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sdot_reads_its_accumulator() {
+        let i = Inst::Simd { op: SimdOp::SdotUspB, rd: 5, rs1: 6, rs2: 7 };
+        assert_eq!(i.reads(), [Some(5), Some(6), Some(7)]);
+        assert_eq!(i.writes(), Some(5));
+    }
+
+    #[test]
+    fn writes_to_x0_are_discarded() {
+        let i = Inst::AluImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 1 };
+        assert_eq!(i.writes(), None);
+    }
+
+    #[test]
+    fn bit_insert_reads_destination() {
+        let i = Inst::BitInsert { rd: 3, rs1: 4, size: 4, off: 4 };
+        assert!(i.reads().contains(&Some(3)));
+    }
+}

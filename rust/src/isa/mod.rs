@@ -1,0 +1,14 @@
+//! RV32IM + XpulpV2 instruction-set simulator: the GAP-8 core substrate
+//! (DESIGN.md §2). Text assembler, instruction representation and a
+//! cycle-modelled executor (RI5CY 4-stage pipeline).
+
+pub mod asm;
+pub mod cost;
+pub mod encoding;
+pub mod exec;
+pub mod inst;
+pub mod reg;
+
+pub use asm::{assemble, Program};
+pub use exec::{Core, LinearMemory, Memory, StepEvent};
+pub use inst::{AluOp, Cond, Inst, SimdOp};

@@ -1,0 +1,90 @@
+//! Register names: numeric (`x0`..`x31`) and RISC-V ABI mnemonics.
+
+/// Parse a register name to its index.
+pub fn parse_reg(s: &str) -> Result<u8, String> {
+    let abi = [
+        ("zero", 0),
+        ("ra", 1),
+        ("sp", 2),
+        ("gp", 3),
+        ("tp", 4),
+        ("t0", 5),
+        ("t1", 6),
+        ("t2", 7),
+        ("s0", 8),
+        ("fp", 8),
+        ("s1", 9),
+        ("a0", 10),
+        ("a1", 11),
+        ("a2", 12),
+        ("a3", 13),
+        ("a4", 14),
+        ("a5", 15),
+        ("a6", 16),
+        ("a7", 17),
+        ("s2", 18),
+        ("s3", 19),
+        ("s4", 20),
+        ("s5", 21),
+        ("s6", 22),
+        ("s7", 23),
+        ("s8", 24),
+        ("s9", 25),
+        ("s10", 26),
+        ("s11", 27),
+        ("t3", 28),
+        ("t4", 29),
+        ("t5", 30),
+        ("t6", 31),
+    ];
+    if let Some(rest) = s.strip_prefix('x') {
+        if let Ok(n) = rest.parse::<u8>() {
+            if n < 32 {
+                return Ok(n);
+            }
+        }
+    }
+    for (name, idx) in abi {
+        if s == name {
+            return Ok(idx);
+        }
+    }
+    Err(format!("unknown register `{s}`"))
+}
+
+/// Canonical display name (ABI).
+pub fn reg_name(idx: u8) -> &'static str {
+    const NAMES: [&str; 32] = [
+        "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3",
+        "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11",
+        "t3", "t4", "t5", "t6",
+    ];
+    NAMES[idx as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_numeric_and_abi() {
+        assert_eq!(parse_reg("x0").unwrap(), 0);
+        assert_eq!(parse_reg("x31").unwrap(), 31);
+        assert_eq!(parse_reg("sp").unwrap(), 2);
+        assert_eq!(parse_reg("a0").unwrap(), 10);
+        assert_eq!(parse_reg("s11").unwrap(), 27);
+        assert_eq!(parse_reg("fp").unwrap(), 8);
+        assert!(parse_reg("x32").is_err());
+        assert!(parse_reg("q1").is_err());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for i in 0..32u8 {
+            if i == 8 {
+                continue; // s0/fp alias
+            }
+            assert_eq!(parse_reg(reg_name(i)).unwrap(), i);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Cross-validation of the intrinsic engine against the ISA simulator:
+//! the three MatMul inner loops (8/4/2-bit weights, the §3 kernels) are
+//! hand-written in XpulpV2 assembly, executed on `isa::exec::Core` over a
+//! `LinearMemory`, and compared with `kernels::matmul::matmul_tile` for
+//! bit-exact accumulators and cycle agreement.
+//!
+//! The 8-bit loop matches the engine (and the paper's 14 cycles/iteration)
+//! *exactly*. The sub-byte loops are written with the portable
+//! `p.bext`+`p.bins` vector assembly (3 inserts per vector); the paper's
+//! production kernels assemble vectors in 2 ops (counted as `pack` in §3),
+//! which is what the engine charges — so the ASM variants run ~10% slower
+//! than the engine's accounting, asserted as a bounded delta below and
+//! discussed in DESIGN.md §7.
+
+use crate::isa::asm::assemble;
+use crate::isa::exec::{Core, LinearMemory};
+use crate::qnn::tensor::QWeights;
+use crate::qnn::types::Bits;
+
+use super::engine::Engine;
+use super::matmul::{matmul_tile, step_elems, WeightLayout};
+
+/// Memory map for the ASM runs.
+const W_BASE: u32 = 0x1000;
+const X0_BASE: u32 = 0x8000;
+const X1_BASE: u32 = 0xA000;
+
+/// Result of an ASM inner-loop run.
+#[derive(Debug, Clone)]
+pub struct AsmRun {
+    /// Accumulators `[f * 2 + p]` (4 filters x 2 pixels).
+    pub acc: [i32; 8],
+    /// Cycles spent in the inner loop (excluding pointer setup and halt).
+    pub loop_cycles: u64,
+    pub retired: u64,
+}
+
+/// The 8-bit-weight 4x2 inner loop: 6 `p.lw` + 8 `pv.sdotusp.b` = 14
+/// cycles per iteration, exactly as §3 of the paper. The schedule keeps a
+/// load-independent instruction after every load, so there are no
+/// load-use stalls — the property the cross-check validates.
+/// Exported for the encoding round-trip tests.
+pub const MATMUL_W8_SRC: &str = "
+    lp.setup 0, a2, end
+    p.lw t0, 4(s0!)
+    p.lw t1, 4(s1!)
+    p.lw t2, 4(s2!)
+    p.lw t3, 4(s3!)
+    p.lw t4, 4(s4!)
+    p.lw t5, 4(s5!)
+    pv.sdotusp.b s6, t4, t0
+    pv.sdotusp.b s7, t5, t0
+    pv.sdotusp.b s8, t4, t1
+    pv.sdotusp.b s9, t5, t1
+    pv.sdotusp.b s10, t4, t2
+    pv.sdotusp.b s11, t5, t2
+    pv.sdotusp.b a3, t4, t3
+    pv.sdotusp.b a4, t5, t3
+end:
+    halt
+";
+
+/// 4-bit weights: per iteration, 4 weight words are unpacked with
+/// `p.bext` (sign-extending nibble extract) and assembled into SIMD
+/// vectors with `p.bins`; 4 activation words; 16 sdot.
+fn matmul_w4_source() -> String {
+    let mut s = String::from("    lp.setup 0, a2, end\n");
+    // 4 x-words first (2 pixels x 2 word-groups), scheduled before their use
+    s.push_str("    p.lw t4, 4(s4!)\n    p.lw t5, 4(s5!)\n");
+    for (f, (wp, acc0, acc1)) in
+        [("s0", "s6", "s7"), ("s1", "s8", "s9"), ("s2", "s10", "s11"), ("s3", "a3", "a4")]
+            .iter()
+            .enumerate()
+    {
+        let _ = f;
+        s.push_str(&format!("    p.lw t0, 4({wp}!)\n"));
+        // low vector: nibbles 0..3
+        s.push_str("    p.bext t1, t0, 4, 0\n");
+        s.push_str("    p.bext t2, t0, 4, 4\n");
+        s.push_str("    p.bins t1, t2, 8, 8\n");
+        s.push_str("    p.bext t2, t0, 4, 8\n");
+        s.push_str("    p.bins t1, t2, 8, 16\n");
+        s.push_str("    p.bext t2, t0, 4, 12\n");
+        s.push_str("    p.bins t1, t2, 8, 24\n");
+        // high vector: nibbles 4..7
+        s.push_str("    p.bext t3, t0, 4, 16\n");
+        s.push_str("    p.bext t2, t0, 4, 20\n");
+        s.push_str("    p.bins t3, t2, 8, 8\n");
+        s.push_str("    p.bext t2, t0, 4, 24\n");
+        s.push_str("    p.bins t3, t2, 8, 16\n");
+        s.push_str("    p.bext t2, t0, 4, 28\n");
+        s.push_str("    p.bins t3, t2, 8, 24\n");
+        s.push_str(&format!("    pv.sdotusp.b {acc0}, t4, t1\n"));
+        s.push_str(&format!("    pv.sdotusp.b {acc1}, t6, t1\n"));
+        s.push_str(&format!("    pv.sdotusp.b {acc0}, t5, t3\n"));
+        s.push_str(&format!("    pv.sdotusp.b {acc1}, a7, t3\n"));
+    }
+    // second x word-group loads must happen before the sdots above use
+    // them: re-order — load them right after the first pair.
+    let s = s.replace(
+        "    p.lw t4, 4(s4!)\n    p.lw t5, 4(s5!)\n",
+        "    p.lw t4, 4(s4!)\n    p.lw t5, 4(s4!)\n    p.lw t6, 4(s5!)\n    p.lw a7, 4(s5!)\n",
+    );
+    s + "end:\n    halt\n"
+}
+
+/// Build, run and measure one inner loop on the ISA simulator.
+///
+/// `k` is the im2col length (must be a whole number of steps). The x
+/// buffers hold u8 activations, weight rows are packed at `wbits`.
+pub fn run_matmul_asm(
+    wbits: Bits,
+    w: &QWeights,
+    x0: &[u8],
+    x1: &[u8],
+    k: usize,
+) -> AsmRun {
+    let step = step_elems(wbits);
+    assert!(k % step == 0, "k={k} must be a multiple of {step}");
+    assert_eq!(w.cout, 4);
+    let layout = WeightLayout::prepare(w);
+    assert_eq!(layout.k_padded, k);
+
+    let src = match wbits {
+        Bits::B8 => MATMUL_W8_SRC.to_string(),
+        Bits::B4 => matmul_w4_source(),
+        Bits::B2 => matmul_w2_source(),
+    };
+    let prog = assemble(&src).expect("inner-loop asm must assemble");
+
+    let mut mem = LinearMemory::new(1 << 16);
+    for f in 0..4 {
+        mem.write_block(
+            W_BASE + (f * layout.row_bytes) as u32,
+            &layout.rows[f * layout.row_bytes..(f + 1) * layout.row_bytes],
+        );
+    }
+    mem.write_block(X0_BASE, &x0[..k]);
+    mem.write_block(X1_BASE, &x1[..k]);
+
+    let mut core = Core::new();
+    // pointer setup done "by the caller": filter banks, x pointers, count.
+    // ABI: s0=x8, s1=x9, s2=x18, s3=x19.
+    for (f, reg) in [8usize, 9, 18, 19].into_iter().enumerate() {
+        core.regs[reg] = W_BASE + (f * layout.row_bytes) as u32;
+    }
+    core.regs[20] = X0_BASE; // s4
+    core.regs[21] = X1_BASE; // s5
+    core.regs[12] = (k / step) as u32; // a2 = iterations
+    core.run(&prog.insts, &mut mem, 10_000_000);
+
+    // accumulators: s6,s7,s8,s9,s10,s11,a3,a4 -> acc[f*2+p]
+    let r = &core.regs;
+    let acc = [
+        r[22] as i32,
+        r[23] as i32,
+        r[24] as i32,
+        r[25] as i32,
+        r[26] as i32,
+        r[27] as i32,
+        r[13] as i32,
+        r[14] as i32,
+    ];
+    AsmRun {
+        acc,
+        // subtract lp.setup (1 cycle) and halt (1 cycle)
+        loop_cycles: core.cycles - 2,
+        retired: core.retired,
+    }
+}
+
+/// 2-bit weights: one weight word per filter covers 16 elements (4
+/// vectors); 8 activation words (4 per pixel) loaded once per iteration
+/// and kept live in registers across all four filter banks, exactly like
+/// the paper's loop (12 loads per iteration total).
+fn matmul_w2_source() -> String {
+    let mut s = String::from("    lp.setup 0, a2, end\n");
+    // pixel0 words in t4,t5,t6,a7 — pixel1 words in a5,a6,gp,tp
+    let x0 = ["t4", "t5", "t6", "a7"];
+    let x1 = ["a5", "a6", "gp", "tp"];
+    for r in x0 {
+        s.push_str(&format!("    p.lw {r}, 4(s4!)\n"));
+    }
+    for r in x1 {
+        s.push_str(&format!("    p.lw {r}, 4(s5!)\n"));
+    }
+    for (wp, acc0, acc1) in
+        [("s0", "s6", "s7"), ("s1", "s8", "s9"), ("s2", "s10", "s11"), ("s3", "a3", "a4")]
+    {
+        s.push_str(&format!("    p.lw t0, 4({wp}!)\n"));
+        for g in 0..4 {
+            // build vector g from crumbs 4g..4g+3
+            let base = g * 8;
+            s.push_str(&format!("    p.bext t1, t0, 2, {}\n", base));
+            s.push_str(&format!("    p.bext t2, t0, 2, {}\n", base + 2));
+            s.push_str("    p.bins t1, t2, 8, 8\n");
+            s.push_str(&format!("    p.bext t2, t0, 2, {}\n", base + 4));
+            s.push_str("    p.bins t1, t2, 8, 16\n");
+            s.push_str(&format!("    p.bext t2, t0, 2, {}\n", base + 6));
+            s.push_str("    p.bins t1, t2, 8, 24\n");
+            s.push_str(&format!("    pv.sdotusp.b {acc0}, {}, t1\n", x0[g]));
+            s.push_str(&format!("    pv.sdotusp.b {acc1}, {}, t1\n", x1[g]));
+        }
+    }
+    s + "end:\n    halt\n"
+}
+
+/// Run the engine's matmul_tile on the same inputs (inner-loop cycles only).
+pub fn run_matmul_engine(w: &QWeights, x0: &[u8], x1: &[u8]) -> (Vec<i32>, u64) {
+    let layout = WeightLayout::prepare(w);
+    let mut e = Engine::single_core();
+    let mut acc = [0i32; 8];
+    matmul_tile(&mut e, &layout, 0, 4, &[x0, x1], &mut acc);
+    // subtract the engine's per-tile setup charge (acc init 8 + ptr 6 + hwloop 1)
+    (acc.to_vec(), e.cycles - 15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn inputs(rng: &mut Rng, wbits: Bits, k: usize) -> (QWeights, Vec<u8>, Vec<u8>) {
+        let w = QWeights::random(rng, 4, 1, 1, k, wbits);
+        let x0: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let x1: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        (w, x0, x1)
+    }
+
+    #[test]
+    fn w8_asm_matches_engine_exactly() {
+        let mut rng = Rng::new(11);
+        let k = 288; // the Reference Layer im2col length
+        let (w, x0, x1) = inputs(&mut rng, Bits::B8, k);
+        let asm = run_matmul_asm(Bits::B8, &w, &x0, &x1, k);
+        let (eng_acc, eng_cycles) = run_matmul_engine(&w, &x0, &x1);
+        assert_eq!(asm.acc.to_vec(), eng_acc, "accumulators must be bit-exact");
+        assert_eq!(
+            asm.loop_cycles, eng_cycles,
+            "8-bit inner loop: ISA sim and engine must agree exactly"
+        );
+        // and both must match the paper: 14 cycles * k/4 iterations
+        assert_eq!(asm.loop_cycles, 14 * (k as u64 / 4));
+    }
+
+    #[test]
+    fn w4_asm_bit_exact_cycles_within_bound() {
+        let mut rng = Rng::new(12);
+        let k = 288;
+        let (w, x0, x1) = inputs(&mut rng, Bits::B4, k);
+        let asm = run_matmul_asm(Bits::B4, &w, &x0, &x1, k);
+        let (eng_acc, eng_cycles) = run_matmul_engine(&w, &x0, &x1);
+        assert_eq!(asm.acc.to_vec(), eng_acc, "accumulators must be bit-exact");
+        // engine charges the paper's 72-cycle stream; the portable
+        // bins-based asm is allowed up to +15%
+        let ratio = asm.loop_cycles as f64 / eng_cycles as f64;
+        assert!(
+            (0.95..1.20).contains(&ratio),
+            "w4 asm {} vs engine {eng_cycles} (ratio {ratio})",
+            asm.loop_cycles
+        );
+        assert_eq!(eng_cycles, 72 * (k as u64 / 8));
+    }
+
+    #[test]
+    fn w2_asm_bit_exact_cycles_within_bound() {
+        let mut rng = Rng::new(13);
+        let k = 288;
+        let (w, x0, x1) = inputs(&mut rng, Bits::B2, k);
+        let asm = run_matmul_asm(Bits::B2, &w, &x0, &x1, k);
+        let (eng_acc, eng_cycles) = run_matmul_engine(&w, &x0, &x1);
+        assert_eq!(asm.acc.to_vec(), eng_acc, "accumulators must be bit-exact");
+        let ratio = asm.loop_cycles as f64 / eng_cycles as f64;
+        assert!(
+            (0.95..1.20).contains(&ratio),
+            "w2 asm {} vs engine {eng_cycles} (ratio {ratio})",
+            asm.loop_cycles
+        );
+        assert_eq!(eng_cycles, 140 * (k as u64 / 16));
+    }
+
+    #[test]
+    fn w8_loop_has_no_load_use_stalls() {
+        // 14 instructions, 14 cycles per iteration: the schedule is
+        // hazard-free. Run 1 iteration and check retired == cycles
+        // (minus setup+halt bookkeeping).
+        let mut rng = Rng::new(14);
+        let (w, x0, x1) = inputs(&mut rng, Bits::B8, 4);
+        let asm = run_matmul_asm(Bits::B8, &w, &x0, &x1, 4);
+        assert_eq!(asm.loop_cycles, 14);
+        assert_eq!(asm.retired, 1 + 14 + 1); // lp.setup + body + halt
+    }
+}

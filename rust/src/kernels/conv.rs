@@ -1,0 +1,328 @@
+//! The complete mixed-precision convolution kernel: im2col -> MatMul ->
+//! QntPack over pixel pairs and 4-channel filter tiles (paper Fig. 1).
+//! One `ConvKernel` instance covers all 27 precision permutations — the
+//! ifmap precision selects the im2col unpack variant, the weight precision
+//! the MatMul inner loop and the ofmap precision the QntPack variant.
+
+use std::ops::Range;
+
+use super::engine::Engine;
+use super::im2col::{im2col_pixel, padded_len};
+use super::matmul::{matmul_tile, WeightLayout};
+use super::qntpack::{qntpack_tile, ThresholdTable};
+use crate::qnn::layer::ConvSpec;
+use crate::qnn::quant::QuantParams;
+use crate::qnn::tensor::{QTensor, QWeights};
+
+/// Per-phase cycle breakdown (Fig. 4 isolates im2col+MatMul; Tab. 1
+/// reports the QntPack overhead).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCycles {
+    pub im2col: u64,
+    pub matmul: u64,
+    pub qntpack: u64,
+    /// Outer-loop bookkeeping (pointer setup, loop branches).
+    pub overhead: u64,
+}
+
+impl PhaseCycles {
+    pub fn total(&self) -> u64 {
+        self.im2col + self.matmul + self.qntpack + self.overhead
+    }
+    /// The paper's "linear" portion: everything except QntPack.
+    pub fn linear(&self) -> u64 {
+        self.im2col + self.matmul + self.overhead
+    }
+    pub fn add(&mut self, o: &PhaseCycles) {
+        self.im2col += o.im2col;
+        self.matmul += o.matmul;
+        self.qntpack += o.qntpack;
+        self.overhead += o.overhead;
+    }
+}
+
+/// Result of a (partial) layer run.
+#[derive(Debug, Clone)]
+pub struct ConvRunStats {
+    pub cycles: u64,
+    pub macs: u64,
+    pub insts: u64,
+    pub phases: PhaseCycles,
+    /// Output elements produced.
+    pub outputs: u64,
+}
+
+impl ConvRunStats {
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.cycles.max(1) as f64
+    }
+    /// MACs/cycle over the linear (im2col+MatMul) portion only — Fig. 4.
+    pub fn linear_macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.phases.linear().max(1) as f64
+    }
+    /// QntPack cycles per output element — Tab. 1.
+    pub fn qntpack_per_output(&self) -> f64 {
+        self.phases.qntpack as f64 / self.outputs.max(1) as f64
+    }
+}
+
+/// A configured convolution layer ready to run on the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ConvKernel {
+    pub spec: ConvSpec,
+    pub layout: WeightLayout,
+    pub quant: QuantParams,
+    pub thr: ThresholdTable,
+}
+
+impl ConvKernel {
+    pub fn new(spec: ConvSpec, weights: &QWeights, quant: QuantParams) -> ConvKernel {
+        spec.validate().expect("invalid conv spec");
+        assert_eq!(weights.bits, spec.prec.w);
+        assert_eq!(quant.ybits, spec.prec.y);
+        quant.validate(spec.phi_max_abs()).expect("invalid quant params");
+        ConvKernel {
+            layout: WeightLayout::prepare(weights),
+            thr: ThresholdTable::prepare(&quant),
+            spec,
+            quant,
+        }
+    }
+
+    /// Execute ofmap rows `rows` on the engine `e`, writing the packed
+    /// output bytes into `out` (the full ofmap buffer; rows are disjoint so
+    /// parallel callers can share it). Returns the phase breakdown.
+    pub fn run_rows(
+        &self,
+        e: &mut Engine,
+        x: &QTensor,
+        rows: Range<usize>,
+        out: &mut [u8],
+    ) -> ConvRunStats {
+        let spec = &self.spec;
+        let outshape = spec.output();
+        assert_eq!(out.len(), outshape.packed_bytes(spec.prec.y));
+        let kp = padded_len(spec.im2col_len());
+        let mut buf0 = vec![0u8; kp];
+        let mut buf1 = vec![0u8; kp];
+        let mut acc = [0i32; 8];
+        let mut phases = PhaseCycles::default();
+        let c0 = e.cycles;
+        let i0 = e.insts;
+        let m0 = e.macs;
+        let mut outputs = 0u64;
+
+        for oh in rows.clone() {
+            // row prologue: pointer arithmetic + row-loop branch
+            let t = e.cycles;
+            e.alu(3);
+            e.branch(true);
+            phases.overhead += e.cycles - t;
+
+            let mut ow = 0usize;
+            while ow < outshape.w {
+                let np = 2.min(outshape.w - ow);
+                // im2col for the pixel pair
+                let t = e.cycles;
+                im2col_pixel(e, spec, x, oh, ow, &mut buf0);
+                if np == 2 {
+                    im2col_pixel(e, spec, x, oh, ow + 1, &mut buf1);
+                }
+                phases.im2col += e.cycles - t;
+
+                let pix_elem: Vec<usize> = (0..np)
+                    .map(|p| (oh * outshape.w + ow + p) * outshape.c)
+                    .collect();
+                let mut f0 = 0usize;
+                while f0 < spec.cout {
+                    let nf = 4.min(spec.cout - f0);
+                    let t = e.cycles;
+                    {
+                        let bufs: [&[u8]; 2] = [&buf0, &buf1];
+                        matmul_tile(e, &self.layout, f0, nf, &bufs[..np], &mut acc);
+                    }
+                    phases.matmul += e.cycles - t;
+
+                    let t = e.cycles;
+                    qntpack_tile(e, &self.quant, &self.thr, &acc, f0, nf, &pix_elem, out);
+                    phases.qntpack += e.cycles - t;
+
+                    // filter-loop bookkeeping
+                    let t = e.cycles;
+                    e.alu(2);
+                    e.branch(f0 + nf < spec.cout);
+                    phases.overhead += e.cycles - t;
+
+                    outputs += (nf * np) as u64;
+                    f0 += nf;
+                }
+                ow += np;
+            }
+        }
+        ConvRunStats {
+            cycles: e.cycles - c0,
+            macs: e.macs - m0,
+            insts: e.insts - i0,
+            phases,
+            outputs,
+        }
+    }
+
+    /// Run the whole layer on a single core; returns (ofmap, stats).
+    pub fn run(&self, e: &mut Engine, x: &QTensor) -> (QTensor, ConvRunStats) {
+        let outshape = self.spec.output();
+        let mut out = vec![0u8; outshape.packed_bytes(self.spec.prec.y)];
+        let stats = self.run_rows(e, x, 0..outshape.h, &mut out);
+        (QTensor { shape: outshape, bits: self.spec.prec.y, data: out }, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::golden;
+    use crate::qnn::types::{Bits, Hwc, Precision};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn run_case(rng: &mut Rng, prec: Precision, input: Hwc, cout: usize) -> Result<(), String> {
+        let spec = ConvSpec {
+            name: "t".into(),
+            input,
+            cout,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            prec,
+        };
+        spec.validate()?;
+        let x = QTensor::random(rng, input, prec.x);
+        let w = QWeights::random(rng, cout, 3, 3, input.c, prec.w);
+        let q = crate::qnn::quant::random_params(rng, cout, prec.y, spec.phi_max_abs(), spec.im2col_len());
+        let kernel = ConvKernel::new(spec.clone(), &w, q.clone());
+        let mut e = Engine::single_core();
+        let (got, stats) = kernel.run(&mut e, &x);
+        let want = golden::conv2d(&spec, &x, &w, &q);
+        if got.data != want.data {
+            let gv = got.values();
+            let wv = want.values();
+            let idx = gv.iter().zip(&wv).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "{prec}: first mismatch at element {idx}: got {} want {}",
+                gv[idx], wv[idx]
+            ));
+        }
+        // The engine counts *executed* MACs: the algorithmic count plus the
+        // zero-padded lanes of the last inner-loop step (real hardware
+        // executes those too).
+        let out = spec.output();
+        let executed =
+            (out.h * out.w * out.c) as u64 * kernel.layout.k_padded as u64;
+        if stats.macs != executed {
+            return Err(format!(
+                "{prec}: macs {} want {executed} (algorithmic {})",
+                stats.macs,
+                spec.macs()
+            ));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn all_27_permutations_match_golden() {
+        let mut rng = Rng::new(42);
+        for prec in Precision::all() {
+            run_case(&mut rng, prec, Hwc::new(5, 5, 8), 8).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_random_shapes_match_golden() {
+        check("conv-kernel-vs-golden", 40, |rng, _| {
+            let prec = *rng.pick(&Precision::all());
+            let c = 4 * (1 + rng.below(3) as usize);
+            let input = Hwc::new(
+                3 + rng.below(5) as usize,
+                3 + rng.below(5) as usize,
+                c,
+            );
+            let cout = 4 * (1 + rng.below(3) as usize);
+            run_case(rng, prec, input, cout)
+        });
+    }
+
+    #[test]
+    fn odd_width_and_nonmultiple4_cout() {
+        // exercises np=1 leftover and nf<4 leftover paths (y=8b so any cout)
+        let mut rng = Rng::new(7);
+        let prec = Precision::new(Bits::B8, Bits::B4, Bits::B8);
+        let spec = ConvSpec {
+            name: "odd".into(),
+            input: Hwc::new(5, 5, 8),
+            cout: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            prec,
+        };
+        let x = QTensor::random(&mut rng, spec.input, prec.x);
+        let w = QWeights::random(&mut rng, 6, 3, 3, 8, prec.w);
+        let q = crate::qnn::quant::random_params(&mut rng, 6, prec.y, spec.phi_max_abs(), spec.im2col_len());
+        let kernel = ConvKernel::new(spec.clone(), &w, q.clone());
+        let mut e = Engine::single_core();
+        let (got, _) = kernel.run(&mut e, &x);
+        let want = golden::conv2d(&spec, &x, &w, &q);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn reference_layer_single_core_performance() {
+        // Fig. 4 sanity: single-core linear MACs/cycle for the Reference
+        // Layer should be ~2.2 at 8-bit weights and drop by ~2.5x for
+        // sub-byte weights.
+        let mut rng = Rng::new(2020);
+        let mut perf = std::collections::BTreeMap::new();
+        for wbits in Bits::ALL {
+            let prec = Precision::new(Bits::B8, wbits, Bits::B8);
+            let spec = ConvSpec::reference_layer(prec);
+            let x = QTensor::random(&mut rng, spec.input, prec.x);
+            let w = QWeights::random(&mut rng, spec.cout, 3, 3, spec.input.c, wbits);
+            let q = spec.default_quant();
+            let kernel = ConvKernel::new(spec, &w, q);
+            let mut e = Engine::single_core();
+            let (_, stats) = kernel.run(&mut e, &x);
+            perf.insert(wbits, stats.linear_macs_per_cycle());
+        }
+        let p8 = perf[&Bits::B8];
+        assert!((2.0..2.3).contains(&p8), "8-bit linear MACs/cycle {p8}");
+        let r4 = p8 / perf[&Bits::B4];
+        let r2 = p8 / perf[&Bits::B2];
+        assert!((2.2..2.8).contains(&r4), "4-bit drop {r4} (paper ~2.5)");
+        assert!((2.1..2.7).contains(&r2), "2-bit drop {r2} (paper ~2.43)");
+        assert!(r2 < r4, "2-bit weights must outperform 4-bit (paper Fig. 4)");
+    }
+
+    #[test]
+    fn qntpack_overhead_matches_table1_shape() {
+        let mut rng = Rng::new(99);
+        let mut cost = std::collections::BTreeMap::new();
+        for ybits in Bits::ALL {
+            let prec = Precision::new(Bits::B8, Bits::B8, ybits);
+            let spec = ConvSpec::reference_layer(prec);
+            let x = QTensor::random(&mut rng, spec.input, prec.x);
+            let w = QWeights::random(&mut rng, spec.cout, 3, 3, spec.input.c, prec.w);
+            let q = spec.default_quant();
+            let kernel = ConvKernel::new(spec, &w, q);
+            let mut e = Engine::single_core();
+            let (_, stats) = kernel.run(&mut e, &x);
+            cost.insert(ybits, stats.qntpack_per_output());
+        }
+        // Tab. 1 trend: 8b (2.01) < 2b (8.02) < 4b (16.64), 4b ~ 2x 2b
+        assert!(cost[&Bits::B8] < cost[&Bits::B2]);
+        assert!(cost[&Bits::B2] < cost[&Bits::B4]);
+        let ratio = cost[&Bits::B4] / cost[&Bits::B2];
+        assert!((1.5..2.5).contains(&ratio), "y4/y2 {ratio}");
+    }
+}

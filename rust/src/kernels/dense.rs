@@ -1,0 +1,167 @@
+//! Dense (fully-connected) kernels. The classifier head produces raw i32
+//! logits (no re-quantization); hidden dense layers reuse the same tiled
+//! dot-product machinery as the convolutions (a dense layer is a 1x1 conv
+//! over a 1x1 feature map).
+
+use super::engine::Engine;
+use super::im2col::padded_len;
+use super::matmul::{matmul_tile, WeightLayout};
+use crate::qnn::layer::DenseSpec;
+use crate::qnn::tensor::{QTensor, QWeights};
+use crate::qnn::types::Bits;
+
+/// A configured dense head.
+#[derive(Debug, Clone)]
+pub struct DenseHeadKernel {
+    pub spec: DenseSpec,
+    pub layout: WeightLayout,
+}
+
+impl DenseHeadKernel {
+    pub fn new(spec: DenseSpec, weight_vals: &[i32]) -> DenseHeadKernel {
+        spec.validate().expect("invalid dense spec");
+        let w = QWeights::from_values(
+            spec.out_features,
+            1,
+            1,
+            spec.in_features,
+            spec.prec.w,
+            weight_vals,
+        );
+        DenseHeadKernel { layout: WeightLayout::prepare(&w), spec }
+    }
+
+    /// Run: unpack the (flattened) input activations into the x buffer,
+    /// then 4-output tiles of the MatMul. Returns raw i32 logits.
+    pub fn run(&self, e: &mut Engine, x: &QTensor) -> Vec<i32> {
+        assert_eq!(x.shape.elems(), self.spec.in_features);
+        assert_eq!(x.bits, self.spec.prec.x);
+        // unpack input into the im2col-style buffer (charged like im2col)
+        let kp = padded_len(self.layout.k_padded.max(self.spec.in_features));
+        let mut xbuf = vec![0u8; kp];
+        unpack_activations(e, x, &mut xbuf);
+
+        let mut logits = vec![0i32; self.spec.out_features];
+        let mut acc = [0i32; 8];
+        let mut f0 = 0usize;
+        while f0 < self.spec.out_features {
+            let nf = 4.min(self.spec.out_features - f0);
+            {
+                let bufs: [&[u8]; 1] = [&xbuf];
+                matmul_tile(e, &self.layout, f0, nf, &bufs, &mut acc);
+            }
+            for f in 0..nf {
+                logits[f0 + f] = acc[f];
+            }
+            // stores + loop bookkeeping
+            e.alu(nf as u64 + 2);
+            e.branch(f0 + nf < self.spec.out_features);
+            f0 += nf;
+        }
+        logits
+    }
+}
+
+/// Unpack a packed activation tensor into u8 values (cycle-charged like the
+/// im2col unpack variants: word copies at 8-bit, bext at sub-byte).
+pub fn unpack_activations(e: &mut Engine, x: &QTensor, out: &mut [u8]) {
+    let n = x.shape.elems();
+    assert!(out.len() >= n);
+    match x.bits {
+        Bits::B8 => {
+            let mut i = 0;
+            while i + 4 <= n {
+                let v = e.lw(&x.data, i);
+                out[i..i + 4].copy_from_slice(&v.to_le_bytes());
+                e.alu(0);
+                e.prof.stores += 1;
+                e.insts += 1;
+                e.cycles += 1;
+                i += 4;
+            }
+            while i < n {
+                out[i] = e.lbu(&x.data, i) as u8;
+                e.prof.stores += 1;
+                e.insts += 1;
+                e.cycles += 1;
+                i += 1;
+            }
+        }
+        Bits::B4 | Bits::B2 => {
+            let per = x.bits.per_byte();
+            let b = x.bits.bits() as u8;
+            let mut i = 0;
+            while i < n {
+                let chunk = (per * 4).min(n - i);
+                let mut word = [0u8; 4];
+                let nbytes = chunk.div_ceil(per);
+                word[..nbytes].copy_from_slice(&x.data[i / per..i / per + nbytes]);
+                let w = u32::from_le_bytes(word);
+                e.cycles += 1;
+                e.insts += 1;
+                e.prof.loads += 1;
+                for j in 0..chunk {
+                    out[i + j] = e.bextu(w, b, (j as u32 * b as u32) as u8) as u8;
+                }
+                // pack + store per 4 unpacked values
+                let words = chunk.div_ceil(4) as u64;
+                e.cycles += 3 * words;
+                e.insts += 3 * words;
+                e.prof.pack += 2 * words;
+                e.prof.stores += words;
+                i += chunk;
+            }
+        }
+    }
+    out[n..].fill(0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::golden;
+    use crate::qnn::types::{Hwc, Precision};
+    use crate::util::check::check;
+
+    #[test]
+    fn prop_head_matches_golden_dense() {
+        check("dense-head-vs-golden", 40, |rng, _| {
+            let xbits = *rng.pick(&Bits::ALL);
+            let wbits = *rng.pick(&Bits::ALL);
+            let cin = 4 * (1 + rng.below(8) as usize);
+            let classes = 2 + rng.below(14) as usize;
+            let spec = DenseSpec {
+                name: "head".into(),
+                in_features: cin,
+                out_features: classes,
+                prec: Precision::new(xbits, wbits, Bits::B8),
+            };
+            if spec.validate().is_err() {
+                return Ok(()); // skip unpackable dims
+            }
+            let x = QTensor::random(rng, Hwc::new(1, 1, cin), xbits);
+            let wv: Vec<i32> = (0..cin * classes)
+                .map(|_| rng.range_i32(wbits.smin(), wbits.smax()))
+                .collect();
+            let kernel = DenseHeadKernel::new(spec.clone(), &wv);
+            let mut e = Engine::single_core();
+            let got = kernel.run(&mut e, &x);
+            let want = golden::dense_acc(&spec, &x.values(), &wv);
+            crate::util::check::expect_eq_slices(&got, &want, "logits")
+        });
+    }
+
+    #[test]
+    fn unpack_activations_matches_values() {
+        check("unpack-activations", 30, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let c = bits.per_byte() * 4 * (1 + rng.below(4) as usize);
+            let x = QTensor::random(rng, Hwc::new(1, 1, c), bits);
+            let mut e = Engine::single_core();
+            let mut out = vec![0xAA; padded_len(c)];
+            unpack_activations(&mut e, &x, &mut out);
+            let want: Vec<u8> = x.values().iter().map(|&v| v as u8).collect();
+            crate::util::check::expect_eq_slices(&out[..c], &want, "unpacked")
+        });
+    }
+}

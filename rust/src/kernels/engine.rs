@@ -1,0 +1,338 @@
+//! The XpulpV2 intrinsic engine: executes kernel data paths bit-exactly
+//! *and* charges cycles per emitted instruction, so the cycle count of a
+//! kernel is derived from its actual instruction stream rather than a
+//! closed-form formula. Costs come from `isa::cost` (the same table the ISA
+//! simulator uses); `kernels::asm_xcheck` validates the engine's accounting
+//! against real ISA-simulator runs of the hand-written inner loops.
+//!
+//! Multi-core runs add a TCDM-contention model: each load/store pays a
+//! deterministic fractional stall accumulated from the configured conflict
+//! probability (see [`Contention`]), calibrated against the banked-TCDM
+//! cluster simulator.
+
+use crate::isa::cost;
+
+/// Deterministic fractional-stall model for TCDM bank conflicts.
+///
+/// Each access accrues `num/den` expected stall cycles; whole cycles are
+/// charged as the accumulator crosses 1. `none()` disables it (single-core:
+/// a lone core never conflicts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Contention {
+    pub num: u32,
+    pub den: u32,
+}
+
+impl Contention {
+    pub fn none() -> Contention {
+        Contention { num: 0, den: 1 }
+    }
+
+    /// Conflict probability for `cores` active cores over `banks` banks,
+    /// calibrated against `cluster::Tcdm` arbitration on the PULP-NN access
+    /// pattern (see `bench::speedup` and tests in `kernels::parallel`):
+    /// p = (cores - 1) / (3 * banks).
+    pub fn for_cluster(cores: usize, banks: usize) -> Contention {
+        Contention { num: (cores.saturating_sub(1)) as u32, den: (3 * banks) as u32 }
+    }
+
+    pub fn probability(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+}
+
+/// Instruction-class counters (the profile the benches report).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Profile {
+    pub loads: u64,
+    pub stores: u64,
+    pub bext: u64,
+    pub pack: u64,
+    pub sdot: u64,
+    pub alu: u64,
+    pub branches: u64,
+    pub taken_branches: u64,
+    pub contention_stalls: u64,
+}
+
+/// The engine: cycle/instruction accumulator plus the XpulpV2 data path.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub cycles: u64,
+    pub insts: u64,
+    pub macs: u64,
+    pub prof: Profile,
+    contention: Contention,
+    cont_acc: u32,
+}
+
+impl Engine {
+    pub fn new(contention: Contention) -> Engine {
+        Engine {
+            cycles: 0,
+            insts: 0,
+            macs: 0,
+            prof: Profile::default(),
+            contention,
+            cont_acc: 0,
+        }
+    }
+
+    pub fn single_core() -> Engine {
+        Engine::new(Contention::none())
+    }
+
+    /// MACs per cycle achieved so far.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+
+    #[inline]
+    fn mem_access(&mut self) {
+        self.cont_acc += self.contention.num;
+        if self.cont_acc >= self.contention.den {
+            self.cont_acc -= self.contention.den;
+            self.cycles += cost::TCDM_CONFLICT_STALL;
+            self.prof.contention_stalls += 1;
+        }
+    }
+
+    /// 32-bit little-endian load (`p.lw`), one cycle (+contention).
+    #[inline]
+    pub fn lw(&mut self, buf: &[u8], off: usize) -> u32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.loads += 1;
+        self.mem_access();
+        // single bounds check instead of four (hot path, see §Perf)
+        u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+    }
+
+    /// Byte load (`p.lbu`).
+    #[inline]
+    pub fn lbu(&mut self, buf: &[u8], off: usize) -> u32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.loads += 1;
+        self.mem_access();
+        buf[off] as u32
+    }
+
+    /// 32-bit store (`p.sw`).
+    #[inline]
+    pub fn sw(&mut self, buf: &mut [u8], off: usize, v: u32) {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.stores += 1;
+        self.mem_access();
+        buf[off..off + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Byte store (`p.sb`).
+    #[inline]
+    pub fn sb(&mut self, buf: &mut [u8], off: usize, v: u8) {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.stores += 1;
+        self.mem_access();
+        buf[off] = v;
+    }
+
+    /// `p.bextu` — zero-extending bit-field extract, one cycle.
+    #[inline]
+    pub fn bextu(&mut self, word: u32, size: u8, off: u8) -> u32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.bext += 1;
+        crate::isa::exec::bext(word, size, off, false)
+    }
+
+    /// `p.bext` — sign-extending bit-field extract, one cycle.
+    #[inline]
+    pub fn bext(&mut self, word: u32, size: u8, off: u8) -> i32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.bext += 1;
+        crate::isa::exec::bext(word, size, off, true) as i32
+    }
+
+    /// `p.bins` — bit-field insert, one cycle.
+    #[inline]
+    pub fn bins(&mut self, dst: u32, src: u32, size: u8, off: u8) -> u32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.pack += 1;
+        let mask = (((1u64 << size) - 1) as u32) << off;
+        (dst & !mask) | ((src << off) & mask)
+    }
+
+    /// Assemble four sign-extended bytes into a SIMD register. Costs two
+    /// cycles — the paper's MatMul instruction counts (16 pack ops per 8
+    /// vectors, §3) imply two pack instructions per assembled vector.
+    #[inline]
+    pub fn pack4(&mut self, b: [i32; 4]) -> u32 {
+        self.cycles += 2 * cost::BASE;
+        self.insts += 2;
+        self.prof.pack += 2;
+        u32::from_le_bytes([b[0] as u8, b[1] as u8, b[2] as u8, b[3] as u8])
+    }
+
+    /// `pv.sdotusp.b` — acc += dot(u8x4(x), i8x4(w)); one cycle, 4 MACs.
+    #[inline]
+    pub fn sdotusp(&mut self, acc: i32, x: u32, w: u32) -> i32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.sdot += 1;
+        self.macs += 4;
+        let xb = x.to_le_bytes();
+        let wb = w.to_le_bytes();
+        let mut a = acc;
+        for i in 0..4 {
+            a = a.wrapping_add((xb[i] as i32).wrapping_mul(wb[i] as i8 as i32));
+        }
+        a
+    }
+
+    /// Scalar `p.mac` (one cycle, one MAC) — remainder paths.
+    #[inline]
+    pub fn mac(&mut self, acc: i32, a: i32, b: i32) -> i32 {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.alu += 1;
+        self.macs += 1;
+        acc.wrapping_add(a.wrapping_mul(b))
+    }
+
+    /// Charge `n` generic single-cycle ALU ops (address arithmetic, shifts,
+    /// clips, moves) without a data path.
+    #[inline]
+    pub fn alu(&mut self, n: u64) {
+        self.cycles += n * cost::BASE;
+        self.insts += n;
+        self.prof.alu += n;
+    }
+
+    /// A conditional branch: one issue cycle plus the taken penalty.
+    #[inline]
+    pub fn branch(&mut self, taken: bool) {
+        self.cycles += cost::BASE;
+        self.insts += 1;
+        self.prof.branches += 1;
+        if taken {
+            self.cycles += cost::BRANCH_TAKEN_PENALTY;
+            self.prof.taken_branches += 1;
+        }
+    }
+
+    /// Hardware-loop setup (`lp.setup`): one cycle; iterations are free.
+    #[inline]
+    pub fn hwloop_setup(&mut self) {
+        self.alu(1);
+    }
+
+    /// Merge a sub-engine (e.g. per-core run) into a totals accumulator —
+    /// cycles are *not* merged (parallel sections take the max, handled by
+    /// the caller); instructions/MACs/profile are summed.
+    pub fn absorb_counts(&mut self, other: &Engine) {
+        self.insts += other.insts;
+        self.macs += other.macs;
+        let p = &mut self.prof;
+        let q = &other.prof;
+        p.loads += q.loads;
+        p.stores += q.stores;
+        p.bext += q.bext;
+        p.pack += q.pack;
+        p.sdot += q.sdot;
+        p.alu += q.alu;
+        p.branches += q.branches;
+        p.taken_branches += q.taken_branches;
+        p.contention_stalls += q.contention_stalls;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_store_roundtrip_and_cost() {
+        let mut e = Engine::single_core();
+        let mut buf = vec![0u8; 16];
+        e.sw(&mut buf, 4, 0xCAFEBABE);
+        assert_eq!(e.lw(&buf, 4), 0xCAFEBABE);
+        e.sb(&mut buf, 0, 0x7F);
+        assert_eq!(e.lbu(&buf, 0), 0x7F);
+        assert_eq!(e.cycles, 4);
+        assert_eq!(e.insts, 4);
+    }
+
+    #[test]
+    fn sdotusp_semantics_match_isa() {
+        let mut e = Engine::single_core();
+        // x = [200,1,2,3] (u8), w = [-1,-2,3,4] (i8), acc 10 -> -174
+        let x = u32::from_le_bytes([200, 1, 2, 3]);
+        let w = u32::from_le_bytes([0xFF, 0xFE, 3, 4]);
+        assert_eq!(e.sdotusp(10, x, w), -174);
+        assert_eq!(e.macs, 4);
+        assert_eq!(e.cycles, 1);
+    }
+
+    #[test]
+    fn bext_bins_pack_costs() {
+        let mut e = Engine::single_core();
+        assert_eq!(e.bext(0x8F, 4, 4), -8);
+        assert_eq!(e.bextu(0x8F, 4, 4), 8);
+        assert_eq!(e.bins(0xFF, 0xA, 4, 4), 0xAF);
+        assert_eq!(e.pack4([-1, 2, -3, 4]), u32::from_le_bytes([0xFF, 2, 0xFD, 4]));
+        // 1 + 1 + 1 + 2
+        assert_eq!(e.cycles, 5);
+    }
+
+    #[test]
+    fn branch_taken_penalty() {
+        let mut e = Engine::single_core();
+        e.branch(false);
+        let c0 = e.cycles;
+        e.branch(true);
+        assert_eq!(e.cycles - c0, 1 + crate::isa::cost::BRANCH_TAKEN_PENALTY);
+    }
+
+    #[test]
+    fn contention_charges_fractionally() {
+        let c = Contention { num: 1, den: 4 };
+        let mut e = Engine::new(c);
+        let buf = vec![0u8; 64];
+        for i in 0..16 {
+            e.lw(&buf, i * 4);
+        }
+        // 16 loads at p=1/4 -> exactly 4 stalls
+        assert_eq!(e.prof.contention_stalls, 4);
+        assert_eq!(e.cycles, 16 + 4);
+    }
+
+    #[test]
+    fn cluster_contention_probability() {
+        let c = Contention::for_cluster(8, 16);
+        assert!((c.probability() - 7.0 / 48.0).abs() < 1e-12);
+        assert_eq!(Contention::for_cluster(1, 16).probability(), 0.0);
+    }
+
+    #[test]
+    fn absorb_sums_counters_not_cycles() {
+        let mut a = Engine::single_core();
+        let mut b = Engine::single_core();
+        let buf = vec![0u8; 8];
+        a.lw(&buf, 0);
+        b.lw(&buf, 4);
+        b.alu(3);
+        let a_cycles = a.cycles;
+        a.absorb_counts(&b);
+        assert_eq!(a.cycles, a_cycles);
+        assert_eq!(a.insts, 1 + 4);
+        assert_eq!(a.prof.loads, 2);
+    }
+}

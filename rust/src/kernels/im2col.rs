@@ -1,0 +1,302 @@
+//! The im2col phase: gather one output pixel's receptive field into a
+//! linear u8 buffer, unpacking sub-byte ifmaps to int8 on the way
+//! (paper §3, Fig. 1/2). The ifmap precision selects the unpack variant:
+//!
+//! * 8-bit: straight word copies (1 `p.lw` + 1 `p.sw` per 4 elements);
+//! * 4-bit: per source word, 8 `p.bextu` + 2 pack + 2 `p.sw` (Fig. 2);
+//! * 2-bit: per source word, 16 `p.bextu` + 4 pack + 4 `p.sw` — half the
+//!   loads per element of the 4-bit case, which is why 2-bit ifmaps
+//!   slightly outperform 4-bit in Fig. 4's under-bars.
+//!
+//! Out-of-bounds taps (zero padding) are zero-filled with word stores.
+
+use super::engine::Engine;
+use crate::qnn::layer::ConvSpec;
+use crate::qnn::tensor::QTensor;
+use crate::qnn::types::Bits;
+
+/// Buffer length the matmul kernels require: the im2col row padded to the
+/// widest inner-loop step (16 elements, the 2-bit weight case).
+pub fn padded_len(k: usize) -> usize {
+    (k + 15) & !15
+}
+
+/// Fill `out` (length >= padded_len(spec.im2col_len())) with the unpacked
+/// receptive field of output pixel (oh, ow).
+pub fn im2col_pixel(
+    e: &mut Engine,
+    spec: &ConvSpec,
+    x: &QTensor,
+    oh: usize,
+    ow: usize,
+    out: &mut [u8],
+) {
+    let kp = padded_len(spec.im2col_len());
+    assert!(out.len() >= kp, "im2col buffer too small: {} < {kp}", out.len());
+    let (iw, ic) = (spec.input.w, spec.input.c);
+    let mut dst = 0usize;
+    let mut kh = 0usize;
+    let mut kw = 0usize;
+    while kh < spec.kh {
+        if kw >= spec.kw {
+            kh += 1;
+            kw = 0;
+            continue;
+        }
+        let in_h = (oh * spec.stride + kh) as isize - spec.pad as isize;
+        if in_h < 0 || in_h >= spec.input.h as isize {
+            // whole kernel row is vertical padding
+            zero_fill(e, out, dst, (spec.kw - kw) * ic);
+            dst += (spec.kw - kw) * ic;
+            kw = spec.kw;
+            continue;
+        }
+        let in_w = (ow * spec.stride + kw) as isize - spec.pad as isize;
+        if in_w < 0 || in_w >= iw as isize {
+            // horizontal padding tap
+            zero_fill(e, out, dst, ic);
+            dst += ic;
+            kw += 1;
+            continue;
+        }
+        // Merge consecutive in-bounds taps: they are contiguous in HWC.
+        let mut taps = 1usize;
+        while kw + taps < spec.kw && (in_w + taps as isize) < iw as isize {
+            taps += 1;
+        }
+        let n = taps * ic;
+        let src_elem = (in_h as usize * iw + in_w as usize) * ic;
+        unpack_run(e, x, src_elem, out, dst, n);
+        dst += n;
+        kw += taps;
+    }
+    zero_fill(e, out, dst, kp - dst);
+}
+
+/// Zero-fill `n` elements: word stores of zero (4 elements per `p.sw`).
+fn zero_fill(e: &mut Engine, out: &mut [u8], dst: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    out[dst..dst + n].fill(0);
+    // charge: one `p.sw` of the zero register per 4 elements
+    let words = n.div_ceil(4) as u64;
+    e.prof.stores += words;
+    e.insts += words;
+    e.cycles += words;
+}
+
+/// Copy/unpack a contiguous run of `n` ifmap elements starting at logical
+/// element index `src_elem` into `out[dst..dst+n]` as u8 values.
+fn unpack_run(e: &mut Engine, x: &QTensor, src_elem: usize, out: &mut [u8], dst: usize, n: usize) {
+    match x.bits {
+        Bits::B8 => {
+            // word copy: lw + sw per 4 elements (+ byte ops for the tail)
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let v = e.lw(&x.data, src_elem + i);
+                e.sw_into(out, dst + i, v);
+                i += 4;
+            }
+            while i < n {
+                let v = e.lbu(&x.data, src_elem + i);
+                e.sb_into(out, dst + i, v as u8);
+                i += 1;
+            }
+        }
+        Bits::B4 => {
+            // per source word (8 elements): lw + 8 bextu + 2 pack + 2 sw
+            let mut i = 0usize;
+            while i < n {
+                let byte_off = (src_elem + i) / 2;
+                let word_elems = 8.min(n - i);
+                let word = load_partial(e, &x.data, byte_off, word_elems.div_ceil(2));
+                let mut vals = [0u32; 8];
+                for (j, v) in vals.iter_mut().enumerate().take(word_elems) {
+                    *v = e.bextu(word, 4, (j * 4) as u8);
+                }
+                for half in 0..word_elems.div_ceil(4) {
+                    let b = [
+                        vals[half * 4] as i32,
+                        vals.get(half * 4 + 1).copied().unwrap_or(0) as i32,
+                        vals.get(half * 4 + 2).copied().unwrap_or(0) as i32,
+                        vals.get(half * 4 + 3).copied().unwrap_or(0) as i32,
+                    ];
+                    let packed = e.pack4(b);
+                    e.sw_into(out, dst + i + half * 4, packed);
+                }
+                i += word_elems;
+            }
+        }
+        Bits::B2 => {
+            // per source word (16 elements): lw + 16 bextu + 4 pack + 4 sw
+            let mut i = 0usize;
+            while i < n {
+                let byte_off = (src_elem + i) / 4;
+                let word_elems = 16.min(n - i);
+                let word = load_partial(e, &x.data, byte_off, word_elems.div_ceil(4));
+                let mut vals = [0u32; 16];
+                for (j, v) in vals.iter_mut().enumerate().take(word_elems) {
+                    *v = e.bextu(word, 2, (j * 2) as u8);
+                }
+                for q in 0..word_elems.div_ceil(4) {
+                    let b = [
+                        vals[q * 4] as i32,
+                        vals.get(q * 4 + 1).copied().unwrap_or(0) as i32,
+                        vals.get(q * 4 + 2).copied().unwrap_or(0) as i32,
+                        vals.get(q * 4 + 3).copied().unwrap_or(0) as i32,
+                    ];
+                    let packed = e.pack4(b);
+                    e.sw_into(out, dst + i + q * 4, packed);
+                }
+                i += word_elems;
+            }
+        }
+    }
+}
+
+/// Load up to 4 bytes as a (low-justified) word, tolerating buffer ends.
+fn load_partial(e: &mut Engine, buf: &[u8], off: usize, nbytes: usize) -> u32 {
+    let mut w = [0u8; 4];
+    for (i, b) in w.iter_mut().enumerate().take(nbytes.min(buf.len() - off)) {
+        *b = buf[off + i];
+    }
+    // charged as a single p.lw regardless of how many bytes are live
+    e.cycles += 1;
+    e.insts += 1;
+    e.prof.loads += 1;
+    u32::from_le_bytes(w)
+}
+
+impl Engine {
+    /// Store into a possibly short tail (charged as one `p.sw`).
+    fn sw_into(&mut self, out: &mut [u8], off: usize, v: u32) {
+        let bytes = v.to_le_bytes();
+        let n = 4.min(out.len() - off);
+        out[off..off + n].copy_from_slice(&bytes[..n]);
+        self.cycles += 1;
+        self.insts += 1;
+        self.prof.stores += 1;
+    }
+    fn sb_into(&mut self, out: &mut [u8], off: usize, v: u8) {
+        out[off] = v;
+        self.cycles += 1;
+        self.insts += 1;
+        self.prof.stores += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::types::{Hwc, Precision};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn spec(x: Bits, input: Hwc, kh: usize, kw: usize, stride: usize, pad: usize) -> ConvSpec {
+        ConvSpec {
+            name: "t".into(),
+            input,
+            cout: 4,
+            kh,
+            kw,
+            stride,
+            pad,
+            prec: Precision::new(x, Bits::B8, Bits::B8),
+        }
+    }
+
+    /// Reference im2col: plain gather from unpacked values.
+    fn golden_im2col(s: &ConvSpec, x: &QTensor, oh: usize, ow: usize) -> Vec<u8> {
+        let xv = x.values();
+        let mut out = vec![0u8; padded_len(s.im2col_len())];
+        let mut d = 0;
+        for kh in 0..s.kh {
+            for kw in 0..s.kw {
+                let ih = (oh * s.stride + kh) as isize - s.pad as isize;
+                let iw = (ow * s.stride + kw) as isize - s.pad as isize;
+                for c in 0..s.input.c {
+                    out[d] = if ih >= 0
+                        && iw >= 0
+                        && (ih as usize) < s.input.h
+                        && (iw as usize) < s.input.w
+                    {
+                        xv[((ih as usize) * s.input.w + iw as usize) * s.input.c + c] as u8
+                    } else {
+                        0
+                    };
+                    d += 1;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_matches_golden_gather_all_precisions() {
+        check("im2col-matches-golden", 60, |rng, _| {
+            let xbits = *rng.pick(&Bits::ALL);
+            let c = xbits.per_byte() * (1 + rng.below(3) as usize) * 4;
+            let input = Hwc::new(3 + rng.below(4) as usize, 3 + rng.below(4) as usize, c);
+            let s = spec(xbits, input, 3, 3, 1, rng.below(2) as usize + 0);
+            let x = QTensor::random(rng, input, xbits);
+            let out_shape = s.output();
+            let oh = rng.below(out_shape.h as u32) as usize;
+            let ow = rng.below(out_shape.w as u32) as usize;
+            let mut e = Engine::single_core();
+            let mut buf = vec![0xAAu8; padded_len(s.im2col_len())];
+            im2col_pixel(&mut e, &s, &x, oh, ow, &mut buf);
+            let want = golden_im2col(&s, &x, oh, ow);
+            crate::util::check::expect_eq_slices(&buf, &want, "im2col")
+        });
+    }
+
+    #[test]
+    fn cost_per_element_orders_8_2_4() {
+        // interior pixel (no padding): cost/element should be
+        // 8-bit < 2-bit < 4-bit, the Fig. 4 under-bar ordering.
+        let input = Hwc::new(8, 8, 32);
+        let mut rng = Rng::new(9);
+        let mut costs = std::collections::BTreeMap::new();
+        for bits in Bits::ALL {
+            let s = spec(bits, input, 3, 3, 1, 1);
+            let x = QTensor::random(&mut rng, input, bits);
+            let mut e = Engine::single_core();
+            let mut buf = vec![0u8; padded_len(s.im2col_len())];
+            im2col_pixel(&mut e, &s, &x, 4, 4, &mut buf);
+            costs.insert(bits, e.cycles as f64 / s.im2col_len() as f64);
+        }
+        assert!(costs[&Bits::B8] < costs[&Bits::B2], "{costs:?}");
+        assert!(costs[&Bits::B2] < costs[&Bits::B4], "{costs:?}");
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let input = Hwc::new(4, 4, 4);
+        let s = spec(Bits::B8, input, 3, 3, 1, 1);
+        let x = QTensor::from_values(input, Bits::B8, &vec![7; input.elems()]);
+        let mut e = Engine::single_core();
+        let mut buf = vec![0xFFu8; padded_len(s.im2col_len())];
+        im2col_pixel(&mut e, &s, &x, 0, 0, &mut buf);
+        // top-left corner: first kernel row and first column are padding
+        for i in 0..s.kw * 4 {
+            assert_eq!(buf[i], 0, "top row should be zero at {i}");
+        }
+        assert_eq!(buf[s.kw * 4 + 0], 0); // left column of middle row
+        assert_eq!(buf[s.kw * 4 + 4], 7); // first in-bounds tap
+    }
+
+    #[test]
+    fn tail_padding_is_zeroed() {
+        let input = Hwc::new(4, 4, 4); // K = 36, padded to 48
+        let s = spec(Bits::B8, input, 3, 3, 1, 0);
+        let mut rng = Rng::new(3);
+        let x = QTensor::random(&mut rng, input, Bits::B8);
+        let mut e = Engine::single_core();
+        let mut buf = vec![0xFFu8; padded_len(s.im2col_len())];
+        im2col_pixel(&mut e, &s, &x, 0, 0, &mut buf);
+        for i in s.im2col_len()..buf.len() {
+            assert_eq!(buf[i], 0, "tail not zeroed at {i}");
+        }
+    }
+}

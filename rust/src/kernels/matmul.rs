@@ -1,0 +1,308 @@
+//! The MatMul phase: register-tiled 4 (output channels) x 2 (spatial
+//! pixels) inner loops, one variant per weight precision (paper §3).
+//!
+//! Inner-loop structure and costs (full 4x2 tile, per iteration):
+//!
+//! | weights | loads | bext | pack | sdot | cycles | MACs | elems/iter |
+//! |---------|-------|------|------|------|--------|------|------------|
+//! | 8-bit   | 4w+2x |  —   |  —   |  8   |   14   |  32  |  4         |
+//! | 4-bit   | 4w+4x |  32  |  16  |  16  |   72   |  64  |  8         |
+//! | 2-bit   | 4w+8x |  64  |  32  |  32  |  140   | 128  | 16         |
+//!
+//! These are exactly the counts of §3 of the paper ("14 / 72 / 140 cycles
+//! per iteration"). `kernels::asm_xcheck` runs hand-written XpulpV2
+//! assembly of the same loops on the ISA simulator to validate both the
+//! numerics and the cycle accounting.
+
+use super::engine::Engine;
+use crate::qnn::tensor::QWeights;
+use crate::qnn::types::Bits;
+
+/// Weights re-laid-out for the kernel: one packed row per output channel,
+/// zero-padded to a whole number of inner-loop steps. Built offline (layer
+/// setup), so not cycle-charged — PULP-NN likewise lays out weights at
+/// deploy time.
+#[derive(Debug, Clone)]
+pub struct WeightLayout {
+    pub bits: Bits,
+    /// Padded im2col length (elements) the rows cover.
+    pub k_padded: usize,
+    /// Packed bytes per row.
+    pub row_bytes: usize,
+    /// All rows concatenated (row i at [i*row_bytes, (i+1)*row_bytes)).
+    pub rows: Vec<u8>,
+    pub cout: usize,
+}
+
+/// Inner-loop step (elements consumed per iteration) per weight precision.
+pub fn step_elems(wbits: Bits) -> usize {
+    match wbits {
+        Bits::B8 => 4,
+        Bits::B4 => 8,
+        Bits::B2 => 16,
+    }
+}
+
+impl WeightLayout {
+    pub fn prepare(w: &QWeights) -> WeightLayout {
+        let k = w.kh * w.kw * w.cin;
+        let step = step_elems(w.bits);
+        let k_padded = k.div_ceil(step) * step;
+        let row_bytes = k_padded / w.bits.per_byte();
+        let vals = w.values();
+        let mut rows = vec![0u8; w.cout * row_bytes];
+        for o in 0..w.cout {
+            let row_vals: Vec<i32> = (0..k_padded)
+                .map(|i| if i < k { vals[o * k + i] } else { 0 })
+                .collect();
+            let packed = crate::qnn::pack::pack_signed(&row_vals, w.bits);
+            rows[o * row_bytes..(o + 1) * row_bytes].copy_from_slice(&packed);
+        }
+        WeightLayout { bits: w.bits, k_padded, row_bytes, rows, cout: w.cout }
+    }
+
+    fn row(&self, o: usize) -> &[u8] {
+        &self.rows[o * self.row_bytes..(o + 1) * self.row_bytes]
+    }
+}
+
+/// Compute `nf x np` accumulators (nf <= 4 output channels starting at
+/// `f0`, np <= 2 pixels whose im2col buffers are `xb`), over `layout.k_padded`
+/// elements. Returns accumulators indexed `[f * np + p]`.
+///
+/// The im2col buffers must be padded (zeros) to at least `k_padded`.
+pub fn matmul_tile(
+    e: &mut Engine,
+    layout: &WeightLayout,
+    f0: usize,
+    nf: usize,
+    xb: &[&[u8]],
+    acc: &mut [i32],
+) {
+    let np = xb.len();
+    assert!((1..=4).contains(&nf) && (1..=2).contains(&np));
+    assert!(acc.len() >= nf * np);
+    for a in acc[..nf * np].iter_mut() {
+        *a = 0;
+    }
+    // accumulator init + pointer setup + hwloop setup
+    e.alu((nf * np) as u64 + nf as u64 + np as u64);
+    e.hwloop_setup();
+
+    let k = layout.k_padded;
+    let step = step_elems(layout.bits);
+    debug_assert!(k % step == 0);
+    for xbuf in xb {
+        assert!(xbuf.len() >= k, "im2col buffer shorter than k_padded");
+    }
+    // hoist the per-filter row slices out of the k loop (§Perf)
+    let mut rows: [&[u8]; 4] = [&[], &[], &[], &[]];
+    for (f, r) in rows.iter_mut().enumerate().take(nf) {
+        *r = layout.row(f0 + f);
+    }
+
+    match layout.bits {
+        Bits::B8 => {
+            for kk in (0..k).step_by(4) {
+                // 4 weight words (one per filter bank)
+                let mut wv = [0u32; 4];
+                for (f, w) in wv.iter_mut().enumerate().take(nf) {
+                    *w = e.lw(rows[f], kk);
+                }
+                // np activation words
+                let mut xv = [0u32; 2];
+                for (p, x) in xv.iter_mut().enumerate().take(np) {
+                    *x = e.lw(xb[p], kk);
+                }
+                for f in 0..nf {
+                    for p in 0..np {
+                        acc[f * np + p] = e.sdotusp(acc[f * np + p], xv[p], wv[f]);
+                    }
+                }
+            }
+        }
+        Bits::B4 => {
+            for kk in (0..k).step_by(8) {
+                // per filter: one word = 8 nibbles -> 8 bext -> 2 vectors
+                let mut wvec = [[0u32; 2]; 4];
+                for (f, wv) in wvec.iter_mut().enumerate().take(nf) {
+                    let word = e.lw(rows[f], kk / 2);
+                    let mut b = [0i32; 8];
+                    for (j, v) in b.iter_mut().enumerate() {
+                        *v = e.bext(word, 4, (j * 4) as u8);
+                    }
+                    wv[0] = e.pack4([b[0], b[1], b[2], b[3]]);
+                    wv[1] = e.pack4([b[4], b[5], b[6], b[7]]);
+                }
+                // per pixel: 2 activation words
+                let mut xv = [[0u32; 2]; 2];
+                for (p, x) in xv.iter_mut().enumerate().take(np) {
+                    x[0] = e.lw(xb[p], kk);
+                    x[1] = e.lw(xb[p], kk + 4);
+                }
+                for f in 0..nf {
+                    for p in 0..np {
+                        for g in 0..2 {
+                            acc[f * np + p] = e.sdotusp(acc[f * np + p], xv[p][g], wvec[f][g]);
+                        }
+                    }
+                }
+            }
+        }
+        Bits::B2 => {
+            for kk in (0..k).step_by(16) {
+                // per filter: one word = 16 crumbs -> 16 bext -> 4 vectors
+                let mut wvec = [[0u32; 4]; 4];
+                for (f, wv) in wvec.iter_mut().enumerate().take(nf) {
+                    let word = e.lw(rows[f], kk / 4);
+                    let mut b = [0i32; 16];
+                    for (j, v) in b.iter_mut().enumerate() {
+                        *v = e.bext(word, 2, (j * 2) as u8);
+                    }
+                    for g in 0..4 {
+                        wv[g] = e.pack4([b[g * 4], b[g * 4 + 1], b[g * 4 + 2], b[g * 4 + 3]]);
+                    }
+                }
+                // per pixel: 4 activation words
+                let mut xv = [[0u32; 4]; 2];
+                for (p, x) in xv.iter_mut().enumerate().take(np) {
+                    for (g, xg) in x.iter_mut().enumerate() {
+                        *xg = e.lw(xb[p], kk + g * 4);
+                    }
+                }
+                for f in 0..nf {
+                    for p in 0..np {
+                        for g in 0..4 {
+                            acc[f * np + p] = e.sdotusp(acc[f * np + p], xv[p][g], wvec[f][g]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::types::Bits;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    /// Golden dot product over the first k elements.
+    fn golden_acc(xbuf: &[u8], wvals: &[i32], k: usize) -> i32 {
+        (0..k).map(|i| xbuf[i] as i32 * wvals[i]).sum()
+    }
+
+    fn mk_x(rng: &mut Rng, k_padded: usize, k: usize) -> Vec<u8> {
+        (0..k_padded).map(|i| if i < k { rng.below(256) as u8 } else { 0 }).collect()
+    }
+
+    #[test]
+    fn inner_loop_cycle_counts_match_paper() {
+        // Full 4x2 tile over one step must cost exactly 14 / 72 / 140.
+        let mut rng = Rng::new(1);
+        for (bits, want) in [(Bits::B8, 14u64), (Bits::B4, 72), (Bits::B2, 140)] {
+            let k = step_elems(bits);
+            let w = QWeights::random(&mut rng, 4, 1, 1, k, bits);
+            let layout = WeightLayout::prepare(&w);
+            let x0 = mk_x(&mut rng, k, k);
+            let x1 = mk_x(&mut rng, k, k);
+            let mut e = Engine::single_core();
+            let mut acc = [0i32; 8];
+            matmul_tile(&mut e, &layout, 0, 4, &[&x0, &x1], &mut acc);
+            // subtract the per-tile setup overhead: 8 acc init + 4+2 ptr + 1 hwloop
+            let setup = 8 + 4 + 2 + 1;
+            assert_eq!(
+                e.cycles - setup,
+                want,
+                "{bits} inner loop: got {} want {want}",
+                e.cycles - setup
+            );
+        }
+    }
+
+    #[test]
+    fn macs_per_iteration_match_paper() {
+        let mut rng = Rng::new(2);
+        for (bits, want) in [(Bits::B8, 32u64), (Bits::B4, 64), (Bits::B2, 128)] {
+            let k = step_elems(bits);
+            let w = QWeights::random(&mut rng, 4, 1, 1, k, bits);
+            let layout = WeightLayout::prepare(&w);
+            let x0 = mk_x(&mut rng, k, k);
+            let x1 = mk_x(&mut rng, k, k);
+            let mut e = Engine::single_core();
+            let mut acc = [0i32; 8];
+            matmul_tile(&mut e, &layout, 0, 4, &[&x0, &x1], &mut acc);
+            assert_eq!(e.macs, want);
+        }
+    }
+
+    #[test]
+    fn prop_tile_matches_golden_all_precisions() {
+        check("matmul-tile-golden", 80, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let k = 4 * (1 + rng.below(20) as usize); // multiple of 4
+            let cout = 4 + 4 * rng.below(3) as usize;
+            let w = QWeights::random(rng, cout, 1, 1, k, bits);
+            let layout = WeightLayout::prepare(&w);
+            let wvals = w.values();
+            let np = 1 + rng.below(2) as usize;
+            let nf = 1 + rng.below(4) as usize;
+            let f0 = (rng.below((cout - nf) as u32 + 1) as usize) & !0;
+            let x0 = mk_x(rng, layout.k_padded, k);
+            let x1 = mk_x(rng, layout.k_padded, k);
+            let bufs: Vec<&[u8]> = if np == 2 {
+                vec![&x0, &x1]
+            } else {
+                vec![&x0]
+            };
+            let mut e = Engine::single_core();
+            let mut acc = [0i32; 8];
+            matmul_tile(&mut e, &layout, f0, nf, &bufs, &mut acc);
+            for f in 0..nf {
+                for p in 0..np {
+                    let want = golden_acc(bufs[p], &wvals[(f0 + f) * k..(f0 + f + 1) * k], k);
+                    let got = acc[f * np + p];
+                    if got != want {
+                        return Err(format!(
+                            "bits={bits} f={f} p={p}: got {got} want {want} (k={k})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padding_contributes_zero() {
+        // k = 4 but padded to 16 for 2-bit: padded region must not change acc.
+        let mut rng = Rng::new(5);
+        let w = QWeights::random(&mut rng, 4, 1, 1, 4, Bits::B2);
+        let layout = WeightLayout::prepare(&w);
+        assert_eq!(layout.k_padded, 16);
+        let x = mk_x(&mut rng, 16, 4);
+        let mut e = Engine::single_core();
+        let mut acc = [0i32; 8];
+        matmul_tile(&mut e, &layout, 0, 4, &[&x], &mut acc);
+        let wvals = w.values();
+        for f in 0..4 {
+            assert_eq!(acc[f], golden_acc(&x, &wvals[f * 4..(f + 1) * 4], 4));
+        }
+    }
+
+    #[test]
+    fn performance_ratios_match_fig4_expectation() {
+        // MACs/cycle of the pure inner loop: 8b / 4b ~ 2.57, 8b / 2b ~ 2.5.
+        let per = |bits: Bits, cycles: u64, macs: u64| -> f64 {
+            let _ = bits;
+            macs as f64 / cycles as f64
+        };
+        let r8 = per(Bits::B8, 14, 32);
+        let r4 = per(Bits::B4, 72, 64);
+        let r2 = per(Bits::B2, 140, 128);
+        assert!((r8 / r4 - 2.571).abs() < 0.01);
+        assert!((r8 / r2 - 2.5).abs() < 0.01);
+    }
+}

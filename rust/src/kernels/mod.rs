@@ -1,0 +1,20 @@
+//! The PULP-NN mixed-precision kernel library (the paper's contribution):
+//! 27 convolution kernels — every {8,4,2}-bit permutation of ifmap, weight
+//! and ofmap precision — plus dense/pool support kernels, executed on the
+//! XpulpV2 intrinsic engine that charges GAP-8 cycles per instruction.
+
+pub mod asm_xcheck;
+pub mod conv;
+pub mod dense;
+pub mod engine;
+pub mod im2col;
+pub mod matmul;
+pub mod netrun;
+pub mod parallel;
+pub mod pool;
+pub mod qntpack;
+
+pub use conv::{ConvKernel, ConvRunStats, PhaseCycles};
+pub use engine::{Contention, Engine};
+pub use matmul::WeightLayout;
+pub use parallel::{conv_parallel, ParallelRun, GAP8_CORES, GAP8_TCDM_BANKS};

@@ -1,0 +1,237 @@
+//! Pooling kernels (max / power-of-two average / global average).
+//!
+//! Support kernels for full-network execution: PULP-NN pools HWC maps with
+//! SIMD `pv.max.b` on 8-bit data and bext-unpacked comparisons on sub-byte
+//! data. Numerics follow `qnn::golden::pool` exactly; cycles are charged
+//! per the modelled instruction streams below.
+
+use super::engine::Engine;
+use crate::qnn::layer::{PoolKind, PoolSpec};
+use crate::qnn::tensor::QTensor;
+use crate::qnn::types::{Bits, Hwc};
+
+/// Run a pooling layer on rows `[r0, r1)` of the *output* map, writing into
+/// the shared packed output buffer.
+pub fn pool_rows(
+    e: &mut Engine,
+    spec: &PoolSpec,
+    x: &QTensor,
+    r0: usize,
+    r1: usize,
+    out: &mut [u8],
+) {
+    let o = spec.output();
+    let c = spec.input.c;
+    let per = spec.bits.per_byte();
+    let win = spec.window;
+    let shift = (win * win).trailing_zeros();
+    for oh in r0..r1 {
+        e.alu(2);
+        e.branch(true);
+        for ow in 0..o.w {
+            match spec.bits {
+                Bits::B8 => {
+                    // 4 channels at a time: win^2 p.lw + (win^2-1) SIMD
+                    // max / scalar adds + store
+                    let mut ch = 0usize;
+                    while ch < c {
+                        let g = 4.min(c - ch);
+                        let mut vals = [0i32; 4];
+                        let mut first = true;
+                        for kh in 0..win {
+                            for kw in 0..win {
+                                let base =
+                                    ((oh * spec.stride + kh) * spec.input.w + ow * spec.stride + kw) * c + ch;
+                                let w = e.lw(&x.data, base);
+                                let b = w.to_le_bytes();
+                                for (i, v) in vals.iter_mut().enumerate().take(g) {
+                                    let xv = b[i] as i32;
+                                    if first {
+                                        *v = xv;
+                                    } else {
+                                        match spec.kind {
+                                            PoolKind::Max => *v = (*v).max(xv),
+                                            PoolKind::Avg => *v += xv,
+                                        }
+                                    }
+                                }
+                                if !first {
+                                    e.alu(1); // pv.max.b / unpack-add per word
+                                }
+                                first = false;
+                            }
+                        }
+                        if spec.kind == PoolKind::Avg {
+                            for v in vals.iter_mut().take(g) {
+                                *v >>= shift;
+                            }
+                            e.alu(1);
+                        }
+                        let off = (oh * o.w + ow) * c + ch;
+                        for (i, v) in vals.iter().enumerate().take(g) {
+                            out[off + i] = *v as u8;
+                        }
+                        e.alu(0);
+                        e.prof.stores += 1;
+                        e.insts += 1;
+                        e.cycles += 1;
+                        ch += g;
+                    }
+                }
+                Bits::B4 | Bits::B2 => {
+                    // per channel: win^2 bext + (win^2-1) max/add + bins
+                    let b = spec.bits.bits() as u8;
+                    for ch in 0..c {
+                        let mut acc = i32::MIN;
+                        let mut sum = 0i32;
+                        for kh in 0..win {
+                            for kw in 0..win {
+                                let idx = ((oh * spec.stride + kh) * spec.input.w
+                                    + ow * spec.stride
+                                    + kw)
+                                    * c
+                                    + ch;
+                                let byte = e.lbu(&x.data, idx / per);
+                                let v = e.bextu(byte, b, ((idx % per) as u32 * b as u32) as u8)
+                                    as i32;
+                                acc = acc.max(v);
+                                sum += v;
+                                e.alu(1); // max / add
+                            }
+                        }
+                        let v = match spec.kind {
+                            PoolKind::Max => acc,
+                            PoolKind::Avg => {
+                                e.alu(1);
+                                sum >> shift
+                            }
+                        };
+                        let oidx = (oh * o.w + ow) * c + ch;
+                        let old = out[oidx / per] as u32;
+                        let nb = e.bins(old, v as u32, b, ((oidx % per) as u32 * b as u32) as u8);
+                        out[oidx / per] = nb as u8;
+                        e.prof.stores += 1;
+                        e.insts += 1;
+                        e.cycles += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full pooling layer on one engine. Returns the pooled tensor.
+pub fn pool(e: &mut Engine, spec: &PoolSpec, x: &QTensor) -> QTensor {
+    let o = spec.output();
+    let mut out = vec![0u8; o.packed_bytes(spec.bits)];
+    pool_rows(e, spec, x, 0, o.h, &mut out);
+    QTensor { shape: o, bits: spec.bits, data: out }
+}
+
+/// Global average pool to 1x1xC with round-to-nearest shift (H*W must be a
+/// power of two). Keeps the input precision.
+pub fn global_avg(e: &mut Engine, x: &QTensor) -> QTensor {
+    let c = x.shape.c;
+    let n = x.shape.h * x.shape.w;
+    assert!(n.is_power_of_two(), "global_avg needs power-of-two H*W");
+    let shift = n.trailing_zeros();
+    let per = x.bits.per_byte();
+    let b = x.bits.bits() as u8;
+    let mut sums = vec![0i32; c];
+    for p in 0..n {
+        for ch in 0..c {
+            let idx = p * c + ch;
+            let v = if x.bits == Bits::B8 {
+                e.lbu(&x.data, idx) as i32
+            } else {
+                let byte = e.lbu(&x.data, idx / per);
+                e.bextu(byte, b, ((idx % per) as u32 * b as u32) as u8) as i32
+            };
+            sums[ch] += v;
+            e.alu(1);
+        }
+    }
+    let vals: Vec<i32> = sums.iter().map(|&s| (s + (1 << (shift - 1))) >> shift).collect();
+    e.alu(2 * c as u64); // shift+round per channel
+    let mut out = vec![0u8; c / per];
+    for (ch, v) in vals.iter().enumerate() {
+        crate::qnn::pack::set_field(&mut out, x.bits, ch, *v);
+        e.prof.stores += 1;
+        e.insts += 1;
+        e.cycles += 1;
+    }
+    QTensor { shape: Hwc::new(1, 1, c), bits: x.bits, data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::golden;
+    use crate::util::check::check;
+
+    #[test]
+    fn prop_pool_matches_golden() {
+        check("pool-kernel-vs-golden", 40, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let kind = *rng.pick(&[PoolKind::Max, PoolKind::Avg]);
+            let c = bits.per_byte() * 4;
+            let h = 4 + 2 * rng.below(3) as usize;
+            let spec = PoolSpec {
+                name: "p".into(),
+                kind,
+                input: Hwc::new(h, h, c),
+                window: 2,
+                stride: 2,
+                bits,
+            };
+            let x = QTensor::random(rng, spec.input, bits);
+            let mut e = Engine::single_core();
+            let got = pool(&mut e, &spec, &x);
+            let want = golden::pool(&spec, &x);
+            if got.data != want.data {
+                return Err(format!("{bits} {kind:?}: pooled data mismatch"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_global_avg_matches_golden() {
+        check("global-avg-vs-golden", 30, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let c = bits.per_byte() * 4;
+            let x = QTensor::random(rng, Hwc::new(4, 4, c), bits);
+            let mut e = Engine::single_core();
+            let got = global_avg(&mut e, &x);
+            let (sums, n) = golden::global_avg_acc(&x);
+            let shift = n.trailing_zeros();
+            let want: Vec<i32> =
+                sums.iter().map(|&s| (s + (1 << (shift - 1))) >> shift).collect();
+            crate::util::check::expect_eq_slices(&got.values(), &want, "gap")
+        });
+    }
+
+    #[test]
+    fn pool_costs_scale_with_window() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x = QTensor::random(&mut rng, Hwc::new(8, 8, 8), Bits::B8);
+        let mut cost = vec![];
+        for window in [2] {
+            for stride in [2, 1] {
+                let spec = PoolSpec {
+                    name: "p".into(),
+                    kind: PoolKind::Max,
+                    input: Hwc::new(8, 8, 8),
+                    window,
+                    stride,
+                    bits: Bits::B8,
+                };
+                let mut e = Engine::single_core();
+                pool(&mut e, &spec, &x);
+                cost.push(e.cycles);
+            }
+        }
+        // stride 1 produces ~4x the outputs of stride 2 -> more cycles
+        assert!(cost[1] > 2 * cost[0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! The QntPack phase: re-quantize int32 accumulators to the ofmap precision
+//! and pack sub-byte results (paper §3, Tab. 1).
+//!
+//! * 8-bit outputs: per-channel affine (`p.mac`) + arithmetic shift +
+//!   `p.clipu`, stored with byte stores — "simple shifts and clamp".
+//! * 4/2-bit outputs: threshold *binary search* (the if/else ladder whose
+//!   branches dominate Tab. 1) followed by `p.bins` bit-insertion to pack
+//!   2 or 4 pixels per ofmap byte.
+//!
+//! The search executes real comparisons on the real thresholds, so the
+//! branch-taken pattern (and hence the cycle count) varies with the data —
+//! reproducing the variance the paper reports in Tab. 1.
+
+use super::engine::Engine;
+use crate::qnn::quant::QuantParams;
+use crate::qnn::types::Bits;
+
+/// Per-channel threshold table in kernel layout: thresholds for channel c
+/// at `[c * levels, (c+1) * levels)`, i32 little-endian, loadable with
+/// `p.lw`. Built offline at layer setup (not cycle-charged).
+#[derive(Debug, Clone)]
+pub struct ThresholdTable {
+    pub levels: usize,
+    pub bytes: Vec<u8>,
+    pub channels: usize,
+}
+
+impl ThresholdTable {
+    pub fn prepare(q: &QuantParams) -> ThresholdTable {
+        let per = q.thresholds();
+        let levels = per.first().map(|t| t.len()).unwrap_or(0);
+        let mut bytes = Vec::with_capacity(per.len() * levels * 4);
+        for t in &per {
+            for &v in t {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        ThresholdTable { levels, bytes, channels: per.len() }
+    }
+
+    #[inline]
+    fn load(&self, e: &mut Engine, c: usize, k: usize) -> i32 {
+        e.lw(&self.bytes, (c * self.levels + k) * 4) as i32
+    }
+}
+
+/// Quantize one accumulator for channel `c` via the threshold binary search
+/// (charged: one `p.lw` + one fused compare-branch per level).
+pub fn quantize_bsearch(e: &mut Engine, thr: &ThresholdTable, c: usize, phi: i32) -> i32 {
+    let mut lo = 0usize;
+    let mut hi = thr.levels;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let t = thr.load(e, c, mid);
+        let ge = phi >= t;
+        // the ladder branches one way or the other; model the `>=` side as
+        // the taken direction (descending into the upper half)
+        e.branch(ge);
+        if ge {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as i32
+}
+
+/// Quantize one accumulator for channel `c` via the 8-bit affine path:
+/// `p.mac` (kappa*phi+lambda with lambda preloaded) + `srai` + `p.clipu`.
+/// The per-channel kappa/lambda register loads are charged by the caller
+/// once per tile (they are reused across the pixels of the tile).
+pub fn quantize_affine8(e: &mut Engine, q: &QuantParams, c: usize, phi: i32) -> i32 {
+    debug_assert_eq!(q.ybits, Bits::B8);
+    // mac: acc = lambda + phi * kappa (lambda preloaded by caller)
+    let v = e.mac(q.lambda[c], phi, q.kappa[c]);
+    e.macs -= 1; // a quant mac is not a convolution MAC: don't count it
+    e.alu(2); // srai + p.clipu
+    ((v as i64) >> q.shift).clamp(0, 255) as i32
+}
+
+/// Re-quantize and store a `nf x np` tile of accumulators into the packed
+/// HWC ofmap. `acc[f * np + p]`; channel f0 must be per-byte aligned
+/// (f0 % per_byte == 0 — guaranteed: tiles start at multiples of 4).
+///
+/// `out` is the full packed ofmap; pixel p writes at element offset
+/// `pix_elem[p] + f0 + f`.
+#[allow(clippy::too_many_arguments)]
+pub fn qntpack_tile(
+    e: &mut Engine,
+    q: &QuantParams,
+    thr: &ThresholdTable,
+    acc: &[i32],
+    f0: usize,
+    nf: usize,
+    pix_elem: &[usize],
+    out: &mut [u8],
+) {
+    let np = pix_elem.len();
+    let ybits = q.ybits;
+    let per = ybits.per_byte();
+    match ybits {
+        Bits::B8 => {
+            // per tile: load kappa+lambda for the nf channels once
+            e.alu(2 * nf as u64);
+            for p in 0..np {
+                for f in 0..nf {
+                    let v = quantize_affine8(e, q, f0 + f, acc[f * np + p]);
+                    e.sb(out, pix_elem[p] + f0 + f, v as u8);
+                }
+            }
+        }
+        Bits::B4 | Bits::B2 => {
+            for p in 0..np {
+                let mut f = 0usize;
+                while f < nf {
+                    // fill one output byte (per sub-byte group)
+                    let group = per.min(nf - f);
+                    let mut byte = 0u32;
+                    for g in 0..group {
+                        let v = quantize_bsearch(e, thr, f0 + f + g, acc[(f + g) * np + p]);
+                        byte = e.bins(byte, v as u32, ybits.bits() as u8, (g as u32 * ybits.bits()) as u8);
+                    }
+                    let byte_idx = (pix_elem[p] + f0 + f) / per;
+                    if group == per {
+                        e.sb(out, byte_idx, byte as u8);
+                    } else {
+                        // partial byte: read-modify-write
+                        let old = e.lbu(out, byte_idx);
+                        let mask = ((1u32 << (group as u32 * ybits.bits())) - 1) as u8;
+                        e.sb(out, byte_idx, (old as u8 & !mask) | (byte as u8 & mask));
+                    }
+                    f += group;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::quant::random_params;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_bsearch_matches_affine_quant() {
+        check("kernel-bsearch-vs-affine", 100, |rng, _| {
+            let ybits = *rng.pick(&[Bits::B2, Bits::B4]);
+            let q = random_params(rng, 3, ybits, 20_000, 64);
+            let thr = ThresholdTable::prepare(&q);
+            let mut e = Engine::single_core();
+            for _ in 0..32 {
+                let c = rng.below(3) as usize;
+                let phi = rng.range_i32(-25_000, 25_000);
+                let got = quantize_bsearch(&mut e, &thr, c, phi);
+                let want = q.quantize(phi, c);
+                if got != want {
+                    return Err(format!("phi={phi} c={c}: got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bsearch_costs_levels_comparisons() {
+        let mut rng = Rng::new(3);
+        for (ybits, levels) in [(Bits::B4, 4u64), (Bits::B2, 2)] {
+            let q = random_params(&mut rng, 1, ybits, 1000, 16);
+            let thr = ThresholdTable::prepare(&q);
+            let mut e = Engine::single_core();
+            quantize_bsearch(&mut e, &thr, 0, 123);
+            assert_eq!(e.prof.loads, levels, "{ybits}: one threshold load per level");
+            assert_eq!(e.prof.branches, levels);
+        }
+    }
+
+    #[test]
+    fn tile_writes_packed_output() {
+        let mut rng = Rng::new(4);
+        let q = random_params(&mut rng, 8, Bits::B4, 10_000, 64);
+        let thr = ThresholdTable::prepare(&q);
+        let mut e = Engine::single_core();
+        // two pixels, channels 4..8 of an 8-channel map
+        let acc: Vec<i32> = (0..8).map(|_| rng.range_i32(-10_000, 10_000)).collect();
+        let mut out = vec![0u8; 2 * 8 / 2];
+        qntpack_tile(&mut e, &q, &thr, &acc, 4, 4, &[0, 8], &mut out);
+        for p in 0..2 {
+            for f in 0..4 {
+                let want = q.quantize(acc[f * 2 + p], 4 + f);
+                let got =
+                    crate::qnn::pack::get_unsigned(&out, Bits::B4, p * 8 + 4 + f);
+                assert_eq!(got, want, "pixel {p} ch {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn y8_tile_matches_quant() {
+        let mut rng = Rng::new(5);
+        let q = random_params(&mut rng, 4, Bits::B8, 10_000, 64);
+        let thr = ThresholdTable::prepare(&q);
+        let mut e = Engine::single_core();
+        let acc: Vec<i32> = (0..8).map(|_| rng.range_i32(-10_000, 10_000)).collect();
+        let mut out = vec![0u8; 8];
+        qntpack_tile(&mut e, &q, &thr, &acc, 0, 4, &[0, 4], &mut out);
+        for p in 0..2 {
+            for f in 0..4 {
+                assert_eq!(out[p * 4 + f] as i32, q.quantize(acc[f * 2 + p], f));
+            }
+        }
+        // convolution MAC counter must be untouched by quant macs
+        assert_eq!(e.macs, 0);
+    }
+
+    #[test]
+    fn overhead_ordering_matches_table1() {
+        // cycles/output: y8 < y2 < y4, and y4 ~ 2x y2 (paper Tab. 1 trend).
+        let mut rng = Rng::new(6);
+        let mut cost = std::collections::BTreeMap::new();
+        for ybits in Bits::ALL {
+            let q = random_params(&mut rng, 4, ybits, 50_000, 64);
+            let thr = ThresholdTable::prepare(&q);
+            let mut e = Engine::single_core();
+            let n = 512;
+            let mut out = vec![0u8; 8 * n / ybits.per_byte()];
+            for i in 0..n {
+                let acc: Vec<i32> = (0..8).map(|_| rng.range_i32(-50_000, 50_000)).collect();
+                qntpack_tile(&mut e, &q, &thr, &acc, 0, 4, &[i * 8, i * 8 + 4], &mut out);
+            }
+            cost.insert(ybits, e.cycles as f64 / (8 * n) as f64);
+        }
+        assert!(cost[&Bits::B8] < cost[&Bits::B2], "{cost:?}");
+        assert!(cost[&Bits::B2] < cost[&Bits::B4], "{cost:?}");
+        let ratio = cost[&Bits::B4] / cost[&Bits::B2];
+        assert!((1.6..2.4).contains(&ratio), "y4/y2 ratio {ratio} (want ~2)");
+    }
+}

@@ -1,0 +1,16 @@
+//! pulpnn-mp: mixed-precision QNN kernels for extreme-edge devices.
+//!
+//! A full-system reproduction of Bruschi et al., "Enabling Mixed-Precision
+//! Quantized Neural Networks in Extreme-Edge Devices" (ACM CF'20).
+//! See DESIGN.md for the architecture and experiment index.
+
+pub mod arm;
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod energy;
+pub mod isa;
+pub mod kernels;
+pub mod qnn;
+pub mod runtime;
+pub mod util;

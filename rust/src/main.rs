@@ -1,0 +1,361 @@
+//! `pulpnn` — the CLI for the mixed-precision QNN reproduction.
+//!
+//! Evaluation commands regenerate every table/figure of the paper
+//! (DESIGN.md §5); runtime commands load the AOT'd JAX/Pallas artifacts
+//! via PJRT and run/serve/verify them against the golden chain.
+
+use pulpnn_mp::bench::{ablate, figures};
+use pulpnn_mp::coordinator::{gap8_fleet, Policy, Workload};
+use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
+use pulpnn_mp::kernels::netrun::GapBackend;
+use pulpnn_mp::qnn::network::demo_cnn;
+use pulpnn_mp::qnn::tensor::QTensor;
+use pulpnn_mp::runtime::{verify_artifact, Manifest, Runtime};
+use pulpnn_mp::util::cli::Args;
+use pulpnn_mp::util::rng::Rng;
+use pulpnn_mp::util::table::{f, Table};
+
+const USAGE: &str = "\
+pulpnn — mixed-precision QNN kernels for extreme-edge devices (CF'20 reproduction)
+
+USAGE: pulpnn <command> [options]
+
+evaluation (regenerates the paper's results):
+  fig4        single-core linear MACs/cycle by weight precision
+  table1      QntPack overhead (cycles/output pixel) by ofmap precision
+  fig5        8-core GAP-8 speed-up over STM32H7/STM32L4 (27 kernels)
+  fig6        energy per layer: GAP-8 LP/HP vs STM32H7 vs STM32L4
+  peak        the 16 MACs/cycle octa-core claim
+  speedup     parallel scaling 1->8 cores (~7.5x claim)
+  innerloop   14/72/140 cycles/iteration claim + ISA-simulator cross-check
+  ablate      design ablations (bext, hwloops, TCDM banks, thresholds)
+  sweep       all 27 kernels: single-core and 8-core MACs/cycle
+  all         fig4 + table1 + fig5 + fig6 + peak + speedup + innerloop
+
+networks & runtime:
+  run         run the demo CNN (or --spec file.json) on the simulated cluster
+  footprint   MobileNetV1 mixed-precision memory-footprint analysis
+  infer       execute an AOT artifact via PJRT (--name, --artifacts DIR)
+  verify      verify all artifacts: PJRT == python golden == rust golden == kernels
+  serve       edge-fleet serving simulation (--devices N --rate RPS ...)
+  emit-spec   print the demo network spec JSON (shared rust/python format)
+
+common options:
+  --seed N           workload seed (default 2020)
+  --artifacts DIR    artifact directory (default: artifacts)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let mut args = Args::parse(argv[1..].to_vec());
+    let seed = args.opt_u64("seed", 2020);
+    let code = match cmd.as_str() {
+        "fig4" => {
+            print!("{}", figures::fig4(seed).1);
+            0
+        }
+        "table1" => {
+            print!("{}", figures::table1(seed).1);
+            0
+        }
+        "fig5" => {
+            print!("{}", figures::fig5(seed).1);
+            0
+        }
+        "fig6" => {
+            print!("{}", figures::fig6(seed).1);
+            0
+        }
+        "peak" => {
+            print!("{}", figures::peak(seed).1);
+            0
+        }
+        "speedup" => {
+            print!("{}", figures::speedup(seed).1);
+            0
+        }
+        "innerloop" => {
+            print!("{}", figures::innerloop());
+            0
+        }
+        "ablate" => {
+            print!("{}", ablate::all(seed));
+            0
+        }
+        "all" => {
+            for part in [
+                figures::fig4(seed).1,
+                figures::table1(seed).1,
+                figures::fig5(seed).1,
+                figures::fig6(seed).1,
+                figures::peak(seed).1,
+                figures::speedup(seed).1,
+                figures::innerloop(),
+            ] {
+                println!("{part}");
+            }
+            0
+        }
+        "sweep" => cmd_sweep(seed),
+        "run" => cmd_run(&mut args, seed),
+        "footprint" => cmd_footprint(),
+        "infer" => cmd_infer(&mut args),
+        "verify" => cmd_verify(&mut args),
+        "serve" => cmd_serve(&mut args, seed),
+        "emit-spec" => {
+            println!("{}", demo_cnn().to_json());
+            0
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n\n{USAGE}");
+            2
+        }
+    };
+    if let Err(e) = args.finish() {
+        eprintln!("warning: {e}");
+    }
+    std::process::exit(code);
+}
+
+fn cmd_sweep(seed: u64) -> i32 {
+    use pulpnn_mp::kernels::{conv_parallel, Engine, GAP8_TCDM_BANKS};
+    use pulpnn_mp::qnn::types::Precision;
+    let mut t = Table::new(vec![
+        "kernel", "1-core MACs/cyc", "8-core MACs/cyc", "8-core cycles", "speed-up",
+    ]);
+    for prec in Precision::all() {
+        let (kernel, x) = figures::reference_case(prec, seed);
+        let mut e = Engine::single_core();
+        let (_, s1) = kernel.run(&mut e, &x);
+        let run8 = conv_parallel(&kernel, &x, 8, GAP8_TCDM_BANKS);
+        t.row(vec![
+            prec.kernel_name(),
+            f(s1.macs_per_cycle(), 3),
+            f(run8.macs_per_cycle(), 3),
+            run8.cycles.to_string(),
+            format!("{}x", f(s1.cycles as f64 / run8.cycles as f64, 2)),
+        ]);
+    }
+    println!("All 27 mixed-precision kernels on the Reference Layer:\n");
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_run(args: &mut Args, seed: u64) -> i32 {
+    let cores = args.opt_usize("cores", 8);
+    let spec_file = args.opt_maybe("spec");
+    let net = match spec_file {
+        Some(path) => match pulpnn_mp::qnn::network::load_network(&path) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("error loading {path}: {e}");
+                return 1;
+            }
+        },
+        None => demo_cnn().materialize().unwrap(),
+    };
+    let mut rng = Rng::new(seed);
+    let x = QTensor::random(&mut rng, net.spec.input, net.spec.input_bits);
+    let backend = GapBackend { cores, banks: 16 };
+    let run = backend.run(&net, &x);
+    let golden = net.forward_golden(&x);
+    println!("network `{}` on simulated GAP-8 ({cores} cores):\n", net.spec.name);
+    let mut t = Table::new(vec!["layer", "kind", "cycles", "MACs", "MACs/cyc"]);
+    for l in &run.layers {
+        t.row(vec![
+            l.name.clone(),
+            l.kind.to_string(),
+            l.cycles.to_string(),
+            l.macs.to_string(),
+            f(l.macs as f64 / l.cycles.max(1) as f64, 2),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\ntotal: {} cycles, {} MACs, {} MACs/cycle",
+        run.total_cycles,
+        run.total_macs,
+        f(run.macs_per_cycle(), 2)
+    );
+    println!(
+        "latency: {} ms (LP @90MHz) / {} ms (HP @175MHz); energy {} uJ (LP) / {} uJ (HP)",
+        f(GAP8_LP.time_ms(run.total_cycles), 2),
+        f(GAP8_HP.time_ms(run.total_cycles), 2),
+        f(GAP8_LP.energy_uj(run.total_cycles), 1),
+        f(GAP8_HP.energy_uj(run.total_cycles), 1),
+    );
+    match (&run.logits, &golden.logits) {
+        (Some(a), Some(b)) if a == b => {
+            println!("logits match the golden model bit-exactly: {a:?}");
+            0
+        }
+        (Some(a), Some(b)) => {
+            eprintln!("LOGIT MISMATCH!\n sim:    {a:?}\n golden: {b:?}");
+            1
+        }
+        _ => 0,
+    }
+}
+
+fn cmd_footprint() -> i32 {
+    use pulpnn_mp::qnn::footprint::*;
+    let inv = mobilenet_v1_inventory();
+    let mut t = Table::new(vec![
+        "assignment", "weights [KiB]", "peak act [KiB]", "vs int-32",
+    ]);
+    let base = footprint_report(&inv, Assignment::UniformBits(32));
+    for (label, a) in [
+        ("int-32 baseline", Assignment::UniformBits(32)),
+        ("uniform INT8", Assignment::UniformBits(8)),
+        ("uniform INT4", Assignment::UniformBits(4)),
+        ("mixed (CMix-NN style)", Assignment::MixedCmix),
+    ] {
+        let r = footprint_report(&inv, a);
+        t.row(vec![
+            label.to_string(),
+            f(r.weight_bytes as f64 / 1024.0, 0),
+            f(r.peak_activation_bytes as f64 / 1024.0, 0),
+            format!("{}x", f(base.weight_bytes as f64 / r.weight_bytes as f64, 1)),
+        ]);
+    }
+    println!(
+        "MobileNetV1 1.0/224 footprint under precision assignments\n\
+         (paper/CMix-NN claim: ~7x reduction vs int-32 with ~4% accuracy loss)\n"
+    );
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_infer(args: &mut Args) -> i32 {
+    let dir = args.opt("artifacts", "artifacts");
+    let name = args.opt("name", "demo_cnn_mixed");
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let Some(a) = manifest.find(&name) else {
+        eprintln!(
+            "artifact `{name}` not found; available: {:?}",
+            manifest.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+        );
+        return 1;
+    };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    println!("platform: {}", rt.platform());
+    let t0 = std::time::Instant::now();
+    rt.load(a).expect("compile");
+    println!("compiled `{}` in {:.1} ms", a.name, t0.elapsed().as_secs_f64() * 1e3);
+    let t0 = std::time::Instant::now();
+    let out = rt.execute_recorded(a).expect("execute");
+    println!("executed in {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+    match out {
+        pulpnn_mp::runtime::ExecOutput::LogitsI32(v) => println!("logits: {v:?}"),
+        pulpnn_mp::runtime::ExecOutput::PackedU8(v) => {
+            println!("packed output: {} bytes, head: {:?}", v.len(), &v[..16.min(v.len())])
+        }
+    }
+    0
+}
+
+fn cmd_verify(args: &mut Args) -> i32 {
+    let dir = args.opt("artifacts", "artifacts");
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut t = Table::new(vec!["artifact", "pjrt==golden", "rust==golden", "kernels==golden"]);
+    let mut failures = 0;
+    for a in &manifest.artifacts {
+        match verify_artifact(&mut rt, a) {
+            Ok(r) => {
+                if !r.ok() {
+                    failures += 1;
+                }
+                let opt =
+                    |o: Option<bool>| o.map(|b| b.to_string()).unwrap_or_else(|| "-".into());
+                t.row(vec![
+                    r.name.clone(),
+                    r.pjrt_matches_golden.to_string(),
+                    opt(r.rust_matches_golden),
+                    opt(r.kernel_matches_golden),
+                ]);
+            }
+            Err(e) => {
+                failures += 1;
+                t.row(vec![a.name.clone(), format!("ERROR: {e}"), "-".into(), "-".into()]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    if failures == 0 {
+        println!("\nall {} artifacts verified bit-exact across layers", manifest.artifacts.len());
+        0
+    } else {
+        eprintln!("\n{failures} artifact(s) FAILED verification");
+        1
+    }
+}
+
+fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
+    let devices = args.opt_usize("devices", 4);
+    let rate = args.opt_f64("rate", 200.0);
+    let n = args.opt_usize("requests", 2000);
+    let deadline_ms = args.opt_f64("deadline-ms", 0.0);
+    let policy = match args.opt("policy", "energy").as_str() {
+        "rr" => Policy::RoundRobin,
+        "least" => Policy::LeastLoaded,
+        _ => Policy::EnergyAware,
+    };
+    // per-inference cycles from the simulated demo CNN
+    let net = demo_cnn().materialize().unwrap();
+    let mut rng = Rng::new(seed);
+    let x = QTensor::random(&mut rng, net.spec.input, net.spec.input_bits);
+    let cycles = GapBackend::default().run(&net, &x).total_cycles;
+    println!(
+        "demo CNN: {} cycles/inference -> {} ms on LP, {} ms on HP",
+        cycles,
+        f(GAP8_LP.time_ms(cycles), 2),
+        f(GAP8_HP.time_ms(cycles), 2)
+    );
+    // half LP, half HP fleet
+    let mut fleet = gap8_fleet(devices, GAP8_LP, cycles, policy);
+    for (i, d) in fleet.devices.iter_mut().enumerate() {
+        if i % 2 == 1 {
+            d.op = GAP8_HP;
+            d.name = format!("gap8-hp-{i}");
+        }
+    }
+    let workload = Workload {
+        rate_per_s: rate,
+        deadline_us: if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None },
+        n_requests: n,
+        seed,
+    };
+    let report = fleet.run(&workload.generate());
+    println!(
+        "\nfleet of {devices} ({policy:?}), {} requests at {rate} rps:",
+        report.completions.len()
+    );
+    println!("  throughput     : {} rps", f(report.throughput_rps, 1));
+    println!("  mean latency   : {} ms", f(report.mean_latency_us / 1e3, 2));
+    println!("  p99 latency    : {} ms", f(report.p99_latency_us / 1e3, 2));
+    println!("  total energy   : {} mJ", f(report.total_energy_uj / 1e3, 2));
+    println!("  deadline misses: {}", report.deadline_misses);
+    println!("  per-device     : {:?}", report.per_device_served);
+    0
+}

@@ -1,0 +1,315 @@
+//! Golden (reference) integer implementations of every operator.
+//!
+//! This is the semantic oracle: straightforward nested loops, i64-checked
+//! accumulation, no packing tricks. The simulated GAP-8 kernels, the ARM
+//! baselines, the Pallas kernel and the AOT'd JAX model must all match these
+//! results bit-exactly.
+
+use super::layer::{ConvSpec, DenseSpec, PoolKind, PoolSpec};
+use super::quant::QuantParams;
+use super::tensor::{QTensor, QWeights};
+use super::types::Hwc;
+
+/// Raw convolution accumulators (pre-quantization), `[hout*wout][cout]`
+/// flattened HWC. Zero padding contributes zero (the unsigned ifmap zero
+/// point is 0 by the paper's constraint alpha_x = 0).
+pub fn conv2d_acc(spec: &ConvSpec, x: &QTensor, w: &QWeights) -> Vec<i32> {
+    assert_eq!(x.shape, spec.input, "ifmap shape mismatch");
+    assert_eq!((w.cout, w.kh, w.kw, w.cin), (spec.cout, spec.kh, spec.kw, spec.input.c));
+    assert_eq!(x.bits, spec.prec.x);
+    assert_eq!(w.bits, spec.prec.w);
+    let out = spec.output();
+    let xv = x.values();
+    let wv = w.values();
+    let (ih, iw, ic) = (spec.input.h, spec.input.w, spec.input.c);
+    let mut acc = vec![0i32; out.h * out.w * out.c];
+    for oh in 0..out.h {
+        for ow in 0..out.w {
+            for oc in 0..out.c {
+                let mut a: i64 = 0;
+                for kh in 0..spec.kh {
+                    let in_h = (oh * spec.stride + kh) as isize - spec.pad as isize;
+                    if in_h < 0 || in_h >= ih as isize {
+                        continue;
+                    }
+                    for kw in 0..spec.kw {
+                        let in_w = (ow * spec.stride + kw) as isize - spec.pad as isize;
+                        if in_w < 0 || in_w >= iw as isize {
+                            continue;
+                        }
+                        let x_base = (in_h as usize * iw + in_w as usize) * ic;
+                        let w_base = ((oc * spec.kh + kh) * spec.kw + kw) * ic;
+                        for c in 0..ic {
+                            a += xv[x_base + c] as i64 * wv[w_base + c] as i64;
+                        }
+                    }
+                }
+                assert!(
+                    i32::try_from(a).is_ok(),
+                    "accumulator overflow at ({oh},{ow},{oc}): {a}"
+                );
+                acc[(oh * out.w + ow) * out.c + oc] = a as i32;
+            }
+        }
+    }
+    acc
+}
+
+/// Full convolution layer: accumulate, re-quantize, pack.
+pub fn conv2d(spec: &ConvSpec, x: &QTensor, w: &QWeights, q: &QuantParams) -> QTensor {
+    assert_eq!(q.ybits, spec.prec.y);
+    assert_eq!(q.channels(), spec.cout);
+    let out = spec.output();
+    let acc = conv2d_acc(spec, x, w);
+    let vals: Vec<i32> = acc
+        .iter()
+        .enumerate()
+        .map(|(i, &phi)| q.quantize(phi, i % out.c))
+        .collect();
+    QTensor::from_values(out, spec.prec.y, &vals)
+}
+
+/// Dense layer on a flattened input.
+pub fn dense_acc(spec: &DenseSpec, x_vals: &[i32], w_vals: &[i32]) -> Vec<i32> {
+    assert_eq!(x_vals.len(), spec.in_features);
+    assert_eq!(w_vals.len(), spec.in_features * spec.out_features);
+    (0..spec.out_features)
+        .map(|o| {
+            let mut a: i64 = 0;
+            for i in 0..spec.in_features {
+                a += x_vals[i] as i64 * w_vals[o * spec.in_features + i] as i64;
+            }
+            assert!(i32::try_from(a).is_ok(), "dense accumulator overflow: {a}");
+            a as i32
+        })
+        .collect()
+}
+
+pub fn dense(spec: &DenseSpec, x_vals: &[i32], w_vals: &[i32], q: &QuantParams) -> Vec<i32> {
+    assert_eq!(q.channels(), spec.out_features);
+    dense_acc(spec, x_vals, w_vals)
+        .iter()
+        .enumerate()
+        .map(|(o, &phi)| q.quantize(phi, o))
+        .collect()
+}
+
+/// Pooling (max, or power-of-two average via arithmetic shift like the MCU
+/// kernels — truncating division).
+pub fn pool(spec: &PoolSpec, x: &QTensor) -> QTensor {
+    assert_eq!(x.shape, spec.input);
+    assert_eq!(x.bits, spec.bits);
+    let out = spec.output();
+    let xv = x.values();
+    let (iw, ic) = (spec.input.w, spec.input.c);
+    let shift = (spec.window * spec.window).trailing_zeros();
+    let mut vals = vec![0i32; out.elems()];
+    for oh in 0..out.h {
+        for ow in 0..out.w {
+            for c in 0..ic {
+                let mut m = i32::MIN;
+                let mut s = 0i32;
+                for kh in 0..spec.window {
+                    for kw in 0..spec.window {
+                        let v = xv[((oh * spec.stride + kh) * iw + (ow * spec.stride + kw)) * ic + c];
+                        m = m.max(v);
+                        s += v;
+                    }
+                }
+                vals[(oh * out.w + ow) * ic + c] = match spec.kind {
+                    PoolKind::Max => m,
+                    PoolKind::Avg => s >> shift,
+                };
+            }
+        }
+    }
+    QTensor::from_values(Hwc::new(out.h, out.w, ic), spec.bits, &vals)
+}
+
+/// Global average pooling to a per-channel vector (used before the
+/// classifier head). Returns *unquantized* sums and the element count so the
+/// caller controls rounding.
+pub fn global_avg_acc(x: &QTensor) -> (Vec<i32>, usize) {
+    let xv = x.values();
+    let c = x.shape.c;
+    let n = x.shape.h * x.shape.w;
+    let mut sums = vec![0i32; c];
+    for p in 0..n {
+        for ch in 0..c {
+            sums[ch] += xv[p * c + ch];
+        }
+    }
+    (sums, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::types::{Bits, Precision};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn tiny_spec(prec: Precision) -> ConvSpec {
+        ConvSpec {
+            name: "tiny".into(),
+            input: Hwc::new(4, 4, 8),
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            prec,
+        }
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 conv with identity weights (w[o][0][0][i] = delta(o,i)),
+        // unit quant -> output == input (8-bit).
+        let prec = Precision::new(Bits::B8, Bits::B8, Bits::B8);
+        let spec = ConvSpec {
+            name: "id".into(),
+            input: Hwc::new(3, 3, 4),
+            cout: 4,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            prec,
+        };
+        let mut rng = Rng::new(1);
+        let x = QTensor::random(&mut rng, spec.input, Bits::B8);
+        let mut wv = vec![0i32; 4 * 4];
+        for i in 0..4 {
+            wv[i * 4 + i] = 1;
+        }
+        let w = QWeights::from_values(4, 1, 1, 4, Bits::B8, &wv);
+        let y = conv2d(&spec, &x, &w, &QuantParams::unit(4, Bits::B8));
+        assert_eq!(y.values(), x.values());
+    }
+
+    #[test]
+    fn all_ones_counts_window() {
+        // all-ones input and weights -> accumulator equals the number of
+        // in-bounds taps * cin; corners see only 4 taps of a 3x3 at pad 1.
+        let prec = Precision::new(Bits::B8, Bits::B8, Bits::B8);
+        let spec = tiny_spec(prec);
+        let x = QTensor::from_values(spec.input, Bits::B8, &vec![1; spec.input.elems()]);
+        let w = QWeights::from_values(8, 3, 3, 8, Bits::B8, &vec![1; 8 * 9 * 8]);
+        let acc = conv2d_acc(&spec, &x, &w);
+        let out = spec.output();
+        // corner (0,0): 2x2 taps in-bounds -> 4 * 8 channels = 32
+        assert_eq!(acc[0], 32);
+        // center (1,1): all 9 taps -> 72
+        assert_eq!(acc[(1 * out.w + 1) * out.c], 72);
+    }
+
+    #[test]
+    fn stride_reduces_output() {
+        let prec = Precision::new(Bits::B4, Bits::B4, Bits::B4);
+        let spec = ConvSpec { stride: 2, pad: 0, kh: 2, kw: 2, ..tiny_spec(prec) };
+        assert_eq!(spec.output(), Hwc::new(2, 2, 8));
+        let mut rng = Rng::new(2);
+        let x = QTensor::random(&mut rng, spec.input, Bits::B4);
+        let w = QWeights::random(&mut rng, 8, 2, 2, 8, Bits::B4);
+        let q = spec.default_quant();
+        let y = conv2d(&spec, &x, &w, &q);
+        assert_eq!(y.shape, Hwc::new(2, 2, 8));
+        assert!(y.values().iter().all(|&v| (0..=15).contains(&v)));
+    }
+
+    #[test]
+    fn prop_conv_linear_in_weights() {
+        // conv(x, w1 + w2) == conv(x, w1) + conv(x, w2) on accumulators.
+        check("conv-linearity", 20, |rng, _| {
+            let prec = Precision::new(Bits::B4, Bits::B8, Bits::B8);
+            let spec = ConvSpec {
+                name: "lin".into(),
+                input: Hwc::new(3, 3, 4),
+                cout: 2,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                prec,
+            };
+            let x = QTensor::random(rng, spec.input, prec.x);
+            let n = 2 * 9 * 4;
+            let w1: Vec<i32> = (0..n).map(|_| rng.range_i32(-50, 50)).collect();
+            let w2: Vec<i32> = (0..n).map(|_| rng.range_i32(-50, 50)).collect();
+            let sum: Vec<i32> = w1.iter().zip(&w2).map(|(a, b)| a + b).collect();
+            let a1 = conv2d_acc(&spec, &x, &QWeights::from_values(2, 3, 3, 4, Bits::B8, &w1));
+            let a2 = conv2d_acc(&spec, &x, &QWeights::from_values(2, 3, 3, 4, Bits::B8, &w2));
+            let asum = conv2d_acc(&spec, &x, &QWeights::from_values(2, 3, 3, 4, Bits::B8, &sum));
+            for i in 0..asum.len() {
+                if asum[i] != a1[i] + a2[i] {
+                    return Err(format!("nonlinear at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dense_matches_conv1x1() {
+        // A 1x1x C-in "image" through a 1x1 conv equals a dense layer.
+        check("dense-equals-1x1-conv", 30, |rng, _| {
+            let cin = 8;
+            let cout = 4;
+            let prec = Precision::new(Bits::B8, Bits::B8, Bits::B8);
+            let conv = ConvSpec {
+                name: "c".into(),
+                input: Hwc::new(1, 1, cin),
+                cout,
+                kh: 1,
+                kw: 1,
+                stride: 1,
+                pad: 0,
+                prec,
+            };
+            let densep = DenseSpec {
+                name: "d".into(),
+                in_features: cin,
+                out_features: cout,
+                prec,
+            };
+            let x = QTensor::random(rng, conv.input, prec.x);
+            let w = QWeights::random(rng, cout, 1, 1, cin, prec.w);
+            let ca = conv2d_acc(&conv, &x, &w);
+            let da = dense_acc(&densep, &x.values(), &w.values());
+            crate::util::check::expect_eq_slices(&ca, &da, "conv1x1 vs dense")
+        });
+    }
+
+    #[test]
+    fn max_pool_dominates_avg_pool() {
+        let mut rng = Rng::new(5);
+        let input = Hwc::new(4, 4, 4);
+        let x = QTensor::random(&mut rng, input, Bits::B8);
+        let base = PoolSpec {
+            name: "p".into(),
+            kind: PoolKind::Max,
+            input,
+            window: 2,
+            stride: 2,
+            bits: Bits::B8,
+        };
+        let mx = pool(&base, &x);
+        let av = pool(&PoolSpec { kind: PoolKind::Avg, ..base }, &x);
+        for (m, a) in mx.values().iter().zip(av.values().iter()) {
+            assert!(m >= a, "max {m} < avg {a}");
+        }
+    }
+
+    #[test]
+    fn global_avg_sums() {
+        let x = QTensor::from_values(
+            Hwc::new(2, 2, 2),
+            Bits::B8,
+            &[1, 10, 2, 20, 3, 30, 4, 40],
+        );
+        let (sums, n) = global_avg_acc(&x);
+        assert_eq!(sums, vec![10, 100]);
+        assert_eq!(n, 4);
+    }
+}

@@ -1,0 +1,263 @@
+//! Layer descriptors: the configuration objects every backend (golden model,
+//! GAP-8 simulated kernels, ARM baselines, JAX artifacts) consumes.
+
+use super::quant::QuantParams;
+use super::types::{Bits, Hwc, Precision};
+
+/// A 2-D convolution layer in the PULP-NN sense: HWC ifmap, OHWI weights,
+/// square stride/padding, fused re-quantization to the ofmap precision.
+#[derive(Debug, Clone)]
+pub struct ConvSpec {
+    pub name: String,
+    pub input: Hwc,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub prec: Precision,
+}
+
+impl ConvSpec {
+    /// The paper's *Reference Layer*: 32x16x16 ifmaps, 64x16x16 ofmaps,
+    /// 3x3 filters (stride 1, pad 1), im2col buffer 3*3*32 = 288.
+    pub fn reference_layer(prec: Precision) -> ConvSpec {
+        ConvSpec {
+            name: format!("reference_layer_{}", prec.kernel_name()),
+            input: Hwc::new(16, 16, 32),
+            cout: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            prec,
+        }
+    }
+
+    /// Output feature-map shape.
+    pub fn output(&self) -> Hwc {
+        assert!(self.input.h + 2 * self.pad >= self.kh, "kernel taller than padded input");
+        assert!(self.input.w + 2 * self.pad >= self.kw, "kernel wider than padded input");
+        Hwc::new(
+            (self.input.h + 2 * self.pad - self.kh) / self.stride + 1,
+            (self.input.w + 2 * self.pad - self.kw) / self.stride + 1,
+            self.cout,
+        )
+    }
+
+    /// im2col row length (the paper's "288" for the Reference Layer).
+    pub fn im2col_len(&self) -> usize {
+        self.kh * self.kw * self.input.c
+    }
+
+    /// Total multiply-accumulates for the layer.
+    pub fn macs(&self) -> u64 {
+        let out = self.output();
+        (out.h * out.w * out.c) as u64 * (self.kh * self.kw * self.input.c) as u64
+    }
+
+    /// Largest possible |accumulator| value given the precisions — used to
+    /// validate quant params against i32 overflow.
+    pub fn phi_max_abs(&self) -> i64 {
+        self.im2col_len() as i64
+            * self.prec.x.umax() as i64
+            * (-(self.prec.w.smin() as i64))
+    }
+
+    /// Well-formedness checks shared by all backends.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stride == 0 {
+            return Err("stride must be >= 1".into());
+        }
+        if self.input.c % self.prec.x.per_byte() != 0 {
+            return Err(format!(
+                "Cin={} not divisible by {} (x={})",
+                self.input.c,
+                self.prec.x.per_byte(),
+                self.prec.x
+            ));
+        }
+        if self.input.c % self.prec.w.per_byte() != 0 {
+            return Err(format!(
+                "Cin={} not divisible by {} (w={})",
+                self.input.c,
+                self.prec.w.per_byte(),
+                self.prec.w
+            ));
+        }
+        if self.cout % self.prec.y.per_byte() != 0 {
+            return Err(format!(
+                "Cout={} not divisible by {} (y={})",
+                self.cout,
+                self.prec.y.per_byte(),
+                self.prec.y
+            ));
+        }
+        if self.pad >= self.kh.max(self.kw) {
+            return Err(format!("padding {} >= kernel {}x{}", self.pad, self.kh, self.kw));
+        }
+        Ok(())
+    }
+
+    /// Default quant params for synthetic workloads: mid-range scaling that
+    /// exercises the full output range (deterministic per layer name).
+    pub fn default_quant(&self) -> QuantParams {
+        let mut rng = crate::util::rng::Rng::new(crate::util::check::fnv1a(self.name.as_bytes()));
+        super::quant::random_params(&mut rng, self.cout, self.prec.y, self.phi_max_abs(), self.im2col_len())
+    }
+}
+
+/// A dense (fully-connected) layer: flattens its input.
+#[derive(Debug, Clone)]
+pub struct DenseSpec {
+    pub name: String,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub prec: Precision,
+}
+
+impl DenseSpec {
+    pub fn macs(&self) -> u64 {
+        (self.in_features * self.out_features) as u64
+    }
+    pub fn phi_max_abs(&self) -> i64 {
+        self.in_features as i64 * self.prec.x.umax() as i64 * (-(self.prec.w.smin() as i64))
+    }
+    pub fn validate(&self) -> Result<(), String> {
+        if self.in_features % self.prec.x.per_byte() != 0 {
+            return Err(format!("in_features {} not packable at {}", self.in_features, self.prec.x));
+        }
+        if self.in_features % self.prec.w.per_byte() != 0 {
+            return Err(format!("in_features {} not packable at {}", self.in_features, self.prec.w));
+        }
+        if self.out_features % self.prec.y.per_byte() != 0 {
+            return Err(format!("out_features {} not packable at {}", self.out_features, self.prec.y));
+        }
+        Ok(())
+    }
+}
+
+/// Pooling kinds supported by the golden model and the simulated library.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    /// Average with power-of-two window (shift instead of divide, as the
+    /// MCU kernels do).
+    Avg,
+}
+
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub name: String,
+    pub kind: PoolKind,
+    pub input: Hwc,
+    pub window: usize,
+    pub stride: usize,
+    pub bits: Bits,
+}
+
+impl PoolSpec {
+    pub fn output(&self) -> Hwc {
+        Hwc::new(
+            (self.input.h - self.window) / self.stride + 1,
+            (self.input.w - self.window) / self.stride + 1,
+            self.input.c,
+        )
+    }
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stride == 0 || self.window == 0 {
+            return Err("pool window/stride must be >= 1".into());
+        }
+        if self.window > self.input.h || self.window > self.input.w {
+            return Err("pool window larger than input".into());
+        }
+        if self.kind == PoolKind::Avg && !(self.window * self.window).is_power_of_two() {
+            return Err(format!(
+                "avg-pool window {0}x{0} is not a power-of-two element count (MCU kernels use shifts)",
+                self.window
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::types::Bits;
+
+    fn p888() -> Precision {
+        Precision::new(Bits::B8, Bits::B8, Bits::B8)
+    }
+
+    #[test]
+    fn reference_layer_matches_paper() {
+        let l = ConvSpec::reference_layer(p888());
+        assert_eq!(l.input, Hwc::new(16, 16, 32));
+        assert_eq!(l.output(), Hwc::new(16, 16, 64));
+        assert_eq!(l.im2col_len(), 288); // paper: "288 im2col buffer size"
+        assert_eq!(l.macs(), 16 * 16 * 64 * 288);
+        assert!(l.validate().is_ok());
+    }
+
+    #[test]
+    fn output_shape_stride_pad() {
+        let l = ConvSpec {
+            name: "t".into(),
+            input: Hwc::new(8, 8, 8),
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad: 1,
+            prec: p888(),
+        };
+        assert_eq!(l.output(), Hwc::new(4, 4, 4));
+    }
+
+    #[test]
+    fn validate_rejects_unpackable() {
+        let mut l = ConvSpec::reference_layer(Precision::new(Bits::B2, Bits::B8, Bits::B8));
+        l.input.c = 34; // not divisible by 4
+        assert!(l.validate().is_err());
+        let l2 = ConvSpec {
+            cout: 6, // not divisible by 4 at y=2b
+            ..ConvSpec::reference_layer(Precision::new(Bits::B8, Bits::B8, Bits::B2))
+        };
+        assert!(l2.validate().is_err());
+    }
+
+    #[test]
+    fn phi_max_bounds_accumulator() {
+        let l = ConvSpec::reference_layer(p888());
+        // 288 * 255 * 128
+        assert_eq!(l.phi_max_abs(), 288 * 255 * 128);
+        assert!(l.phi_max_abs() < i32::MAX as i64);
+    }
+
+    #[test]
+    fn default_quant_validates() {
+        for prec in Precision::all() {
+            let l = ConvSpec::reference_layer(prec);
+            let q = l.default_quant();
+            q.validate(l.phi_max_abs()).unwrap();
+            assert_eq!(q.channels(), 64);
+        }
+    }
+
+    #[test]
+    fn pool_shapes_and_validation() {
+        let p = PoolSpec {
+            name: "p".into(),
+            kind: PoolKind::Max,
+            input: Hwc::new(8, 8, 16),
+            window: 2,
+            stride: 2,
+            bits: Bits::B4,
+        };
+        assert_eq!(p.output(), Hwc::new(4, 4, 16));
+        assert!(p.validate().is_ok());
+        let bad = PoolSpec { kind: PoolKind::Avg, window: 3, ..p };
+        assert!(bad.validate().is_err()); // 9 elements, not power of two
+    }
+}

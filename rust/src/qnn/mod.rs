@@ -1,0 +1,18 @@
+//! Quantized neural-network core: precisions, packing, re-quantization,
+//! tensors, layer/network specs, the golden reference implementation and
+//! footprint analysis. See DESIGN.md §4 for the numeric contract.
+
+pub mod footprint;
+pub mod golden;
+pub mod layer;
+pub mod network;
+pub mod pack;
+pub mod quant;
+pub mod tensor;
+pub mod types;
+
+pub use layer::{ConvSpec, DenseSpec, PoolKind, PoolSpec};
+pub use network::{demo_cnn, load_network, LayerDef, LayerInstance, LayerKind, Network, NetworkSpec};
+pub use quant::QuantParams;
+pub use tensor::{QTensor, QWeights};
+pub use types::{Bits, Hwc, Precision};

@@ -1,0 +1,499 @@
+//! Network specification, JSON (de)serialization and golden execution.
+//!
+//! A `NetworkSpec` is the shared, declarative description of a QNN that all
+//! backends consume: the rust golden model, the simulated GAP-8 library, the
+//! ARM baselines and the JAX/Pallas AOT pipeline (`python/compile/model.py`
+//! parses the same JSON). Weights and quantization parameters are
+//! *materialized deterministically* from the spec seed with the mirrored
+//! xorshift generator, so every backend reconstructs bit-identical
+//! parameters without shipping weight blobs.
+
+use std::collections::BTreeMap;
+
+use super::golden;
+use super::layer::{ConvSpec, DenseSpec, PoolKind, PoolSpec};
+use super::quant::{self, QuantParams};
+use super::tensor::{QTensor, QWeights};
+use super::types::{Bits, Hwc, Precision};
+use crate::util::check::fnv1a;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One layer in a network spec.
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    Conv { cout: usize, kh: usize, kw: usize, stride: usize, pad: usize, prec: Precision },
+    MaxPool { window: usize, stride: usize },
+    AvgPool { window: usize, stride: usize },
+    /// Global average pool: HxW must have a power-of-two element count;
+    /// output keeps the input precision (rounding shift).
+    GlobalAvgPool,
+    /// Classifier head: dense to `classes` raw i32 logits (no requant).
+    DenseHead { classes: usize, wbits: Bits },
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerDef {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// Declarative network description.
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub input: Hwc,
+    pub input_bits: Bits,
+    pub seed: u64,
+    pub layers: Vec<LayerDef>,
+}
+
+/// A layer with its materialized parameters.
+#[derive(Debug, Clone)]
+pub enum LayerInstance {
+    Conv { spec: ConvSpec, weights: QWeights, quant: QuantParams },
+    Pool { spec: PoolSpec },
+    GlobalAvgPool { input: Hwc, bits: Bits },
+    DenseHead { spec: DenseSpec, weights: Vec<i32> },
+}
+
+/// A fully materialized network ready to run on any backend.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub spec: NetworkSpec,
+    pub layers: Vec<LayerInstance>,
+}
+
+impl NetworkSpec {
+    /// Parse the shared JSON format (see `python/compile/model.py`).
+    pub fn from_json(j: &Json) -> Result<NetworkSpec, String> {
+        let name = j.req_str("name")?.to_string();
+        let input = Hwc::new(
+            j.get("input").req_usize("h")?,
+            j.get("input").req_usize("w")?,
+            j.get("input").req_usize("c")?,
+        );
+        let input_bits = Bits::from_u32(j.get("input").req_usize("bits")? as u32)?;
+        let seed = j.req_i64("seed")? as u64;
+        let mut layers = Vec::new();
+        for (i, lj) in j.req_arr("layers")?.iter().enumerate() {
+            let kind_s = lj.req_str("kind")?;
+            let name = lj
+                .get("name")
+                .as_str()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("layer{i}"));
+            let kind = match kind_s {
+                "conv" => LayerKind::Conv {
+                    cout: lj.req_usize("cout")?,
+                    kh: lj.req_usize("kh")?,
+                    kw: lj.req_usize("kw")?,
+                    stride: lj.get("stride").as_usize().unwrap_or(1),
+                    pad: lj.get("pad").as_usize().unwrap_or(0),
+                    prec: Precision::new(
+                        Bits::from_u32(lj.req_usize("xbits")? as u32)?,
+                        Bits::from_u32(lj.req_usize("wbits")? as u32)?,
+                        Bits::from_u32(lj.req_usize("ybits")? as u32)?,
+                    ),
+                },
+                "maxpool" => LayerKind::MaxPool {
+                    window: lj.req_usize("window")?,
+                    stride: lj.get("stride").as_usize().unwrap_or(lj.req_usize("window")?),
+                },
+                "avgpool" => LayerKind::AvgPool {
+                    window: lj.req_usize("window")?,
+                    stride: lj.get("stride").as_usize().unwrap_or(lj.req_usize("window")?),
+                },
+                "global_avgpool" => LayerKind::GlobalAvgPool,
+                "dense_head" => LayerKind::DenseHead {
+                    classes: lj.req_usize("classes")?,
+                    wbits: Bits::from_u32(lj.req_usize("wbits")? as u32)?,
+                },
+                other => return Err(format!("unknown layer kind `{other}`")),
+            };
+            layers.push(LayerDef { name, kind });
+        }
+        Ok(NetworkSpec { name, input, input_bits, seed, layers })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        let mut inp = BTreeMap::new();
+        inp.insert("h".into(), Json::I64(self.input.h as i64));
+        inp.insert("w".into(), Json::I64(self.input.w as i64));
+        inp.insert("c".into(), Json::I64(self.input.c as i64));
+        inp.insert("bits".into(), Json::I64(self.input_bits.bits() as i64));
+        obj.insert("input".into(), Json::Obj(inp));
+        obj.insert("seed".into(), Json::I64(self.seed as i64));
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut lo = BTreeMap::new();
+                lo.insert("name".into(), Json::Str(l.name.clone()));
+                match &l.kind {
+                    LayerKind::Conv { cout, kh, kw, stride, pad, prec } => {
+                        lo.insert("kind".into(), Json::Str("conv".into()));
+                        lo.insert("cout".into(), Json::I64(*cout as i64));
+                        lo.insert("kh".into(), Json::I64(*kh as i64));
+                        lo.insert("kw".into(), Json::I64(*kw as i64));
+                        lo.insert("stride".into(), Json::I64(*stride as i64));
+                        lo.insert("pad".into(), Json::I64(*pad as i64));
+                        lo.insert("xbits".into(), Json::I64(prec.x.bits() as i64));
+                        lo.insert("wbits".into(), Json::I64(prec.w.bits() as i64));
+                        lo.insert("ybits".into(), Json::I64(prec.y.bits() as i64));
+                    }
+                    LayerKind::MaxPool { window, stride } => {
+                        lo.insert("kind".into(), Json::Str("maxpool".into()));
+                        lo.insert("window".into(), Json::I64(*window as i64));
+                        lo.insert("stride".into(), Json::I64(*stride as i64));
+                    }
+                    LayerKind::AvgPool { window, stride } => {
+                        lo.insert("kind".into(), Json::Str("avgpool".into()));
+                        lo.insert("window".into(), Json::I64(*window as i64));
+                        lo.insert("stride".into(), Json::I64(*stride as i64));
+                    }
+                    LayerKind::GlobalAvgPool => {
+                        lo.insert("kind".into(), Json::Str("global_avgpool".into()));
+                    }
+                    LayerKind::DenseHead { classes, wbits } => {
+                        lo.insert("kind".into(), Json::Str("dense_head".into()));
+                        lo.insert("classes".into(), Json::I64(*classes as i64));
+                        lo.insert("wbits".into(), Json::I64(wbits.bits() as i64));
+                    }
+                }
+                Json::Obj(lo)
+            })
+            .collect();
+        obj.insert("layers".into(), Json::Arr(layers));
+        Json::Obj(obj)
+    }
+
+    /// Materialize weights and quant params deterministically.
+    ///
+    /// Per-layer RNG seed: `spec.seed ^ fnv1a(layer_name)`. Draw order for
+    /// conv: all weight values (OHWI), then quant params
+    /// (`quant::random_params`). The python side mirrors this exactly.
+    pub fn materialize(&self) -> Result<Network, String> {
+        let mut layers = Vec::new();
+        let mut cur = self.input;
+        let mut cur_bits = self.input_bits;
+        for def in &self.layers {
+            let lrng_seed = self.seed ^ fnv1a(def.name.as_bytes());
+            match &def.kind {
+                LayerKind::Conv { cout, kh, kw, stride, pad, prec } => {
+                    if prec.x != cur_bits {
+                        return Err(format!(
+                            "layer `{}`: declared xbits {} but incoming activations are {}",
+                            def.name, prec.x, cur_bits
+                        ));
+                    }
+                    let spec = ConvSpec {
+                        name: def.name.clone(),
+                        input: cur,
+                        cout: *cout,
+                        kh: *kh,
+                        kw: *kw,
+                        stride: *stride,
+                        pad: *pad,
+                        prec: *prec,
+                    };
+                    spec.validate()?;
+                    let mut rng = Rng::new(lrng_seed);
+                    let weights =
+                        QWeights::random(&mut rng, *cout, *kh, *kw, cur.c, prec.w);
+                    let quant =
+                        quant::random_params(&mut rng, *cout, prec.y, spec.phi_max_abs(), spec.im2col_len());
+                    cur = spec.output();
+                    cur_bits = prec.y;
+                    layers.push(LayerInstance::Conv { spec, weights, quant });
+                }
+                LayerKind::MaxPool { window, stride } | LayerKind::AvgPool { window, stride } => {
+                    let kind = if matches!(def.kind, LayerKind::MaxPool { .. }) {
+                        PoolKind::Max
+                    } else {
+                        PoolKind::Avg
+                    };
+                    let spec = PoolSpec {
+                        name: def.name.clone(),
+                        kind,
+                        input: cur,
+                        window: *window,
+                        stride: *stride,
+                        bits: cur_bits,
+                    };
+                    spec.validate()?;
+                    cur = spec.output();
+                    layers.push(LayerInstance::Pool { spec });
+                }
+                LayerKind::GlobalAvgPool => {
+                    let n = cur.h * cur.w;
+                    if !n.is_power_of_two() {
+                        return Err(format!(
+                            "global_avgpool needs power-of-two H*W, got {}x{}",
+                            cur.h, cur.w
+                        ));
+                    }
+                    layers.push(LayerInstance::GlobalAvgPool { input: cur, bits: cur_bits });
+                    cur = Hwc::new(1, 1, cur.c);
+                }
+                LayerKind::DenseHead { classes, wbits } => {
+                    let spec = DenseSpec {
+                        name: def.name.clone(),
+                        in_features: cur.elems(),
+                        out_features: *classes,
+                        prec: Precision::new(cur_bits, *wbits, Bits::B8),
+                    };
+                    spec.validate()?;
+                    let mut rng = Rng::new(lrng_seed);
+                    let n = spec.in_features * spec.out_features;
+                    // symmetric zero-mean draws, like QWeights::random
+                    let weights: Vec<i32> =
+                        (0..n).map(|_| rng.range_i32(-wbits.smax(), wbits.smax())).collect();
+                    cur = Hwc::new(1, 1, *classes);
+                    layers.push(LayerInstance::DenseHead { spec, weights });
+                }
+            }
+        }
+        Ok(Network { spec: self.clone(), layers })
+    }
+}
+
+/// Result of a golden forward pass.
+#[derive(Debug, Clone)]
+pub struct Forward {
+    /// Activation tensor after every layer (packed).
+    pub activations: Vec<QTensor>,
+    /// Raw logits if the network ends in a DenseHead.
+    pub logits: Option<Vec<i32>>,
+}
+
+impl Network {
+    /// Golden forward pass (reference semantics).
+    pub fn forward_golden(&self, input: &QTensor) -> Forward {
+        assert_eq!(input.shape, self.spec.input, "input shape mismatch");
+        assert_eq!(input.bits, self.spec.input_bits);
+        let mut acts = Vec::new();
+        let mut cur = input.clone();
+        let mut logits = None;
+        for layer in &self.layers {
+            match layer {
+                LayerInstance::Conv { spec, weights, quant } => {
+                    cur = golden::conv2d(spec, &cur, weights, quant);
+                    acts.push(cur.clone());
+                }
+                LayerInstance::Pool { spec } => {
+                    cur = golden::pool(spec, &cur);
+                    acts.push(cur.clone());
+                }
+                LayerInstance::GlobalAvgPool { input, bits } => {
+                    let (sums, n) = golden::global_avg_acc(&cur);
+                    let shift = n.trailing_zeros();
+                    let vals: Vec<i32> =
+                        sums.iter().map(|&s| (s + (1 << (shift - 1))) >> shift).collect();
+                    cur = QTensor::from_values(Hwc::new(1, 1, input.c), *bits, &vals);
+                    acts.push(cur.clone());
+                }
+                LayerInstance::DenseHead { spec, weights } => {
+                    logits = Some(golden::dense_acc(spec, &cur.values(), weights));
+                }
+            }
+        }
+        Forward { activations: acts, logits }
+    }
+
+    /// Total weight footprint in packed bytes.
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerInstance::Conv { weights, .. } => weights.packed_bytes(),
+                LayerInstance::DenseHead { spec, weights } => {
+                    weights.len() * spec.prec.w.bits() as usize / 8
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Peak packed activation footprint (max over layer inputs+outputs,
+    /// double-buffered as on the MCU).
+    pub fn peak_activation_bytes(&self) -> usize {
+        let mut peak = self.spec.input.packed_bytes(self.spec.input_bits);
+        let mut prev = peak;
+        for l in &self.layers {
+            let out = match l {
+                LayerInstance::Conv { spec, .. } => {
+                    spec.output().packed_bytes(spec.prec.y)
+                }
+                LayerInstance::Pool { spec } => spec.output().packed_bytes(spec.bits),
+                LayerInstance::GlobalAvgPool { input, bits } => {
+                    Hwc::new(1, 1, input.c).packed_bytes(*bits)
+                }
+                LayerInstance::DenseHead { spec, .. } => spec.out_features * 4,
+            };
+            peak = peak.max(prev + out);
+            prev = out;
+        }
+        peak
+    }
+
+    /// Total conv + dense MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerInstance::Conv { spec, .. } => spec.macs(),
+                LayerInstance::DenseHead { spec, .. } => spec.macs(),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Load a network spec from a JSON file and materialize it.
+pub fn load_network(path: &str) -> Result<Network, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text)?;
+    NetworkSpec::from_json(&j)?.materialize()
+}
+
+/// Built-in demo network: a small mixed-precision CIFAR-scale CNN that
+/// exercises several of the 27 kernel permutations plus pool/head layers.
+pub fn demo_cnn() -> NetworkSpec {
+    NetworkSpec {
+        name: "demo_cnn_mixed".into(),
+        input: Hwc::new(32, 32, 4),
+        input_bits: Bits::B8,
+        seed: 2020,
+        layers: vec![
+            LayerDef {
+                name: "conv0".into(),
+                kind: LayerKind::Conv {
+                    cout: 16,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    prec: Precision::new(Bits::B8, Bits::B8, Bits::B4),
+                },
+            },
+            LayerDef { name: "pool0".into(), kind: LayerKind::MaxPool { window: 2, stride: 2 } },
+            LayerDef {
+                name: "conv1".into(),
+                kind: LayerKind::Conv {
+                    cout: 32,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    prec: Precision::new(Bits::B4, Bits::B4, Bits::B4),
+                },
+            },
+            LayerDef { name: "pool1".into(), kind: LayerKind::MaxPool { window: 2, stride: 2 } },
+            LayerDef {
+                name: "conv2".into(),
+                kind: LayerKind::Conv {
+                    cout: 32,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    prec: Precision::new(Bits::B4, Bits::B2, Bits::B2),
+                },
+            },
+            LayerDef {
+                name: "conv3".into(),
+                kind: LayerKind::Conv {
+                    cout: 64,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    prec: Precision::new(Bits::B2, Bits::B4, Bits::B8),
+                },
+            },
+            LayerDef { name: "gap".into(), kind: LayerKind::GlobalAvgPool },
+            LayerDef {
+                name: "head".into(),
+                kind: LayerKind::DenseHead { classes: 10, wbits: Bits::B8 },
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_cnn_materializes_and_runs() {
+        let net = demo_cnn().materialize().unwrap();
+        assert_eq!(net.layers.len(), 8);
+        let mut rng = Rng::new(7);
+        let x = QTensor::random(&mut rng, net.spec.input, net.spec.input_bits);
+        let fwd = net.forward_golden(&x);
+        let logits = fwd.logits.expect("demo has a head");
+        assert_eq!(logits.len(), 10);
+        // 8x8 gap after two pools of 32x32
+        assert!(net.total_macs() > 1_000_000);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_spec() {
+        let spec = demo_cnn();
+        let j = spec.to_json();
+        let back = NetworkSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.layers.len(), spec.layers.len());
+        assert_eq!(back.input, spec.input);
+        assert_eq!(back.seed, spec.seed);
+        // Materializations agree bit-exactly.
+        let n1 = spec.materialize().unwrap();
+        let n2 = back.materialize().unwrap();
+        let mut rng = Rng::new(1);
+        let x = QTensor::random(&mut rng, spec.input, spec.input_bits);
+        let l1 = n1.forward_golden(&x).logits.unwrap();
+        let l2 = n2.forward_golden(&x).logits.unwrap();
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let n1 = demo_cnn().materialize().unwrap();
+        let n2 = demo_cnn().materialize().unwrap();
+        match (&n1.layers[0], &n2.layers[0]) {
+            (
+                LayerInstance::Conv { weights: w1, quant: q1, .. },
+                LayerInstance::Conv { weights: w2, quant: q2, .. },
+            ) => {
+                assert_eq!(w1.data, w2.data);
+                assert_eq!(q1, q2);
+            }
+            _ => panic!("expected conv"),
+        }
+    }
+
+    #[test]
+    fn precision_chain_is_checked() {
+        let mut spec = demo_cnn();
+        // Make conv1 expect 8-bit input while conv0 emits 4-bit.
+        if let LayerKind::Conv { prec, .. } = &mut spec.layers[2].kind {
+            prec.x = Bits::B8;
+        }
+        let err = spec.materialize().unwrap_err();
+        assert!(err.contains("incoming activations"), "{err}");
+    }
+
+    #[test]
+    fn footprints_are_positive_and_packed() {
+        let net = demo_cnn().materialize().unwrap();
+        let wb = net.weight_bytes();
+        // conv0 16*3*3*4 @8b + conv1 32*3*3*16 @4b + conv2 32*3*3*32 @2b
+        // + conv3 64*3*3*32 @4b + head 64*10 @8b
+        let expect = 16 * 9 * 4 + 32 * 9 * 16 / 2 + 32 * 9 * 32 / 4 + 64 * 9 * 32 / 2 + 640;
+        assert_eq!(wb, expect);
+        assert!(net.peak_activation_bytes() > 0);
+    }
+}

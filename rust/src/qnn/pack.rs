@@ -1,0 +1,220 @@
+//! Sub-byte packing/unpacking — the shared storage contract (DESIGN.md §4).
+//!
+//! Little-endian within a byte: element `i` of a group of `8/bits` occupies
+//! bits `[i*bits, (i+1)*bits)`. Unsigned values store their low bits;
+//! signed values store their two's-complement truncation and are
+//! sign-extended on unpack (exactly what the XpulpV2 `p.bext` instruction
+//! does in hardware, and what `packing.py` mirrors in JAX).
+
+use super::types::Bits;
+
+/// Pack unsigned values (each in `[0, 2^bits)`) into bytes.
+pub fn pack_unsigned(values: &[i32], bits: Bits) -> Vec<u8> {
+    let per = bits.per_byte();
+    assert!(
+        values.len() % per == 0,
+        "pack_unsigned: {} values not divisible by {} per byte",
+        values.len(),
+        per
+    );
+    let b = bits.bits();
+    let mask = ((1u32 << b) - 1) as u32;
+    let mut out = Vec::with_capacity(values.len() / per);
+    for group in values.chunks(per) {
+        let mut byte = 0u32;
+        for (i, &v) in group.iter().enumerate() {
+            debug_assert!(
+                (0..=bits.umax()).contains(&v),
+                "unsigned value {v} out of range for {bits}"
+            );
+            byte |= ((v as u32) & mask) << (i as u32 * b);
+        }
+        out.push(byte as u8);
+    }
+    out
+}
+
+/// Pack signed values (each in `[smin, smax]`) into bytes (two's complement
+/// truncated to `bits`).
+pub fn pack_signed(values: &[i32], bits: Bits) -> Vec<u8> {
+    let per = bits.per_byte();
+    assert!(
+        values.len() % per == 0,
+        "pack_signed: {} values not divisible by {} per byte",
+        values.len(),
+        per
+    );
+    let b = bits.bits();
+    let mask = ((1u32 << b) - 1) as u32;
+    let mut out = Vec::with_capacity(values.len() / per);
+    for group in values.chunks(per) {
+        let mut byte = 0u32;
+        for (i, &v) in group.iter().enumerate() {
+            debug_assert!(
+                (bits.smin()..=bits.smax()).contains(&v),
+                "signed value {v} out of range for {bits}"
+            );
+            byte |= ((v as u32) & mask) << (i as u32 * b);
+        }
+        out.push(byte as u8);
+    }
+    out
+}
+
+/// Unpack to unsigned values (zero-extension, `p.bextu` semantics).
+pub fn unpack_unsigned(bytes: &[u8], bits: Bits) -> Vec<i32> {
+    let b = bits.bits();
+    let mask = (1u32 << b) - 1;
+    let per = bits.per_byte();
+    let mut out = Vec::with_capacity(bytes.len() * per);
+    for &byte in bytes {
+        for i in 0..per {
+            out.push(((byte as u32 >> (i as u32 * b)) & mask) as i32);
+        }
+    }
+    out
+}
+
+/// Unpack to signed values (sign-extension, `p.bext` semantics).
+pub fn unpack_signed(bytes: &[u8], bits: Bits) -> Vec<i32> {
+    let b = bits.bits();
+    let per = bits.per_byte();
+    let shift = 32 - b;
+    let mut out = Vec::with_capacity(bytes.len() * per);
+    for &byte in bytes {
+        for i in 0..per {
+            let raw = (byte as u32) >> (i as u32 * b);
+            // shift the field to the top then arithmetic-shift back down
+            out.push(((raw << shift) as i32) >> shift);
+        }
+    }
+    out
+}
+
+/// Extract the single element at logical index `idx` (unsigned).
+pub fn get_unsigned(bytes: &[u8], bits: Bits, idx: usize) -> i32 {
+    let per = bits.per_byte();
+    let b = bits.bits();
+    let byte = bytes[idx / per];
+    ((byte as u32 >> ((idx % per) as u32 * b)) & ((1u32 << b) - 1)) as i32
+}
+
+/// Extract the single element at logical index `idx` (signed).
+pub fn get_signed(bytes: &[u8], bits: Bits, idx: usize) -> i32 {
+    let per = bits.per_byte();
+    let b = bits.bits();
+    let shift = 32 - b;
+    let raw = (bytes[idx / per] as u32) >> ((idx % per) as u32 * b);
+    ((raw << shift) as i32) >> shift
+}
+
+/// Insert an element at logical index `idx` (`p.bins` semantics): only the
+/// target bit-field of the target byte is modified.
+pub fn set_field(bytes: &mut [u8], bits: Bits, idx: usize, value: i32) {
+    let per = bits.per_byte();
+    let b = bits.bits();
+    let mask = ((1u32 << b) - 1) << ((idx % per) as u32 * b);
+    let slot = &mut bytes[idx / per];
+    let v = ((value as u32) << ((idx % per) as u32 * b)) & mask;
+    *slot = ((*slot as u32 & !mask) | v) as u8;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, expect_eq_slices};
+
+    #[test]
+    fn pack_unpack_examples() {
+        // 4-bit: [1, 2] -> 0x21 (little-endian within byte)
+        assert_eq!(pack_unsigned(&[1, 2], Bits::B4), vec![0x21]);
+        assert_eq!(unpack_unsigned(&[0x21], Bits::B4), vec![1, 2]);
+        // 2-bit: [3, 0, 1, 2] -> 0b10_01_00_11
+        assert_eq!(pack_unsigned(&[3, 0, 1, 2], Bits::B2), vec![0b10010011]);
+        // signed 4-bit: [-1, -8] -> 0x8F
+        assert_eq!(pack_signed(&[-1, -8], Bits::B4), vec![0x8F]);
+        assert_eq!(unpack_signed(&[0x8F], Bits::B4), vec![-1, -8]);
+        // signed 2-bit full range
+        assert_eq!(unpack_signed(&pack_signed(&[-2, -1, 0, 1], Bits::B2), Bits::B2), vec![-2, -1, 0, 1]);
+        // 8-bit passthrough
+        assert_eq!(pack_unsigned(&[200], Bits::B8), vec![200]);
+        assert_eq!(unpack_signed(&[0x80], Bits::B8), vec![-128]);
+    }
+
+    #[test]
+    fn get_set_field() {
+        let mut bytes = vec![0u8; 2];
+        set_field(&mut bytes, Bits::B2, 5, 3);
+        assert_eq!(get_unsigned(&bytes, Bits::B2, 5), 3);
+        assert_eq!(get_unsigned(&bytes, Bits::B2, 4), 0);
+        set_field(&mut bytes, Bits::B2, 5, 1); // overwrite same field
+        assert_eq!(get_unsigned(&bytes, Bits::B2, 5), 1);
+        // neighbours untouched
+        assert_eq!(bytes[0], 0);
+    }
+
+    #[test]
+    fn prop_roundtrip_unsigned() {
+        check("pack-roundtrip-unsigned", 200, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let n = bits.per_byte() * (1 + rng.below(64) as usize);
+            let vals: Vec<i32> = (0..n).map(|_| rng.range_i32(0, bits.umax())).collect();
+            let packed = pack_unsigned(&vals, bits);
+            if packed.len() != n / bits.per_byte() {
+                return Err(format!("packed length {} != {}", packed.len(), n / bits.per_byte()));
+            }
+            expect_eq_slices(&unpack_unsigned(&packed, bits), &vals, "unsigned roundtrip")
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_signed() {
+        check("pack-roundtrip-signed", 200, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let n = bits.per_byte() * (1 + rng.below(64) as usize);
+            let vals: Vec<i32> =
+                (0..n).map(|_| rng.range_i32(bits.smin(), bits.smax())).collect();
+            let packed = pack_signed(&vals, bits);
+            expect_eq_slices(&unpack_signed(&packed, bits), &vals, "signed roundtrip")
+        });
+    }
+
+    #[test]
+    fn prop_get_matches_unpack() {
+        check("get-matches-unpack", 100, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let n = bits.per_byte() * (1 + rng.below(32) as usize);
+            let vals: Vec<i32> = (0..n).map(|_| rng.range_i32(0, bits.umax())).collect();
+            let packed = pack_unsigned(&vals, bits);
+            let all = unpack_unsigned(&packed, bits);
+            for idx in 0..n {
+                if get_unsigned(&packed, bits, idx) != all[idx] {
+                    return Err(format!("get[{idx}] mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_set_then_get() {
+        check("set-then-get", 100, |rng, _| {
+            let bits = *rng.pick(&Bits::ALL);
+            let n = bits.per_byte() * 8;
+            let mut bytes = vec![0u8; n / bits.per_byte()];
+            rng.fill_bytes(&mut bytes);
+            let before = unpack_unsigned(&bytes, bits);
+            let idx = rng.below(n as u32) as usize;
+            let v = rng.range_i32(0, bits.umax());
+            set_field(&mut bytes, bits, idx, v);
+            let after = unpack_unsigned(&bytes, bits);
+            for i in 0..n {
+                let want = if i == idx { v } else { before[i] };
+                if after[i] != want {
+                    return Err(format!("field {i}: got {} want {want}", after[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

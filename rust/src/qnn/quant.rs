@@ -1,0 +1,303 @@
+//! Re-quantization ("quant" of Eq. 3): integer affine + shift, and the
+//! threshold formulation used by the sub-byte QntPack kernels.
+//!
+//! Contract (DESIGN.md §4):
+//!   `INT(y) = clamp((phi * kappa_c + lambda_c) >> shift, 0, 2^ybits - 1)`
+//! with per-output-channel `kappa_c > 0`, `lambda_c`, a per-layer arithmetic
+//! right `shift` (floor semantics), clamped to the unsigned output range.
+//!
+//! For sub-byte outputs the kernels use the equivalent *threshold* form
+//! (paper §2.2 / footnote 1): `INT(y) = #{k : phi >= t_k}` with
+//! `t_k = ceil((k * 2^shift - lambda_c) / kappa_c)`. [`thresholds`] derives
+//! them and `prop_threshold_equals_affine` proves the equivalence.
+
+use super::types::Bits;
+
+/// Per-layer re-quantization parameters (per-output-channel affine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantParams {
+    /// Per-channel multiplier, strictly positive.
+    pub kappa: Vec<i32>,
+    /// Per-channel offset (bias + batch-norm fold).
+    pub lambda: Vec<i32>,
+    /// Per-layer arithmetic right shift.
+    pub shift: u32,
+    /// Output precision.
+    pub ybits: Bits,
+}
+
+impl QuantParams {
+    /// Identity-ish params: kappa=1, lambda=0, shift=0 (pure clamp).
+    pub fn unit(channels: usize, ybits: Bits) -> QuantParams {
+        QuantParams { kappa: vec![1; channels], lambda: vec![0; channels], shift: 0, ybits }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.kappa.len()
+    }
+
+    /// Validate invariants: kappa > 0, equal lengths, shift sane, and the
+    /// 32-bit no-overflow constraint for accumulators up to `phi_max_abs`.
+    pub fn validate(&self, phi_max_abs: i64) -> Result<(), String> {
+        if self.kappa.len() != self.lambda.len() {
+            return Err(format!(
+                "kappa/lambda length mismatch: {} vs {}",
+                self.kappa.len(),
+                self.lambda.len()
+            ));
+        }
+        if self.shift >= 31 {
+            return Err(format!("shift {} out of range", self.shift));
+        }
+        for (c, (&k, &l)) in self.kappa.iter().zip(&self.lambda).enumerate() {
+            if k <= 0 {
+                return Err(format!("kappa[{c}] = {k} must be > 0"));
+            }
+            let worst = phi_max_abs * k as i64 + l.unsigned_abs() as i64;
+            if worst > i32::MAX as i64 {
+                return Err(format!(
+                    "channel {c}: phi*kappa+lambda may overflow i32 ({worst} > {})",
+                    i32::MAX
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Affine re-quantization of one accumulator for channel `c`.
+    /// All arithmetic stays within i32 (the GAP-8 is a 32-bit machine);
+    /// `validate` guarantees no overflow for in-range accumulators and the
+    /// debug assertion re-checks at use.
+    #[inline]
+    pub fn quantize(&self, phi: i32, c: usize) -> i32 {
+        let prod = (phi as i64) * (self.kappa[c] as i64) + (self.lambda[c] as i64);
+        debug_assert!(
+            i32::try_from(prod).is_ok(),
+            "quant overflow: phi={phi} kappa={} lambda={}",
+            self.kappa[c],
+            self.lambda[c]
+        );
+        let v = (prod as i32) >> self.shift;
+        v.clamp(0, self.ybits.umax())
+    }
+
+    /// Derive the per-channel threshold table for the sub-byte kernels:
+    /// `t[c][k-1] = min { phi : quantize(phi, c) >= k }`, k = 1..=umax.
+    pub fn thresholds(&self) -> Vec<Vec<i32>> {
+        let levels = self.ybits.umax() as usize; // 2^N - 1 thresholds
+        self.kappa
+            .iter()
+            .zip(&self.lambda)
+            .map(|(&kappa, &lambda)| {
+                (1..=levels as i64)
+                    .map(|k| {
+                        // phi >= ceil((k*2^s - lambda) / kappa)
+                        let num = (k << self.shift) - lambda as i64;
+                        let t = div_ceil(num, kappa as i64);
+                        t.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Ceiling division for possibly-negative numerators (kappa > 0).
+fn div_ceil(num: i64, den: i64) -> i64 {
+    debug_assert!(den > 0);
+    num.div_euclid(den) + if num.rem_euclid(den) != 0 { 1 } else { 0 }
+}
+
+/// Threshold-based quantization: count thresholds `<= phi`. The kernels
+/// implement this as a branchy binary search (that is what Table 1 costs);
+/// this linear version is the semantic reference.
+#[inline]
+pub fn quantize_thresholds(thresholds: &[i32], phi: i32) -> i32 {
+    thresholds.iter().take_while(|&&t| phi >= t).count() as i32
+}
+
+/// Binary-search variant mirroring the kernel's if/else ladder; returns
+/// (level, comparisons_performed). Comparisons = log2(2^N) = N for a full
+/// ladder, which is the paper's Table-1 cost model input.
+pub fn quantize_thresholds_bsearch(thresholds: &[i32], phi: i32) -> (i32, u32) {
+    let mut lo = 0usize; // number of thresholds known <= phi
+    let mut hi = thresholds.len();
+    let mut cmps = 0u32;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        cmps += 1;
+        if phi >= thresholds[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo as i32, cmps)
+}
+
+/// Integer square root (Newton), mirrored by python's `math.isqrt`.
+pub fn isqrt(n: i64) -> i64 {
+    if n < 2 {
+        return n.max(0);
+    }
+    let mut x = n;
+    let mut y = (x + 1) / 2;
+    while y < x {
+        x = y;
+        y = (x + n / x) / 2;
+    }
+    x
+}
+
+/// Generate well-formed random quant params for tests and workloads.
+///
+/// `phi_max` bounds |phi| (overflow validation); `k` is the dot-product
+/// length. Real accumulators of zero-mean weights concentrate in a band
+/// ~sqrt(k) narrower than the worst case, so the affine map is scaled to
+/// the *typical* range `phi_typ = phi_max / isqrt(k)` (outputs would
+/// otherwise saturate to a constant level on deep networks), with lambda
+/// centering phi = 0 at mid output range plus a jitter.
+pub fn random_params(
+    rng: &mut crate::util::rng::Rng,
+    channels: usize,
+    ybits: Bits,
+    phi_max: i64,
+    k: usize,
+) -> QuantParams {
+    let umax = ybits.umax() as i64;
+    let phi_typ = (phi_max / isqrt(k as i64).max(1)).max(1);
+    let mut shift = 0u32;
+    while (phi_typ >> shift) > umax && shift < 24 {
+        shift += 1;
+    }
+    let kappa_hi = (((umax << shift) / phi_typ).max(1) * 2).min(127);
+    let kappa: Vec<i32> =
+        (0..channels).map(|_| rng.range_i32(1, kappa_hi as i32)).collect();
+    let center = (umax / 2) << shift;
+    let jitter = ((umax << shift) / 4).max(1);
+    let lambda: Vec<i32> = (0..channels)
+        .map(|_| (center + rng.range_i64(-jitter, jitter)) as i32)
+        .collect();
+    let p = QuantParams { kappa, lambda, shift, ybits };
+    p.validate(phi_max).expect("random_params generated invalid params");
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn affine_basics() {
+        let q = QuantParams { kappa: vec![2], lambda: vec![-4], shift: 2, ybits: Bits::B4 };
+        // (phi*2 - 4) >> 2
+        assert_eq!(q.quantize(0, 0), 0); // -4>>2 = -1 -> clamp 0
+        assert_eq!(q.quantize(4, 0), 1); // 4>>2 = 1
+        assert_eq!(q.quantize(100, 0), 15); // clamp to umax
+        assert_eq!(q.quantize(-100, 0), 0);
+    }
+
+    #[test]
+    fn floor_shift_semantics_for_negatives() {
+        let q = QuantParams { kappa: vec![1], lambda: vec![0], shift: 1, ybits: Bits::B8 };
+        // -3 >> 1 = -2 (floor), clamps to 0 — but check the pre-clamp math
+        // via thresholds: t_1 = ceil(2/1) = 2
+        assert_eq!(q.thresholds()[0][0], 2);
+        assert_eq!(q.quantize(1, 0), 0);
+        assert_eq!(q.quantize(2, 0), 1);
+    }
+
+    #[test]
+    fn threshold_table_shape() {
+        let q = QuantParams::unit(3, Bits::B2);
+        let t = q.thresholds();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].len(), 3); // 2^2 - 1
+        let q8 = QuantParams::unit(1, Bits::B8);
+        assert_eq!(q8.thresholds()[0].len(), 255);
+    }
+
+    #[test]
+    fn thresholds_are_monotone() {
+        let mut rng = Rng::new(11);
+        let q = random_params(&mut rng, 4, Bits::B4, 10_000, 64);
+        for t in q.thresholds() {
+            for w in t.windows(2) {
+                assert!(w[0] <= w[1], "thresholds not monotone: {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_threshold_equals_affine() {
+        check("threshold-equals-affine", 300, |rng, _| {
+            let ybits = *rng.pick(&Bits::ALL);
+            let phi_max = 1i64 << (10 + rng.below(10));
+            let k = 1 + rng.below(256) as usize;
+            let q = random_params(rng, 2, ybits, phi_max, k);
+            let t = q.thresholds();
+            for _ in 0..64 {
+                let c = rng.below(2) as usize;
+                let phi = rng.range_i64(-phi_max, phi_max) as i32;
+                let a = q.quantize(phi, c);
+                let b = quantize_thresholds(&t[c], phi);
+                if a != b {
+                    return Err(format!(
+                        "phi={phi} c={c}: affine={a} thresholds={b} (q={q:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bsearch_equals_linear() {
+        check("bsearch-equals-linear", 200, |rng, _| {
+            let ybits = *rng.pick(&Bits::ALL);
+            let q = random_params(rng, 1, ybits, 4096, 16);
+            let t = &q.thresholds()[0];
+            for _ in 0..64 {
+                let phi = rng.range_i32(-5000, 5000);
+                let lin = quantize_thresholds(t, phi);
+                let (bs, cmps) = quantize_thresholds_bsearch(t, phi);
+                if lin != bs {
+                    return Err(format!("phi={phi}: linear={lin} bsearch={bs}"));
+                }
+                // ladder depth is exactly N = bits comparisons for 2^N-1 entries
+                if cmps != ybits.bits() {
+                    return Err(format!("cmps={cmps} != {}", ybits.bits()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn validate_catches_overflow() {
+        let q = QuantParams {
+            kappa: vec![i32::MAX / 2],
+            lambda: vec![0],
+            shift: 0,
+            ybits: Bits::B8,
+        };
+        assert!(q.validate(1 << 20).is_err());
+        assert!(q.validate(2).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_kappa() {
+        let q = QuantParams { kappa: vec![0], lambda: vec![0], shift: 0, ybits: Bits::B8 };
+        assert!(q.validate(10).is_err());
+    }
+
+    #[test]
+    fn div_ceil_negative_numerators() {
+        assert_eq!(div_ceil(7, 2), 4);
+        assert_eq!(div_ceil(-7, 2), -3);
+        assert_eq!(div_ceil(-8, 2), -4);
+        assert_eq!(div_ceil(0, 3), 0);
+    }
+}

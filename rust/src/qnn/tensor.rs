@@ -1,0 +1,133 @@
+//! Packed quantized tensors (HWC activations, OHWI weights).
+
+use super::pack;
+use super::types::{Bits, Hwc};
+use crate::util::rng::Rng;
+
+/// A packed activation tensor: HWC layout, unsigned `bits`-bit elements,
+/// channel dimension packed (C fastest-varying, 8/bits elements per byte).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub shape: Hwc,
+    pub bits: Bits,
+    pub data: Vec<u8>,
+}
+
+impl QTensor {
+    /// Pack from unpacked HWC values.
+    pub fn from_values(shape: Hwc, bits: Bits, values: &[i32]) -> QTensor {
+        assert_eq!(values.len(), shape.elems(), "value count != shape");
+        assert!(shape.c % bits.per_byte() == 0, "C={} not packable at {bits}", shape.c);
+        QTensor { shape, bits, data: pack::pack_unsigned(values, bits) }
+    }
+
+    /// Unpack to HWC values.
+    pub fn values(&self) -> Vec<i32> {
+        pack::unpack_unsigned(&self.data, self.bits)
+    }
+
+    /// Element at (h, w, c).
+    pub fn at(&self, h: usize, w: usize, c: usize) -> i32 {
+        let idx = (h * self.shape.w + w) * self.shape.c + c;
+        pack::get_unsigned(&self.data, self.bits, idx)
+    }
+
+    /// Uniform-random tensor over the full value range.
+    pub fn random(rng: &mut Rng, shape: Hwc, bits: Bits) -> QTensor {
+        let vals: Vec<i32> =
+            (0..shape.elems()).map(|_| rng.range_i32(0, bits.umax())).collect();
+        QTensor::from_values(shape, bits, &vals)
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A packed weight tensor: OHWI layout ([cout][kh][kw][cin]), signed
+/// `bits`-bit elements, the innermost (cin) run packed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QWeights {
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub bits: Bits,
+    pub data: Vec<u8>,
+}
+
+impl QWeights {
+    pub fn from_values(
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        bits: Bits,
+        values: &[i32],
+    ) -> QWeights {
+        assert_eq!(values.len(), cout * kh * kw * cin);
+        assert!(cin % bits.per_byte() == 0, "Cin={cin} not packable at {bits}");
+        QWeights { cout, kh, kw, cin, bits, data: pack::pack_signed(values, bits) }
+    }
+
+    pub fn values(&self) -> Vec<i32> {
+        pack::unpack_signed(&self.data, self.bits)
+    }
+
+    pub fn at(&self, o: usize, kh: usize, kw: usize, i: usize) -> i32 {
+        let idx = ((o * self.kh + kh) * self.kw + kw) * self.cin + i;
+        pack::get_signed(&self.data, self.bits, idx)
+    }
+
+    /// Uniform-random weights over the *symmetric* range [-smax, smax]:
+    /// zero-mean, like trained quantized weights — asymmetric two's
+    /// complement draws would bias every accumulator by -0.5 per tap and
+    /// saturate deep networks (see `quant::random_params`).
+    pub fn random(rng: &mut Rng, cout: usize, kh: usize, kw: usize, cin: usize, bits: Bits) -> QWeights {
+        let n = cout * kh * kw * cin;
+        let vals: Vec<i32> =
+            (0..n).map(|_| rng.range_i32(-bits.smax(), bits.smax())).collect();
+        QWeights::from_values(cout, kh, kw, cin, bits, &vals)
+    }
+
+    /// Number of weight elements.
+    pub fn elems(&self) -> usize {
+        self.cout * self.kh * self.kw * self.cin
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_and_indexing() {
+        let shape = Hwc::new(2, 2, 4);
+        let vals: Vec<i32> = (0..16).map(|i| i % 4).collect();
+        let t = QTensor::from_values(shape, Bits::B2, &vals);
+        assert_eq!(t.values(), vals);
+        assert_eq!(t.packed_bytes(), 4);
+        assert_eq!(t.at(1, 1, 3), vals[(1 * 2 + 1) * 4 + 3]);
+    }
+
+    #[test]
+    fn weights_roundtrip_and_indexing() {
+        let vals: Vec<i32> = (0..2 * 1 * 1 * 4).map(|i| (i as i32 % 15) - 8).collect();
+        let w = QWeights::from_values(2, 1, 1, 4, Bits::B4, &vals);
+        assert_eq!(w.values(), vals);
+        assert_eq!(w.at(1, 0, 0, 2), vals[1 * 4 + 2]);
+    }
+
+    #[test]
+    fn random_tensors_in_range() {
+        let mut rng = Rng::new(3);
+        let t = QTensor::random(&mut rng, Hwc::new(3, 3, 8), Bits::B4);
+        assert!(t.values().iter().all(|&v| (0..=15).contains(&v)));
+        let w = QWeights::random(&mut rng, 4, 3, 3, 8, Bits::B2);
+        assert!(w.values().iter().all(|&v| (-2..=1).contains(&v)));
+    }
+}

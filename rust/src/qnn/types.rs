@@ -1,0 +1,195 @@
+//! Core precision and shape types shared by every layer of the stack.
+//!
+//! The paper's mixed-precision space is {8, 4, 2}-bit for each of
+//! ifmaps (unsigned), weights (signed) and ofmaps (unsigned) — 27 kernel
+//! permutations. See DESIGN.md §4 for the full numeric contract.
+
+use std::fmt;
+
+/// A quantization bit-width. Only the paper's three levels exist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Bits {
+    B2,
+    B4,
+    B8,
+}
+
+impl Bits {
+    pub const ALL: [Bits; 3] = [Bits::B8, Bits::B4, Bits::B2];
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Bits::B2 => 2,
+            Bits::B4 => 4,
+            Bits::B8 => 8,
+        }
+    }
+
+    /// Elements stored per byte (8 / bits).
+    pub fn per_byte(self) -> usize {
+        (8 / self.bits()) as usize
+    }
+
+    /// Maximum unsigned value representable: 2^bits - 1.
+    pub fn umax(self) -> i32 {
+        (1i32 << self.bits()) - 1
+    }
+
+    /// Signed two's-complement range [smin, smax].
+    pub fn smin(self) -> i32 {
+        -(1i32 << (self.bits() - 1))
+    }
+    pub fn smax(self) -> i32 {
+        (1i32 << (self.bits() - 1)) - 1
+    }
+
+    pub fn from_u32(b: u32) -> Result<Bits, String> {
+        match b {
+            2 => Ok(Bits::B2),
+            4 => Ok(Bits::B4),
+            8 => Ok(Bits::B8),
+            other => Err(format!("unsupported bit-width {other} (must be 2, 4 or 8)")),
+        }
+    }
+}
+
+impl fmt::Display for Bits {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}b", self.bits())
+    }
+}
+
+/// One of the 27 kernel precision permutations: (ifmap, weight, ofmap).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Precision {
+    pub x: Bits,
+    pub w: Bits,
+    pub y: Bits,
+}
+
+impl Precision {
+    pub fn new(x: Bits, w: Bits, y: Bits) -> Precision {
+        Precision { x, w, y }
+    }
+
+    /// All 27 permutations, ordered (w outer, x middle, y inner) to match
+    /// the paper's figures which group by weight precision.
+    pub fn all() -> Vec<Precision> {
+        let mut v = Vec::with_capacity(27);
+        for w in Bits::ALL {
+            for x in Bits::ALL {
+                for y in Bits::ALL {
+                    v.push(Precision { x, w, y });
+                }
+            }
+        }
+        v
+    }
+
+    /// Kernel name in PULP-NN convention, e.g. `conv_u4_i2_u8`
+    /// (ifmap-unsigned / weight-signed / ofmap-unsigned).
+    pub fn kernel_name(&self) -> String {
+        format!("conv_u{}_i{}_u{}", self.x.bits(), self.w.bits(), self.y.bits())
+    }
+
+    /// Does this permutation need any sub-byte unpacking (the paper's
+    /// "when unpacking is necessary" distinction for Fig. 5/6)?
+    pub fn needs_unpacking(&self) -> bool {
+        self.x != Bits::B8 || self.w != Bits::B8
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "x{}/w{}/y{}", self.x, self.w, self.y)
+    }
+}
+
+/// HWC feature-map shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hwc {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Hwc {
+    pub fn new(h: usize, w: usize, c: usize) -> Hwc {
+        Hwc { h, w, c }
+    }
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+    /// Packed size in bytes at the given precision. The channel dimension is
+    /// the fastest-varying and must be divisible by the elements-per-byte.
+    pub fn packed_bytes(&self, bits: Bits) -> usize {
+        assert!(
+            self.c % bits.per_byte() == 0,
+            "channel count {} not divisible by {} (elements per byte at {bits})",
+            self.c,
+            bits.per_byte()
+        );
+        self.elems() / bits.per_byte()
+    }
+}
+
+impl fmt::Display for Hwc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_arithmetic() {
+        assert_eq!(Bits::B2.per_byte(), 4);
+        assert_eq!(Bits::B4.per_byte(), 2);
+        assert_eq!(Bits::B8.per_byte(), 1);
+        assert_eq!(Bits::B2.umax(), 3);
+        assert_eq!(Bits::B4.umax(), 15);
+        assert_eq!(Bits::B8.umax(), 255);
+        assert_eq!(Bits::B4.smin(), -8);
+        assert_eq!(Bits::B4.smax(), 7);
+    }
+
+    #[test]
+    fn from_u32_roundtrip() {
+        for b in Bits::ALL {
+            assert_eq!(Bits::from_u32(b.bits()).unwrap(), b);
+        }
+        assert!(Bits::from_u32(3).is_err());
+    }
+
+    #[test]
+    fn twenty_seven_permutations() {
+        let all = Precision::all();
+        assert_eq!(all.len(), 27);
+        let unique: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(unique.len(), 27);
+    }
+
+    #[test]
+    fn kernel_naming() {
+        let p = Precision::new(Bits::B4, Bits::B2, Bits::B8);
+        assert_eq!(p.kernel_name(), "conv_u4_i2_u8");
+        assert!(p.needs_unpacking());
+        assert!(!Precision::new(Bits::B8, Bits::B8, Bits::B2).needs_unpacking());
+    }
+
+    #[test]
+    fn packed_bytes() {
+        let s = Hwc::new(16, 16, 32);
+        assert_eq!(s.packed_bytes(Bits::B8), 16 * 16 * 32);
+        assert_eq!(s.packed_bytes(Bits::B4), 16 * 16 * 16);
+        assert_eq!(s.packed_bytes(Bits::B2), 16 * 16 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn packed_bytes_rejects_ragged_channels() {
+        Hwc::new(4, 4, 3).packed_bytes(Bits::B4);
+    }
+}

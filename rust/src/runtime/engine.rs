@@ -1,0 +1,108 @@
+//! PJRT execution engine: compile-once, execute-many over the CPU client.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Artifact;
+
+/// Output of an artifact execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecOutput {
+    /// Packed tensor bytes (u8 artifacts).
+    PackedU8(Vec<u8>),
+    /// Classifier logits (i32 artifacts).
+    LogitsI32(Vec<i32>),
+}
+
+impl ExecOutput {
+    /// Serialize like the golden .bin files (u8 raw / i32 little-endian).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            ExecOutput::PackedU8(v) => v.clone(),
+            ExecOutput::LogitsI32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+    pub fn as_logits(&self) -> Option<&[i32]> {
+        match self {
+            ExecOutput::LogitsI32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_packed(&self) -> Option<&[u8]> {
+        match self {
+            ExecOutput::PackedU8(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// The runtime: one PJRT CPU client plus an executable cache keyed by
+/// artifact name (compile once, execute many).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&mut self, artifact: &Artifact) -> Result<()> {
+        if self.cache.contains_key(&artifact.name) {
+            return Ok(());
+        }
+        let path = artifact.hlo_path();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", artifact.name))?;
+        self.cache.insert(artifact.name.clone(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute with raw packed input bytes shaped per the manifest.
+    pub fn execute(&mut self, artifact: &Artifact, input: &[u8]) -> Result<ExecOutput> {
+        self.load(artifact)?;
+        let expect: usize = artifact.input_shape.iter().product();
+        if input.len() != expect {
+            return Err(anyhow!(
+                "{}: input is {} bytes, manifest says {:?} = {expect}",
+                artifact.name,
+                input.len(),
+                artifact.input_shape
+            ));
+        }
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &artifact.input_shape,
+            input,
+        )?;
+        let exe = self.cache.get(&artifact.name).unwrap();
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        match artifact.output_dtype.as_str() {
+            "u8" => Ok(ExecOutput::PackedU8(out.to_vec::<u8>()?)),
+            "i32" => Ok(ExecOutput::LogitsI32(out.to_vec::<i32>()?)),
+            other => Err(anyhow!("unknown output dtype `{other}`")),
+        }
+    }
+
+    /// Execute using the artifact's recorded test input.
+    pub fn execute_recorded(&mut self, artifact: &Artifact) -> Result<ExecOutput> {
+        let input = artifact.read_input()?;
+        self.execute(artifact, &input)
+    }
+}

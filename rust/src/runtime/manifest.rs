@@ -1,0 +1,119 @@
+//! Artifact manifest: the index `aot.py` writes next to the HLO files.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT'd artifact (a Reference Layer kernel or a full network).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// "u8" (packed tensor) or "i32" (logits).
+    pub output_dtype: String,
+    pub seed: u64,
+    /// Precisions for reference-layer artifacts (0 when absent).
+    pub xbits: u32,
+    pub wbits: u32,
+    pub ybits: u32,
+    pub macs: u64,
+    dir: PathBuf,
+}
+
+impl Artifact {
+    pub fn hlo_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.hlo.txt", self.name))
+    }
+    pub fn input_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.input.bin", self.name))
+    }
+    pub fn golden_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.golden.bin", self.name))
+    }
+    pub fn read_input(&self) -> std::io::Result<Vec<u8>> {
+        std::fs::read(self.input_path())
+    }
+    pub fn read_golden(&self) -> std::io::Result<Vec<u8>> {
+        std::fs::read(self.golden_path())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let dir = Path::new(dir).to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            artifacts.push(Artifact {
+                name: a.req_str("name")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                input_shape: a
+                    .req_arr("input_shape")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("bad shape"))
+                    .collect::<Result<_, _>>()?,
+                output_shape: a
+                    .req_arr("output_shape")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("bad shape"))
+                    .collect::<Result<_, _>>()?,
+                output_dtype: a.req_str("output_dtype")?.to_string(),
+                seed: a.get("seed").as_i64().unwrap_or(0) as u64,
+                xbits: a.get("xbits").as_i64().unwrap_or(0) as u32,
+                wbits: a.get("wbits").as_i64().unwrap_or(0) as u32,
+                ybits: a.get("ybits").as_i64().unwrap_or(0) as u32,
+                macs: a.get("macs").as_i64().unwrap_or(0) as u64,
+                dir: dir.clone(),
+            });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Reference-layer artifact for a precision combo, if exported.
+    pub fn find_ref_layer(&self, x: u32, w: u32, y: u32) -> Option<&Artifact> {
+        self.find(&format!("ref_layer_x{x}w{w}y{y}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_manifest_when_artifacts_exist() {
+        // Integration-grade check; skips silently when artifacts are absent
+        // (full coverage lives in rust/tests/artifacts.rs).
+        let Ok(m) = Manifest::load("artifacts") else {
+            eprintln!("skipped: no artifacts/ (run `make artifacts`)");
+            return;
+        };
+        assert!(!m.artifacts.is_empty());
+        let a = &m.artifacts[0];
+        assert!(a.hlo_path().exists());
+        assert!(a.input_path().exists());
+        assert!(a.golden_path().exists());
+    }
+
+    #[test]
+    fn missing_manifest_reports_helpful_error() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

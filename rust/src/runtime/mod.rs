@@ -1,0 +1,11 @@
+//! The PJRT runtime: loads the AOT'd HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client from
+//! the rust request path. Python is never involved at runtime.
+
+pub mod engine;
+pub mod manifest;
+pub mod verify;
+
+pub use engine::{ExecOutput, Runtime};
+pub use manifest::{Artifact, Manifest};
+pub use verify::{verify_artifact, VerifyReport};

@@ -1,0 +1,89 @@
+//! Cross-layer verification: every artifact must produce bytes identical
+//! to (a) the python-side golden file written at export time, (b) the rust
+//! golden model, and (c) the simulated GAP-8 kernels — the full
+//! L1==L2==L3==golden chain of DESIGN.md §4.
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{ExecOutput, Runtime};
+use super::manifest::Artifact;
+use crate::qnn::golden;
+use crate::qnn::layer::ConvSpec;
+use crate::qnn::quant;
+use crate::qnn::tensor::{QTensor, QWeights};
+use crate::qnn::types::{Bits, Precision};
+use crate::util::rng::Rng;
+
+/// Outcome of one artifact verification.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub name: String,
+    /// PJRT output == python golden file.
+    pub pjrt_matches_golden: bool,
+    /// rust golden model == python golden file (reference layers only).
+    pub rust_matches_golden: Option<bool>,
+    /// simulated GAP-8 kernel == python golden file (reference layers only).
+    pub kernel_matches_golden: Option<bool>,
+    pub output_bytes: usize,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.pjrt_matches_golden
+            && self.rust_matches_golden.unwrap_or(true)
+            && self.kernel_matches_golden.unwrap_or(true)
+    }
+}
+
+/// Rebuild the reference-layer test case exactly as `ref.make_test_case`
+/// does on the python side (same xorshift draw order).
+pub fn rebuild_ref_case(a: &Artifact) -> Result<(ConvSpec, QTensor, QWeights, quant::QuantParams)> {
+    let prec = Precision::new(
+        Bits::from_u32(a.xbits).map_err(|e| anyhow!(e))?,
+        Bits::from_u32(a.wbits).map_err(|e| anyhow!(e))?,
+        Bits::from_u32(a.ybits).map_err(|e| anyhow!(e))?,
+    );
+    let spec = ConvSpec::reference_layer(prec);
+    let mut rng = Rng::new(a.seed);
+    let x = QTensor::random(&mut rng, spec.input, prec.x);
+    let w = QWeights::random(&mut rng, spec.cout, spec.kh, spec.kw, spec.input.c, prec.w);
+    let q = quant::random_params(&mut rng, spec.cout, prec.y, spec.phi_max_abs(), spec.im2col_len());
+    Ok((spec, x, w, q))
+}
+
+/// Verify one artifact across all layers.
+pub fn verify_artifact(rt: &mut Runtime, a: &Artifact) -> Result<VerifyReport> {
+    let golden_bytes = a.read_golden()?;
+    let out = rt.execute_recorded(a)?;
+    let pjrt_bytes = out.to_bytes();
+    let pjrt_matches_golden = pjrt_bytes == golden_bytes;
+
+    let (mut rust_ok, mut kernel_ok) = (None, None);
+    if a.kind == "reference_layer" {
+        let (spec, x, w, q) = rebuild_ref_case(a)?;
+        // the artifact's recorded input must equal our rebuilt tensor
+        let rec_input = a.read_input()?;
+        if rec_input != x.data {
+            return Err(anyhow!(
+                "{}: recorded input differs from mirrored rebuild — RNG mirror broken",
+                a.name
+            ));
+        }
+        let g = golden::conv2d(&spec, &x, &w, &q);
+        rust_ok = Some(g.data == golden_bytes);
+        let kernel = crate::kernels::ConvKernel::new(spec, &w, q);
+        let run = crate::kernels::conv_parallel(&kernel, &x, 8, crate::kernels::GAP8_TCDM_BANKS);
+        kernel_ok = Some(run.out.data == golden_bytes);
+    }
+
+    Ok(VerifyReport {
+        name: a.name.clone(),
+        pjrt_matches_golden,
+        rust_matches_golden: rust_ok,
+        kernel_matches_golden: kernel_ok,
+        output_bytes: match &out {
+            ExecOutput::PackedU8(v) => v.len(),
+            ExecOutput::LogitsI32(v) => v.len() * 4,
+        },
+    })
+}

@@ -1,0 +1,158 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `[[bench]]` target with `harness = false`:
+//! ```ignore
+//! let mut b = Bench::new("matmul_hot");
+//! b.run("w8/x8", || { ... });
+//! b.report();
+//! ```
+//! Each case is warmed up, then timed over adaptively-chosen batch sizes
+//! until a wall-clock budget is used; mean / stddev / min per-iteration
+//! times are reported.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub per_iter: Summary,
+    /// Optional throughput annotation: (units, amount per iteration).
+    pub throughput: Option<(String, f64)>,
+}
+
+pub struct Bench {
+    pub group: String,
+    budget: Duration,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // PULPNN_BENCH_BUDGET_MS shrinks runs in CI/tests.
+        let ms = std::env::var("PULPNN_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(400u64);
+        Bench { group: group.to_string(), budget: Duration::from_millis(ms), results: Vec::new() }
+    }
+
+    /// Time `f`, which performs one logical iteration and returns a value
+    /// that is passed through `std::hint::black_box` to defeat DCE.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, f: F) {
+        self.run_with_throughput(name, None, f)
+    }
+
+    /// Like [`run`], annotating each iteration with a throughput amount
+    /// (e.g. simulated MACs) so the report shows units/second.
+    pub fn run_with_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        throughput: Option<(String, f64)>,
+        mut f: F,
+    ) {
+        // Warm-up + batch-size calibration: find n such that one batch takes
+        // roughly budget/10.
+        let mut n: u64 = 1;
+        let target = self.budget / 10;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..n {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= target || n >= 1 << 24 {
+                break;
+            }
+            n = (n * 2).max((n as f64 * target.as_secs_f64() / dt.as_secs_f64().max(1e-9)) as u64);
+            n = n.clamp(1, 1 << 24);
+        }
+        // Measurement: repeat batches until the budget is spent.
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let t_start = Instant::now();
+        while t_start.elapsed() < self.budget || samples.len() < 3 {
+            let t0 = Instant::now();
+            for _ in 0..n {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / n as f64);
+            total_iters += n;
+            if samples.len() >= 200 {
+                break;
+            }
+        }
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: total_iters,
+            per_iter: Summary::of(&samples),
+            throughput,
+        });
+    }
+
+    /// Render the report to stdout; also returns it for capture.
+    pub fn report(&self) -> String {
+        let mut out = format!("\n== bench group: {} ==\n", self.group);
+        for r in &self.results {
+            let mean = r.per_iter.mean;
+            out.push_str(&format!(
+                "{:<40} {:>12}/iter  (min {:>12}, sd {:>10}, n={})\n",
+                r.name,
+                fmt_time(mean),
+                fmt_time(r.per_iter.min),
+                fmt_time(r.per_iter.stddev),
+                r.iters,
+            ));
+            if let Some((unit, amount)) = &r.throughput {
+                out.push_str(&format!(
+                    "{:<40} {:>12.3} M{}/s\n",
+                    "",
+                    amount / mean / 1e6,
+                    unit
+                ));
+            }
+        }
+        print!("{out}");
+        out
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("PULPNN_BENCH_BUDGET_MS", "20");
+        let mut b = Bench::new("selftest");
+        b.run("add", || std::hint::black_box(1u64) + 1);
+        let r = &b.results()[0];
+        assert!(r.per_iter.mean > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

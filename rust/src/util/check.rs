@@ -1,0 +1,86 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available in this offline environment, so we provide a
+//! tiny deterministic property runner with case generation from [`Rng`] and
+//! first-failure reporting. It intentionally has no shrinking — generators
+//! are written to start from small cases (sorted size parameters) so the
+//! first failing case is usually already small.
+
+use super::rng::Rng;
+
+/// Run `cases` random property checks. `f` receives a per-case RNG and the
+/// case index and returns `Err(msg)` on failure.
+///
+/// Panics with a reproducible report (seed + case index) on failure.
+pub fn check<F>(name: &str, cases: u32, mut f: F)
+where
+    F: FnMut(&mut Rng, u32) -> Result<(), String>,
+{
+    let base_seed = 0xC0FFEE ^ fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = f(&mut rng, case) {
+            panic!(
+                "property `{name}` failed at case {case} (base_seed={base_seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a hash, used to derive per-property seeds from the property name so
+/// distinct properties explore distinct streams.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two slices are equal, reporting the first mismatch index.
+pub fn expect_eq_slices<T: PartialEq + std::fmt::Debug>(
+    a: &[T],
+    b: &[T],
+    what: &str,
+) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x != y {
+            return Err(format!("{what}: first mismatch at [{i}]: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |rng, _| {
+            let v = rng.below(10);
+            if v < 10 { Ok(()) } else { Err(format!("{v} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn check_reports_failure() {
+        check("always-fails", 5, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn fnv1a_distinguishes_names() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+
+    #[test]
+    fn expect_eq_slices_reports_index() {
+        let e = expect_eq_slices(&[1, 2, 3], &[1, 9, 3], "demo").unwrap_err();
+        assert!(e.contains("[1]"), "{e}");
+    }
+}

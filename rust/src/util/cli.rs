@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Unknown flags are collected and reported by `finish()` so every
+//! subcommand validates its full argument set.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name / subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut pos = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    opts.insert(rest.to_string(), v);
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else {
+                pos.push(a);
+            }
+        }
+        Args { opts, flags, pos, consumed: Vec::new() }
+    }
+
+    /// String option with default.
+    pub fn opt(&mut self, key: &str, default: &str) -> String {
+        self.consumed.push(key.to_string());
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_maybe(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.opts.get(key).cloned()
+    }
+
+    /// Integer option with default; exits with a message on parse failure.
+    pub fn opt_usize(&mut self, key: &str, default: usize) -> usize {
+        self.consumed.push(key.to_string());
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects an unsigned integer, got `{v}`");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    pub fn opt_u64(&mut self, key: &str, default: u64) -> u64 {
+        self.consumed.push(key.to_string());
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects an unsigned integer, got `{v}`");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    pub fn opt_f64(&mut self, key: &str, default: f64) -> f64 {
+        self.consumed.push(key.to_string());
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a number, got `{v}`");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Boolean flag (present / absent).
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// Report unknown options: call after all opt()/flag() reads.
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown option(s): {}",
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let mut a = Args::parse(argv(&["--cores", "8", "--mode=lp", "pos1"]));
+        assert_eq!(a.opt_usize("cores", 1), 8);
+        assert_eq!(a.opt("mode", "hp"), "lp");
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn flags_do_not_eat_following_flag() {
+        let mut a = Args::parse(argv(&["--verbose", "--cores", "4"]));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("cores", 1), 4);
+    }
+
+    #[test]
+    fn unknown_options_reported() {
+        let mut a = Args::parse(argv(&["--bogus", "--cores", "2"]));
+        let _ = a.opt_usize("cores", 1);
+        let err = a.finish().unwrap_err();
+        assert!(err.contains("--bogus"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(argv(&[]));
+        assert_eq!(a.opt("mode", "hp"), "hp");
+        assert_eq!(a.opt_f64("scale", 1.5), 1.5);
+        assert!(!a.flag("verbose"));
+    }
+}

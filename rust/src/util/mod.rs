@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic RNG, property-test harness, JSON,
+//! statistics, table rendering, CLI parsing and the micro-bench harness.
+//!
+//! Everything here is dependency-free (std only) because the build
+//! environment is offline — see DESIGN.md §6.
+
+pub mod benchkit;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,115 @@
+//! ASCII table and bar-chart rendering for the paper-figure harness.
+//!
+//! The paper's evaluation is two bar charts (Fig. 4, Fig. 5), one grouped
+//! bar chart (Fig. 6) and one table (Tab. 1). `pulpnn figN` renders the same
+//! rows/series as text so the reproduction can be eyeballed against the
+//! paper in a terminal and diffed in CI.
+
+/// A simple right-padded text table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}", c, w = widths[i]));
+                line.push_str(" | ");
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal bar chart: one `#`-bar per labelled value, scaled to `width`.
+pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let max = entries.iter().map(|e| e.1).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = entries.iter().map(|e| e.0.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in entries {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!("  {label:<label_w$} | {:<width$} {v:.2}\n", "#".repeat(n)));
+    }
+    out
+}
+
+/// Format a f64 with a fixed number of decimals (helper for table cells).
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["short", "1"]);
+        t.row(vec!["a-longer-name", "23456"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len() || l.starts_with('|')));
+        assert!(s.contains("a-longer-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart("demo", &[("a".into(), 1.0), ("b".into(), 2.0)], 10);
+        assert!(s.contains("##########"));
+        assert!(s.contains("#####"));
+    }
+
+    #[test]
+    fn fixed_decimals() {
+        assert_eq!(f(2.4567, 2), "2.46");
+    }
+}

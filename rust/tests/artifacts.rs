@@ -1,0 +1,93 @@
+//! Integration tests over the AOT artifacts: the full
+//! PJRT == python-golden == rust-golden == simulated-kernel chain.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! notice) when artifacts/ is absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use pulpnn_mp::qnn::network::demo_cnn;
+use pulpnn_mp::qnn::tensor::QTensor;
+use pulpnn_mp::runtime::{verify_artifact, Manifest, Runtime};
+use pulpnn_mp::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP artifact tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_contains_all_27_plus_network() {
+    let Some(m) = manifest() else { return };
+    let refs = m.artifacts.iter().filter(|a| a.kind == "reference_layer").count();
+    assert_eq!(refs, 27, "expected all 27 reference-layer artifacts");
+    assert!(m.find("demo_cnn_mixed").is_some());
+}
+
+#[test]
+fn reference_layer_chain_bit_exact_sample() {
+    // A representative subset across all three precisions per slot
+    // (the full 27 are covered by `pulpnn verify`; compiling all of them
+    // in a unit test is slow).
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    for (x, w, y) in [(8, 8, 8), (4, 2, 4), (2, 4, 2), (8, 2, 8), (2, 2, 2)] {
+        let Some(a) = m.find_ref_layer(x, w, y) else {
+            panic!("missing ref_layer x{x}w{w}y{y}");
+        };
+        let report = verify_artifact(&mut rt, a).expect("verification ran");
+        assert!(report.pjrt_matches_golden, "{}: PJRT != python golden", a.name);
+        assert_eq!(report.rust_matches_golden, Some(true), "{}: rust golden", a.name);
+        assert_eq!(report.kernel_matches_golden, Some(true), "{}: kernels", a.name);
+    }
+}
+
+#[test]
+fn demo_network_pjrt_matches_rust_golden_and_simulator() {
+    let Some(m) = manifest() else { return };
+    let Some(a) = m.find("demo_cnn_mixed") else { return };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+
+    // 1. PJRT output == python golden file
+    let out = rt.execute_recorded(a).expect("execute");
+    let golden_bytes = a.read_golden().unwrap();
+    assert_eq!(out.to_bytes(), golden_bytes, "PJRT != python golden");
+    let logits = out.as_logits().expect("network emits logits").to_vec();
+
+    // 2. rust golden model on the mirrored input == same logits
+    let net = demo_cnn().materialize().unwrap();
+    let mut rng = Rng::new(a.seed);
+    let x = QTensor::random(&mut rng, net.spec.input, net.spec.input_bits);
+    assert_eq!(x.data, a.read_input().unwrap(), "input mirror broken");
+    let fwd = net.forward_golden(&x);
+    assert_eq!(fwd.logits.as_ref().unwrap(), &logits, "rust golden != PJRT");
+
+    // 3. simulated GAP-8 backend == same logits
+    let run = pulpnn_mp::kernels::netrun::GapBackend::default().run(&net, &x);
+    assert_eq!(run.logits.as_ref().unwrap(), &logits, "simulator != PJRT");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(m) = manifest() else { return };
+    let a = &m.artifacts[0];
+    let mut rt = Runtime::cpu().expect("client");
+    rt.load(a).unwrap();
+    assert!(rt.is_loaded(&a.name));
+    let t0 = std::time::Instant::now();
+    rt.load(a).unwrap(); // cached: must be instant
+    assert!(t0.elapsed().as_millis() < 5);
+}
+
+#[test]
+fn execute_rejects_wrong_input_size() {
+    let Some(m) = manifest() else { return };
+    let a = &m.artifacts[0];
+    let mut rt = Runtime::cpu().expect("client");
+    let err = rt.execute(a, &[0u8; 3]).unwrap_err();
+    assert!(err.to_string().contains("manifest says"), "{err}");
+}

@@ -1,0 +1,99 @@
+//! CLI integration tests: every evaluation subcommand must run to
+//! completion and emit its expected report skeleton.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pulpnn"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (out, _, _) = run(&["help"]);
+    for cmd in ["fig4", "table1", "fig5", "fig6", "sweep", "verify", "serve"] {
+        assert!(out.contains(cmd), "help missing `{cmd}`");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (_, err, ok) = run(&["bogus"]);
+    assert!(!ok);
+    assert!(err.contains("unknown command"));
+}
+
+#[test]
+fn fig4_reports_weight_rows() {
+    let (out, _, ok) = run(&["fig4"]);
+    assert!(ok);
+    assert!(out.contains("Fig. 4"));
+    for w in ["8b", "4b", "2b"] {
+        assert!(out.contains(w));
+    }
+}
+
+#[test]
+fn table1_reports_paper_column() {
+    let (out, _, ok) = run(&["table1"]);
+    assert!(ok);
+    assert!(out.contains("16.64")); // the paper reference column
+}
+
+#[test]
+fn innerloop_cross_check_passes() {
+    let (out, _, ok) = run(&["innerloop"]);
+    assert!(ok, "innerloop failed: {out}");
+    assert!(out.contains("14"));
+    assert!(out.contains("72"));
+    assert!(out.contains("140"));
+    assert!(out.contains("true"), "bit-exactness column: {out}");
+    assert!(!out.contains("false"));
+}
+
+#[test]
+fn run_demo_network_matches_golden() {
+    let (out, err, ok) = run(&["run", "--cores", "2"]);
+    assert!(ok, "{err}");
+    assert!(out.contains("logits match the golden model bit-exactly"), "{out}");
+}
+
+#[test]
+fn footprint_reports_seven_x_band() {
+    let (out, _, ok) = run(&["footprint"]);
+    assert!(ok);
+    assert!(out.contains("mixed (CMix-NN style)"));
+}
+
+#[test]
+fn serve_simulates_fleet() {
+    let (out, _, ok) = run(&["serve", "--devices", "2", "--requests", "200", "--rate", "100"]);
+    assert!(ok);
+    assert!(out.contains("throughput"));
+    assert!(out.contains("per-device"));
+}
+
+#[test]
+fn emit_spec_roundtrips_through_loader() {
+    let (out, _, ok) = run(&["emit-spec"]);
+    assert!(ok);
+    let spec = pulpnn_mp::util::json::Json::parse(out.trim()).expect("valid JSON");
+    let net = pulpnn_mp::qnn::network::NetworkSpec::from_json(&spec).expect("parsable spec");
+    assert_eq!(net.name, "demo_cnn_mixed");
+    assert!(net.materialize().is_ok());
+}
+
+#[test]
+fn seed_changes_workload_but_not_shape() {
+    let (a, _, _) = run(&["peak", "--seed", "1"]);
+    let (b, _, _) = run(&["peak", "--seed", "2"]);
+    assert!(a.contains("MACs/cycle"));
+    assert!(b.contains("MACs/cycle"));
+}
