@@ -2,14 +2,18 @@
 //!
 //!     make artifacts && cargo run --release --example edge_serving
 //!
-//! Loads the AOT'd demo CNN (JAX/Pallas -> HLO text -> PJRT), serves a
-//! batch of real inference requests through the coordinator's queue on
-//! XLA-CPU — measuring wall-clock latency/throughput — and runs the same
-//! workload through the simulated GAP-8 edge fleet for on-device
-//! latency/energy. Every response is verified bit-exact against the rust
-//! golden model.
+//! Loads the AOT'd demo CNN artifact, serves a batch of real inference
+//! requests through the coordinator's queue on the artifact runtime
+//! (native golden executor in this offline build; a PJRT client on
+//! machines that have one) — measuring wall-clock latency/throughput —
+//! and runs the same workload through the simulated GAP-8 edge fleet for
+//! on-device latency/energy. Every response is verified bit-exact against
+//! the rust golden model.
 
-use pulpnn_mp::coordinator::{gap8_fleet, server, Policy, Server, Workload};
+use pulpnn_mp::coordinator::{
+    gap8_mixed_devices, server, Fleet, FleetConfig, Policy, Server, Workload,
+    DEFAULT_WAKEUP_CYCLES,
+};
 use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
 use pulpnn_mp::qnn::network::demo_cnn;
@@ -19,7 +23,7 @@ use pulpnn_mp::util::rng::Rng;
 
 const N_REQUESTS: usize = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pulpnn_mp::util::error::Result<()> {
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(e) => {
@@ -31,9 +35,9 @@ fn main() -> anyhow::Result<()> {
     let artifact = manifest.find("demo_cnn_mixed").expect("demo artifact");
     let net = demo_cnn().materialize().unwrap();
 
-    // --- phase 1: real inference over PJRT through the serving queue ---
+    // --- phase 1: real inference through the serving queue ---
     let mut rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("runtime platform: {}", rt.platform());
     let t0 = std::time::Instant::now();
     let mut srv = Server::new(&mut rt, artifact, 256)?;
     println!("compiled demo CNN in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
@@ -53,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     let served = srv.drain()?;
     let wall = t0.elapsed().as_secs_f64();
     let stats = server::stats(&served, wall);
-    println!("\nserved {} requests over PJRT (XLA-CPU):", stats.served);
+    println!("\nserved {} requests through the artifact runtime:", stats.served);
     println!("  throughput : {:.1} req/s", stats.throughput_rps);
     println!("  mean exec  : {:.2} ms", stats.mean_exec_us / 1e3);
     println!("  p99 exec   : {:.2} ms", stats.p99_exec_us / 1e3);
@@ -63,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(*id, s.id);
         let want = net.forward_golden(x).logits.unwrap();
         let got = s.output.as_logits().expect("logits");
-        assert_eq!(got, want.as_slice(), "request {id}: PJRT != golden");
+        assert_eq!(got, want.as_slice(), "request {id}: runtime != golden");
     }
     println!("  all {} responses bit-exact vs the golden model ✓", served.len());
 
@@ -78,12 +82,13 @@ fn main() -> anyhow::Result<()> {
         GAP8_HP.time_ms(sim.total_cycles)
     );
 
-    let mut fleet = gap8_fleet(4, GAP8_LP, sim.total_cycles, Policy::EnergyAware);
-    for (i, d) in fleet.devices.iter_mut().enumerate() {
-        if i % 2 == 1 {
-            d.op = GAP8_HP;
-        }
-    }
+    let nodes = gap8_mixed_devices(4, sim.total_cycles);
+    let config = FleetConfig {
+        queue_bound: 128,
+        batch_max: 4,
+        wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
+    };
+    let mut fleet = Fleet::with_config(nodes, Policy::EnergyAware, config);
     let reqs = Workload {
         rate_per_s: 150.0,
         deadline_us: Some(40_000.0),
@@ -92,12 +97,24 @@ fn main() -> anyhow::Result<()> {
     }
     .generate();
     let report = fleet.run(&reqs);
-    println!("\nedge fleet (2x LP + 2x HP, energy-aware routing, 150 rps, 40 ms deadline):");
+    println!(
+        "\nedge fleet (2x LP + 2x HP, energy-aware routing, 150 rps, 40 ms deadline,\n\
+         queue bound 128, micro-batches of up to 4):"
+    );
     println!("  throughput     : {:.1} req/s", report.throughput_rps);
     println!("  mean latency   : {:.2} ms", report.mean_latency_us / 1e3);
     println!("  p99 latency    : {:.2} ms", report.p99_latency_us / 1e3);
-    println!("  energy         : {:.2} mJ total", report.total_energy_uj / 1e3);
+    println!(
+        "  energy         : {:.2} mJ active + {:.2} mJ idle",
+        report.active_energy_uj / 1e3,
+        report.idle_energy_uj / 1e3
+    );
     println!("  deadline misses: {}", report.deadline_misses);
+    println!("  shed requests  : {}", report.shed);
+    println!(
+        "  activations    : {} ({:.2} requests/batch mean)",
+        report.batches, report.mean_batch_size
+    );
     println!("  per-device     : {:?}", report.per_device_served);
     Ok(())
 }

@@ -1,0 +1,110 @@
+//! Fleet-scale serving sweep: the event-driven coordinator from 1 to 64
+//! devices under open-loop Poisson arrivals at 0.5x-4x of fleet capacity,
+//! with and without micro-batching.
+//!
+//! Self-checking: at >= 2x overload, batching must strictly improve
+//! sustained throughput without violating the per-device FIFO no-overlap
+//! property (the bench asserts both).
+
+use pulpnn_mp::coordinator::{
+    gap8_mixed_devices, Fleet, FleetConfig, FleetReport, Policy, Workload, DEFAULT_WAKEUP_CYCLES,
+};
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::table::{f, Table};
+
+/// Demo-CNN-scale inference cost (cycles) — fixed so the sweep does not
+/// depend on the simulator.
+const CYCLES_PER_INFERENCE: u64 = 300_000;
+
+fn fleet(n: usize, config: FleetConfig) -> Fleet {
+    Fleet::with_config(gap8_mixed_devices(n, CYCLES_PER_INFERENCE), Policy::LeastLoaded, config)
+}
+
+/// Aggregate service capacity of the fleet in requests/s (no wake-up).
+fn capacity_rps(n: usize) -> f64 {
+    gap8_mixed_devices(n, CYCLES_PER_INFERENCE)
+        .iter()
+        .map(|d| 1e6 / d.inference_us())
+        .sum()
+}
+
+fn run(n: usize, load: f64, batch_max: usize, n_requests: usize) -> FleetReport {
+    let config = FleetConfig {
+        queue_bound: 32,
+        batch_max,
+        wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
+    };
+    let workload = Workload {
+        rate_per_s: capacity_rps(n) * load,
+        deadline_us: None,
+        n_requests,
+        seed: 2020,
+    };
+    fleet(n, config).run(&workload.generate())
+}
+
+fn main() {
+    let mut t = Table::new(vec![
+        "devices",
+        "load",
+        "batch",
+        "throughput [rps]",
+        "capacity [rps]",
+        "p99 [ms]",
+        "shed",
+        "mean batch",
+        "util",
+    ]);
+    for &n in &[1usize, 2, 4, 8, 16, 32, 64] {
+        for &load in &[0.5f64, 1.0, 2.0, 4.0] {
+            for &batch in &[1usize, 8] {
+                let n_requests = (500 * n).min(20_000);
+                let r = run(n, load, batch, n_requests);
+                r.check_fifo_no_overlap().unwrap();
+                let util = r.per_device_utilization.iter().sum::<f64>()
+                    / r.per_device_utilization.len() as f64;
+                t.row(vec![
+                    n.to_string(),
+                    format!("{load}x"),
+                    batch.to_string(),
+                    f(r.throughput_rps, 1),
+                    f(capacity_rps(n), 1),
+                    f(r.p99_latency_us / 1e3, 2),
+                    r.shed.to_string(),
+                    f(r.mean_batch_size, 2),
+                    f(util, 2),
+                ]);
+            }
+        }
+    }
+    println!("Event-driven fleet serving sweep (LeastLoaded, queue_bound=32):\n");
+    print!("{}", t.render());
+
+    // batching must strictly help at sustained overload
+    for &n in &[2usize, 8, 32] {
+        for &load in &[2.0f64, 4.0] {
+            let n_requests = (500 * n).min(20_000);
+            let single = run(n, load, 1, n_requests);
+            let batched = run(n, load, 8, n_requests);
+            assert!(
+                batched.throughput_rps > single.throughput_rps,
+                "batching did not improve throughput at {n} devices, {load}x: \
+                 {} vs {} rps",
+                batched.throughput_rps,
+                single.throughput_rps
+            );
+        }
+    }
+    println!("\nbatching strictly improves sustained throughput at >=2x overload ✓");
+
+    // wall-clock cost of the simulation itself (host-side scalability)
+    let mut b = Bench::new("fleet_scale");
+    for &n in &[8usize, 64] {
+        b.run_with_throughput(
+            &format!("event engine: {n} devices, 2x overload, batch 8"),
+            Some(("simReq".into(), (500 * n).min(20_000) as f64)),
+            || run(n, 2.0, 8, (500 * n).min(20_000)).completions.len(),
+        );
+    }
+    b.report();
+}

@@ -1,7 +1,23 @@
-//! The edge-fleet coordinator: routes inference requests across a fleet of
-//! simulated GAP-8 nodes (per-device FIFO queues, no preemption — an MCU
-//! runs one inference at a time), with latency / throughput / energy
-//! accounting derived from the kernel-library cycle counts.
+//! The edge-fleet coordinator: a discrete-event serving engine routing
+//! inference requests across a fleet of simulated GAP-8 nodes.
+//!
+//! The engine runs a binary-heap event queue over three event types —
+//! `Arrival` (a request enters the system and is routed), `DispatchBatch`
+//! (an idle device drains a micro-batch from its FIFO) and `Finish` (a
+//! device completes its in-flight activation) — with per-device *bounded*
+//! FIFO queues, admission control (requests are shed with a [`Rejection`]
+//! record when every admissible queue is full) and micro-batching (one
+//! cluster activation serves up to `batch_max` queued requests of the same
+//! network, amortizing the wake-up/setup cycles). See the module docs of
+//! [`crate::coordinator`] for the full architecture.
+//!
+//! [`Fleet::run_synchronous`] preserves the original one-pass synchronous
+//! semantics as a reference baseline: with an unbounded queue, no batching
+//! and no wake-up cost the event engine reproduces it bit-exactly (see
+//! `prop_event_engine_matches_synchronous_baseline`).
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::energy::OperatingPoint;
 use crate::util::rng::Rng;
@@ -12,12 +28,43 @@ use super::request::Request;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
-    /// Route to the device whose queue drains earliest.
+    /// Route to the device whose queue drains earliest (projected drain
+    /// time over everything committed to the device, not just the
+    /// in-flight activation).
     LeastLoaded,
     /// Prefer low-power devices; spill to high-performance ones only when
     /// the deadline would otherwise be missed.
     EnergyAware,
 }
+
+/// Serving-engine knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    /// Max pending (queued, not yet dispatched) requests per device;
+    /// `usize::MAX` means unbounded.
+    pub queue_bound: usize,
+    /// Max requests of one network served per cluster activation.
+    pub batch_max: usize,
+    /// Cycles charged per activation before the first inference of a
+    /// batch: cluster power-gate exit, FC-to-cluster offload setup and the
+    /// event-unit barrier release (`isa::cost::BARRIER_COST` per core).
+    pub wakeup_cycles: u64,
+}
+
+impl Default for FleetConfig {
+    /// The backward-compatible configuration: unbounded queues, no
+    /// batching, no wake-up cost — identical semantics to the original
+    /// synchronous coordinator.
+    fn default() -> FleetConfig {
+        FleetConfig { queue_bound: usize::MAX, batch_max: 1, wakeup_cycles: 0 }
+    }
+}
+
+/// Default per-activation wake-up/setup cost for batched serving:
+/// ~111 us at the 90 MHz low-power point (GAP-8 cluster power-gate exit
+/// plus runtime offload setup; the event-unit barrier release alone is
+/// `8 * isa::cost::BARRIER_COST` of it).
+pub const DEFAULT_WAKEUP_CYCLES: u64 = 10_000;
 
 /// One simulated edge node.
 #[derive(Debug, Clone)]
@@ -26,19 +73,55 @@ pub struct Device {
     pub op: OperatingPoint,
     /// Cycles one inference takes on this node (from the GAP-8 simulator).
     pub cycles_per_inference: u64,
-    /// Simulated time at which the device becomes free.
-    free_at_us: f64,
     pub served: u64,
+    /// Active (computing) energy.
     pub energy_uj: f64,
+    /// Pending requests (FIFO).
+    queue: VecDeque<Request>,
+    /// End of the in-flight activation (valid while `in_flight`).
+    busy_until_us: f64,
+    in_flight: bool,
+    /// Projected drain time of everything committed to this device — the
+    /// synchronous coordinator's `free_at_us`, kept for routing.
+    committed_free_us: f64,
+    /// Accumulated active (wake-up + inference) wall-clock.
+    busy_us: f64,
 }
 
 impl Device {
     pub fn new(name: String, op: OperatingPoint, cycles_per_inference: u64) -> Device {
-        Device { name, op, cycles_per_inference, free_at_us: 0.0, served: 0, energy_uj: 0.0 }
+        Device {
+            name,
+            op,
+            cycles_per_inference,
+            served: 0,
+            energy_uj: 0.0,
+            queue: VecDeque::new(),
+            busy_until_us: 0.0,
+            in_flight: false,
+            committed_free_us: 0.0,
+            busy_us: 0.0,
+        }
     }
 
     pub fn inference_us(&self) -> f64 {
         self.op.time_ms(self.cycles_per_inference) * 1e3
+    }
+
+    /// Current pending-queue depth (excludes the in-flight batch).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// End of the in-flight activation (the last finish time once idle).
+    pub fn busy_until_us(&self) -> f64 {
+        self.busy_until_us
+    }
+
+    /// Projected time at which everything committed to this device (the
+    /// in-flight activation plus the queue) has drained.
+    pub fn projected_drain_us(&self) -> f64 {
+        self.committed_free_us
     }
 }
 
@@ -47,6 +130,10 @@ impl Device {
 pub struct Completion {
     pub id: u64,
     pub device: usize,
+    pub net: u32,
+    /// Activation (batch) this request was served in — global counter;
+    /// requests sharing it were served by one cluster wake-up.
+    pub batch: u64,
     pub arrival_us: f64,
     pub start_us: f64,
     pub finish_us: f64,
@@ -59,53 +146,182 @@ impl Completion {
     }
 }
 
+/// A request shed by admission control (every admissible queue full).
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub id: u64,
+    pub arrival_us: f64,
+}
+
+/// One point of the queue-depth time series: device `device` held `depth`
+/// pending requests at `t_us` (sampled after every enqueue and dispatch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueueSample {
+    pub t_us: f64,
+    pub device: usize,
+    pub depth: usize,
+}
+
 /// Aggregated fleet metrics.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub completions: Vec<Completion>,
+    pub rejections: Vec<Rejection>,
+    /// Requests shed by admission control (`== rejections.len()`).
+    pub shed: usize,
+    /// Sustained throughput over the span from first arrival to last
+    /// finish (completed requests only).
     pub throughput_rps: f64,
     pub mean_latency_us: f64,
     pub p99_latency_us: f64,
+    /// Active + idle energy.
     pub total_energy_uj: f64,
+    pub active_energy_uj: f64,
+    /// Energy idling (cluster power-gated) between activations.
+    pub idle_energy_uj: f64,
     pub deadline_misses: usize,
     pub per_device_served: Vec<u64>,
+    /// Active fraction of the serving span, per device.
+    pub per_device_utilization: Vec<f64>,
+    /// Queue-depth samples in event order.
+    pub queue_depth_series: Vec<QueueSample>,
+    /// Cluster activations dispatched.
+    pub batches: u64,
+    /// Mean requests per activation.
+    pub mean_batch_size: f64,
+}
+
+impl FleetReport {
+    /// Largest pending-queue depth a device ever reported.
+    pub fn max_queue_depth(&self, device: usize) -> usize {
+        self.queue_depth_series
+            .iter()
+            .filter(|s| s.device == device)
+            .map(|s| s.depth)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Verify the per-device FIFO no-overlap invariant: completion windows
+    /// on one device must never intersect (used by the property tests and
+    /// the self-checking `fleet_scale` bench).
+    pub fn check_fifo_no_overlap(&self) -> Result<(), String> {
+        for d in 0..self.per_device_served.len() {
+            let mut times: Vec<(f64, f64)> = self
+                .completions
+                .iter()
+                .filter(|c| c.device == d)
+                .map(|c| (c.start_us, c.finish_us))
+                .collect();
+            times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in times.windows(2) {
+                if w[1].0 < w[0].1 - 1e-9 {
+                    return Err(format!("device {d}: overlapping runs {w:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Discrete-event queue entry. The heap is a max-heap, so `Ord` is
+/// reversed: earliest time (then lowest insertion sequence) pops first.
+#[derive(Debug, Clone)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    Arrival(Request),
+    DispatchBatch { device: usize },
+    Finish { device: usize },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed on both keys: min-heap behaviour out of BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("event times are finite")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
 }
 
 /// The coordinator.
 pub struct Fleet {
     pub devices: Vec<Device>,
     pub policy: Policy,
+    pub config: FleetConfig,
     rr_next: usize,
 }
 
 impl Fleet {
     pub fn new(devices: Vec<Device>, policy: Policy) -> Fleet {
-        assert!(!devices.is_empty());
-        Fleet { devices, policy, rr_next: 0 }
+        Fleet::with_config(devices, policy, FleetConfig::default())
     }
 
-    /// Pick a device for a request arriving at `now`.
-    fn route(&mut self, req: &Request, now: f64) -> usize {
+    pub fn with_config(devices: Vec<Device>, policy: Policy, config: FleetConfig) -> Fleet {
+        assert!(!devices.is_empty());
+        assert!(config.queue_bound >= 1, "queue_bound must be >= 1");
+        assert!(config.batch_max >= 1, "batch_max must be >= 1");
+        Fleet { devices, policy, config, rr_next: 0 }
+    }
+
+    fn wakeup_us(&self, d: usize) -> f64 {
+        self.devices[d].op.time_ms(self.config.wakeup_cycles) * 1e3
+    }
+
+    /// Pick a device for a request arriving at `now`, considering only
+    /// devices whose bounded queue has room. Returns `None` when every
+    /// admissible queue is full (the request is shed).
+    fn route(&mut self, req: &Request, now: f64) -> Option<usize> {
+        let bound = self.config.queue_bound;
         match self.policy {
             Policy::RoundRobin => {
-                let d = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.devices.len();
-                d
+                let n = self.devices.len();
+                for k in 0..n {
+                    let d = (self.rr_next + k) % n;
+                    if self.devices[d].queue.len() < bound {
+                        self.rr_next = (d + 1) % n;
+                        return Some(d);
+                    }
+                }
+                None
             }
             Policy::LeastLoaded => self
                 .devices
                 .iter()
                 .enumerate()
+                .filter(|(_, dev)| dev.queue.len() < bound)
                 .min_by(|(_, a), (_, b)| {
-                    let fa = a.free_at_us.max(now) + a.inference_us();
-                    let fb = b.free_at_us.max(now) + b.inference_us();
+                    let fa = a.committed_free_us.max(now) + a.inference_us();
+                    let fb = b.committed_free_us.max(now) + b.inference_us();
                     fa.partial_cmp(&fb).unwrap()
                 })
-                .map(|(i, _)| i)
-                .unwrap(),
+                .map(|(i, _)| i),
             Policy::EnergyAware => {
-                // candidate finish time per device, energy-sorted
-                let mut order: Vec<usize> = (0..self.devices.len()).collect();
+                // admissible devices, energy-sorted
+                let mut order: Vec<usize> = (0..self.devices.len())
+                    .filter(|&i| self.devices[i].queue.len() < bound)
+                    .collect();
+                if order.is_empty() {
+                    return None;
+                }
                 order.sort_by(|&a, &b| {
                     let ea = self.devices[a].op.energy_uj(self.devices[a].cycles_per_inference);
                     let eb = self.devices[b].op.energy_uj(self.devices[b].cycles_per_inference);
@@ -114,41 +330,185 @@ impl Fleet {
                 if let Some(dl) = req.deadline_us {
                     for &d in &order {
                         let dev = &self.devices[d];
-                        let finish = dev.free_at_us.max(now) + dev.inference_us();
+                        // projected drain including wake-ups: committed only
+                        // accrues wake cost at dispatch, so add one wake-up
+                        // per activation still needed to drain the queue
+                        // plus this request (batches may split on network
+                        // boundaries, so this is still a lower bound)
+                        let activations = (dev.queue.len() + 1).div_ceil(self.config.batch_max);
+                        let finish = dev.committed_free_us.max(now)
+                            + dev.inference_us()
+                            + activations as f64 * self.wakeup_us(d);
                         if finish - req.arrival_us <= dl {
-                            return d;
+                            return Some(d);
                         }
                     }
                 }
-                // no deadline (or none can meet it): cheapest with least load
-                *order
+                // no deadline (or none can meet it): cheapest with the
+                // earliest projected drain
+                order
                     .iter()
                     .min_by(|&&a, &&b| {
                         self.devices[a]
-                            .free_at_us
-                            .partial_cmp(&self.devices[b].free_at_us)
+                            .committed_free_us
+                            .partial_cmp(&self.devices[b].committed_free_us)
                             .unwrap()
                     })
-                    .unwrap()
+                    .copied()
             }
         }
     }
 
-    /// Run the full workload through the fleet (event-driven, requests are
-    /// pre-sorted by arrival).
+    /// Reset all serving state so consecutive `run` calls are independent
+    /// (each report reflects exactly the workload it was given).
+    fn reset(&mut self) {
+        self.rr_next = 0;
+        for dev in &mut self.devices {
+            dev.queue.clear();
+            dev.busy_until_us = 0.0;
+            dev.in_flight = false;
+            dev.committed_free_us = 0.0;
+            dev.busy_us = 0.0;
+            dev.served = 0;
+            dev.energy_uj = 0.0;
+        }
+    }
+
+    /// Run the full workload through the event-driven serving engine.
     pub fn run(&mut self, requests: &[Request]) -> FleetReport {
+        self.reset();
+        let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(requests.len() + 16);
+        let mut seq = 0u64;
+        for req in requests {
+            heap.push(Event { time: req.arrival_us, seq, kind: EventKind::Arrival(req.clone()) });
+            seq += 1;
+        }
+
+        let mut completions: Vec<Completion> = Vec::with_capacity(requests.len());
+        let mut rejections: Vec<Rejection> = Vec::new();
+        let mut series: Vec<QueueSample> = Vec::new();
+        let mut batches = 0u64;
+        let mut batched_requests = 0u64;
+
+        while let Some(ev) = heap.pop() {
+            let now = ev.time;
+            match ev.kind {
+                EventKind::Arrival(req) => match self.route(&req, now) {
+                    Some(d) => {
+                        let dev = &mut self.devices[d];
+                        dev.committed_free_us =
+                            dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
+                        dev.queue.push_back(req);
+                        series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
+                        if !dev.in_flight {
+                            heap.push(Event {
+                                time: now,
+                                seq,
+                                kind: EventKind::DispatchBatch { device: d },
+                            });
+                            seq += 1;
+                        }
+                    }
+                    None => rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us }),
+                },
+                EventKind::DispatchBatch { device: d } => {
+                    let wake_us = self.wakeup_us(d);
+                    let batch_max = self.config.batch_max;
+                    let wakeup_cycles = self.config.wakeup_cycles;
+                    let dev = &mut self.devices[d];
+                    if dev.in_flight || dev.queue.is_empty() {
+                        continue; // stale dispatch
+                    }
+                    // the micro-batch: longest same-network FIFO prefix
+                    let net = dev.queue.front().unwrap().net;
+                    let mut batch: Vec<Request> = Vec::new();
+                    while batch.len() < batch_max
+                        && dev.queue.front().is_some_and(|r| r.net == net)
+                    {
+                        batch.push(dev.queue.pop_front().unwrap());
+                    }
+                    series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
+
+                    let start = now;
+                    let inf = dev.inference_us();
+                    let mut t = start + wake_us;
+                    for req in &batch {
+                        let s = t;
+                        t += inf;
+                        completions.push(Completion {
+                            id: req.id,
+                            device: d,
+                            net: req.net,
+                            batch: batches,
+                            arrival_us: req.arrival_us,
+                            start_us: s,
+                            finish_us: t,
+                            deadline_missed: req
+                                .deadline_us
+                                .map(|dl| t - req.arrival_us > dl)
+                                .unwrap_or(false),
+                        });
+                    }
+                    let finish = t;
+                    let k = batch.len() as u64;
+                    dev.in_flight = true;
+                    dev.busy_until_us = finish;
+                    dev.busy_us += finish - start;
+                    dev.served += k;
+                    dev.energy_uj +=
+                        dev.op.energy_uj(wakeup_cycles + k * dev.cycles_per_inference);
+                    // the committed-drain projection assumed inference time
+                    // only; account for the activation's wake-up
+                    dev.committed_free_us += wake_us;
+                    batches += 1;
+                    batched_requests += k;
+                    heap.push(Event { time: finish, seq, kind: EventKind::Finish { device: d } });
+                    seq += 1;
+                }
+                EventKind::Finish { device: d } => {
+                    let dev = &mut self.devices[d];
+                    dev.in_flight = false;
+                    if !dev.queue.is_empty() {
+                        heap.push(Event {
+                            time: now,
+                            seq,
+                            kind: EventKind::DispatchBatch { device: d },
+                        });
+                        seq += 1;
+                    }
+                }
+            }
+        }
+        self.finalize(completions, rejections, series, batches, batched_requests)
+    }
+
+    /// One-pass synchronous baseline — the coordinator's original
+    /// semantics, kept as the reference the event engine is property-tested
+    /// against. Only valid for the backward-compatible configuration
+    /// (unbounded queue, `batch_max == 1`, no wake-up cost).
+    pub fn run_synchronous(&mut self, requests: &[Request]) -> FleetReport {
+        assert_eq!(
+            self.config,
+            FleetConfig::default(),
+            "run_synchronous models the unbounded/unbatched configuration only"
+        );
+        self.reset();
         let mut completions = Vec::with_capacity(requests.len());
         for req in requests {
-            let d = self.route(req, req.arrival_us);
+            let d = self.route(req, req.arrival_us).expect("unbounded queues never shed");
             let dev = &mut self.devices[d];
-            let start = dev.free_at_us.max(req.arrival_us);
+            let start = dev.committed_free_us.max(req.arrival_us);
             let finish = start + dev.inference_us();
-            dev.free_at_us = finish;
+            dev.committed_free_us = finish;
+            dev.busy_until_us = finish;
+            dev.busy_us += finish - start;
             dev.served += 1;
             dev.energy_uj += dev.op.energy_uj(dev.cycles_per_inference);
             completions.push(Completion {
                 id: req.id,
                 device: d,
+                net: req.net,
+                batch: completions.len() as u64,
                 arrival_us: req.arrival_us,
                 start_us: start,
                 finish_us: finish,
@@ -158,25 +518,59 @@ impl Fleet {
                     .unwrap_or(false),
             });
         }
-        let span_s = completions
-            .iter()
-            .map(|c| c.finish_us)
-            .fold(0.0f64, f64::max)
-            .max(1e-9)
-            / 1e6;
+        let n = completions.len() as u64;
+        self.finalize(completions, Vec::new(), Vec::new(), n, n)
+    }
+
+    fn finalize(
+        &self,
+        completions: Vec<Completion>,
+        rejections: Vec<Rejection>,
+        series: Vec<QueueSample>,
+        batches: u64,
+        batched_requests: u64,
+    ) -> FleetReport {
+        // sustained-throughput span: first arrival to last finish (with an
+        // epsilon floor), not `max(finish)` — a workload whose first
+        // request arrives late must not get its throughput inflated.
+        let span_start = completions.iter().map(|c| c.arrival_us).fold(f64::INFINITY, f64::min);
+        let span_end = completions.iter().map(|c| c.finish_us).fold(0.0f64, f64::max);
+        let span_us = if completions.is_empty() { 0.0 } else { (span_end - span_start).max(1e-9) };
         let lats: Vec<f64> = completions.iter().map(|c| c.latency_us()).collect();
+        let active_energy_uj: f64 = self.devices.iter().map(|d| d.energy_uj).sum();
+        let idle_energy_uj: f64 = self
+            .devices
+            .iter()
+            .map(|d| d.op.idle_energy_uj((span_us - d.busy_us).max(0.0)))
+            .sum();
         FleetReport {
-            throughput_rps: completions.len() as f64 / span_s,
+            shed: rejections.len(),
+            throughput_rps: if span_us > 0.0 {
+                completions.len() as f64 / (span_us / 1e6)
+            } else {
+                0.0
+            },
             mean_latency_us: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
             p99_latency_us: if lats.is_empty() {
                 0.0
             } else {
                 crate::util::stats::percentile(&lats, 99.0)
             },
-            total_energy_uj: self.devices.iter().map(|d| d.energy_uj).sum(),
+            total_energy_uj: active_energy_uj + idle_energy_uj,
+            active_energy_uj,
+            idle_energy_uj,
             deadline_misses: completions.iter().filter(|c| c.deadline_missed).count(),
             per_device_served: self.devices.iter().map(|d| d.served).collect(),
+            per_device_utilization: self
+                .devices
+                .iter()
+                .map(|d| if span_us > 0.0 { (d.busy_us / span_us).min(1.0) } else { 0.0 })
+                .collect(),
+            queue_depth_series: series,
+            batches,
+            mean_batch_size: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
             completions,
+            rejections,
         }
     }
 }
@@ -191,10 +585,30 @@ pub fn gap8_fleet(n: usize, op: OperatingPoint, cycles_per_inference: u64, polic
     )
 }
 
+/// Build the canonical heterogeneous device set: alternating low-power and
+/// high-performance GAP-8 nodes (even indices LP, odd HP) — the fleet the
+/// CLI, the e2e example and the scale bench all serve on.
+pub fn gap8_mixed_devices(n: usize, cycles_per_inference: u64) -> Vec<Device> {
+    (0..n)
+        .map(|i| {
+            if i % 2 == 1 {
+                Device::new(format!("gap8-hp-{i}"), crate::energy::GAP8_HP, cycles_per_inference)
+            } else {
+                Device::new(format!("gap8-lp-{i}"), crate::energy::GAP8_LP, cycles_per_inference)
+            }
+        })
+        .collect()
+}
+
 /// Randomized fleet helper for property tests.
 pub fn random_fleet(rng: &mut Rng, policy: Policy) -> Fleet {
+    Fleet::new(random_devices(rng), policy)
+}
+
+/// Randomized device set (1-6 mixed LP/HP nodes) for property tests.
+pub fn random_devices(rng: &mut Rng) -> Vec<Device> {
     let n = 1 + rng.below(6) as usize;
-    let devices = (0..n)
+    (0..n)
         .map(|i| {
             let op = if rng.chance(0.5) {
                 crate::energy::GAP8_LP
@@ -203,14 +617,13 @@ pub fn random_fleet(rng: &mut Rng, policy: Policy) -> Fleet {
             };
             Device::new(format!("d{i}"), op, 100_000 + rng.below(400_000) as u64)
         })
-        .collect();
-    Fleet::new(devices, policy)
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Workload;
+    use crate::coordinator::request::{merge_streams, Workload};
     use crate::energy::{GAP8_HP, GAP8_LP};
     use crate::util::check::check;
 
@@ -245,22 +658,7 @@ mod tests {
             let mut fleet = random_fleet(rng, policy);
             let reqs = workload(2000.0, 300, None, rng.next_u64());
             let report = fleet.run(&reqs);
-            let n_dev = report.per_device_served.len();
-            for d in 0..n_dev {
-                let mut times: Vec<(f64, f64)> = report
-                    .completions
-                    .iter()
-                    .filter(|c| c.device == d)
-                    .map(|c| (c.start_us, c.finish_us))
-                    .collect();
-                times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                for w in times.windows(2) {
-                    if w[1].0 < w[0].1 - 1e-9 {
-                        return Err(format!("device {d}: overlapping runs {w:?}"));
-                    }
-                }
-            }
-            Ok(())
+            report.check_fifo_no_overlap()
         });
     }
 
@@ -277,6 +675,154 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_event_engine_matches_synchronous_baseline() {
+        // With the default config (queue_bound = inf, batch_max = 1, no
+        // wake-up) the event engine must reproduce the one-pass synchronous
+        // baseline bit-exactly: same completions, same routing, same energy.
+        check("fleet-event-vs-sync", 40, |rng, _| {
+            let policy = *rng.pick(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::EnergyAware]);
+            let devices = random_devices(rng);
+            let deadline = if rng.chance(0.5) { Some(5e4) } else { None };
+            let reqs =
+                workload(500.0 + rng.below(4000) as f64, 250, deadline, rng.next_u64());
+            let mut ev = Fleet::new(devices.clone(), policy);
+            let mut sync = Fleet::new(devices, policy);
+            let a = ev.run(&reqs);
+            let b = sync.run_synchronous(&reqs);
+            if a.completions.len() != b.completions.len() {
+                return Err(format!(
+                    "completion counts differ: {} vs {}",
+                    a.completions.len(),
+                    b.completions.len()
+                ));
+            }
+            let sort = |mut v: Vec<Completion>| {
+                v.sort_by_key(|c| c.id);
+                v
+            };
+            let (ca, cb) = (sort(a.completions.clone()), sort(b.completions.clone()));
+            for (x, y) in ca.iter().zip(cb.iter()) {
+                if x.id != y.id
+                    || x.device != y.device
+                    || x.start_us != y.start_us
+                    || x.finish_us != y.finish_us
+                    || x.deadline_missed != y.deadline_missed
+                {
+                    return Err(format!("completion diverged:\n  event: {x:?}\n  sync:  {y:?}"));
+                }
+            }
+            if a.per_device_served != b.per_device_served {
+                return Err("per-device served diverged".into());
+            }
+            if a.active_energy_uj != b.active_energy_uj {
+                return Err(format!(
+                    "active energy diverged: {} vs {}",
+                    a.active_energy_uj, b.active_energy_uj
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn queue_bound_is_enforced_and_overflow_is_shed() {
+        // 2 slow devices, 4-deep queues, heavy overload: depth never
+        // exceeds the bound and the excess is shed, not lost.
+        let devices = vec![
+            Device::new("d0".into(), GAP8_LP, 400_000),
+            Device::new("d1".into(), GAP8_LP, 400_000),
+        ];
+        let config = FleetConfig { queue_bound: 4, batch_max: 1, wakeup_cycles: 0 };
+        let mut fleet = Fleet::with_config(devices, Policy::LeastLoaded, config);
+        let reqs = workload(2000.0, 500, None, 11);
+        let report = fleet.run(&reqs);
+        assert!(report.shed > 0, "expected shedding under overload");
+        assert_eq!(report.completions.len() + report.shed, reqs.len());
+        for s in &report.queue_depth_series {
+            assert!(s.depth <= 4, "queue bound violated: {s:?}");
+        }
+        // shed + completed ids partition the workload
+        let mut ids: Vec<u64> = report
+            .completions
+            .iter()
+            .map(|c| c.id)
+            .chain(report.rejections.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len());
+    }
+
+    #[test]
+    fn batching_amortizes_wakeup_under_overload() {
+        // At ~3x overload, draining up to 8 requests per activation pays
+        // the wake-up cost once per batch and must strictly beat
+        // one-request activations on sustained throughput.
+        let run = |batch_max: usize| {
+            let devices = vec![
+                Device::new("d0".into(), GAP8_LP, 300_000),
+                Device::new("d1".into(), GAP8_LP, 300_000),
+            ];
+            let config = FleetConfig { queue_bound: 16, batch_max, wakeup_cycles: 90_000 };
+            let mut fleet = Fleet::with_config(devices, Policy::LeastLoaded, config);
+            fleet.run(&workload(1800.0, 600, None, 13))
+        };
+        let single = run(1);
+        let batched = run(8);
+        assert!(
+            batched.throughput_rps > single.throughput_rps,
+            "batched {} rps vs single {} rps",
+            batched.throughput_rps,
+            single.throughput_rps
+        );
+        assert!(batched.mean_batch_size > 1.0, "{}", batched.mean_batch_size);
+        assert!(batched.batches < batched.completions.len() as u64);
+        batched.check_fifo_no_overlap().unwrap();
+        single.check_fifo_no_overlap().unwrap();
+    }
+
+    #[test]
+    fn batches_never_mix_networks() {
+        let a = Workload { rate_per_s: 900.0, deadline_us: None, n_requests: 150, seed: 21 }
+            .generate_for_net(0);
+        let b = Workload { rate_per_s: 900.0, deadline_us: None, n_requests: 150, seed: 22 }
+            .generate_for_net(1);
+        let reqs = merge_streams(&[a, b]);
+        let devices = vec![Device::new("d0".into(), GAP8_HP, 300_000)];
+        let config = FleetConfig { queue_bound: 64, batch_max: 4, wakeup_cycles: 50_000 };
+        let mut fleet = Fleet::with_config(devices, Policy::RoundRobin, config);
+        let report = fleet.run(&reqs);
+        // overloaded single device: admitted + shed must partition the load
+        assert_eq!(report.completions.len() + report.shed, 300);
+        let mut by_batch: std::collections::BTreeMap<u64, Vec<&Completion>> =
+            std::collections::BTreeMap::new();
+        for c in &report.completions {
+            by_batch.entry(c.batch).or_default().push(c);
+        }
+        assert!(
+            by_batch.values().any(|cs| cs.len() >= 2),
+            "expected at least one multi-request batch under overload"
+        );
+        for (batch, cs) in &by_batch {
+            assert!(cs.len() <= 4, "batch {batch} too large: {}", cs.len());
+            let net = cs[0].net;
+            assert!(cs.iter().all(|c| c.net == net), "batch {batch} mixes networks");
+        }
+    }
+
+    #[test]
+    fn throughput_spans_first_arrival_to_last_finish() {
+        // A single request arriving late must not have its throughput
+        // diluted by the idle ramp-up before it (the old `max(finish)`
+        // denominator bug).
+        let mut fleet = gap8_fleet(1, GAP8_LP, 90_000, Policy::RoundRobin); // 1 ms/inf
+        let reqs = vec![Request { id: 0, arrival_us: 1e6, deadline_us: None, net: 0 }];
+        let report = fleet.run(&reqs);
+        // span = 1 ms -> ~1000 rps; the buggy span (1.001 s) gave ~1 rps
+        assert!(report.throughput_rps > 500.0, "{}", report.throughput_rps);
     }
 
     #[test]
@@ -334,5 +880,34 @@ mod tests {
         let reqs = workload(300.0, 200, Some(8_000.0), 6);
         let report = fleet.run(&reqs);
         assert!(report.per_device_served[1] > 0, "HP never used: {:?}", report.per_device_served);
+    }
+
+    #[test]
+    fn rerunning_a_fleet_is_independent() {
+        // run() resets serving state: same workload twice on one fleet
+        // must yield identical reports (no served/energy carry-over).
+        let mut fleet = gap8_fleet(2, GAP8_LP, 300_000, Policy::LeastLoaded);
+        let w = workload(400.0, 200, None, 17);
+        let a = fleet.run(&w);
+        let b = fleet.run(&w);
+        assert_eq!(a.per_device_served, b.per_device_served);
+        assert_eq!(a.active_energy_uj, b.active_energy_uj);
+        assert_eq!(a.completions.len(), b.completions.len());
+    }
+
+    #[test]
+    fn utilization_and_idle_energy_are_reported() {
+        let mut fleet = gap8_fleet(2, GAP8_LP, 300_000, Policy::LeastLoaded);
+        let report = fleet.run(&workload(200.0, 200, None, 8));
+        assert_eq!(report.per_device_utilization.len(), 2);
+        for u in &report.per_device_utilization {
+            assert!((0.0..=1.0).contains(u), "utilization {u}");
+        }
+        assert!(report.idle_energy_uj > 0.0);
+        assert!(report.active_energy_uj > 0.0);
+        assert!(
+            (report.total_energy_uj - report.active_energy_uj - report.idle_energy_uj).abs()
+                < 1e-9
+        );
     }
 }

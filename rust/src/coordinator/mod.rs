@@ -1,11 +1,64 @@
-//! Layer-3 coordination: the edge-fleet request router/scheduler over
-//! simulated GAP-8 nodes (latency/energy accounting from the kernel
-//! library) and the real-time PJRT serving loop the e2e example drives.
+//! Layer-3 coordination: the event-driven edge-fleet serving engine over
+//! simulated GAP-8 nodes, plus the artifact-backed serving loop the e2e
+//! example drives.
+//!
+//! # Architecture: the discrete-event serving engine
+//!
+//! [`Fleet::run`] is a discrete-event simulation over a binary-heap event
+//! queue (earliest event first, FIFO among equal timestamps). Three event
+//! types exist:
+//!
+//! * **`Arrival`** — a request enters the system. The routing policy picks
+//!   a device among those whose bounded FIFO queue has room; if every
+//!   admissible queue is full the request is *shed* and recorded as a
+//!   [`Rejection`] (admission control — the queue bound is
+//!   [`FleetConfig::queue_bound`]). Otherwise the request is enqueued and,
+//!   if the device is idle, a `DispatchBatch` event is scheduled.
+//! * **`DispatchBatch`** — an idle device drains a *micro-batch*: the
+//!   longest same-network prefix of its FIFO, up to
+//!   [`FleetConfig::batch_max`] requests. One cluster activation serves
+//!   the whole batch, paying the wake-up/setup cost
+//!   ([`FleetConfig::wakeup_cycles`]: cluster power-gate exit, offload
+//!   setup, event-unit barrier release) once — batching amortizes it.
+//!   Requests inside a batch execute back-to-back (FIFO, no overlap).
+//! * **`Finish`** — the activation completes; the device goes idle and, if
+//!   its queue is non-empty, immediately re-dispatches.
+//!
+//! ## Queue-aware routing
+//!
+//! Every [`Policy`] routes on the *projected drain time* of a device —
+//! the in-flight activation plus everything already queued — not just the
+//! busy-until timestamp: `LeastLoaded` minimizes projected finish,
+//! `EnergyAware` walks devices cheapest-first and picks the first whose
+//! projected finish meets the deadline (spilling to high-performance
+//! nodes only when needed), `RoundRobin` rotates across devices with
+//! queue room.
+//!
+//! ## Report
+//!
+//! [`FleetReport`] carries per-request [`Completion`]s, shed requests
+//! ([`Rejection`]), a queue-depth time series ([`QueueSample`], sampled on
+//! every enqueue/dispatch), per-device utilization, batching statistics
+//! and an energy split into active (computing, [`OperatingPoint::power_mw`])
+//! and idle (queue-empty gaps, [`OperatingPoint::idle_power_mw`]) energy.
+//! Sustained throughput is measured over the span from first arrival to
+//! last finish.
+//!
+//! The pre-event-engine one-pass semantics survive as
+//! [`Fleet::run_synchronous`]; with the default [`FleetConfig`] (unbounded
+//! queue, `batch_max = 1`, no wake-up) the event engine reproduces them
+//! bit-exactly, which is property-tested.
+//!
+//! [`OperatingPoint::power_mw`]: crate::energy::OperatingPoint::power_mw
+//! [`OperatingPoint::idle_power_mw`]: crate::energy::OperatingPoint::idle_power_mw
 
 pub mod fleet;
 pub mod request;
 pub mod server;
 
-pub use fleet::{gap8_fleet, Device, Fleet, FleetReport, Policy};
-pub use request::{Request, Workload};
+pub use fleet::{
+    gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Device, Fleet, FleetConfig,
+    FleetReport, Policy, QueueSample, Rejection, DEFAULT_WAKEUP_CYCLES,
+};
+pub use request::{merge_streams, Request, Workload};
 pub use server::{Served, Server, ServeStats};

@@ -11,6 +11,9 @@ pub struct Request {
     pub arrival_us: f64,
     /// Optional latency deadline (relative to arrival).
     pub deadline_us: Option<f64>,
+    /// Network (model) id: a device micro-batch only groups requests for
+    /// the same network, since activation setup is per-network.
+    pub net: u32,
 }
 
 /// Poisson arrivals with optional per-request deadlines.
@@ -24,6 +27,12 @@ pub struct Workload {
 
 impl Workload {
     pub fn generate(&self) -> Vec<Request> {
+        self.generate_for_net(0)
+    }
+
+    /// Generate the stream tagged with a network id (for multi-tenant
+    /// scenarios; combine streams with [`merge_streams`]).
+    pub fn generate_for_net(&self, net: u32) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
         let mut t = 0.0f64;
         (0..self.n_requests as u64)
@@ -31,10 +40,23 @@ impl Workload {
                 // exponential inter-arrival: -ln(U)/rate
                 let u = rng.unit_f64().max(1e-12);
                 t += -u.ln() / self.rate_per_s * 1e6;
-                Request { id, arrival_us: t, deadline_us: self.deadline_us }
+                Request { id, arrival_us: t, deadline_us: self.deadline_us, net }
             })
             .collect()
     }
+}
+
+/// Merge several per-tenant request streams into one arrival-ordered
+/// stream with globally unique ids (each request keeps its deadline and
+/// network tag). The sort is stable, so equal arrival times preserve
+/// stream order.
+pub fn merge_streams(streams: &[Vec<Request>]) -> Vec<Request> {
+    let mut all: Vec<Request> = streams.iter().flatten().cloned().collect();
+    all.sort_by(|a, b| a.arrival_us.partial_cmp(&b.arrival_us).unwrap());
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    all
 }
 
 #[cfg(test)]
@@ -56,5 +78,21 @@ mod tests {
     fn deterministic_per_seed() {
         let w = Workload { rate_per_s: 10.0, deadline_us: Some(5e4), n_requests: 10, seed: 7 };
         assert_eq!(w.generate(), w.generate());
+    }
+
+    #[test]
+    fn merged_streams_are_sorted_with_unique_ids() {
+        let a = Workload { rate_per_s: 100.0, deadline_us: None, n_requests: 50, seed: 1 }
+            .generate_for_net(0);
+        let b = Workload { rate_per_s: 300.0, deadline_us: Some(1e4), n_requests: 80, seed: 2 }
+            .generate_for_net(1);
+        let merged = merge_streams(&[a, b]);
+        assert_eq!(merged.len(), 130);
+        assert!(merged.windows(2).all(|p| p[0].arrival_us <= p[1].arrival_us));
+        let mut ids: Vec<u64> = merged.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 130);
+        assert_eq!(merged.iter().filter(|r| r.net == 1).count(), 80);
     }
 }

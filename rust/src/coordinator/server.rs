@@ -1,16 +1,15 @@
 //! Real-time serving loop: batches of inference requests executed through
-//! the PJRT runtime (the AOT'd artifact), with wall-clock latency and
+//! the artifact runtime (the AOT'd artifact), with wall-clock latency and
 //! throughput accounting. This is the path `examples/edge_serving.rs`
 //! drives end-to-end: requests enter a bounded queue, a worker drains it,
-//! executes on XLA-CPU, and the device/fleet simulator stamps each reply
-//! with the simulated on-device cycles and energy.
+//! executes on the artifact runtime, and the device/fleet simulator stamps
+//! each reply with the simulated on-device cycles and energy.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::Result;
-
 use crate::runtime::{Artifact, ExecOutput, Runtime};
+use crate::util::error::Result;
 
 /// A served request: wall-clock measurements plus the simulated-edge cost.
 #[derive(Debug, Clone)]

@@ -12,28 +12,35 @@
 //! * STM32L476 (90 nm ULP): ~120 uA/MHz run mode — ~10 mW at 80 MHz.
 
 /// One platform operating point.
+///
+/// `power_mw` is the active (cluster-computing) power; `idle_power_mw` is
+/// the power drawn while a device sits in the serving loop with the
+/// compute cluster power-gated, waiting for work (order-of-magnitude
+/// datasheet sleep/retention figures — the fleet simulator charges it for
+/// queue-empty gaps between activations).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OperatingPoint {
     pub name: &'static str,
     pub freq_mhz: f64,
     pub power_mw: f64,
+    pub idle_power_mw: f64,
 }
 
 /// GAP-8 low-power mode: 1.0 V, 90 MHz cluster.
 pub const GAP8_LP: OperatingPoint =
-    OperatingPoint { name: "GAP-8 (low-power)", freq_mhz: 90.0, power_mw: 24.0 };
+    OperatingPoint { name: "GAP-8 (low-power)", freq_mhz: 90.0, power_mw: 24.0, idle_power_mw: 1.0 };
 
 /// GAP-8 high-performance mode: 1.2 V, 175 MHz cluster.
 pub const GAP8_HP: OperatingPoint =
-    OperatingPoint { name: "GAP-8 (high-perf)", freq_mhz: 175.0, power_mw: 70.0 };
+    OperatingPoint { name: "GAP-8 (high-perf)", freq_mhz: 175.0, power_mw: 70.0, idle_power_mw: 2.0 };
 
 /// STM32H743 at 400 MHz, VOS1.
 pub const STM32H7_OP: OperatingPoint =
-    OperatingPoint { name: "STM32H7", freq_mhz: 400.0, power_mw: 234.0 };
+    OperatingPoint { name: "STM32H7", freq_mhz: 400.0, power_mw: 234.0, idle_power_mw: 20.0 };
 
 /// STM32L476 at 80 MHz run mode.
 pub const STM32L4_OP: OperatingPoint =
-    OperatingPoint { name: "STM32L4", freq_mhz: 80.0, power_mw: 10.0 };
+    OperatingPoint { name: "STM32L4", freq_mhz: 80.0, power_mw: 10.0, idle_power_mw: 1.0 };
 
 impl OperatingPoint {
     /// Execution time for a cycle count, in milliseconds.
@@ -44,6 +51,12 @@ impl OperatingPoint {
     /// Energy for a cycle count, in microjoules.
     pub fn energy_uj(&self, cycles: u64) -> f64 {
         self.time_ms(cycles) * self.power_mw
+    }
+
+    /// Energy spent idling (cluster power-gated) for a wall-clock span in
+    /// microseconds, in microjoules: mW x ms = uJ.
+    pub fn idle_energy_uj(&self, idle_us: f64) -> f64 {
+        (idle_us / 1e3) * self.idle_power_mw
     }
 }
 
@@ -86,5 +99,14 @@ mod tests {
     fn gap8_low_power_is_most_efficient_point() {
         // same cycle count: LP must beat HP in energy (lower V/f)
         assert!(GAP8_LP.energy_uj(1000) < GAP8_HP.energy_uj(1000));
+    }
+
+    #[test]
+    fn idle_power_is_far_below_active() {
+        for op in [GAP8_LP, GAP8_HP, STM32H7_OP, STM32L4_OP] {
+            assert!(op.idle_power_mw < op.power_mw / 5.0, "{}", op.name);
+        }
+        // 1 ms idle on GAP-8 LP at 1 mW = 1 uJ
+        assert!((GAP8_LP.idle_energy_uj(1000.0) - 1.0).abs() < 1e-12);
     }
 }

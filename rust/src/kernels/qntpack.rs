@@ -79,11 +79,14 @@ pub fn quantize_affine8(e: &mut Engine, q: &QuantParams, c: usize, phi: i32) -> 
 }
 
 /// Re-quantize and store a `nf x np` tile of accumulators into the packed
-/// HWC ofmap. `acc[f * np + p]`; channel f0 must be per-byte aligned
-/// (f0 % per_byte == 0 — guaranteed: tiles start at multiples of 4).
+/// HWC ofmap. `acc[f * np + p]`.
 ///
 /// `out` is the full packed ofmap; pixel p writes at element offset
-/// `pix_elem[p] + f0 + f`.
+/// `pix_elem[p] + f0 + f`. Element offsets need *not* be byte-aligned:
+/// groups starting mid-byte are inserted at the correct bit-field offset
+/// and read-modify-write only the fields they own (the conv caller always
+/// produces aligned tiles — f0 multiples of 4, channel counts divisible by
+/// the per-byte packing — but the kernel no longer relies on it).
 #[allow(clippy::too_many_arguments)]
 pub fn qntpack_tile(
     e: &mut Engine,
@@ -110,23 +113,30 @@ pub fn qntpack_tile(
             }
         }
         Bits::B4 | Bits::B2 => {
+            let b = ybits.bits();
             for p in 0..np {
                 let mut f = 0usize;
                 while f < nf {
-                    // fill one output byte (per sub-byte group)
-                    let group = per.min(nf - f);
+                    // fill one output byte (per sub-byte group), honouring
+                    // the in-byte element offset: a group starting
+                    // mid-byte lands in the upper bit-fields and must not
+                    // cross the byte boundary
+                    let elem = pix_elem[p] + f0 + f;
+                    let off = elem % per;
+                    let group = (per - off).min(nf - f);
                     let mut byte = 0u32;
                     for g in 0..group {
                         let v = quantize_bsearch(e, thr, f0 + f + g, acc[(f + g) * np + p]);
-                        byte = e.bins(byte, v as u32, ybits.bits() as u8, (g as u32 * ybits.bits()) as u8);
+                        byte = e.bins(byte, v as u32, b as u8, ((off + g) as u32 * b) as u8);
                     }
-                    let byte_idx = (pix_elem[p] + f0 + f) / per;
+                    let byte_idx = elem / per;
                     if group == per {
                         e.sb(out, byte_idx, byte as u8);
                     } else {
-                        // partial byte: read-modify-write
+                        // partial byte: read-modify-write of the touched
+                        // bit-fields only, shifted to the group's position
                         let old = e.lbu(out, byte_idx);
-                        let mask = ((1u32 << (group as u32 * ybits.bits())) - 1) as u8;
+                        let mask = (((1u32 << (group as u32 * b)) - 1) << (off as u32 * b)) as u8;
                         e.sb(out, byte_idx, (old as u8 & !mask) | (byte as u8 & mask));
                     }
                     f += group;
@@ -212,6 +222,66 @@ mod tests {
         }
         // convolution MAC counter must be untouched by quant macs
         assert_eq!(e.macs, 0);
+    }
+
+    #[test]
+    fn prop_tile_partial_and_misaligned_groups_match_pack() {
+        // Sub-byte outputs with nf not a multiple of per_byte and odd
+        // pix_elem offsets: every written field must equal the affine
+        // quantization and every untouched field must keep its prior
+        // value (the partial-byte RMW used to clobber the low fields of
+        // the byte when the group started mid-byte).
+        check("qntpack-misaligned-tile", 150, |rng, _| {
+            let ybits = *rng.pick(&[Bits::B2, Bits::B4]);
+            let per = ybits.per_byte();
+            let f0 = rng.below(5) as usize;
+            let nf = 1 + rng.below(7) as usize; // often not a multiple of per
+            let np = 1 + rng.below(3) as usize;
+            // distinct, possibly misaligned pixel bases with room between
+            let stride = f0 + nf + rng.below(4) as usize;
+            let base = rng.below(3) as usize;
+            let pix_elem: Vec<usize> = (0..np).map(|p| base + p * stride).collect();
+            let channels = f0 + nf;
+            let q = random_params(rng, channels, ybits, 20_000, 64);
+            let thr = ThresholdTable::prepare(&q);
+            let mut e = Engine::single_core();
+            let acc: Vec<i32> =
+                (0..nf * np).map(|_| rng.range_i32(-20_000, 20_000)).collect();
+            let n_elems = base + (np - 1) * stride + f0 + nf;
+            let n_bytes = n_elems.div_ceil(per);
+            let mut out = vec![0u8; n_bytes];
+            rng.fill_bytes(&mut out);
+            let before = out.clone();
+            qntpack_tile(&mut e, &q, &thr, &acc, f0, nf, &pix_elem, &mut out);
+            for idx in 0..n_bytes * per {
+                // written fields: pix_elem[p]+f0 .. +f0+nf for some p
+                let written = (0..np).find(|&p| {
+                    let lo = pix_elem[p] + f0;
+                    (lo..lo + nf).contains(&idx)
+                });
+                let got = crate::qnn::pack::get_unsigned(&out, ybits, idx);
+                match written {
+                    Some(p) => {
+                        let f = idx - pix_elem[p] - f0;
+                        let want = q.quantize(acc[f * np + p], f0 + f);
+                        if got != want {
+                            return Err(format!(
+                                "elem {idx} (pixel {p}, ch {f}): got {got} want {want}"
+                            ));
+                        }
+                    }
+                    None => {
+                        let want = crate::qnn::pack::get_unsigned(&before, ybits, idx);
+                        if got != want {
+                            return Err(format!(
+                                "untouched elem {idx} clobbered: got {got} want {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

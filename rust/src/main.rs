@@ -2,10 +2,12 @@
 //!
 //! Evaluation commands regenerate every table/figure of the paper
 //! (DESIGN.md §5); runtime commands load the AOT'd JAX/Pallas artifacts
-//! via PJRT and run/serve/verify them against the golden chain.
+//! into the artifact runtime and run/serve/verify them against the golden chain.
 
 use pulpnn_mp::bench::{ablate, figures};
-use pulpnn_mp::coordinator::{gap8_fleet, Policy, Workload};
+use pulpnn_mp::coordinator::{
+    gap8_mixed_devices, Fleet, FleetConfig, Policy, Workload, DEFAULT_WAKEUP_CYCLES,
+};
 use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
 use pulpnn_mp::qnn::network::demo_cnn;
@@ -35,9 +37,10 @@ evaluation (regenerates the paper's results):
 networks & runtime:
   run         run the demo CNN (or --spec file.json) on the simulated cluster
   footprint   MobileNetV1 mixed-precision memory-footprint analysis
-  infer       execute an AOT artifact via PJRT (--name, --artifacts DIR)
-  verify      verify all artifacts: PJRT == python golden == rust golden == kernels
-  serve       edge-fleet serving simulation (--devices N --rate RPS ...)
+  infer       execute an AOT artifact on the artifact runtime (--name, --artifacts DIR)
+  verify      verify all artifacts: runtime == python golden == rust golden == kernels
+  serve       edge-fleet serving simulation (--devices N --rate RPS
+              --queue-bound N --batch K --wakeup-cycles C ...)
   emit-spec   print the demo network spec JSON (shared rust/python format)
 
 common options:
@@ -251,7 +254,7 @@ fn cmd_infer(args: &mut Args) -> i32 {
         );
         return 1;
     };
-    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut rt = Runtime::cpu().expect("artifact runtime");
     println!("platform: {}", rt.platform());
     let t0 = std::time::Instant::now();
     rt.load(a).expect("compile");
@@ -277,8 +280,8 @@ fn cmd_verify(args: &mut Args) -> i32 {
             return 1;
         }
     };
-    let mut rt = Runtime::cpu().expect("PJRT CPU client");
-    let mut t = Table::new(vec!["artifact", "pjrt==golden", "rust==golden", "kernels==golden"]);
+    let mut rt = Runtime::cpu().expect("artifact runtime");
+    let mut t = Table::new(vec!["artifact", "runtime==golden", "rust==golden", "kernels==golden"]);
     let mut failures = 0;
     for a in &manifest.artifacts {
         match verify_artifact(&mut rt, a) {
@@ -290,7 +293,7 @@ fn cmd_verify(args: &mut Args) -> i32 {
                     |o: Option<bool>| o.map(|b| b.to_string()).unwrap_or_else(|| "-".into());
                 t.row(vec![
                     r.name.clone(),
-                    r.pjrt_matches_golden.to_string(),
+                    r.runtime_matches_golden.to_string(),
                     opt(r.rust_matches_golden),
                     opt(r.kernel_matches_golden),
                 ]);
@@ -316,6 +319,11 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     let rate = args.opt_f64("rate", 200.0);
     let n = args.opt_usize("requests", 2000);
     let deadline_ms = args.opt_f64("deadline-ms", 0.0);
+    let queue_bound = args.opt_usize("queue-bound", 0); // 0 = unbounded
+    let batch_max = args.opt_usize("batch", 1).max(1); // 0 would assert in with_config
+    // one physical model regardless of batching, so --batch sweeps compare
+    // like for like; pass --wakeup-cycles 0 for the idealized engine
+    let wakeup_cycles = args.opt_u64("wakeup-cycles", DEFAULT_WAKEUP_CYCLES);
     let policy = match args.opt("policy", "energy").as_str() {
         "rr" => Policy::RoundRobin,
         "least" => Policy::LeastLoaded,
@@ -333,13 +341,13 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         f(GAP8_HP.time_ms(cycles), 2)
     );
     // half LP, half HP fleet
-    let mut fleet = gap8_fleet(devices, GAP8_LP, cycles, policy);
-    for (i, d) in fleet.devices.iter_mut().enumerate() {
-        if i % 2 == 1 {
-            d.op = GAP8_HP;
-            d.name = format!("gap8-hp-{i}");
-        }
-    }
+    let nodes = gap8_mixed_devices(devices, cycles);
+    let config = FleetConfig {
+        queue_bound: if queue_bound == 0 { usize::MAX } else { queue_bound },
+        batch_max,
+        wakeup_cycles,
+    };
+    let mut fleet = Fleet::with_config(nodes, policy, config);
     let workload = Workload {
         rate_per_s: rate,
         deadline_us: if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None },
@@ -348,14 +356,30 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     };
     let report = fleet.run(&workload.generate());
     println!(
-        "\nfleet of {devices} ({policy:?}), {} requests at {rate} rps:",
+        "\nfleet of {devices} ({policy:?}, queue_bound={}, batch_max={batch_max}), \
+         {} of {n} requests served at {rate} rps:",
+        if queue_bound == 0 { "inf".to_string() } else { queue_bound.to_string() },
         report.completions.len()
     );
     println!("  throughput     : {} rps", f(report.throughput_rps, 1));
     println!("  mean latency   : {} ms", f(report.mean_latency_us / 1e3, 2));
     println!("  p99 latency    : {} ms", f(report.p99_latency_us / 1e3, 2));
-    println!("  total energy   : {} mJ", f(report.total_energy_uj / 1e3, 2));
+    println!(
+        "  energy         : {} mJ active + {} mJ idle",
+        f(report.active_energy_uj / 1e3, 2),
+        f(report.idle_energy_uj / 1e3, 2)
+    );
     println!("  deadline misses: {}", report.deadline_misses);
+    println!("  shed requests  : {}", report.shed);
+    println!(
+        "  activations    : {} ({} requests/batch mean)",
+        report.batches,
+        f(report.mean_batch_size, 2)
+    );
     println!("  per-device     : {:?}", report.per_device_served);
+    println!(
+        "  utilization    : {:?}",
+        report.per_device_utilization.iter().map(|u| f(*u, 2)).collect::<Vec<_>>()
+    );
     0
 }

@@ -1,10 +1,26 @@
-//! PJRT execution engine: compile-once, execute-many over the CPU client.
+//! Artifact execution engine: compile-once, execute-many.
+//!
+//! The original seed linked the `xla` PJRT bindings here, but the build
+//! environment is offline and std-only (DESIGN.md §6), so the engine now
+//! ships a *native executor*: it "compiles" an artifact by rebuilding the
+//! bit-exact rust golden model the artifact was exported from (same seed,
+//! same xorshift draw order as `python/compile/aot.py`) and executes
+//! requests through that mirror. The HLO text next to each artifact is
+//! still produced and retained so a real PJRT backend can be slotted back
+//! in on machines that have one; every consumer of [`Runtime`] is
+//! backend-agnostic.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::qnn::network::{demo_cnn, Network, NetworkSpec};
+use crate::qnn::quant::QuantParams;
+use crate::qnn::tensor::{QTensor, QWeights};
+use crate::qnn::{golden, layer::ConvSpec};
+use crate::util::error::Result;
 
 use super::manifest::Artifact;
+use super::verify::rebuild_ref_case;
 
 /// Output of an artifact execution.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,35 +53,61 @@ impl ExecOutput {
     }
 }
 
-/// The runtime: one PJRT CPU client plus an executable cache keyed by
-/// artifact name (compile once, execute many).
+/// A compiled artifact: the rebuilt golden-model program for its kind.
+enum Compiled {
+    RefLayer { spec: ConvSpec, weights: QWeights, quant: QuantParams },
+    Network(Box<Network>),
+}
+
+/// The runtime: an executable cache keyed by artifact name
+/// (compile once, execute many).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: HashMap<String, Compiled>,
 }
 
 impl Runtime {
+    /// The CPU runtime (native golden-model executor).
     pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+        Ok(Runtime { cache: HashMap::new() })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-golden (offline PJRT stand-in)".to_string()
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
+    /// Compile (or fetch from cache) an artifact's executable: rebuild the
+    /// layer/network the exporter AOT'd, from the manifest metadata alone.
     pub fn load(&mut self, artifact: &Artifact) -> Result<()> {
         if self.cache.contains_key(&artifact.name) {
             return Ok(());
         }
-        let path = artifact.hlo_path();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", artifact.name))?;
-        self.cache.insert(artifact.name.clone(), exe);
+        let compiled = match artifact.kind.as_str() {
+            "reference_layer" => {
+                let (spec, _x, weights, quant) = rebuild_ref_case(artifact)?;
+                Compiled::RefLayer { spec, weights, quant }
+            }
+            "network" => {
+                // prefer the spec the exporter recorded in the manifest;
+                // fall back to the built-in demo for pre-spec manifests
+                let net = match &artifact.spec {
+                    Some(spec) => NetworkSpec::from_json(spec)
+                        .and_then(|ns| ns.materialize())
+                        .map_err(|e| anyhow!("{}: bad recorded spec: {e}", artifact.name))?,
+                    None if artifact.name == "demo_cnn_mixed" => {
+                        demo_cnn().materialize().map_err(|e| anyhow!(e))?
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "network artifact `{}` has no recorded spec (re-run `make artifacts`)",
+                            artifact.name
+                        ));
+                    }
+                };
+                Compiled::Network(Box::new(net))
+            }
+            other => return Err(anyhow!("unknown artifact kind `{other}`")),
+        };
+        self.cache.insert(artifact.name.clone(), compiled);
         Ok(())
     }
 
@@ -75,7 +117,6 @@ impl Runtime {
 
     /// Execute with raw packed input bytes shaped per the manifest.
     pub fn execute(&mut self, artifact: &Artifact, input: &[u8]) -> Result<ExecOutput> {
-        self.load(artifact)?;
         let expect: usize = artifact.input_shape.iter().product();
         if input.len() != expect {
             return Err(anyhow!(
@@ -85,17 +126,44 @@ impl Runtime {
                 artifact.input_shape
             ));
         }
-        let lit = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::U8,
-            &artifact.input_shape,
-            input,
-        )?;
-        let exe = self.cache.get(&artifact.name).unwrap();
-        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
+        self.load(artifact)?;
+        let out = match self.cache.get(&artifact.name).unwrap() {
+            Compiled::RefLayer { spec, weights, quant } => {
+                let x = QTensor {
+                    shape: spec.input,
+                    bits: spec.prec.x,
+                    data: input.to_vec(),
+                };
+                ExecOutput::PackedU8(golden::conv2d(spec, &x, weights, quant).data)
+            }
+            Compiled::Network(net) => {
+                let x = QTensor {
+                    shape: net.spec.input,
+                    bits: net.spec.input_bits,
+                    data: input.to_vec(),
+                };
+                let fwd = net.forward_golden(&x);
+                match fwd.logits {
+                    Some(logits) => ExecOutput::LogitsI32(logits),
+                    None => {
+                        ExecOutput::PackedU8(fwd.activations.last().map(|t| t.data.clone()).unwrap_or_default())
+                    }
+                }
+            }
+        };
+        let dtype_matches = matches!(
+            (artifact.output_dtype.as_str(), &out),
+            ("u8", ExecOutput::PackedU8(_)) | ("i32", ExecOutput::LogitsI32(_))
+        );
+        if dtype_matches {
+            return Ok(out);
+        }
         match artifact.output_dtype.as_str() {
-            "u8" => Ok(ExecOutput::PackedU8(out.to_vec::<u8>()?)),
-            "i32" => Ok(ExecOutput::LogitsI32(out.to_vec::<i32>()?)),
+            "u8" | "i32" => Err(anyhow!(
+                "{}: manifest output dtype `{}` does not match the executed output",
+                artifact.name,
+                artifact.output_dtype
+            )),
             other => Err(anyhow!("unknown output dtype `{other}`")),
         }
     }

@@ -19,6 +19,9 @@ pub struct Artifact {
     pub wbits: u32,
     pub ybits: u32,
     pub macs: u64,
+    /// The full network spec the exporter recorded (network artifacts
+    /// only) — lets the runtime materialize arbitrary exported networks.
+    pub spec: Option<Json>,
     dir: PathBuf,
 }
 
@@ -76,6 +79,10 @@ impl Manifest {
                 wbits: a.get("wbits").as_i64().unwrap_or(0) as u32,
                 ybits: a.get("ybits").as_i64().unwrap_or(0) as u32,
                 macs: a.get("macs").as_i64().unwrap_or(0) as u64,
+                spec: match a.get("spec") {
+                    Json::Null => None,
+                    s => Some(s.clone()),
+                },
                 dir: dir.clone(),
             });
         }

@@ -1,6 +1,8 @@
-//! The PJRT runtime: loads the AOT'd HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the XLA CPU client from
-//! the rust request path. Python is never involved at runtime.
+//! The artifact runtime: loads the AOT'd artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust request path.
+//! Python is never involved at runtime. In this offline std-only build the
+//! executor is the native golden-model mirror (see `engine`); the exported
+//! HLO text remains on disk for environments with a real PJRT client.
 
 pub mod engine;
 pub mod manifest;

@@ -3,7 +3,8 @@
 //! golden model, and (c) the simulated GAP-8 kernels — the full
 //! L1==L2==L3==golden chain of DESIGN.md §4.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use super::engine::{ExecOutput, Runtime};
 use super::manifest::Artifact;
@@ -18,8 +19,14 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone)]
 pub struct VerifyReport {
     pub name: String,
-    /// PJRT output == python golden file.
-    pub pjrt_matches_golden: bool,
+    /// Artifact-runtime output == python golden file. Note: in the offline
+    /// build the runtime executes the rust golden model itself, so for
+    /// reference layers this column checks the runtime plumbing (manifest,
+    /// caching, byte I/O) rather than an independent numeric backend — the
+    /// python golden file and the simulated-kernel column remain the
+    /// independent links; full independence returns with a real PJRT
+    /// backend.
+    pub runtime_matches_golden: bool,
     /// rust golden model == python golden file (reference layers only).
     pub rust_matches_golden: Option<bool>,
     /// simulated GAP-8 kernel == python golden file (reference layers only).
@@ -29,7 +36,7 @@ pub struct VerifyReport {
 
 impl VerifyReport {
     pub fn ok(&self) -> bool {
-        self.pjrt_matches_golden
+        self.runtime_matches_golden
             && self.rust_matches_golden.unwrap_or(true)
             && self.kernel_matches_golden.unwrap_or(true)
     }
@@ -55,8 +62,8 @@ pub fn rebuild_ref_case(a: &Artifact) -> Result<(ConvSpec, QTensor, QWeights, qu
 pub fn verify_artifact(rt: &mut Runtime, a: &Artifact) -> Result<VerifyReport> {
     let golden_bytes = a.read_golden()?;
     let out = rt.execute_recorded(a)?;
-    let pjrt_bytes = out.to_bytes();
-    let pjrt_matches_golden = pjrt_bytes == golden_bytes;
+    let runtime_bytes = out.to_bytes();
+    let runtime_matches_golden = runtime_bytes == golden_bytes;
 
     let (mut rust_ok, mut kernel_ok) = (None, None);
     if a.kind == "reference_layer" {
@@ -78,7 +85,7 @@ pub fn verify_artifact(rt: &mut Runtime, a: &Artifact) -> Result<VerifyReport> {
 
     Ok(VerifyReport {
         name: a.name.clone(),
-        pjrt_matches_golden,
+        runtime_matches_golden,
         rust_matches_golden: rust_ok,
         kernel_matches_golden: kernel_ok,
         output_bytes: match &out {

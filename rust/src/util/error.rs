@@ -1,0 +1,130 @@
+//! Minimal `anyhow`-style error handling for the offline build.
+//!
+//! The crate must build with std only (DESIGN.md §6), so instead of the
+//! `anyhow` crate we provide the tiny subset the codebase needs: a
+//! string-backed [`Error`], a [`Result`] alias defaulting the error type,
+//! the [`crate::anyhow!`] constructor macro and a [`Context`] extension
+//! trait for annotating propagated errors.
+
+use std::fmt;
+
+/// A boxed-string error with an optional chain of context annotations
+/// (rendered outermost-first, `anyhow` style: `context: cause`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the error with a context annotation.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value —
+/// the shape of `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Extension trait adding `anyhow`-style context annotation to results.
+pub trait Context<T> {
+    /// Annotate the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Annotate the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(crate::anyhow!("base failure {}", 42))
+    }
+
+    #[test]
+    fn macro_formats_and_wraps() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "base failure 42");
+        let e = crate::anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn context_prefixes_outermost_first() {
+        let e = fails().context("loading artifact").unwrap_err();
+        assert_eq!(e.to_string(), "loading artifact: base failure 42");
+        let e = fails().with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: base failure 42");
+    }
+
+    #[test]
+    fn question_mark_converts_common_sources() {
+        fn io_path() -> Result<Vec<u8>> {
+            let bytes = std::fs::read("/definitely-not-a-real-path-xyz")?;
+            Ok(bytes)
+        }
+        assert!(io_path().is_err());
+        fn string_path() -> Result<()> {
+            Err("stringy".to_string())?;
+            Ok(())
+        }
+        assert_eq!(string_path().unwrap_err().to_string(), "stringy");
+    }
+}

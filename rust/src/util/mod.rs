@@ -7,6 +7,7 @@
 pub mod benchkit;
 pub mod check;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,5 +1,5 @@
 //! Integration tests over the AOT artifacts: the full
-//! PJRT == python-golden == rust-golden == simulated-kernel chain.
+//! artifact-runtime == python-golden == rust-golden == simulated-kernel chain.
 //!
 //! These tests require `make artifacts` to have run; they skip (with a
 //! notice) when artifacts/ is absent so `cargo test` stays green on a
@@ -34,28 +34,28 @@ fn reference_layer_chain_bit_exact_sample() {
     // (the full 27 are covered by `pulpnn verify`; compiling all of them
     // in a unit test is slow).
     let Some(m) = manifest() else { return };
-    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut rt = Runtime::cpu().expect("artifact runtime");
     for (x, w, y) in [(8, 8, 8), (4, 2, 4), (2, 4, 2), (8, 2, 8), (2, 2, 2)] {
         let Some(a) = m.find_ref_layer(x, w, y) else {
             panic!("missing ref_layer x{x}w{w}y{y}");
         };
         let report = verify_artifact(&mut rt, a).expect("verification ran");
-        assert!(report.pjrt_matches_golden, "{}: PJRT != python golden", a.name);
+        assert!(report.runtime_matches_golden, "{}: runtime != python golden", a.name);
         assert_eq!(report.rust_matches_golden, Some(true), "{}: rust golden", a.name);
         assert_eq!(report.kernel_matches_golden, Some(true), "{}: kernels", a.name);
     }
 }
 
 #[test]
-fn demo_network_pjrt_matches_rust_golden_and_simulator() {
+fn demo_network_runtime_matches_rust_golden_and_simulator() {
     let Some(m) = manifest() else { return };
     let Some(a) = m.find("demo_cnn_mixed") else { return };
-    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut rt = Runtime::cpu().expect("artifact runtime");
 
-    // 1. PJRT output == python golden file
+    // 1. runtime output == python golden file
     let out = rt.execute_recorded(a).expect("execute");
     let golden_bytes = a.read_golden().unwrap();
-    assert_eq!(out.to_bytes(), golden_bytes, "PJRT != python golden");
+    assert_eq!(out.to_bytes(), golden_bytes, "runtime != python golden");
     let logits = out.as_logits().expect("network emits logits").to_vec();
 
     // 2. rust golden model on the mirrored input == same logits
@@ -64,11 +64,11 @@ fn demo_network_pjrt_matches_rust_golden_and_simulator() {
     let x = QTensor::random(&mut rng, net.spec.input, net.spec.input_bits);
     assert_eq!(x.data, a.read_input().unwrap(), "input mirror broken");
     let fwd = net.forward_golden(&x);
-    assert_eq!(fwd.logits.as_ref().unwrap(), &logits, "rust golden != PJRT");
+    assert_eq!(fwd.logits.as_ref().unwrap(), &logits, "rust golden != runtime");
 
     // 3. simulated GAP-8 backend == same logits
     let run = pulpnn_mp::kernels::netrun::GapBackend::default().run(&net, &x);
-    assert_eq!(run.logits.as_ref().unwrap(), &logits, "simulator != PJRT");
+    assert_eq!(run.logits.as_ref().unwrap(), &logits, "simulator != runtime");
 }
 
 #[test]
