@@ -1,0 +1,33 @@
+# Convenience targets. The Rust build itself is plain `cargo build`.
+
+ARTIFACTS ?= artifacts
+SEED ?= 2020
+
+.PHONY: all build test bench artifacts doc clean
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Fast self-asserting bench pass (the same budget CI uses).
+bench:
+	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench fleet_scale
+	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench shard_scale
+
+# AOT-export the artifacts the runtime/e2e paths load (python exporter;
+# writes $(ARTIFACTS)/manifest.json plus per-artifact .hlo.txt/.bin files).
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../$(ARTIFACTS) --seed $(SEED)
+
+# The documentation gate CI enforces (missing docs in coordinator/energy
+# are warnings promoted to errors here).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS)

@@ -11,10 +11,10 @@
 //! the rust golden model.
 
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, server, Fleet, FleetConfig, Policy, Server, Workload,
-    DEFAULT_WAKEUP_CYCLES,
+    gap8_mixed_devices, merge_streams, server, Fleet, FleetConfig, Policy, Server, ShardConfig,
+    ShardedFleet, Workload, DEFAULT_WAKEUP_CYCLES,
 };
-use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
+use pulpnn_mp::energy::{DEFAULT_NET_SWITCH_CYCLES, GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
 use pulpnn_mp::qnn::network::demo_cnn;
 use pulpnn_mp::qnn::tensor::QTensor;
@@ -22,6 +22,9 @@ use pulpnn_mp::runtime::{Manifest, Runtime};
 use pulpnn_mp::util::rng::Rng;
 
 const N_REQUESTS: usize = 64;
+/// Requests 48..63 resubmit the inputs of requests 32..47, so the server's
+/// result cache has something to hit.
+const N_UNIQUE: usize = 48;
 
 fn main() -> pulpnn_mp::util::error::Result<()> {
     let manifest = match Manifest::load("artifacts") {
@@ -39,13 +42,15 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
     let mut rt = Runtime::cpu()?;
     println!("runtime platform: {}", rt.platform());
     let t0 = std::time::Instant::now();
-    let mut srv = Server::new(&mut rt, artifact, 256)?;
+    let mut srv = Server::with_cache(&mut rt, artifact, 256)?;
     println!("compiled demo CNN in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
 
-    // generate request inputs (each a random packed image) + goldens
+    // generate request inputs (each a random packed image; the tail
+    // resubmits earlier inputs to exercise the result cache) + goldens
     let inputs: Vec<(u64, QTensor)> = (0..N_REQUESTS as u64)
         .map(|id| {
-            let mut rng = Rng::new(1000 + id);
+            let unique = if (id as usize) < N_UNIQUE { id } else { id - 16 };
+            let mut rng = Rng::new(1000 + unique);
             (id, QTensor::random(&mut rng, net.spec.input, net.spec.input_bits))
         })
         .collect();
@@ -61,6 +66,8 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
     println!("  throughput : {:.1} req/s", stats.throughput_rps);
     println!("  mean exec  : {:.2} ms", stats.mean_exec_us / 1e3);
     println!("  p99 exec   : {:.2} ms", stats.p99_exec_us / 1e3);
+    println!("  cache hits : {} (of {} duplicate inputs)", stats.cache_hits, N_REQUESTS - N_UNIQUE);
+    assert_eq!(stats.cache_hits, N_REQUESTS - N_UNIQUE, "every duplicate input must hit");
 
     // verify every response against the rust golden model
     for ((id, x), s) in inputs.iter().zip(&served) {
@@ -87,6 +94,7 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
         queue_bound: 128,
         batch_max: 4,
         wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
+        net_switch_cycles: 0,
     };
     let mut fleet = Fleet::with_config(nodes, Policy::EnergyAware, config);
     let reqs = Workload {
@@ -116,5 +124,76 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
         report.batches, report.mean_batch_size
     );
     println!("  per-device     : {:?}", report.per_device_served);
+
+    // --- phase 3: the sharded multi-tenant tier with result caching ---
+    // two tenant networks at 2x aggregate overload on 8 devices split
+    // across 2 coordinator shards; each tenant's stream repeats half of
+    // its inputs, so the front-tier cache absorbs a large slice of load
+    let nodes = gap8_mixed_devices(8, sim.total_cycles);
+    let capacity_rps: f64 = nodes.iter().map(|d| 1e6 / d.inference_us()).sum();
+    let tier_fleet_config = FleetConfig {
+        queue_bound: 32,
+        batch_max: 4,
+        wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
+        net_switch_cycles: DEFAULT_NET_SWITCH_CYCLES,
+    };
+    let shard_config = ShardConfig {
+        shards: 2,
+        router_service_us: 100.0,
+        tenancy_aware_routing: true,
+        cache: true,
+    };
+    let mut tier = ShardedFleet::new(nodes, Policy::TenancyAware, tier_fleet_config, shard_config);
+    let tenants: Vec<_> = (0..2u32)
+        .map(|t| {
+            Workload {
+                rate_per_s: capacity_rps, // 2 tenants at capacity each = 2x total
+                deadline_us: None,
+                n_requests: 2000,
+                seed: 40 + t as u64,
+            }
+            .generate_with_repeats(t, 0.5)
+        })
+        .collect();
+    let requests = merge_streams(&tenants);
+    let tier_report = tier.run(&requests);
+    tier_report.check_conservation(requests.len()).expect("request conservation");
+    println!(
+        "\nsharded tier (2 shards x 4 devices, 2 tenants pinned, 50% repeat inputs,\n\
+         result cache on, 2x aggregate overload):"
+    );
+    println!(
+        "  completed      : {} of {} ({} shed)",
+        tier_report.total_completed,
+        requests.len(),
+        tier_report.total_shed
+    );
+    println!("  throughput     : {:.1} req/s", tier_report.throughput_rps);
+    println!(
+        "  result cache   : {}/{} hits ({:.0}%), ~{:.2} mJ device energy saved",
+        tier_report.cache.hits,
+        tier_report.cache.lookups,
+        tier_report.cache.hit_rate * 100.0,
+        tier_report.cache.energy_saved_uj / 1e3
+    );
+    println!(
+        "  residency      : {} net-switches ({:.3} mJ)",
+        tier_report.net_switches,
+        tier_report.switch_energy_uj / 1e3
+    );
+    println!(
+        "  energy         : {:.2} mJ active + {:.2} mJ idle",
+        tier_report.active_energy_uj / 1e3,
+        tier_report.idle_energy_uj / 1e3
+    );
+    println!(
+        "  shards         : routed {:?}, utilization skew {:.3}",
+        tier_report.per_shard_routed, tier_report.utilization_skew
+    );
+    println!(
+        "  queue depth    : p50 {:.0} / p95 {:.0} / p99 {:.0}",
+        tier_report.queue_depth_p50, tier_report.queue_depth_p95, tier_report.queue_depth_p99
+    );
+    assert!(tier_report.cache.hits > 0, "repeat inputs must produce cache hits");
     Ok(())
 }

@@ -11,6 +11,13 @@
 //! network, amortizing the wake-up/setup cycles). See the module docs of
 //! [`crate::coordinator`] for the full architecture.
 //!
+//! Multi-network tenancy is modeled as per-device *weight residency*: an
+//! activation for a network other than the resident one pays
+//! [`FleetConfig::net_switch_cycles`] (evict + DMA reload) in both time and
+//! energy, and [`Policy::TenancyAware`] routes to minimize those switches.
+//! Several `Fleet`s compose into a horizontally sharded tier via
+//! [`crate::coordinator::shard`].
+//!
 //! [`Fleet::run_synchronous`] preserves the original one-pass synchronous
 //! semantics as a reference baseline: with an unbounded queue, no batching
 //! and no wake-up cost the event engine reproduces it bit-exactly (see
@@ -27,6 +34,7 @@ use super::request::Request;
 /// Routing policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// Rotate across devices with queue room.
     RoundRobin,
     /// Route to the device whose queue drains earliest (projected drain
     /// time over everything committed to the device, not just the
@@ -35,6 +43,13 @@ pub enum Policy {
     /// Prefer low-power devices; spill to high-performance ones only when
     /// the deadline would otherwise be missed.
     EnergyAware,
+    /// Minimize weight-residency switches: prefer a device whose
+    /// *effective network* (the network of its last committed request, or
+    /// its resident network when nothing is committed) matches the
+    /// request's, then an untouched (cold) device, and only then a device
+    /// that would have to evict another network — tie-breaking each rank
+    /// by projected drain time, like [`Policy::LeastLoaded`].
+    TenancyAware,
 }
 
 /// Serving-engine knobs.
@@ -49,14 +64,22 @@ pub struct FleetConfig {
     /// batch: cluster power-gate exit, FC-to-cluster offload setup and the
     /// event-unit barrier release (`isa::cost::BARRIER_COST` per core).
     pub wakeup_cycles: u64,
+    /// Cycles charged when an activation serves a network that is not
+    /// resident on the device (evicting the resident weight set and
+    /// DMA-loading the new one; see
+    /// [`crate::energy::DEFAULT_NET_SWITCH_CYCLES`]). The first network a
+    /// device ever serves is considered pre-provisioned and loads for
+    /// free. `0` disables residency cost modeling (switches are still
+    /// counted).
+    pub net_switch_cycles: u64,
 }
 
 impl Default for FleetConfig {
     /// The backward-compatible configuration: unbounded queues, no
-    /// batching, no wake-up cost — identical semantics to the original
-    /// synchronous coordinator.
+    /// batching, no wake-up cost, no residency cost — identical semantics
+    /// to the original synchronous coordinator.
     fn default() -> FleetConfig {
-        FleetConfig { queue_bound: usize::MAX, batch_max: 1, wakeup_cycles: 0 }
+        FleetConfig { queue_bound: usize::MAX, batch_max: 1, wakeup_cycles: 0, net_switch_cycles: 0 }
     }
 }
 
@@ -69,12 +92,15 @@ pub const DEFAULT_WAKEUP_CYCLES: u64 = 10_000;
 /// One simulated edge node.
 #[derive(Debug, Clone)]
 pub struct Device {
+    /// Node name (for reports and logs).
     pub name: String,
+    /// Platform operating point (frequency / power) the node runs at.
     pub op: OperatingPoint,
     /// Cycles one inference takes on this node (from the GAP-8 simulator).
     pub cycles_per_inference: u64,
+    /// Requests served so far in the current run.
     pub served: u64,
-    /// Active (computing) energy.
+    /// Active (computing) energy, including residency-switch energy.
     pub energy_uj: f64,
     /// Pending requests (FIFO).
     queue: VecDeque<Request>,
@@ -86,9 +112,19 @@ pub struct Device {
     committed_free_us: f64,
     /// Accumulated active (wake-up + inference) wall-clock.
     busy_us: f64,
+    /// Network whose weights currently reside in cluster memory (`None`
+    /// until the first activation).
+    resident_net: Option<u32>,
+    /// Activations that had to evict another network's weight set.
+    net_switches: u64,
+    /// Active energy spent on residency switches (a component of
+    /// `energy_uj`, tracked separately for the report).
+    switch_energy_uj: f64,
 }
 
 impl Device {
+    /// Create an idle node at an operating point with a fixed
+    /// per-inference cycle cost.
     pub fn new(name: String, op: OperatingPoint, cycles_per_inference: u64) -> Device {
         Device {
             name,
@@ -101,11 +137,33 @@ impl Device {
             in_flight: false,
             committed_free_us: 0.0,
             busy_us: 0.0,
+            resident_net: None,
+            net_switches: 0,
+            switch_energy_uj: 0.0,
         }
     }
 
+    /// Wall-clock of one inference on this node, in microseconds.
     pub fn inference_us(&self) -> f64 {
         self.op.time_ms(self.cycles_per_inference) * 1e3
+    }
+
+    /// Network whose weights currently reside on the device, if any.
+    pub fn resident_net(&self) -> Option<u32> {
+        self.resident_net
+    }
+
+    /// Residency switches this device has paid in the current run.
+    pub fn net_switches(&self) -> u64 {
+        self.net_switches
+    }
+
+    /// The network a new commitment would batch behind: the network of the
+    /// last queued request, or the resident network when the queue is
+    /// empty. `None` on a cold device. This is what
+    /// [`Policy::TenancyAware`] routes on.
+    pub fn effective_net(&self) -> Option<u32> {
+        self.queue.back().map(|r| r.net).or(self.resident_net)
     }
 
     /// Current pending-queue depth (excludes the in-flight batch).
@@ -128,19 +186,27 @@ impl Device {
 /// Completed-request record.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// Index of the device that served it.
     pub device: usize,
+    /// Network the request belonged to.
     pub net: u32,
     /// Activation (batch) this request was served in — global counter;
     /// requests sharing it were served by one cluster wake-up.
     pub batch: u64,
+    /// When the request arrived at the coordinator.
     pub arrival_us: f64,
+    /// When its inference started on the device.
     pub start_us: f64,
+    /// When its inference finished.
     pub finish_us: f64,
+    /// Whether the finish overran the request's deadline (if it had one).
     pub deadline_missed: bool,
 }
 
 impl Completion {
+    /// End-to-end latency: arrival to finish.
     pub fn latency_us(&self) -> f64 {
         self.finish_us - self.arrival_us
     }
@@ -149,7 +215,9 @@ impl Completion {
 /// A request shed by admission control (every admissible queue full).
 #[derive(Debug, Clone)]
 pub struct Rejection {
+    /// The shed request's id.
     pub id: u64,
+    /// When it arrived (and was immediately shed).
     pub arrival_us: f64,
 }
 
@@ -157,29 +225,39 @@ pub struct Rejection {
 /// pending requests at `t_us` (sampled after every enqueue and dispatch).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QueueSample {
+    /// Sample timestamp.
     pub t_us: f64,
+    /// Device index.
     pub device: usize,
+    /// Pending-queue depth at `t_us`.
     pub depth: usize,
 }
 
 /// Aggregated fleet metrics.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
+    /// Every completed request, in completion order.
     pub completions: Vec<Completion>,
+    /// Every request shed by admission control.
     pub rejections: Vec<Rejection>,
     /// Requests shed by admission control (`== rejections.len()`).
     pub shed: usize,
     /// Sustained throughput over the span from first arrival to last
     /// finish (completed requests only).
     pub throughput_rps: f64,
+    /// Mean end-to-end latency over completions.
     pub mean_latency_us: f64,
+    /// 99th-percentile end-to-end latency over completions.
     pub p99_latency_us: f64,
     /// Active + idle energy.
     pub total_energy_uj: f64,
+    /// Energy spent computing (wake-ups, residency switches, inference).
     pub active_energy_uj: f64,
     /// Energy idling (cluster power-gated) between activations.
     pub idle_energy_uj: f64,
+    /// Completions that overran their deadline.
     pub deadline_misses: usize,
+    /// Requests served, per device.
     pub per_device_served: Vec<u64>,
     /// Active fraction of the serving span, per device.
     pub per_device_utilization: Vec<f64>,
@@ -189,6 +267,12 @@ pub struct FleetReport {
     pub batches: u64,
     /// Mean requests per activation.
     pub mean_batch_size: f64,
+    /// Activations that evicted another network's resident weight set
+    /// (cold first loads are free and not counted).
+    pub net_switches: u64,
+    /// Active energy spent on those switches (already included in
+    /// `active_energy_uj`).
+    pub switch_energy_uj: f64,
 }
 
 impl FleetReport {
@@ -264,17 +348,22 @@ impl Ord for Event {
 
 /// The coordinator.
 pub struct Fleet {
+    /// The devices this coordinator serves on.
     pub devices: Vec<Device>,
+    /// Routing policy.
     pub policy: Policy,
+    /// Serving-engine knobs.
     pub config: FleetConfig,
     rr_next: usize,
 }
 
 impl Fleet {
+    /// A fleet with the backward-compatible default [`FleetConfig`].
     pub fn new(devices: Vec<Device>, policy: Policy) -> Fleet {
         Fleet::with_config(devices, policy, FleetConfig::default())
     }
 
+    /// A fleet with explicit serving-engine knobs.
     pub fn with_config(devices: Vec<Device>, policy: Policy, config: FleetConfig) -> Fleet {
         assert!(!devices.is_empty());
         assert!(config.queue_bound >= 1, "queue_bound must be >= 1");
@@ -356,6 +445,29 @@ impl Fleet {
                     })
                     .copied()
             }
+            Policy::TenancyAware => {
+                // rank devices by residency affinity for the request's
+                // network: 0 = effective net matches (no switch), 1 = cold
+                // device (free first load), 2 = would evict another net —
+                // then break ties on projected finish like LeastLoaded
+                let rank = |dev: &Device| match dev.effective_net() {
+                    Some(n) if n == req.net => 0u8,
+                    None => 1,
+                    Some(_) => 2,
+                };
+                self.devices
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, dev)| dev.queue.len() < bound)
+                    .min_by(|(_, a), (_, b)| {
+                        rank(a).cmp(&rank(b)).then_with(|| {
+                            let fa = a.committed_free_us.max(now) + a.inference_us();
+                            let fb = b.committed_free_us.max(now) + b.inference_us();
+                            fa.partial_cmp(&fb).unwrap()
+                        })
+                    })
+                    .map(|(i, _)| i)
+            }
         }
     }
 
@@ -371,6 +483,9 @@ impl Fleet {
             dev.busy_us = 0.0;
             dev.served = 0;
             dev.energy_uj = 0.0;
+            dev.resident_net = None;
+            dev.net_switches = 0;
+            dev.switch_energy_uj = 0.0;
         }
     }
 
@@ -415,6 +530,7 @@ impl Fleet {
                     let wake_us = self.wakeup_us(d);
                     let batch_max = self.config.batch_max;
                     let wakeup_cycles = self.config.wakeup_cycles;
+                    let net_switch_cycles = self.config.net_switch_cycles;
                     let dev = &mut self.devices[d];
                     if dev.in_flight || dev.queue.is_empty() {
                         continue; // stale dispatch
@@ -429,9 +545,22 @@ impl Fleet {
                     }
                     series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
 
+                    // weight residency: evicting a different resident net
+                    // costs a DMA reload before the batch can start (a
+                    // cold first load is free — weights are pre-staged at
+                    // provisioning time)
+                    let switching = matches!(dev.resident_net, Some(r) if r != net);
+                    let switch_cycles = if switching { net_switch_cycles } else { 0 };
+                    let switch_us = dev.op.time_ms(switch_cycles) * 1e3;
+                    if switching {
+                        dev.net_switches += 1;
+                        dev.switch_energy_uj += dev.op.energy_uj(switch_cycles);
+                    }
+                    dev.resident_net = Some(net);
+
                     let start = now;
                     let inf = dev.inference_us();
-                    let mut t = start + wake_us;
+                    let mut t = start + wake_us + switch_us;
                     for req in &batch {
                         let s = t;
                         t += inf;
@@ -455,11 +584,13 @@ impl Fleet {
                     dev.busy_until_us = finish;
                     dev.busy_us += finish - start;
                     dev.served += k;
-                    dev.energy_uj +=
-                        dev.op.energy_uj(wakeup_cycles + k * dev.cycles_per_inference);
+                    dev.energy_uj += dev
+                        .op
+                        .energy_uj(wakeup_cycles + switch_cycles + k * dev.cycles_per_inference);
                     // the committed-drain projection assumed inference time
-                    // only; account for the activation's wake-up
-                    dev.committed_free_us += wake_us;
+                    // only; account for the activation's wake-up and
+                    // residency switch
+                    dev.committed_free_us += wake_us + switch_us;
                     batches += 1;
                     batched_requests += k;
                     heap.push(Event { time: finish, seq, kind: EventKind::Finish { device: d } });
@@ -497,6 +628,14 @@ impl Fleet {
         for req in requests {
             let d = self.route(req, req.arrival_us).expect("unbounded queues never shed");
             let dev = &mut self.devices[d];
+            // mirror the event engine's residency tracking: with
+            // batch_max = 1 every request is one activation, and the
+            // device's effective net is simply the last committed net
+            // (cost is zero — the default config has no switch cycles)
+            if matches!(dev.resident_net, Some(r) if r != req.net) {
+                dev.net_switches += 1;
+            }
+            dev.resident_net = Some(req.net);
             let start = dev.committed_free_us.max(req.arrival_us);
             let finish = start + dev.inference_us();
             dev.committed_free_us = finish;
@@ -569,6 +708,8 @@ impl Fleet {
             queue_depth_series: series,
             batches,
             mean_batch_size: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
+            net_switches: self.devices.iter().map(|d| d.net_switches).sum(),
+            switch_energy_uj: self.devices.iter().map(|d| d.switch_energy_uj).sum(),
             completions,
             rejections,
         }
@@ -634,7 +775,12 @@ mod tests {
     #[test]
     fn prop_no_request_lost_or_duplicated() {
         check("fleet-conservation", 50, |rng, _| {
-            let policy = *rng.pick(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::EnergyAware]);
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
             let mut fleet = random_fleet(rng, policy);
             let reqs = workload(500.0 + rng.below(5000) as f64, 200, Some(1e5), rng.next_u64());
             let report = fleet.run(&reqs);
@@ -654,7 +800,12 @@ mod tests {
     #[test]
     fn prop_device_serialization_no_overlap() {
         check("fleet-fifo-no-overlap", 50, |rng, _| {
-            let policy = *rng.pick(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::EnergyAware]);
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
             let mut fleet = random_fleet(rng, policy);
             let reqs = workload(2000.0, 300, None, rng.next_u64());
             let report = fleet.run(&reqs);
@@ -683,11 +834,26 @@ mod tests {
         // wake-up) the event engine must reproduce the one-pass synchronous
         // baseline bit-exactly: same completions, same routing, same energy.
         check("fleet-event-vs-sync", 40, |rng, _| {
-            let policy = *rng.pick(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::EnergyAware]);
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
             let devices = random_devices(rng);
             let deadline = if rng.chance(0.5) { Some(5e4) } else { None };
-            let reqs =
-                workload(500.0 + rng.below(4000) as f64, 250, deadline, rng.next_u64());
+            let rate = 500.0 + rng.below(4000) as f64;
+            // sometimes a multi-tenant stream, so residency tracking and
+            // TenancyAware routing are exercised in both engines
+            let reqs = if rng.chance(0.5) {
+                let mk = |net: u32, seed: u64| {
+                    Workload { rate_per_s: rate / 2.0, deadline_us: deadline, n_requests: 125, seed }
+                        .generate_for_net(net)
+                };
+                merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())])
+            } else {
+                workload(rate, 250, deadline, rng.next_u64())
+            };
             let mut ev = Fleet::new(devices.clone(), policy);
             let mut sync = Fleet::new(devices, policy);
             let a = ev.run(&reqs);
@@ -723,6 +889,12 @@ mod tests {
                     a.active_energy_uj, b.active_energy_uj
                 ));
             }
+            if a.net_switches != b.net_switches {
+                return Err(format!(
+                    "net switches diverged: {} vs {}",
+                    a.net_switches, b.net_switches
+                ));
+            }
             Ok(())
         });
     }
@@ -735,7 +907,8 @@ mod tests {
             Device::new("d0".into(), GAP8_LP, 400_000),
             Device::new("d1".into(), GAP8_LP, 400_000),
         ];
-        let config = FleetConfig { queue_bound: 4, batch_max: 1, wakeup_cycles: 0 };
+        let config =
+            FleetConfig { queue_bound: 4, batch_max: 1, wakeup_cycles: 0, net_switch_cycles: 0 };
         let mut fleet = Fleet::with_config(devices, Policy::LeastLoaded, config);
         let reqs = workload(2000.0, 500, None, 11);
         let report = fleet.run(&reqs);
@@ -766,7 +939,12 @@ mod tests {
                 Device::new("d0".into(), GAP8_LP, 300_000),
                 Device::new("d1".into(), GAP8_LP, 300_000),
             ];
-            let config = FleetConfig { queue_bound: 16, batch_max, wakeup_cycles: 90_000 };
+            let config = FleetConfig {
+                queue_bound: 16,
+                batch_max,
+                wakeup_cycles: 90_000,
+                net_switch_cycles: 0,
+            };
             let mut fleet = Fleet::with_config(devices, Policy::LeastLoaded, config);
             fleet.run(&workload(1800.0, 600, None, 13))
         };
@@ -792,7 +970,12 @@ mod tests {
             .generate_for_net(1);
         let reqs = merge_streams(&[a, b]);
         let devices = vec![Device::new("d0".into(), GAP8_HP, 300_000)];
-        let config = FleetConfig { queue_bound: 64, batch_max: 4, wakeup_cycles: 50_000 };
+        let config = FleetConfig {
+            queue_bound: 64,
+            batch_max: 4,
+            wakeup_cycles: 50_000,
+            net_switch_cycles: 0,
+        };
         let mut fleet = Fleet::with_config(devices, Policy::RoundRobin, config);
         let report = fleet.run(&reqs);
         // overloaded single device: admitted + shed must partition the load
@@ -819,7 +1002,8 @@ mod tests {
         // diluted by the idle ramp-up before it (the old `max(finish)`
         // denominator bug).
         let mut fleet = gap8_fleet(1, GAP8_LP, 90_000, Policy::RoundRobin); // 1 ms/inf
-        let reqs = vec![Request { id: 0, arrival_us: 1e6, deadline_us: None, net: 0 }];
+        let reqs =
+            vec![Request { id: 0, arrival_us: 1e6, deadline_us: None, net: 0, input_digest: 0 }];
         let report = fleet.run(&reqs);
         // span = 1 ms -> ~1000 rps; the buggy span (1.001 s) gave ~1 rps
         assert!(report.throughput_rps > 500.0, "{}", report.throughput_rps);
@@ -893,6 +1077,107 @@ mod tests {
         assert_eq!(a.per_device_served, b.per_device_served);
         assert_eq!(a.active_energy_uj, b.active_energy_uj);
         assert_eq!(a.completions.len(), b.completions.len());
+    }
+
+    /// Requests alternating between two networks, spaced far enough apart
+    /// that every device is idle at each arrival.
+    fn alternating_net_requests(n: usize, gap_us: f64) -> Vec<Request> {
+        (0..n as u64)
+            .map(|id| Request {
+                id,
+                arrival_us: id as f64 * gap_us,
+                deadline_us: None,
+                net: (id % 2) as u32,
+                input_digest: id,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn net_switches_are_counted_and_charged() {
+        // one device, strictly alternating networks: every activation
+        // after the first (free cold load) evicts the other net
+        let run = |switch_cycles: u64| {
+            let devices = vec![Device::new("d0".into(), GAP8_LP, 100_000)];
+            let config = FleetConfig {
+                queue_bound: usize::MAX,
+                batch_max: 1,
+                wakeup_cycles: 0,
+                net_switch_cycles: switch_cycles,
+            };
+            let mut fleet = Fleet::with_config(devices, Policy::RoundRobin, config);
+            fleet.run(&alternating_net_requests(10, 10_000.0))
+        };
+        let charged = run(50_000);
+        let free = run(0);
+        assert_eq!(charged.net_switches, 9);
+        assert_eq!(free.net_switches, 9, "switches are counted even at zero cost");
+        let expect_uj = 9.0 * GAP8_LP.energy_uj(50_000);
+        assert!((charged.switch_energy_uj - expect_uj).abs() < 1e-9);
+        assert_eq!(free.switch_energy_uj, 0.0);
+        // switch energy is part of the active split, and switch time is
+        // part of every switched request's latency
+        assert!(charged.active_energy_uj > free.active_energy_uj);
+        assert!(charged.mean_latency_us > free.mean_latency_us);
+    }
+
+    #[test]
+    fn single_tenant_workload_is_bit_exact_regardless_of_switch_cost() {
+        // one network: no activation ever switches, so the residency cost
+        // knob must not change a single bit of the report
+        let run = |switch_cycles: u64| {
+            let config = FleetConfig {
+                queue_bound: 32,
+                batch_max: 4,
+                wakeup_cycles: 20_000,
+                net_switch_cycles: switch_cycles,
+            };
+            let devices = gap8_mixed_devices(3, 300_000);
+            Fleet::with_config(devices, Policy::LeastLoaded, config)
+                .run(&workload(1500.0, 400, Some(5e4), 23))
+        };
+        let (a, b) = (run(0), run(500_000));
+        assert_eq!(a.net_switches, 0);
+        assert_eq!(b.net_switches, 0);
+        assert_eq!(a.active_energy_uj, b.active_energy_uj);
+        assert_eq!(a.throughput_rps, b.throughput_rps);
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(b.completions.iter()) {
+            assert_eq!(x.finish_us, y.finish_us);
+        }
+    }
+
+    #[test]
+    fn tenancy_aware_routing_minimizes_switches() {
+        // two devices, two alternating networks, idle fleet at every
+        // arrival: TenancyAware pins each net to its own device (zero
+        // switches); LeastLoaded ties on load and thrashes one device
+        let run = |policy: Policy| {
+            let devices = vec![
+                Device::new("d0".into(), GAP8_LP, 100_000),
+                Device::new("d1".into(), GAP8_LP, 100_000),
+            ];
+            let config = FleetConfig {
+                queue_bound: usize::MAX,
+                batch_max: 1,
+                wakeup_cycles: 0,
+                net_switch_cycles: 50_000,
+            };
+            Fleet::with_config(devices, policy, config)
+                .run(&alternating_net_requests(40, 10_000.0))
+        };
+        let ta = run(Policy::TenancyAware);
+        let ll = run(Policy::LeastLoaded);
+        assert_eq!(ta.net_switches, 0, "tenancy-aware routing must pin nets to devices");
+        assert_eq!(ta.switch_energy_uj, 0.0);
+        assert!(
+            ll.net_switches > 10,
+            "expected load-tied routing to thrash residency, got {} switches",
+            ll.net_switches
+        );
+        assert!(ta.active_energy_uj < ll.active_energy_uj);
+        // both nets actually got served under TenancyAware
+        assert!(ta.per_device_served.iter().all(|&s| s == 20), "{:?}", ta.per_device_served);
     }
 
     #[test]

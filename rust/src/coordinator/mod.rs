@@ -49,12 +49,25 @@
 //! queue, `batch_max = 1`, no wake-up) the event engine reproduces them
 //! bit-exactly, which is property-tested.
 //!
+//! # The sharded tier on top
+//!
+//! One `Fleet` is one coordinator — one event loop with a finite
+//! per-request routing cost. [`shard::ShardedFleet`] composes K of them
+//! behind a consistent-hash front router into a horizontally scalable
+//! tier, adds multi-network *weight-residency* modeling
+//! ([`FleetConfig::net_switch_cycles`], [`Policy::TenancyAware`]) and a
+//! single-flight result cache keyed on `(net, input_digest)` — see the
+//! [`shard`] module docs and `docs/ARCHITECTURE.md` for the design
+//! rationale. With one shard, a free router, and the cache off, the tier
+//! is property-tested to reproduce a bare `Fleet` bit-exactly.
+//!
 //! [`OperatingPoint::power_mw`]: crate::energy::OperatingPoint::power_mw
 //! [`OperatingPoint::idle_power_mw`]: crate::energy::OperatingPoint::idle_power_mw
 
 pub mod fleet;
 pub mod request;
 pub mod server;
+pub mod shard;
 
 pub use fleet::{
     gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Device, Fleet, FleetConfig,
@@ -62,3 +75,4 @@ pub use fleet::{
 };
 pub use request::{merge_streams, Request, Workload};
 pub use server::{Served, Server, ServeStats};
+pub use shard::{CacheHit, CacheStats, ShardConfig, ShardedFleet, ShardedReport};

@@ -1,5 +1,17 @@
 //! Inference requests and synthetic workload generation for the edge-fleet
 //! coordinator.
+//!
+//! A [`Request`] is the unit of work the serving tier routes: it carries a
+//! network (model) id for tenancy, an arrival timestamp, an optional
+//! deadline, and a 64-bit *input digest* — the stable hash of the packed
+//! input payload the request would carry on the wire. The digest is what
+//! the coordinator-tier result cache keys on (together with `net`): the
+//! artifact runtime is deterministic, so `(net, input_digest)` fully
+//! determines the output (see [`crate::coordinator::shard`]).
+//!
+//! [`Workload`] generates open-loop Poisson arrival streams; per-tenant
+//! streams are combined with [`merge_streams`]. Repeated inputs (the
+//! cache's reason to exist) are modeled by [`Workload::generate_with_repeats`].
 
 use crate::util::rng::Rng;
 
@@ -7,31 +19,58 @@ use crate::util::rng::Rng;
 /// microseconds of simulated wall-clock.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Workload-unique request id.
     pub id: u64,
+    /// Arrival time at the serving tier (simulated microseconds).
     pub arrival_us: f64,
     /// Optional latency deadline (relative to arrival).
     pub deadline_us: Option<f64>,
     /// Network (model) id: a device micro-batch only groups requests for
     /// the same network, since activation setup is per-network.
     pub net: u32,
+    /// Stable 64-bit digest of the request's packed input payload. Two
+    /// requests with equal `(net, input_digest)` are guaranteed to produce
+    /// identical outputs (the runtime is deterministic), which is what the
+    /// shard tier's result cache exploits. Workload generators derive it
+    /// from `(seed, net, id)` so distinct requests get distinct digests
+    /// unless repeats are explicitly injected.
+    pub input_digest: u64,
+}
+
+/// splitmix64 finalizer: a cheap, well-distributed 64-bit mixer used for
+/// input digests and the consistent-hash ring (not cryptographic).
+pub(crate) fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    x
 }
 
 /// Poisson arrivals with optional per-request deadlines.
 #[derive(Debug, Clone)]
 pub struct Workload {
+    /// Mean arrival rate of the open-loop Poisson process, in requests/s.
     pub rate_per_s: f64,
+    /// Deadline stamped on every request (relative to its arrival).
     pub deadline_us: Option<f64>,
+    /// Number of requests to generate.
     pub n_requests: usize,
+    /// RNG seed: streams are bit-reproducible per seed.
     pub seed: u64,
 }
 
 impl Workload {
+    /// Generate the stream for network 0 (single-tenant shorthand).
     pub fn generate(&self) -> Vec<Request> {
         self.generate_for_net(0)
     }
 
     /// Generate the stream tagged with a network id (for multi-tenant
-    /// scenarios; combine streams with [`merge_streams`]).
+    /// scenarios; combine streams with [`merge_streams`]). Every request
+    /// gets a distinct input digest (no cache hits possible).
     pub fn generate_for_net(&self, net: u32) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
         let mut t = 0.0f64;
@@ -40,16 +79,49 @@ impl Workload {
                 // exponential inter-arrival: -ln(U)/rate
                 let u = rng.unit_f64().max(1e-12);
                 t += -u.ln() / self.rate_per_s * 1e6;
-                Request { id, arrival_us: t, deadline_us: self.deadline_us, net }
+                Request {
+                    id,
+                    arrival_us: t,
+                    deadline_us: self.deadline_us,
+                    net,
+                    input_digest: digest_for(self.seed, net, id),
+                }
             })
             .collect()
     }
+
+    /// Like [`Workload::generate_for_net`], but a fraction `repeat_ratio`
+    /// of requests re-submit a previously seen input (drawn uniformly from
+    /// the inputs generated so far) instead of a fresh one — the workload
+    /// shape that makes the shard tier's result cache pay off. The arrival
+    /// process is *identical* to [`Workload::generate_for_net`] for the
+    /// same seed (digest assignment uses an independent RNG stream), so
+    /// cache-on/cache-off comparisons see the same arrivals.
+    pub fn generate_with_repeats(&self, net: u32, repeat_ratio: f64) -> Vec<Request> {
+        let mut reqs = self.generate_for_net(net);
+        let mut rng = Rng::new(mix64(self.seed ^ 0xD16E_5700_0000_0000));
+        let mut pool: Vec<u64> = Vec::new();
+        for r in &mut reqs {
+            if !pool.is_empty() && rng.chance(repeat_ratio) {
+                r.input_digest = *rng.pick(&pool);
+            } else {
+                pool.push(r.input_digest);
+            }
+        }
+        reqs
+    }
+}
+
+/// Digest for request `id` of network `net` under workload seed `seed`:
+/// unique per `(seed, net, id)` up to 64-bit collisions.
+fn digest_for(seed: u64, net: u32, id: u64) -> u64 {
+    mix64(seed ^ mix64(((net as u64) << 40) ^ id))
 }
 
 /// Merge several per-tenant request streams into one arrival-ordered
-/// stream with globally unique ids (each request keeps its deadline and
-/// network tag). The sort is stable, so equal arrival times preserve
-/// stream order.
+/// stream with globally unique ids (each request keeps its deadline,
+/// network tag and input digest). The sort is stable, so equal arrival
+/// times preserve stream order.
 pub fn merge_streams(streams: &[Vec<Request>]) -> Vec<Request> {
     let mut all: Vec<Request> = streams.iter().flatten().cloned().collect();
     all.sort_by(|a, b| a.arrival_us.partial_cmp(&b.arrival_us).unwrap());
@@ -94,5 +166,37 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), 130);
         assert_eq!(merged.iter().filter(|r| r.net == 1).count(), 80);
+    }
+
+    #[test]
+    fn digests_are_unique_without_repeats() {
+        let w = Workload { rate_per_s: 500.0, deadline_us: None, n_requests: 500, seed: 3 };
+        let mut d: Vec<u64> = w.generate_for_net(2).iter().map(|r| r.input_digest).collect();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 500);
+        // different nets under the same seed must not collide either
+        let a = w.generate_for_net(0);
+        let b = w.generate_for_net(1);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.input_digest != y.input_digest));
+    }
+
+    #[test]
+    fn repeats_inject_duplicates_but_keep_arrivals() {
+        let w = Workload { rate_per_s: 500.0, deadline_us: None, n_requests: 400, seed: 5 };
+        let plain = w.generate_for_net(0);
+        let rep = w.generate_with_repeats(0, 0.5);
+        // same arrival process, same ids, same nets
+        assert!(plain
+            .iter()
+            .zip(&rep)
+            .all(|(a, b)| a.arrival_us == b.arrival_us && a.id == b.id && a.net == b.net));
+        // a substantial fraction of digests are duplicates
+        let mut d: Vec<u64> = rep.iter().map(|r| r.input_digest).collect();
+        d.sort_unstable();
+        d.dedup();
+        assert!(d.len() < 300, "expected repeats, got {} unique of 400", d.len());
+        // ratio 0 degenerates to the plain stream
+        assert_eq!(w.generate_with_repeats(0, 0.0), plain);
     }
 }

@@ -4,31 +4,51 @@
 //! drives end-to-end: requests enter a bounded queue, a worker drains it,
 //! executes on the artifact runtime, and the device/fleet simulator stamps
 //! each reply with the simulated on-device cycles and energy.
+//!
+//! The server can memoize results ([`Server::with_cache`]): the runtime is
+//! deterministic, so outputs are cached by [`input_digest`] of the raw
+//! request bytes — the real-path counterpart of the simulated tier's
+//! coordinator cache in [`crate::coordinator::shard`].
 
+use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::runtime::{Artifact, ExecOutput, Runtime};
+use crate::runtime::{input_digest, Artifact, ExecOutput, Runtime};
 use crate::util::error::Result;
 
 /// A served request: wall-clock measurements plus the simulated-edge cost.
 #[derive(Debug, Clone)]
 pub struct Served {
+    /// The request's id.
     pub id: u64,
+    /// Wall-clock the request waited in the queue, in microseconds.
     pub queue_us: f64,
+    /// Wall-clock the runtime spent executing it (≈0 on a cache hit).
     pub exec_us: f64,
+    /// Whether the reply came from the result cache.
+    pub cached: bool,
+    /// The reply payload.
     pub output: ExecOutput,
 }
 
 /// Serving statistics.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
+    /// Requests served.
     pub served: usize,
+    /// Wall-clock of the whole drain, in seconds.
     pub wall_s: f64,
+    /// Served / wall-clock.
     pub throughput_rps: f64,
+    /// Mean runtime execution time per request, in microseconds.
     pub mean_exec_us: f64,
+    /// 99th-percentile execution time, in microseconds.
     pub p99_exec_us: f64,
+    /// Mean queue wait per request, in microseconds.
     pub mean_queue_us: f64,
+    /// Replies answered from the result cache.
+    pub cache_hits: usize,
 }
 
 /// A single-model inference server over one compiled artifact.
@@ -36,13 +56,31 @@ pub struct Server<'a> {
     rt: &'a mut Runtime,
     artifact: &'a Artifact,
     queue: VecDeque<(u64, Vec<u8>, Instant)>,
+    /// Queue bound; [`Server::submit`] returns `false` beyond it.
     pub max_queue: usize,
+    /// Result cache keyed by input digest (`None` = caching disabled).
+    cache: Option<HashMap<u64, ExecOutput>>,
 }
 
 impl<'a> Server<'a> {
+    /// Compile the artifact and set up an empty bounded queue (no result
+    /// caching).
     pub fn new(rt: &'a mut Runtime, artifact: &'a Artifact, max_queue: usize) -> Result<Server<'a>> {
         rt.load(artifact)?;
-        Ok(Server { rt, artifact, queue: VecDeque::new(), max_queue })
+        Ok(Server { rt, artifact, queue: VecDeque::new(), max_queue, cache: None })
+    }
+
+    /// Like [`Server::new`], with result memoization enabled: repeated
+    /// input payloads are answered from the cache without touching the
+    /// runtime (sound because the runtime is deterministic).
+    pub fn with_cache(
+        rt: &'a mut Runtime,
+        artifact: &'a Artifact,
+        max_queue: usize,
+    ) -> Result<Server<'a>> {
+        let mut s = Server::new(rt, artifact, max_queue)?;
+        s.cache = Some(HashMap::new());
+        Ok(s)
     }
 
     /// Enqueue a request; returns false when the queue is full
@@ -55,19 +93,35 @@ impl<'a> Server<'a> {
         true
     }
 
+    /// Requests currently queued.
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
     }
 
-    /// Drain the queue, executing every pending request.
+    /// Drain the queue, executing every pending request (or answering it
+    /// from the result cache when enabled and warm).
     pub fn drain(&mut self) -> Result<Vec<Served>> {
         let mut out = Vec::with_capacity(self.queue.len());
         while let Some((id, input, enq)) = self.queue.pop_front() {
             let queue_us = enq.elapsed().as_secs_f64() * 1e6;
+            let digest = self.cache.as_ref().map(|_| input_digest(&input));
+            let hit: Option<ExecOutput> = match (digest, self.cache.as_ref()) {
+                (Some(d), Some(cache)) => cache.get(&d).cloned(),
+                _ => None,
+            };
             let t0 = Instant::now();
-            let output = self.rt.execute(self.artifact, &input)?;
+            let (output, cached) = match hit {
+                Some(output) => (output, true),
+                None => {
+                    let output = self.rt.execute(self.artifact, &input)?;
+                    if let (Some(d), Some(cache)) = (digest, self.cache.as_mut()) {
+                        cache.insert(d, output.clone());
+                    }
+                    (output, false)
+                }
+            };
             let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-            out.push(Served { id, queue_us, exec_us, output });
+            out.push(Served { id, queue_us, exec_us, cached, output });
         }
         Ok(out)
     }
@@ -88,5 +142,6 @@ pub fn stats(served: &[Served], wall_s: f64) -> ServeStats {
             crate::util::stats::percentile(&execs, 99.0)
         },
         mean_queue_us: queues.iter().sum::<f64>() / queues.len().max(1) as f64,
+        cache_hits: served.iter().filter(|s| s.cached).count(),
     }
 }

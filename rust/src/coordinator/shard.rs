@@ -1,0 +1,992 @@
+//! The horizontally sharded serving tier: a front-tier router over K
+//! independent [`Fleet`] coordinators, with multi-network tenancy and a
+//! coordinator-tier result cache.
+//!
+//! # Why shard
+//!
+//! PR 1's event-driven [`Fleet`] is a *single* coordinator: one event loop
+//! routes every arrival, and its per-request routing/bookkeeping cost —
+//! modeled here as [`ShardConfig::router_service_us`] — caps sustained
+//! throughput at `1e6 / router_service_us` requests/s no matter how many
+//! devices it fronts. The shard tier restores device-bound operation by
+//! consistent-hashing requests across K coordinators, each owning a
+//! disjoint partition of the device fleet (see `benches/shard_scale.rs`,
+//! which self-asserts that K=4 strictly out-serves K=1 at 4x overload).
+//!
+//! # Routing key
+//!
+//! The consistent-hash ring routes on `(net, input_digest)` by default,
+//! spreading each network's traffic across shards (and keeping ~1/K of
+//! the keyspace stable when shards join or leave). With
+//! [`ShardConfig::tenancy_aware_routing`] placement switches to `net % K`:
+//! every network is *pinned* to one shard, so at most `nets/K` networks
+//! compete for any device's weight residency, minimizing evict/load
+//! switches (combine with [`Policy::TenancyAware`] inside each shard).
+//! Pinning uses explicit modulo placement rather than the ring because a
+//! serving tier has a handful of tenant networks, not a keyspace: hashing
+//! 2 nets onto 2 shards collides with probability 1/2, while modulo
+//! placement is perfectly balanced. Either way the network determines the
+//! shard, so all requests sharing a cache key land on the same shard and
+//! the result cache needs no cross-shard coherence.
+//!
+//! # Result cache
+//!
+//! The native artifact runtime is deterministic (see
+//! [`crate::runtime::input_digest`]): `(net, input_digest)` fully
+//! determines the output, so the front tier memoizes it. The cache is
+//! *single-flight*: the first miss for a key installs a pending entry and
+//! is forwarded to a fleet; concurrent duplicates **join** that pending
+//! request instead of being forwarded, completing when it completes (or
+//! being shed with it — conservation holds exactly). A hit never touches
+//! a device: no queue slot, no activation, no residency change, no active
+//! energy. Entries persist across [`ShardedFleet::run`] calls (serving
+//! state resets; the cache is the long-lived tier), so a replayed workload
+//! hits at 100%.
+//!
+//! # Report
+//!
+//! [`ShardedReport`] aggregates the per-shard [`FleetReport`]s with the
+//! router/cache view: global throughput over the span from first arrival
+//! to last finish, total completed/shed (fleet completions + cache hits /
+//! fleet shed + shed joiners), cache hit-rate and estimated energy saved,
+//! residency-switch totals, cross-shard utilization skew and queue-depth
+//! percentiles.
+
+use std::collections::HashMap;
+
+use crate::util::stats::percentile;
+
+use super::fleet::{Device, Fleet, FleetConfig, FleetReport, Policy};
+use super::request::{mix64, Request};
+
+/// Virtual nodes per shard on the consistent-hash ring: enough that the
+/// keyspace split stays within a few percent of uniform for K <= 64.
+const RING_VNODES: usize = 64;
+
+/// Front-tier knobs for the sharded serving tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardConfig {
+    /// Number of independent coordinators the device fleet is partitioned
+    /// across (K >= 1; each shard needs at least one device).
+    pub shards: usize,
+    /// Per-request service time of one coordinator's front-end (routing
+    /// decision, queue bookkeeping, reply marshalling) in microseconds of
+    /// simulated wall-clock. Arrivals drain through each shard's router
+    /// in FIFO order at this rate; `0.0` models a free router and keeps
+    /// the K=1 tier bit-identical to a bare [`Fleet`].
+    pub router_service_us: f64,
+    /// Pin each network to shard `net % K` instead of consistent-hashing
+    /// `(net, input_digest)` across the ring, minimizing weight-residency
+    /// switches (multi-tenant mode). Explicit placement beats the ring's
+    /// statistical balance when there are only a handful of tenants.
+    pub tenancy_aware_routing: bool,
+    /// Enable the coordinator-tier result cache.
+    pub cache: bool,
+}
+
+impl Default for ShardConfig {
+    /// One shard, free router, hash-spread routing, no cache — the
+    /// configuration that reproduces a bare [`Fleet`] bit-exactly.
+    fn default() -> ShardConfig {
+        ShardConfig {
+            shards: 1,
+            router_service_us: 0.0,
+            tenancy_aware_routing: false,
+            cache: false,
+        }
+    }
+}
+
+/// A request completed at the front tier by the result cache.
+#[derive(Debug, Clone)]
+pub struct CacheHit {
+    /// The request's id.
+    pub id: u64,
+    /// Network the request belonged to.
+    pub net: u32,
+    /// When the request arrived at the tier (before any router wait).
+    pub arrival_us: f64,
+    /// When its memoized result was returned: its router-exit time, or the
+    /// finish of the in-flight request it joined, whichever is later.
+    pub finish_us: f64,
+    /// Whether even the cached reply overran the request's deadline
+    /// (deadlines are relative to tier arrival).
+    pub deadline_missed: bool,
+}
+
+impl CacheHit {
+    /// End-to-end latency of the hit.
+    pub fn latency_us(&self) -> f64 {
+        self.finish_us - self.arrival_us
+    }
+}
+
+/// Result-cache accounting for one [`ShardedFleet::run`].
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    /// Cache lookups performed (= admitted arrivals while enabled).
+    pub lookups: u64,
+    /// Lookups answered from the cache (resolved entries + joined
+    /// in-flight requests that completed).
+    pub hits: u64,
+    /// Joined requests whose in-flight owner was shed — shed with it.
+    pub shed_joins: u64,
+    /// `hits / lookups` (0 when no lookups).
+    pub hit_rate: f64,
+    /// Estimated device-side active energy the hits avoided: per hit, the
+    /// mean per-inference active energy of the target shard's devices.
+    pub energy_saved_uj: f64,
+    /// Resolved entries resident in the cache after the run.
+    pub entries: usize,
+}
+
+/// Aggregated view of one workload served by the sharded tier.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Per-shard serving reports, indexed by shard.
+    pub shards: Vec<FleetReport>,
+    /// Requests forwarded to each shard's fleet (cache hits excluded).
+    pub per_shard_routed: Vec<usize>,
+    /// Requests completed at the front tier by the result cache.
+    pub cache_hits: Vec<CacheHit>,
+    /// Result-cache accounting.
+    pub cache: CacheStats,
+    /// Fleet completions plus cache hits.
+    pub total_completed: usize,
+    /// Fleet-shed requests plus shed joiners.
+    pub total_shed: usize,
+    /// Sustained throughput: completed requests over the span from the
+    /// first arrival at the tier to the last finish anywhere in it.
+    pub throughput_rps: f64,
+    /// Mean service latency over fleet completions (router-exit to
+    /// finish; the router wait is reported separately).
+    pub mean_service_latency_us: f64,
+    /// Mean time arrivals waited in the shard routers' FIFOs.
+    pub mean_router_delay_us: f64,
+    /// Summed device active energy across shards.
+    pub active_energy_uj: f64,
+    /// Summed device idle energy across shards.
+    pub idle_energy_uj: f64,
+    /// Active + idle across shards.
+    pub total_energy_uj: f64,
+    /// Completions (fleet or cache) that overran their deadline, measured
+    /// against the original tier arrival — router wait counts.
+    pub deadline_misses: usize,
+    /// Weight-residency switches across all devices.
+    pub net_switches: u64,
+    /// Active energy those switches cost (included in `active_energy_uj`).
+    pub switch_energy_uj: f64,
+    /// Utilization skew across shards: max minus min of per-shard mean
+    /// device utilization (0 = perfectly even).
+    pub utilization_skew: f64,
+    /// Median pending-queue depth over every queue sample in every shard.
+    pub queue_depth_p50: f64,
+    /// 95th-percentile pending-queue depth across shards.
+    pub queue_depth_p95: f64,
+    /// 99th-percentile pending-queue depth across shards.
+    pub queue_depth_p99: f64,
+}
+
+impl ShardedReport {
+    /// Every admitted request is accounted for exactly once:
+    /// `total_completed + total_shed` must equal the workload size.
+    pub fn check_conservation(&self, n_requests: usize) -> Result<(), String> {
+        let total = self.total_completed + self.total_shed;
+        if total != n_requests {
+            return Err(format!(
+                "conservation violated: {} completed + {} shed = {total} != {n_requests}",
+                self.total_completed, self.total_shed
+            ));
+        }
+        let forwarded: usize = self.per_shard_routed.iter().sum();
+        let fleet_total: usize =
+            self.shards.iter().map(|r| r.completions.len() + r.shed).sum();
+        if forwarded != fleet_total {
+            return Err(format!(
+                "forwarded {forwarded} != fleet completed+shed {fleet_total}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// State of one result-cache key.
+enum CacheEntry {
+    /// First miss is in flight; duplicates join it. Carries the owner id.
+    Pending(u64),
+    /// The owner completed in an earlier run (or earlier in this run and
+    /// was promoted at reconciliation); hits complete immediately.
+    Resolved,
+}
+
+/// The sharded serving tier: a consistent-hash front router over K
+/// independent [`Fleet`] coordinators and a persistent result cache.
+pub struct ShardedFleet {
+    shards: Vec<Fleet>,
+    config: ShardConfig,
+    /// Sorted `(ring position, shard)` points.
+    ring: Vec<(u64, usize)>,
+    /// Result cache, persistent across runs. Keyed by `(net, digest)`.
+    cache: HashMap<(u32, u64), CacheEntry>,
+}
+
+impl ShardedFleet {
+    /// Partition `devices` into `config.shards` contiguous, near-equal
+    /// groups (contiguous chunks keep an alternating LP/HP fleet mixed
+    /// within every shard) and build one [`Fleet`] per group.
+    ///
+    /// Panics if there are fewer devices than shards, or `shards == 0`.
+    pub fn new(
+        devices: Vec<Device>,
+        policy: Policy,
+        fleet_config: FleetConfig,
+        config: ShardConfig,
+    ) -> ShardedFleet {
+        assert!(config.shards >= 1, "need at least one shard");
+        assert!(
+            devices.len() >= config.shards,
+            "need at least one device per shard ({} devices, {} shards)",
+            devices.len(),
+            config.shards
+        );
+        let k = config.shards;
+        let (base, extra) = (devices.len() / k, devices.len() % k);
+        let mut devices = devices;
+        let mut shards = Vec::with_capacity(k);
+        // take chunks from the front: the first `extra` shards get one more
+        for s in 0..k {
+            let take = base + usize::from(s < extra);
+            let rest = devices.split_off(take);
+            shards.push(Fleet::with_config(devices, policy, fleet_config));
+            devices = rest;
+        }
+        let mut ring: Vec<(u64, usize)> = (0..k)
+            .flat_map(|s| {
+                (0..RING_VNODES)
+                    .map(move |v| (mix64(((s as u64) << 32) | v as u64), s))
+            })
+            .collect();
+        ring.sort_unstable();
+        ShardedFleet { shards, config, ring, cache: HashMap::new() }
+    }
+
+    /// Number of shards in the tier.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Immutable view of the per-shard coordinators.
+    pub fn fleets(&self) -> &[Fleet] {
+        &self.shards
+    }
+
+    /// Drop every cached result (e.g. on a model redeploy, which
+    /// invalidates all memoized outputs).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Resolved entries currently resident in the cache.
+    pub fn cache_entries(&self) -> usize {
+        self.cache.values().filter(|e| matches!(e, CacheEntry::Resolved)).count()
+    }
+
+    /// Shard a request routes to (exposed for tests and tooling): the
+    /// first ring point at or after the `(net, input_digest)` hash — or
+    /// plain `net % K` under tenancy-aware pinning.
+    pub fn shard_of(&self, req: &Request) -> usize {
+        if self.config.tenancy_aware_routing {
+            return req.net as usize % self.shards.len();
+        }
+        let key = mix64((req.net as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ req.input_digest);
+        let i = match self.ring.binary_search(&(key, usize::MAX)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        self.ring[i % self.ring.len()].1
+    }
+
+    /// Serve a full arrival-ordered workload through the tier.
+    ///
+    /// Serving state (device queues, residency, energy) resets per run so
+    /// consecutive runs are independent — but resolved cache entries
+    /// persist, so replaying a workload hits the cache. With the cache
+    /// enabled, request ids must be workload-unique (use [`merge_streams`]
+    /// when combining tenant streams) — the single-flight bookkeeping
+    /// keys in-flight owners by id and asserts this.
+    ///
+    /// [`merge_streams`]: crate::coordinator::merge_streams
+    pub fn run(&mut self, requests: &[Request]) -> ShardedReport {
+        let k = self.shards.len();
+        let mut sub: Vec<Vec<Request>> = vec![Vec::new(); k];
+        let mut router_free = vec![0.0f64; k];
+        let mut router_delay_sum = 0.0f64;
+        // joiners: (original request, router exit, shard, owner id if
+        // pending in this run)
+        let mut joiners: Vec<(Request, f64, usize, Option<u64>)> = Vec::new();
+        // keys newly pending in this run, to reconcile afterwards
+        let mut pending_keys: Vec<((u32, u64), u64)> = Vec::new();
+        let mut lookups = 0u64;
+        let mut seen_ids = std::collections::HashSet::new();
+
+        for req in requests {
+            let s = self.shard_of(req);
+            // FIFO router queue: one coordinator front-end per shard —
+            // the delay metric counts only the wait, not the service time
+            let start = router_free[s].max(req.arrival_us);
+            let exit = start + self.config.router_service_us;
+            router_free[s] = exit;
+            router_delay_sum += start - req.arrival_us;
+            let mut fwd = req.clone();
+            fwd.arrival_us = exit;
+            // deadlines stay anchored to the *tier* arrival: the forwarded
+            // request's budget shrinks by the time spent in the router
+            if let Some(dl) = fwd.deadline_us {
+                fwd.deadline_us = Some(dl - (exit - req.arrival_us));
+            }
+            if self.config.cache {
+                assert!(
+                    seen_ids.insert(req.id),
+                    "duplicate request id {} — the result cache keys in-flight owners by id; \
+                     merge tenant streams with merge_streams first",
+                    req.id
+                );
+                lookups += 1;
+                let key = (req.net, req.input_digest);
+                match self.cache.get(&key) {
+                    Some(CacheEntry::Resolved) => {
+                        joiners.push((req.clone(), exit, s, None));
+                        continue;
+                    }
+                    Some(CacheEntry::Pending(owner)) => {
+                        joiners.push((req.clone(), exit, s, Some(*owner)));
+                        continue;
+                    }
+                    None => {
+                        self.cache.insert(key, CacheEntry::Pending(req.id));
+                        pending_keys.push((key, req.id));
+                    }
+                }
+            }
+            sub[s].push(fwd);
+        }
+
+        let reports: Vec<FleetReport> =
+            self.shards.iter_mut().zip(&sub).map(|(f, reqs)| f.run(reqs)).collect();
+
+        // reconcile: owners that completed resolve their key (and their
+        // joiners); owners that were shed (absent below) drop it, shedding
+        // their joiners with them
+        let mut owner_finish: HashMap<u64, f64> = HashMap::new();
+        for r in &reports {
+            for c in &r.completions {
+                owner_finish.insert(c.id, c.finish_us);
+            }
+        }
+        for (key, owner) in pending_keys {
+            if owner_finish.contains_key(&owner) {
+                self.cache.insert(key, CacheEntry::Resolved);
+            } else {
+                self.cache.remove(&key);
+            }
+        }
+
+        // per-shard mean active energy of one inference, for the
+        // energy-saved estimate
+        let shard_inference_uj: Vec<f64> = self
+            .shards
+            .iter()
+            .map(|f| {
+                f.devices.iter().map(|d| d.op.energy_uj(d.cycles_per_inference)).sum::<f64>()
+                    / f.devices.len() as f64
+            })
+            .collect();
+
+        let mut cache_hits: Vec<CacheHit> = Vec::new();
+        let mut shed_joins = 0u64;
+        let mut energy_saved_uj = 0.0f64;
+        for (req, exit, s, owner) in joiners {
+            let finish = match owner {
+                None => Some(exit),
+                Some(oid) => owner_finish.get(&oid).map(|f| f.max(exit)),
+            };
+            match finish {
+                Some(f) => {
+                    energy_saved_uj += shard_inference_uj[s];
+                    cache_hits.push(CacheHit {
+                        id: req.id,
+                        net: req.net,
+                        arrival_us: req.arrival_us,
+                        finish_us: f,
+                        deadline_missed: req
+                            .deadline_us
+                            .map(|dl| f - req.arrival_us > dl)
+                            .unwrap_or(false),
+                    });
+                }
+                None => shed_joins += 1, // owner was shed; the join sheds too
+            }
+        }
+
+        self.aggregate(
+            requests,
+            reports,
+            sub.iter().map(|v| v.len()).collect(),
+            cache_hits,
+            CacheStats {
+                lookups,
+                hits: 0, // filled in aggregate
+                shed_joins,
+                hit_rate: 0.0,
+                energy_saved_uj,
+                entries: self.cache_entries(),
+            },
+            router_delay_sum,
+        )
+    }
+
+    fn aggregate(
+        &self,
+        requests: &[Request],
+        reports: Vec<FleetReport>,
+        per_shard_routed: Vec<usize>,
+        cache_hits: Vec<CacheHit>,
+        mut cache: CacheStats,
+        router_delay_sum: f64,
+    ) -> ShardedReport {
+        cache.hits = cache_hits.len() as u64;
+        cache.hit_rate =
+            if cache.lookups > 0 { cache.hits as f64 / cache.lookups as f64 } else { 0.0 };
+
+        let fleet_completed: usize = reports.iter().map(|r| r.completions.len()).sum();
+        let fleet_shed: usize = reports.iter().map(|r| r.shed).sum();
+        let total_completed = fleet_completed + cache_hits.len();
+        let total_shed = fleet_shed + cache.shed_joins as usize;
+
+        // global serving span: first arrival at the tier to last finish
+        // anywhere in it (fleet completions or cache hits)
+        let span_start =
+            requests.iter().map(|r| r.arrival_us).fold(f64::INFINITY, f64::min);
+        let span_end = reports
+            .iter()
+            .flat_map(|r| r.completions.iter().map(|c| c.finish_us))
+            .chain(cache_hits.iter().map(|h| h.finish_us))
+            .fold(0.0f64, f64::max);
+        let span_us =
+            if total_completed == 0 { 0.0 } else { (span_end - span_start).max(1e-9) };
+
+        let lat_sum: f64 = reports
+            .iter()
+            .flat_map(|r| r.completions.iter().map(|c| c.latency_us()))
+            .sum();
+        let util_means: Vec<f64> = reports
+            .iter()
+            .map(|r| {
+                r.per_device_utilization.iter().sum::<f64>()
+                    / r.per_device_utilization.len().max(1) as f64
+            })
+            .collect();
+        let depths: Vec<f64> = reports
+            .iter()
+            .flat_map(|r| r.queue_depth_series.iter().map(|s| s.depth as f64))
+            .collect();
+        let (p50, p95, p99) = if depths.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (percentile(&depths, 50.0), percentile(&depths, 95.0), percentile(&depths, 99.0))
+        };
+
+        let active_energy_uj: f64 = reports.iter().map(|r| r.active_energy_uj).sum();
+        let idle_energy_uj: f64 = reports.iter().map(|r| r.idle_energy_uj).sum();
+        let deadline_misses = reports.iter().map(|r| r.deadline_misses).sum::<usize>()
+            + cache_hits.iter().filter(|h| h.deadline_missed).count();
+        ShardedReport {
+            per_shard_routed,
+            total_completed,
+            total_shed,
+            throughput_rps: if span_us > 0.0 {
+                total_completed as f64 / (span_us / 1e6)
+            } else {
+                0.0
+            },
+            mean_service_latency_us: lat_sum / fleet_completed.max(1) as f64,
+            mean_router_delay_us: router_delay_sum / requests.len().max(1) as f64,
+            deadline_misses,
+            active_energy_uj,
+            idle_energy_uj,
+            total_energy_uj: active_energy_uj + idle_energy_uj,
+            net_switches: reports.iter().map(|r| r.net_switches).sum(),
+            switch_energy_uj: reports.iter().map(|r| r.switch_energy_uj).sum(),
+            utilization_skew: util_means.iter().fold(0.0f64, |a, &u| a.max(u))
+                - util_means.iter().fold(f64::INFINITY, |a, &u| a.min(u)),
+            queue_depth_p50: p50,
+            queue_depth_p95: p95,
+            queue_depth_p99: p99,
+            cache_hits,
+            cache,
+            shards: reports,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{gap8_mixed_devices, random_devices};
+    use crate::coordinator::request::{merge_streams, Workload};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    /// A merged multi-tenant Poisson workload with optional repeats.
+    fn tenant_workload(
+        nets: u32,
+        rate_per_net: f64,
+        n_per_net: usize,
+        repeat: f64,
+        seed: u64,
+    ) -> Vec<Request> {
+        let streams: Vec<Vec<Request>> = (0..nets)
+            .map(|net| {
+                Workload {
+                    rate_per_s: rate_per_net,
+                    deadline_us: None,
+                    n_requests: n_per_net,
+                    seed: seed.wrapping_add(net as u64),
+                }
+                .generate_with_repeats(net, repeat)
+            })
+            .collect();
+        merge_streams(&streams)
+    }
+
+    fn tier(
+        n_devices: usize,
+        k: usize,
+        policy: Policy,
+        fleet_config: FleetConfig,
+        config: ShardConfig,
+    ) -> ShardedFleet {
+        ShardedFleet::new(gap8_mixed_devices(n_devices, 300_000), policy, fleet_config, config)
+    }
+
+    #[test]
+    fn prop_sharded_tier_conserves_requests_for_all_k() {
+        check("shard-conservation", 24, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4, 8]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: if rng.chance(0.5) { 120.0 } else { 0.0 },
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.5),
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 8,
+                batch_max: 4,
+                wakeup_cycles: 10_000,
+                net_switch_cycles: 25_000,
+            };
+            let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
+            let reqs = tenant_workload(3, 600.0, 120, 0.4, rng.next_u64());
+            let report = t.run(&reqs);
+            report.check_conservation(reqs.len())
+        });
+    }
+
+    #[test]
+    fn prop_micro_batches_never_mix_networks_across_shards() {
+        check("shard-batch-purity", 16, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4, 8]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: 0.0,
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: false,
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 32,
+                batch_max: 6,
+                wakeup_cycles: 40_000,
+                net_switch_cycles: 0,
+            };
+            let mut t = tier(8, k, Policy::LeastLoaded, fleet_config, config);
+            let reqs = tenant_workload(4, 900.0, 100, 0.0, rng.next_u64());
+            let report = t.run(&reqs);
+            for (s, r) in report.shards.iter().enumerate() {
+                let mut batch_net: std::collections::HashMap<(usize, u64), u32> =
+                    std::collections::HashMap::new();
+                for c in &r.completions {
+                    if let Some(&net) = batch_net.get(&(c.device, c.batch)) {
+                        if net != c.net {
+                            return Err(format!(
+                                "shard {s} device {} batch {} mixes nets {net} and {}",
+                                c.device, c.batch, c.net
+                            ));
+                        }
+                    } else {
+                        batch_net.insert((c.device, c.batch), c.net);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_k1_plain_tier_is_bit_exact_vs_single_fleet() {
+        // K=1, free router, tenancy off, cache off: the tier must be a
+        // transparent wrapper — same completions, same energy, bit for bit
+        check("shard-k1-bit-exact", 20, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let devices = random_devices(rng);
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, 32, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 30_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 50_000]),
+            };
+            let reqs = tenant_workload(2, 700.0, 150, 0.3, rng.next_u64());
+            let mut tier =
+                ShardedFleet::new(devices.clone(), policy, fleet_config, ShardConfig::default());
+            let sharded = tier.run(&reqs);
+            let direct = Fleet::with_config(devices, policy, fleet_config).run(&reqs);
+            let r = &sharded.shards[0];
+            if r.completions.len() != direct.completions.len() {
+                return Err(format!(
+                    "completion counts differ: {} vs {}",
+                    r.completions.len(),
+                    direct.completions.len()
+                ));
+            }
+            for (x, y) in r.completions.iter().zip(direct.completions.iter()) {
+                if x.id != y.id
+                    || x.device != y.device
+                    || x.start_us != y.start_us
+                    || x.finish_us != y.finish_us
+                    || x.batch != y.batch
+                {
+                    return Err(format!("completion diverged:\n tier:   {x:?}\n direct: {y:?}"));
+                }
+            }
+            if r.active_energy_uj != direct.active_energy_uj
+                || r.idle_energy_uj != direct.idle_energy_uj
+                || r.net_switches != direct.net_switches
+                || r.shed != direct.shed
+            {
+                return Err("aggregate report diverged".into());
+            }
+            if sharded.total_completed != direct.completions.len()
+                || sharded.total_shed != direct.shed
+            {
+                return Err("tier totals diverged from the wrapped fleet".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn requests_sharing_a_cache_key_share_a_shard() {
+        for tenancy in [false, true] {
+            let config = ShardConfig {
+                shards: 8,
+                router_service_us: 0.0,
+                tenancy_aware_routing: tenancy,
+                cache: true,
+            };
+            let t = tier(8, 8, Policy::LeastLoaded, FleetConfig::default(), config);
+            let mut rng = Rng::new(11);
+            for _ in 0..200 {
+                let (net, digest) = (rng.below(5), rng.next_u64());
+                let mk = |id| Request {
+                    id,
+                    arrival_us: 0.0,
+                    deadline_us: None,
+                    net,
+                    input_digest: digest,
+                };
+                assert_eq!(t.shard_of(&mk(1)), t.shard_of(&mk(2)));
+            }
+            // tenancy-aware routing pins whole networks to one shard
+            if tenancy {
+                for net in 0..5u32 {
+                    let mk = |d: u64| Request {
+                        id: d,
+                        arrival_us: 0.0,
+                        deadline_us: None,
+                        net,
+                        input_digest: d,
+                    };
+                    let s = t.shard_of(&mk(1));
+                    assert!((2..100).all(|d| t.shard_of(&mk(d)) == s));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_spreads_distinct_digests_across_shards() {
+        let config = ShardConfig {
+            shards: 4,
+            router_service_us: 0.0,
+            tenancy_aware_routing: false,
+            cache: false,
+        };
+        let t = tier(8, 4, Policy::LeastLoaded, FleetConfig::default(), config);
+        let mut counts = [0usize; 4];
+        for d in 0..4000u64 {
+            let req = Request {
+                id: d,
+                arrival_us: 0.0,
+                deadline_us: None,
+                net: 0,
+                input_digest: mix64(d),
+            };
+            counts[t.shard_of(&req)] += 1;
+        }
+        for &c in &counts {
+            assert!(
+                (500..2000).contains(&c),
+                "badly skewed ring split: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_hits_skip_devices_and_save_energy() {
+        let config = ShardConfig {
+            shards: 2,
+            router_service_us: 0.0,
+            tenancy_aware_routing: false,
+            cache: true,
+        };
+        let fleet_config = FleetConfig {
+            queue_bound: 64,
+            batch_max: 4,
+            wakeup_cycles: 10_000,
+            net_switch_cycles: 0,
+        };
+        let reqs = tenant_workload(2, 400.0, 300, 0.6, 77);
+        let mut cached = tier(4, 2, Policy::LeastLoaded, fleet_config, config);
+        let with_cache = cached.run(&reqs);
+        let mut plain = tier(
+            4,
+            2,
+            Policy::LeastLoaded,
+            fleet_config,
+            ShardConfig { cache: false, ..config },
+        );
+        let without = plain.run(&reqs);
+        with_cache.check_conservation(reqs.len()).unwrap();
+        without.check_conservation(reqs.len()).unwrap();
+        assert!(with_cache.cache.hits > 50, "hits: {:?}", with_cache.cache);
+        assert!(with_cache.cache.hit_rate > 0.1);
+        assert!(with_cache.cache.energy_saved_uj > 0.0);
+        assert!(
+            with_cache.active_energy_uj < without.active_energy_uj,
+            "cache did not reduce device-active energy: {} vs {}",
+            with_cache.active_energy_uj,
+            without.active_energy_uj
+        );
+        // the fleets served strictly fewer requests than arrived
+        let served: usize = with_cache.shards.iter().map(|r| r.completions.len()).sum();
+        assert!(served + with_cache.cache.hits as usize >= reqs.len() - with_cache.total_shed);
+        assert!(served < reqs.len());
+    }
+
+    #[test]
+    fn full_hit_replay_touches_no_residency_and_no_active_energy() {
+        // run a multi-tenant workload once (populating the cache), then
+        // replay it: every request must hit, no device may activate, no
+        // residency may change, and device-active energy must be zero
+        let config = ShardConfig {
+            shards: 2,
+            router_service_us: 50.0,
+            tenancy_aware_routing: true,
+            cache: true,
+        };
+        let fleet_config = FleetConfig {
+            queue_bound: usize::MAX, // admit everything: all keys resolve
+            batch_max: 4,
+            wakeup_cycles: 10_000,
+            net_switch_cycles: 50_000,
+        };
+        let mut t = tier(4, 2, Policy::TenancyAware, fleet_config, config);
+        let reqs = tenant_workload(3, 300.0, 150, 0.3, 13);
+        let first = t.run(&reqs);
+        first.check_conservation(reqs.len()).unwrap();
+        assert_eq!(first.total_shed, 0);
+        assert!(t.cache_entries() > 0);
+
+        let replay = t.run(&reqs);
+        replay.check_conservation(reqs.len()).unwrap();
+        assert_eq!(replay.cache.hits as usize, reqs.len(), "replay must be 100% hits");
+        assert_eq!(replay.net_switches, 0, "a cache hit must not touch residency");
+        assert_eq!(replay.switch_energy_uj, 0.0);
+        assert_eq!(
+            replay.active_energy_uj, 0.0,
+            "a cache hit must not charge device-active energy"
+        );
+        for (s, r) in replay.shards.iter().enumerate() {
+            assert_eq!(r.completions.len(), 0, "shard {s} activated a device on a hit");
+            assert_eq!(r.batches, 0);
+        }
+        for f in t.fleets() {
+            for d in &f.devices {
+                assert_eq!(d.resident_net(), None, "device {} residency touched", d.name);
+                assert_eq!(d.net_switches(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn shed_owner_sheds_its_joiners_and_drops_the_key() {
+        // a burst fills the single 1-deep queue before the first request
+        // for input 42 arrives: that owner is shed, so its joiners must
+        // shed with it and the key must NOT resolve into the cache
+        let config = ShardConfig {
+            shards: 1,
+            router_service_us: 0.0,
+            tenancy_aware_routing: false,
+            cache: true,
+        };
+        let fleet_config = FleetConfig {
+            queue_bound: 1,
+            batch_max: 1,
+            wakeup_cycles: 0,
+            net_switch_cycles: 0,
+        };
+        let req = |id: u64, digest: u64| Request {
+            id,
+            arrival_us: id as f64, // 1 us apart: far faster than service
+            deadline_us: None,
+            net: 0,
+            input_digest: digest,
+        };
+        // id 0 dispatches, id 1 fills the queue; id 2 (the owner of input
+        // 42) is shed; ids 3..=10 join the pending owner; id 11 is shed
+        let reqs: Vec<Request> = (0..12u64)
+            .map(|id| match id {
+                0 => req(id, 100),
+                1 => req(id, 101),
+                11 => req(id, 200),
+                _ => req(id, 42),
+            })
+            .collect();
+        let mut t = ShardedFleet::new(
+            gap8_mixed_devices(1, 30_000_000), // ~333 ms/inference: everything queues
+            Policy::LeastLoaded,
+            fleet_config,
+            config,
+        );
+        let report = t.run(&reqs);
+        report.check_conservation(reqs.len()).unwrap();
+        assert_eq!(report.cache.hits, 0, "nothing could resolve before the owner shed");
+        assert_eq!(report.cache.shed_joins, 8, "ids 3..=10 joined the shed owner");
+        assert_eq!(report.total_completed, 2, "only ids 0 and 1 were served");
+        assert_eq!(report.total_shed, 10);
+        // inputs 100 and 101 resolved; 42 and 200 were dropped with their
+        // shed owners — a fresh request for 42 must miss, for 100 must hit
+        assert_eq!(t.cache_entries(), 2);
+        let probe = vec![req(0, 42), req(1, 100)];
+        let second = t.run(&probe);
+        second.check_conservation(2).unwrap();
+        assert_eq!(second.cache.hits, 1, "input 100 must hit, input 42 must miss");
+        assert_eq!(second.shards[0].completions.len(), 1);
+    }
+
+    #[test]
+    fn router_wait_counts_against_deadlines() {
+        // one fast device behind a slow router: the fleet meets every
+        // deadline from its own (router-exit) viewpoint, but the tier
+        // must score deadlines from *tier arrival* — time spent waiting
+        // in the router FIFO counts
+        let mk_reqs = || -> Vec<Request> {
+            (0..20u64)
+                .map(|id| Request {
+                    id,
+                    arrival_us: id as f64, // near-simultaneous burst
+                    deadline_us: Some(15_000.0),
+                    net: 0,
+                    input_digest: id,
+                })
+                .collect()
+        };
+        let run = |router_service_us: f64| {
+            let config = ShardConfig {
+                shards: 1,
+                router_service_us,
+                tenancy_aware_routing: false,
+                cache: false,
+            };
+            // ~1.1 ms/inference: trivially within a 15 ms deadline
+            let mut t = ShardedFleet::new(
+                gap8_mixed_devices(1, 100_000),
+                Policy::LeastLoaded,
+                FleetConfig::default(),
+                config,
+            );
+            t.run(&mk_reqs())
+        };
+        let free_router = run(0.0);
+        assert_eq!(free_router.deadline_misses, 0);
+        // 10 ms per request through the router: request i exits at
+        // ~(i+1)*10 ms, so all but the first blow the 15 ms deadline
+        let slow_router = run(10_000.0);
+        assert!(
+            slow_router.deadline_misses >= 18,
+            "router wait must count against deadlines: {} misses",
+            slow_router.deadline_misses
+        );
+        assert_eq!(slow_router.total_completed, 20, "delayed, not shed");
+    }
+
+    #[test]
+    fn sharding_beats_a_saturated_single_coordinator() {
+        // the bench invariant, in miniature: with a router front-end that
+        // saturates below fleet capacity, K=4 out-serves K=1 at 4x load
+        let fleet_config = FleetConfig {
+            queue_bound: 32,
+            batch_max: 4,
+            wakeup_cycles: 10_000,
+            net_switch_cycles: 0,
+        };
+        let capacity_rps: f64 = gap8_mixed_devices(8, 300_000)
+            .iter()
+            .map(|d| 1e6 / d.inference_us())
+            .sum();
+        let router_service_us = 1e6 / (0.7 * capacity_rps);
+        let run = |k: usize| {
+            let config = ShardConfig {
+                shards: k,
+                router_service_us,
+                tenancy_aware_routing: false,
+                cache: false,
+            };
+            let reqs = Workload {
+                rate_per_s: 4.0 * capacity_rps,
+                deadline_us: None,
+                n_requests: 4000,
+                seed: 2020,
+            }
+            .generate();
+            let mut t = tier(8, k, Policy::LeastLoaded, fleet_config, config);
+            let r = t.run(&reqs);
+            r.check_conservation(reqs.len()).unwrap();
+            r
+        };
+        let (single, sharded) = (run(1), run(4));
+        assert!(
+            sharded.throughput_rps > single.throughput_rps,
+            "sharding did not relieve the coordinator bottleneck: {} vs {} rps",
+            sharded.throughput_rps,
+            single.throughput_rps
+        );
+        // the single coordinator's router was the bottleneck: its arrivals
+        // waited far longer at the front tier
+        assert!(sharded.mean_router_delay_us < single.mean_router_delay_us);
+    }
+}

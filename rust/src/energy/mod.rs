@@ -20,11 +20,31 @@
 /// queue-empty gaps between activations).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OperatingPoint {
+    /// Human-readable platform/mode name.
     pub name: &'static str,
+    /// Cluster clock frequency in MHz.
     pub freq_mhz: f64,
+    /// Active (cluster-computing) power in mW.
     pub power_mw: f64,
+    /// Power drawn while idling with the cluster power-gated, in mW.
     pub idle_power_mw: f64,
 }
+
+/// Default cycle cost of a *weight-residency switch*: evicting the resident
+/// network's weights from cluster memory and DMA-loading another network's
+/// set from L2 before an activation can serve it.
+///
+/// Sized for a demo-CNN-scale mixed-precision weight set (~100 KiB packed):
+/// the cluster DMA moves ~2 B/cycle effective once L2 contention and
+/// per-transfer setup are accounted for, giving ~50k cycles (~0.56 ms at
+/// the 90 MHz low-power point) — a sixth of a demo-CNN inference, which is
+/// why tenancy-aware routing that avoids switches pays off. Charged by the
+/// fleet engine via [`FleetConfig::net_switch_cycles`]; the energy cost is
+/// the same cycles through [`OperatingPoint::energy_uj`] (the DMA runs at
+/// cluster active power).
+///
+/// [`FleetConfig::net_switch_cycles`]: crate::coordinator::FleetConfig::net_switch_cycles
+pub const DEFAULT_NET_SWITCH_CYCLES: u64 = 50_000;
 
 /// GAP-8 low-power mode: 1.0 V, 90 MHz cluster.
 pub const GAP8_LP: OperatingPoint =
@@ -46,6 +66,12 @@ impl OperatingPoint {
     /// Execution time for a cycle count, in milliseconds.
     pub fn time_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.freq_mhz * 1e3)
+    }
+
+    /// Execution time for a cycle count, in microseconds (the fleet
+    /// simulator's native unit).
+    pub fn time_us(&self, cycles: u64) -> f64 {
+        self.time_ms(cycles) * 1e3
     }
 
     /// Energy for a cycle count, in microjoules.
@@ -93,6 +119,22 @@ mod tests {
         assert!((15.0..30.0).contains(&r_l4_lp), "L4/LP {r_l4_lp} (paper 21x)");
         assert!((20.0..45.0).contains(&r_h7_hp), "H7/HP {r_h7_hp} (paper 31x)");
         assert!((8.0..22.0).contains(&r_l4_hp), "L4/HP {r_l4_hp} (paper 15x)");
+    }
+
+    #[test]
+    fn time_us_is_time_ms_scaled() {
+        assert!((GAP8_LP.time_us(90_000) - 1000.0).abs() < 1e-9);
+        assert!((GAP8_LP.time_us(90_000) - GAP8_LP.time_ms(90_000) * 1e3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn net_switch_cost_is_a_fraction_of_an_inference() {
+        // A residency switch must cost well under a demo-CNN inference
+        // (~300k cycles) or tenancy-aware routing could never pay off.
+        assert!(DEFAULT_NET_SWITCH_CYCLES < 300_000 / 2);
+        assert!(DEFAULT_NET_SWITCH_CYCLES > 0);
+        // ~0.56 ms / ~13 uJ at the LP point
+        assert!((GAP8_LP.time_ms(DEFAULT_NET_SWITCH_CYCLES) - 0.5556).abs() < 1e-3);
     }
 
     #[test]

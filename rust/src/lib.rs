@@ -7,7 +7,13 @@
 pub mod arm;
 pub mod bench;
 pub mod cluster;
+// The serving tier and the energy model are the crate's public API
+// surface for downstream scenarios; every public item in them must be
+// documented. CI promotes these warnings to errors via
+// `RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`.
+#[warn(missing_docs)]
 pub mod coordinator;
+#[warn(missing_docs)]
 pub mod energy;
 pub mod isa;
 pub mod kernels;

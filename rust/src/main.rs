@@ -6,7 +6,8 @@
 
 use pulpnn_mp::bench::{ablate, figures};
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, Fleet, FleetConfig, Policy, Workload, DEFAULT_WAKEUP_CYCLES,
+    gap8_mixed_devices, merge_streams, Fleet, FleetConfig, Policy, Request, ShardConfig,
+    ShardedFleet, Workload, DEFAULT_WAKEUP_CYCLES,
 };
 use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
@@ -40,7 +41,9 @@ networks & runtime:
   infer       execute an AOT artifact on the artifact runtime (--name, --artifacts DIR)
   verify      verify all artifacts: runtime == python golden == rust golden == kernels
   serve       edge-fleet serving simulation (--devices N --rate RPS
-              --queue-bound N --batch K --wakeup-cycles C ...)
+              --queue-bound N --batch K --wakeup-cycles C ...); scale it
+              out with --shards K --tenants T --repeat-ratio F --cache
+              --router-us US --switch-cycles C --policy tenancy
   emit-spec   print the demo network spec JSON (shared rust/python format)
 
 common options:
@@ -324,9 +327,18 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     // one physical model regardless of batching, so --batch sweeps compare
     // like for like; pass --wakeup-cycles 0 for the idealized engine
     let wakeup_cycles = args.opt_u64("wakeup-cycles", DEFAULT_WAKEUP_CYCLES);
+    // sharded-tier knobs (all default to the plain single-coordinator path)
+    let shards = args.opt_usize("shards", 1).max(1);
+    let tenants = args.opt_usize("tenants", 1).max(1);
+    let repeat_ratio = args.opt_f64("repeat-ratio", 0.0);
+    let cache = args.flag("cache");
+    let router_us = args.opt_f64("router-us", 0.0);
+    let switch_cycles =
+        args.opt_u64("switch-cycles", pulpnn_mp::energy::DEFAULT_NET_SWITCH_CYCLES);
     let policy = match args.opt("policy", "energy").as_str() {
         "rr" => Policy::RoundRobin,
         "least" => Policy::LeastLoaded,
+        "tenancy" => Policy::TenancyAware,
         _ => Policy::EnergyAware,
     };
     // per-inference cycles from the simulated demo CNN
@@ -342,44 +354,125 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     );
     // half LP, half HP fleet
     let nodes = gap8_mixed_devices(devices, cycles);
+    // a single-tenant workload never switches nets, so the knob is
+    // harmlessly inert there (bit-exactness is regression-tested)
     let config = FleetConfig {
         queue_bound: if queue_bound == 0 { usize::MAX } else { queue_bound },
         batch_max,
         wakeup_cycles,
+        net_switch_cycles: switch_cycles,
     };
-    let mut fleet = Fleet::with_config(nodes, policy, config);
-    let workload = Workload {
-        rate_per_s: rate,
-        deadline_us: if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None },
-        n_requests: n,
-        seed,
+    let deadline_us = if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None };
+    // one arrival stream per tenant network, merged in arrival order
+    let requests: Vec<Request> = merge_streams(
+        &(0..tenants as u32)
+            .map(|t| {
+                Workload {
+                    rate_per_s: rate / tenants as f64,
+                    deadline_us,
+                    n_requests: n / tenants,
+                    seed: seed.wrapping_add(t as u64),
+                }
+                .generate_with_repeats(t, repeat_ratio)
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let sharded = shards > 1 || cache || tenants > 1 || router_us > 0.0;
+    if !sharded {
+        let mut fleet = Fleet::with_config(nodes, policy, config);
+        let report = fleet.run(&requests);
+        println!(
+            "\nfleet of {devices} ({policy:?}, queue_bound={}, batch_max={batch_max}), \
+             {} of {} requests served at {rate} rps:",
+            if queue_bound == 0 { "inf".to_string() } else { queue_bound.to_string() },
+            report.completions.len(),
+            requests.len()
+        );
+        println!("  throughput     : {} rps", f(report.throughput_rps, 1));
+        println!("  mean latency   : {} ms", f(report.mean_latency_us / 1e3, 2));
+        println!("  p99 latency    : {} ms", f(report.p99_latency_us / 1e3, 2));
+        println!(
+            "  energy         : {} mJ active + {} mJ idle",
+            f(report.active_energy_uj / 1e3, 2),
+            f(report.idle_energy_uj / 1e3, 2)
+        );
+        println!("  deadline misses: {}", report.deadline_misses);
+        println!("  shed requests  : {}", report.shed);
+        println!(
+            "  activations    : {} ({} requests/batch mean)",
+            report.batches,
+            f(report.mean_batch_size, 2)
+        );
+        println!("  per-device     : {:?}", report.per_device_served);
+        println!(
+            "  utilization    : {:?}",
+            report.per_device_utilization.iter().map(|u| f(*u, 2)).collect::<Vec<_>>()
+        );
+        return 0;
+    }
+
+    if devices < shards {
+        eprintln!("error: need at least one device per shard (--devices {devices} < --shards {shards})");
+        return 2;
+    }
+    let shard_config = ShardConfig {
+        shards,
+        router_service_us: router_us,
+        tenancy_aware_routing: tenants > 1,
+        cache,
     };
-    let report = fleet.run(&workload.generate());
+    let mut tier = ShardedFleet::new(nodes, policy, config, shard_config);
+    let report = tier.run(&requests);
+    if let Err(e) = report.check_conservation(requests.len()) {
+        eprintln!("BUG: {e}");
+        return 1;
+    }
     println!(
-        "\nfleet of {devices} ({policy:?}, queue_bound={}, batch_max={batch_max}), \
-         {} of {n} requests served at {rate} rps:",
-        if queue_bound == 0 { "inf".to_string() } else { queue_bound.to_string() },
-        report.completions.len()
+        "\nsharded tier: {shards} shard(s) x {} device(s), {tenants} tenant(s), \
+         {policy:?}, cache {}:",
+        devices / shards,
+        if cache { "on" } else { "off" }
+    );
+    println!(
+        "  completed      : {} of {} ({} shed)",
+        report.total_completed,
+        requests.len(),
+        report.total_shed
     );
     println!("  throughput     : {} rps", f(report.throughput_rps, 1));
-    println!("  mean latency   : {} ms", f(report.mean_latency_us / 1e3, 2));
-    println!("  p99 latency    : {} ms", f(report.p99_latency_us / 1e3, 2));
+    println!("  service latency: {} ms mean", f(report.mean_service_latency_us / 1e3, 2));
+    println!("  router wait    : {} ms mean", f(report.mean_router_delay_us / 1e3, 3));
+    println!("  deadline misses: {}", report.deadline_misses);
     println!(
         "  energy         : {} mJ active + {} mJ idle",
         f(report.active_energy_uj / 1e3, 2),
         f(report.idle_energy_uj / 1e3, 2)
     );
-    println!("  deadline misses: {}", report.deadline_misses);
-    println!("  shed requests  : {}", report.shed);
     println!(
-        "  activations    : {} ({} requests/batch mean)",
-        report.batches,
-        f(report.mean_batch_size, 2)
+        "  residency      : {} net-switches ({} mJ)",
+        report.net_switches,
+        f(report.switch_energy_uj / 1e3, 3)
     );
-    println!("  per-device     : {:?}", report.per_device_served);
+    if cache {
+        println!(
+            "  result cache   : {}/{} hits ({}%), ~{} mJ device energy saved",
+            report.cache.hits,
+            report.cache.lookups,
+            f(report.cache.hit_rate * 100.0, 1),
+            f(report.cache.energy_saved_uj / 1e3, 2)
+        );
+    }
     println!(
-        "  utilization    : {:?}",
-        report.per_device_utilization.iter().map(|u| f(*u, 2)).collect::<Vec<_>>()
+        "  shard balance  : routed {:?}, utilization skew {}",
+        report.per_shard_routed,
+        f(report.utilization_skew, 3)
+    );
+    println!(
+        "  queue depth    : p50 {} / p95 {} / p99 {}",
+        f(report.queue_depth_p50, 1),
+        f(report.queue_depth_p95, 1),
+        f(report.queue_depth_p99, 1)
     );
     0
 }

@@ -22,6 +22,19 @@ use crate::util::error::Result;
 use super::manifest::Artifact;
 use super::verify::rebuild_ref_case;
 
+/// Stable 64-bit digest of a packed input payload (FNV-1a over the raw
+/// bytes). The runtime is deterministic — same artifact, same input bytes,
+/// same output — so `(artifact, input_digest(input))` is a sound result-
+/// cache key. This is the digest the serving tier memoizes on: the real
+/// path via [`crate::coordinator::Server`], the simulated tier via
+/// [`crate::coordinator::shard::ShardedFleet`] (where workload generators
+/// stamp `Request::input_digest` with the same role).
+///
+/// [`Request::input_digest`]: crate::coordinator::Request::input_digest
+pub fn input_digest(input: &[u8]) -> u64 {
+    crate::util::check::fnv1a(input)
+}
+
 /// Output of an artifact execution.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ExecOutput {

@@ -8,6 +8,6 @@ pub mod engine;
 pub mod manifest;
 pub mod verify;
 
-pub use engine::{ExecOutput, Runtime};
+pub use engine::{input_digest, ExecOutput, Runtime};
 pub use manifest::{Artifact, Manifest};
 pub use verify::{verify_artifact, VerifyReport};

@@ -9,9 +9,16 @@
 //! Each case is warmed up, then timed over adaptively-chosen batch sizes
 //! until a wall-clock budget is used; mean / stddev / min per-iteration
 //! times are reported.
+//!
+//! When the `PULPNN_BENCH_JSON` environment variable names a directory,
+//! [`Bench::report`] additionally writes `BENCH_<group>.json` there — the
+//! machine-readable perf trajectory (`pulpnn-bench-v1` schema, documented
+//! in `docs/BENCHMARKS.md`).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 pub struct CaseResult {
@@ -91,7 +98,50 @@ impl Bench {
         });
     }
 
-    /// Render the report to stdout; also returns it for capture.
+    /// The `pulpnn-bench-v1` JSON document for this group's results.
+    pub fn to_json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut c = BTreeMap::new();
+                c.insert("name".to_string(), Json::Str(r.name.clone()));
+                c.insert("iters".to_string(), Json::I64(r.iters as i64));
+                c.insert("mean_s".to_string(), Json::F64(r.per_iter.mean));
+                c.insert("min_s".to_string(), Json::F64(r.per_iter.min));
+                c.insert("stddev_s".to_string(), Json::F64(r.per_iter.stddev));
+                match &r.throughput {
+                    Some((unit, amount)) => {
+                        c.insert("throughput_unit".to_string(), Json::Str(unit.clone()));
+                        c.insert("throughput_per_iter".to_string(), Json::F64(*amount));
+                    }
+                    None => {
+                        c.insert("throughput_unit".to_string(), Json::Null);
+                        c.insert("throughput_per_iter".to_string(), Json::Null);
+                    }
+                }
+                Json::Obj(c)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str("pulpnn-bench-v1".to_string()));
+        root.insert("group".to_string(), Json::Str(self.group.clone()));
+        root.insert("budget_ms".to_string(), Json::I64(self.budget.as_millis() as i64));
+        root.insert("cases".to_string(), Json::Arr(cases));
+        Json::Obj(root)
+    }
+
+    /// Write `BENCH_<group>.json` into `dir` (the `pulpnn-bench-v1`
+    /// schema; see docs/BENCHMARKS.md).
+    pub fn write_json(&self, dir: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::Path::new(dir).join(format!("BENCH_{}.json", self.group));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Render the report to stdout; also returns it for capture. When
+    /// `PULPNN_BENCH_JSON` names a directory, also writes the JSON
+    /// trajectory file there.
     pub fn report(&self) -> String {
         let mut out = format!("\n== bench group: {} ==\n", self.group);
         for r in &self.results {
@@ -111,6 +161,12 @@ impl Bench {
                     amount / mean / 1e6,
                     unit
                 ));
+            }
+        }
+        if let Ok(dir) = std::env::var("PULPNN_BENCH_JSON") {
+            match self.write_json(&dir) {
+                Ok(path) => out.push_str(&format!("json: {}\n", path.display())),
+                Err(e) => eprintln!("warning: could not write bench json to {dir}: {e}"),
             }
         }
         print!("{out}");
@@ -146,6 +202,27 @@ mod tests {
         let r = &b.results()[0];
         assert!(r.per_iter.mean > 0.0);
         assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn json_trajectory_roundtrips() {
+        std::env::set_var("PULPNN_BENCH_BUDGET_MS", "20");
+        let mut b = Bench::new("jsontest");
+        b.run_with_throughput("case-a", Some(("simReq".into(), 7.0)), || 1u64 + 1);
+        b.run("case-b", || 2u64 + 2);
+        let dir = std::env::temp_dir();
+        let path = b.write_json(dir.to_str().unwrap()).expect("writable temp dir");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(text.trim()).expect("valid JSON");
+        assert_eq!(doc.get("schema").as_str(), Some("pulpnn-bench-v1"));
+        assert_eq!(doc.get("group").as_str(), Some("jsontest"));
+        let cases = doc.get("cases").as_arr().expect("cases array");
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").as_str(), Some("case-a"));
+        assert_eq!(cases[0].get("throughput_unit").as_str(), Some("simReq"));
+        assert!(cases[0].get("mean_s").as_f64().unwrap() > 0.0);
+        assert_eq!(*cases[1].get("throughput_unit"), Json::Null);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -81,6 +81,34 @@ fn serve_simulates_fleet() {
 }
 
 #[test]
+fn serve_simulates_sharded_multi_tenant_tier_with_cache() {
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "4",
+        "--shards",
+        "2",
+        "--tenants",
+        "2",
+        "--repeat-ratio",
+        "0.5",
+        "--cache",
+        "--policy",
+        "tenancy",
+        "--requests",
+        "400",
+        "--rate",
+        "200",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("sharded tier"), "{out}");
+    assert!(out.contains("result cache"), "{out}");
+    assert!(out.contains("net-switches"), "{out}");
+    assert!(out.contains("queue depth"), "{out}");
+    assert!(!err.contains("unknown option"), "{err}");
+}
+
+#[test]
 fn emit_spec_roundtrips_through_loader() {
     let (out, _, ok) = run(&["emit-spec"]);
     assert!(ok);
