@@ -2,8 +2,9 @@
 
 ARTIFACTS ?= artifacts
 SEED ?= 2020
+TRACES ?= traces
 
-.PHONY: all build test bench artifacts doc clean
+.PHONY: all build test bench trace artifacts doc clean
 
 all: build
 
@@ -17,6 +18,15 @@ test:
 bench:
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench fleet_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench shard_scale
+	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench sched_scale
+
+# Dump the canonical 10k-request mixed-tenant arrival trace (JSONL,
+# replayable anywhere with `pulpnn serve --trace-in`).
+trace: build
+	mkdir -p $(TRACES)
+	./target/release/pulpnn serve --devices 8 --requests 10000 --rate 2000 \
+	  --tenants 4 --repeat-ratio 0.3 --deadline-ms 50 --seed $(SEED) \
+	  --trace-out $(TRACES)/mixed_tenant_10k.jsonl
 
 # AOT-export the artifacts the runtime/e2e paths load (python exporter;
 # writes $(ARTIFACTS)/manifest.json plus per-artifact .hlo.txt/.bin files).

@@ -33,7 +33,7 @@ fn run(n: usize, load: f64, batch_max: usize, n_requests: usize) -> FleetReport 
         queue_bound: 32,
         batch_max,
         wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
-        net_switch_cycles: 0,
+        ..FleetConfig::default()
     };
     let workload = Workload {
         rate_per_s: capacity_rps(n) * load,

@@ -1,0 +1,314 @@
+//! Scheduling-stack scale sweep: queue discipline (FIFO vs EDF) x work
+//! stealing x bounded result-cache capacity, over the workload-source
+//! matrix (open-loop Poisson, replayed JSONL traces, closed-loop clients).
+//!
+//! Self-checking — the bench aborts if any of these fail:
+//!
+//! 1. on a bimodal-deadline overload trace (alternating 15 ms and 3 s
+//!    deadlines at 1.5x capacity), EDF *strictly* reduces deadline misses
+//!    vs FIFO — the tight class runs at 0.75x capacity, so EDF keeps it
+//!    stable while FIFO drowns it in the shared backlog;
+//! 2. on an imbalanced 2-net workload with tenancy pinning, work stealing
+//!    *strictly* raises utilization-skew-adjusted throughput
+//!    (`throughput x (1 - skew)`) — the idle device drains its peer's
+//!    tail instead of idling;
+//! 3. replay hit rate grows monotonically with result-cache capacity on a
+//!    repeat-heavy trace (LRU keeps the inclusion property), strictly
+//!    from the smallest bound to unbounded, and resident entries never
+//!    exceed the bound;
+//! 4. a dumped JSONL trace replays *bit-exactly* against its generating
+//!    run, for a non-trivial EDF + stealing + batching configuration;
+//! 5. with the default configuration (FIFO, no steal, unbounded,
+//!    unbatched) the event engine reproduces the synchronous baseline
+//!    bit-exactly on Poisson arrivals under all 4 routing policies.
+
+use pulpnn_mp::coordinator::{
+    merge_streams, Device, Fleet, FleetConfig, FleetReport, Policy, QueueDiscipline, Request,
+    ShardConfig, ShardedFleet, TraceSource, Workload,
+};
+use pulpnn_mp::energy::GAP8_LP;
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::table::{f, Table};
+
+/// Demo-CNN-scale inference cost (cycles) — fixed so the sweep does not
+/// depend on the simulator. One LP device serves ~300 req/s.
+const CYCLES_PER_INFERENCE: u64 = 300_000;
+
+fn lp_devices(n: usize) -> Vec<Device> {
+    (0..n)
+        .map(|i| Device::new(format!("lp-{i}"), GAP8_LP, CYCLES_PER_INFERENCE))
+        .collect()
+}
+
+/// Alternating tight/loose deadlines on a Poisson stream: even ids are the
+/// latency-critical class, odd ids the bulk class.
+fn bimodal_trace(rate: f64, n: usize, tight_us: f64, loose_us: f64) -> Vec<Request> {
+    let mut reqs =
+        Workload { rate_per_s: rate, deadline_us: None, n_requests: n, seed: 2020 }.generate();
+    for r in &mut reqs {
+        r.deadline_us = Some(if r.id % 2 == 0 { tight_us } else { loose_us });
+    }
+    reqs
+}
+
+fn run_discipline(discipline: QueueDiscipline, reqs: &[Request]) -> FleetReport {
+    let config = FleetConfig { discipline, ..FleetConfig::default() };
+    Fleet::with_config(lp_devices(1), Policy::LeastLoaded, config).run(reqs)
+}
+
+/// The imbalanced 2-net workload: net 0 floods one pinned device at ~1.7x
+/// its capacity while net 1 trickles on the other.
+fn imbalanced_workload() -> Vec<Request> {
+    let hot = Workload { rate_per_s: 500.0, deadline_us: None, n_requests: 600, seed: 2020 }
+        .generate_for_net(0);
+    let cold = Workload { rate_per_s: 30.0, deadline_us: None, n_requests: 40, seed: 2021 }
+        .generate_for_net(1);
+    merge_streams(&[hot, cold])
+}
+
+fn run_steal(steal: bool, reqs: &[Request]) -> FleetReport {
+    let config = FleetConfig { net_switch_cycles: 30_000, steal, ..FleetConfig::default() };
+    Fleet::with_config(lp_devices(2), Policy::TenancyAware, config).run(reqs)
+}
+
+fn util_skew(r: &FleetReport) -> f64 {
+    r.utilization_skew()
+}
+
+/// Warm a bounded cache with one pass of a repeat-heavy trace, then replay
+/// it; returns (replay hit rate, evictions over both runs, peak resident).
+fn cache_curve_point(capacity: usize, reqs: &[Request]) -> (f64, u64, usize) {
+    let config = ShardConfig {
+        shards: 2,
+        cache: true,
+        cache_capacity: capacity,
+        ..ShardConfig::default()
+    };
+    let mut tier = ShardedFleet::new(
+        lp_devices(4),
+        Policy::LeastLoaded,
+        FleetConfig::default(),
+        config,
+    );
+    let warm = tier.run(reqs);
+    warm.check_conservation(reqs.len()).unwrap();
+    let replay = tier.run(reqs);
+    replay.check_conservation(reqs.len()).unwrap();
+    let resident = warm.cache.entries.max(replay.cache.entries);
+    if capacity != usize::MAX {
+        assert!(
+            resident <= capacity,
+            "cache overflowed its bound: {resident} resident > {capacity}"
+        );
+    }
+    (replay.cache.hit_rate, warm.cache.evictions + replay.cache.evictions, resident)
+}
+
+fn main() {
+    // ---- 1. EDF vs FIFO on the bimodal-deadline overload trace --------
+    let bimodal = bimodal_trace(450.0, 900, 15_000.0, 3_000_000.0);
+    let mut t = Table::new(vec![
+        "discipline",
+        "misses (tight+bulk)",
+        "p99 [ms]",
+        "mean [ms]",
+        "throughput [rps]",
+    ]);
+    let fifo = run_discipline(QueueDiscipline::Fifo, &bimodal);
+    let edf = run_discipline(QueueDiscipline::Edf, &bimodal);
+    for (name, r) in [("fifo", &fifo), ("edf", &edf)] {
+        r.check_fifo_no_overlap().unwrap();
+        t.row(vec![
+            name.to_string(),
+            r.deadline_misses.to_string(),
+            f(r.p99_latency_us / 1e3, 2),
+            f(r.mean_latency_us / 1e3, 2),
+            f(r.throughput_rps, 1),
+        ]);
+    }
+    println!(
+        "Queue discipline on 1 LP device at 1.5x overload, 900 requests,\n\
+         bimodal deadlines (even ids 15 ms, odd ids 3 s):\n"
+    );
+    print!("{}", t.render());
+    assert_eq!(fifo.completions.len(), edf.completions.len());
+    assert!(
+        edf.deadline_misses < fifo.deadline_misses,
+        "EDF did not reduce deadline misses: {} vs {}",
+        edf.deadline_misses,
+        fifo.deadline_misses
+    );
+    assert!(
+        edf.deadline_misses * 4 < fifo.deadline_misses,
+        "EDF advantage collapsed: {} vs {}",
+        edf.deadline_misses,
+        fifo.deadline_misses
+    );
+    println!(
+        "\nEDF misses {} deadlines where FIFO misses {} ✓",
+        edf.deadline_misses, fifo.deadline_misses
+    );
+
+    // ---- 2. work stealing on the imbalanced pinned workload -----------
+    let imbalanced = imbalanced_workload();
+    let off = run_steal(false, &imbalanced);
+    let on = run_steal(true, &imbalanced);
+    off.check_fifo_no_overlap().unwrap();
+    on.check_fifo_no_overlap().unwrap();
+    assert_eq!(off.steals, 0);
+    assert_eq!(off.completions.len(), imbalanced.len());
+    assert_eq!(on.completions.len(), imbalanced.len());
+    let adj_off = off.throughput_rps * (1.0 - util_skew(&off));
+    let adj_on = on.throughput_rps * (1.0 - util_skew(&on));
+    println!(
+        "\nwork stealing on a pinned imbalanced 2-net workload (2 LP devices):\n\
+         \x20 steal off: {} rps, skew {}, adjusted {} rps\n\
+         \x20 steal on : {} rps, skew {}, adjusted {} rps ({} steals)",
+        f(off.throughput_rps, 1),
+        f(util_skew(&off), 3),
+        f(adj_off, 1),
+        f(on.throughput_rps, 1),
+        f(util_skew(&on), 3),
+        f(adj_on, 1),
+        on.steals
+    );
+    assert!(on.steals > 0, "no steals on an imbalanced pinned workload");
+    assert!(
+        adj_on > adj_off,
+        "stealing did not raise skew-adjusted throughput: {adj_on} vs {adj_off}"
+    );
+    assert!(
+        on.throughput_rps > off.throughput_rps,
+        "stealing did not raise raw throughput: {} vs {}",
+        on.throughput_rps,
+        off.throughput_rps
+    );
+    println!(
+        "stealing raises skew-adjusted throughput {} -> {} rps ✓",
+        f(adj_off, 1),
+        f(adj_on, 1)
+    );
+
+    // ---- 3. replay hit rate vs cache capacity on a repeat-heavy trace -
+    let repeat_heavy = Workload {
+        rate_per_s: 600.0,
+        deadline_us: None,
+        n_requests: 2000,
+        seed: 2020,
+    }
+    .generate_with_repeats(0, 0.6);
+    let capacities = [8usize, 64, 512, usize::MAX];
+    let mut curve = Table::new(vec!["capacity", "replay hit %", "evictions", "resident"]);
+    let mut rates: Vec<f64> = Vec::new();
+    for &c in &capacities {
+        let (rate, evictions, resident) = cache_curve_point(c, &repeat_heavy);
+        curve.row(vec![
+            if c == usize::MAX { "inf".to_string() } else { c.to_string() },
+            f(rate * 100.0, 1),
+            evictions.to_string(),
+            resident.to_string(),
+        ]);
+        rates.push(rate);
+    }
+    println!("\nresult-cache capacity curve (warm + replay of a 60%-repeat trace, 2 shards):\n");
+    print!("{}", curve.render());
+    for w in rates.windows(2) {
+        assert!(
+            w[1] >= w[0],
+            "replay hit rate must be monotone in capacity (LRU inclusion): {rates:?}"
+        );
+    }
+    assert!(
+        rates[capacities.len() - 1] > rates[0],
+        "capacity made no difference to the replay hit rate: {rates:?}"
+    );
+    assert!(
+        (rates[capacities.len() - 1] - 1.0).abs() < 1e-12,
+        "unbounded replay must hit 100%: {rates:?}"
+    );
+    println!("\nreplay hit rate grows monotonically with capacity, 100% unbounded ✓");
+
+    // ---- 4. trace round-trip: dump -> parse -> replay, bit-exact ------
+    let config = FleetConfig {
+        queue_bound: 24,
+        batch_max: 4,
+        wakeup_cycles: 10_000,
+        net_switch_cycles: 30_000,
+        discipline: QueueDiscipline::Edf,
+        steal: true,
+    };
+    let mut source = Workload {
+        rate_per_s: 900.0,
+        deadline_us: Some(25_000.0),
+        n_requests: 1200,
+        seed: 7,
+    };
+    let mut original = Fleet::with_config(lp_devices(3), Policy::LeastLoaded, config);
+    let (want, injected) = original.run_source_traced(&mut source);
+    let text = TraceSource::to_jsonl(&injected);
+    let mut replayed = TraceSource::parse_jsonl(&text).expect("dumped trace parses");
+    let got = Fleet::with_config(lp_devices(3), Policy::LeastLoaded, config)
+        .run_source(&mut replayed);
+    assert_eq!(want.completions, got.completions, "trace replay diverged from generating run");
+    assert_eq!(want.rejections, got.rejections);
+    assert!(want.active_energy_uj == got.active_energy_uj);
+    assert!(want.throughput_rps == got.throughput_rps);
+    assert_eq!(want.steals, got.steals);
+    println!(
+        "\nJSONL trace round-trip is bit-exact under EDF + stealing + batching \
+         ({} completions, {} shed, {} steals) ✓",
+        got.completions.len(),
+        got.shed,
+        got.steals
+    );
+
+    // ---- 5. event engine == synchronous baseline, all 4 policies ------
+    for policy in [
+        Policy::RoundRobin,
+        Policy::LeastLoaded,
+        Policy::EnergyAware,
+        Policy::TenancyAware,
+    ] {
+        let reqs = Workload {
+            rate_per_s: 1_400.0,
+            deadline_us: Some(40_000.0),
+            n_requests: 1500,
+            seed: 2020,
+        }
+        .generate();
+        let devices = pulpnn_mp::coordinator::gap8_mixed_devices(4, CYCLES_PER_INFERENCE);
+        let a = Fleet::new(devices.clone(), policy).run(&reqs);
+        let b = Fleet::new(devices, policy).run_synchronous(&reqs);
+        let sort = |mut v: Vec<pulpnn_mp::coordinator::Completion>| {
+            v.sort_by_key(|c| c.id);
+            v
+        };
+        assert_eq!(
+            sort(a.completions.clone()),
+            sort(b.completions.clone()),
+            "event engine diverged from the synchronous baseline under {policy:?}"
+        );
+        assert_eq!(a.per_device_served, b.per_device_served, "{policy:?}");
+        assert!(a.active_energy_uj == b.active_energy_uj, "{policy:?}");
+    }
+    println!("event engine == synchronous baseline (FIFO/no-steal/Poisson, all 4 policies) ✓");
+
+    // ---- wall-clock cost of the scheduling stack itself ---------------
+    let mut b = Bench::new("sched_scale");
+    b.run_with_throughput(
+        "edf: 1 device, 1.5x overload, 900 reqs",
+        Some(("simReq".into(), 900.0)),
+        || run_discipline(QueueDiscipline::Edf, &bimodal).completions.len(),
+    );
+    b.run_with_throughput(
+        "steal: 2 devices, pinned imbalance, 640 reqs",
+        Some(("simReq".into(), 640.0)),
+        || run_steal(true, &imbalanced).completions.len(),
+    );
+    b.run_with_throughput(
+        "bounded cache: warm+replay 2000 reqs, cap 64",
+        Some(("simReq".into(), 4000.0)),
+        || cache_curve_point(64, &repeat_heavy).1,
+    );
+    b.report();
+}

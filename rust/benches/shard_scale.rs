@@ -64,12 +64,14 @@ fn run(k: usize, tenants: usize, load: f64, repeat: f64, cache: bool, n: usize) 
         batch_max: 4,
         wakeup_cycles: 10_000,
         net_switch_cycles: 50_000,
+        ..FleetConfig::default()
     };
     let config = ShardConfig {
         shards: k,
         router_service_us: router_service_us(),
         tenancy_aware_routing: tenants > 1,
         cache,
+        ..ShardConfig::default()
     };
     let policy = if tenants > 1 { Policy::TenancyAware } else { Policy::LeastLoaded };
     let mut tier = ShardedFleet::new(
@@ -182,12 +184,13 @@ fn main() {
             batch_max: 4,
             wakeup_cycles: 10_000,
             net_switch_cycles: 50_000,
+            ..FleetConfig::default()
         };
         let config = ShardConfig {
             shards: 2,
             router_service_us: router_service_us(),
             tenancy_aware_routing: false, // hash-spread: nets everywhere
-            cache: false,
+            ..ShardConfig::default()
         };
         let mut tier = ShardedFleet::new(
             gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),

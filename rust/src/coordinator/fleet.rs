@@ -18,10 +18,22 @@
 //! Several `Fleet`s compose into a horizontally sharded tier via
 //! [`crate::coordinator::shard`].
 //!
+//! Scheduling within a device queue is pluggable ([`QueueDiscipline`]:
+//! FIFO or earliest-deadline-first) and devices can *steal* work: when one
+//! drains while a peer's queue is deep, it takes the peer's tail request
+//! ([`FleetConfig::steal`]), paying the residency switch its own
+//! `resident_net` implies. Arrivals come from any
+//! [`WorkloadSource`] — open-loop Poisson, a replayable trace, or a
+//! closed-loop client pool whose next arrival depends on the previous
+//! completion (the engine feeds completions back through
+//! [`WorkloadSource::on_done`]).
+//!
 //! [`Fleet::run_synchronous`] preserves the original one-pass synchronous
 //! semantics as a reference baseline: with an unbounded queue, no batching
-//! and no wake-up cost the event engine reproduces it bit-exactly (see
-//! `prop_event_engine_matches_synchronous_baseline`).
+//! and no wake-up cost (FIFO, no stealing) the event engine reproduces it
+//! bit-exactly on every source (see
+//! `prop_event_engine_matches_synchronous_baseline` and
+//! `prop_closed_loop_event_matches_sync`).
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -29,7 +41,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::energy::OperatingPoint;
 use crate::util::rng::Rng;
 
-use super::request::Request;
+use super::request::{Request, WorkloadSource};
 
 /// Routing policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +64,28 @@ pub enum Policy {
     TenancyAware,
 }
 
+/// Ordering discipline of a device's pending queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// First-in first-out: dispatch in arrival order.
+    Fifo,
+    /// Earliest-deadline-first: dispatch by absolute deadline (arrival
+    /// plus relative deadline; requests without a deadline sort last),
+    /// breaking ties by arrival and then by queue-insertion order (the
+    /// insert is stable). Uniform-deadline arrival-ordered workloads
+    /// therefore reduce to FIFO exactly (property-tested), and the order
+    /// never depends on request *ids* — so a replayed trace, whose ids
+    /// are renumbered, reproduces the recorded dispatch order bit-exactly.
+    Edf,
+}
+
+/// EDF sort key: absolute deadline, then arrival. Exact ties keep
+/// insertion order (stable insert in [`Device::enqueue`]); ids are
+/// deliberately not part of the key — see [`QueueDiscipline::Edf`].
+fn edf_key(req: &Request) -> (f64, f64) {
+    (req.deadline_us.map_or(f64::INFINITY, |dl| req.arrival_us + dl), req.arrival_us)
+}
+
 /// Serving-engine knobs.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FleetConfig {
@@ -72,14 +106,31 @@ pub struct FleetConfig {
     /// free. `0` disables residency cost modeling (switches are still
     /// counted).
     pub net_switch_cycles: u64,
+    /// Ordering of each device's pending queue (FIFO or EDF).
+    pub discipline: QueueDiscipline,
+    /// Cross-device work stealing: when a device finishes with an empty
+    /// queue, it steals the *tail* request of the deepest peer queue
+    /// (ties prefer a tail whose network matches the thief's resident
+    /// network — no switch cost — then the lowest device index) and
+    /// dispatches it immediately, paying any residency switch its own
+    /// `resident_net` implies.
+    pub steal: bool,
 }
 
 impl Default for FleetConfig {
     /// The backward-compatible configuration: unbounded queues, no
-    /// batching, no wake-up cost, no residency cost — identical semantics
-    /// to the original synchronous coordinator.
+    /// batching, no wake-up cost, no residency cost, FIFO order, no
+    /// stealing — identical semantics to the original synchronous
+    /// coordinator.
     fn default() -> FleetConfig {
-        FleetConfig { queue_bound: usize::MAX, batch_max: 1, wakeup_cycles: 0, net_switch_cycles: 0 }
+        FleetConfig {
+            queue_bound: usize::MAX,
+            batch_max: 1,
+            wakeup_cycles: 0,
+            net_switch_cycles: 0,
+            discipline: QueueDiscipline::Fifo,
+            steal: false,
+        }
     }
 }
 
@@ -181,10 +232,28 @@ impl Device {
     pub fn projected_drain_us(&self) -> f64 {
         self.committed_free_us
     }
+
+    /// Insert a pending request in discipline order: FIFO appends; EDF
+    /// inserts before the first queued request with a strictly later
+    /// absolute deadline (stable — equal deadlines keep arrival order).
+    fn enqueue(&mut self, req: Request, discipline: QueueDiscipline) {
+        match discipline {
+            QueueDiscipline::Fifo => self.queue.push_back(req),
+            QueueDiscipline::Edf => {
+                let key = edf_key(&req);
+                let pos = self
+                    .queue
+                    .iter()
+                    .position(|q| edf_key(q) > key)
+                    .unwrap_or(self.queue.len());
+                self.queue.insert(pos, req);
+            }
+        }
+    }
 }
 
 /// Completed-request record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Completion {
     /// The request's id.
     pub id: u64,
@@ -213,7 +282,7 @@ impl Completion {
 }
 
 /// A request shed by admission control (every admissible queue full).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Rejection {
     /// The shed request's id.
     pub id: u64,
@@ -273,9 +342,24 @@ pub struct FleetReport {
     /// Active energy spent on those switches (already included in
     /// `active_energy_uj`).
     pub switch_energy_uj: f64,
+    /// Requests moved between device queues by work stealing
+    /// ([`FleetConfig::steal`]).
+    pub steals: u64,
 }
 
 impl FleetReport {
+    /// Utilization skew across devices: max minus min per-device active
+    /// fraction (0 when the fleet is perfectly even, or empty).
+    pub fn utilization_skew(&self) -> f64 {
+        let max = self.per_device_utilization.iter().fold(0.0f64, |a, &u| a.max(u));
+        let min = self.per_device_utilization.iter().fold(f64::INFINITY, |a, &u| a.min(u));
+        if min.is_finite() {
+            max - min
+        } else {
+            0.0
+        }
+    }
+
     /// Largest pending-queue depth a device ever reported.
     pub fn max_queue_depth(&self, device: usize) -> usize {
         self.queue_depth_series
@@ -489,43 +573,105 @@ impl Fleet {
         }
     }
 
-    /// Run the full workload through the event-driven serving engine.
+    /// Run a fixed arrival-ordered workload through the event-driven
+    /// serving engine (the open-loop shorthand for
+    /// [`Fleet::run_source`]).
     pub fn run(&mut self, requests: &[Request]) -> FleetReport {
+        self.run_source(&mut SliceReplay(requests))
+    }
+
+    /// Run an arrival source — open- or closed-loop — through the
+    /// event-driven serving engine.
+    pub fn run_source(&mut self, source: &mut dyn WorkloadSource) -> FleetReport {
+        self.run_source_inner(source, false).0
+    }
+
+    /// Like [`Fleet::run_source`], additionally returning every request
+    /// the source injected, in arrival order — the replayable trace of the
+    /// run (dump it with
+    /// [`TraceSource::to_jsonl`](super::request::TraceSource::to_jsonl)
+    /// and replay it with
+    /// [`TraceSource::parse_jsonl`](super::request::TraceSource::parse_jsonl)
+    /// for bit-exact A/B comparisons).
+    ///
+    /// Completion feedback ([`WorkloadSource::on_done`]) fires for every
+    /// request as it finishes — and for shed requests at their shed time —
+    /// so closed-loop clients keep issuing until their budget drains.
+    pub fn run_source_traced(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+    ) -> (FleetReport, Vec<Request>) {
+        self.run_source_inner(source, true)
+    }
+
+    /// The event loop. `record` accumulates the injected arrival stream
+    /// (the replayable trace); plain runs skip that cost.
+    fn run_source_inner(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+        record: bool,
+    ) -> (FleetReport, Vec<Request>) {
         self.reset();
-        let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(requests.len() + 16);
+        let initial = source.initial();
+        let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(initial.len() + 16);
         let mut seq = 0u64;
-        for req in requests {
-            heap.push(Event { time: req.arrival_us, seq, kind: EventKind::Arrival(req.clone()) });
+        let mut injected: Vec<Request> =
+            Vec::with_capacity(if record { initial.len() } else { 0 });
+        for req in initial {
+            heap.push(Event { time: req.arrival_us, seq, kind: EventKind::Arrival(req) });
             seq += 1;
         }
 
-        let mut completions: Vec<Completion> = Vec::with_capacity(requests.len());
+        let mut completions: Vec<Completion> = Vec::new();
         let mut rejections: Vec<Rejection> = Vec::new();
         let mut series: Vec<QueueSample> = Vec::new();
         let mut batches = 0u64;
         let mut batched_requests = 0u64;
+        let mut steals = 0u64;
 
         while let Some(ev) = heap.pop() {
             let now = ev.time;
             match ev.kind {
-                EventKind::Arrival(req) => match self.route(&req, now) {
-                    Some(d) => {
-                        let dev = &mut self.devices[d];
-                        dev.committed_free_us =
-                            dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
-                        dev.queue.push_back(req);
-                        series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
-                        if !dev.in_flight {
-                            heap.push(Event {
-                                time: now,
-                                seq,
-                                kind: EventKind::DispatchBatch { device: d },
+                EventKind::Arrival(req) => {
+                    if record {
+                        injected.push(req.clone());
+                    }
+                    match self.route(&req, now) {
+                        Some(d) => {
+                            let discipline = self.config.discipline;
+                            let dev = &mut self.devices[d];
+                            dev.committed_free_us =
+                                dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
+                            dev.enqueue(req, discipline);
+                            series.push(QueueSample {
+                                t_us: now,
+                                device: d,
+                                depth: dev.queue.len(),
                             });
-                            seq += 1;
+                            if !dev.in_flight {
+                                heap.push(Event {
+                                    time: now,
+                                    seq,
+                                    kind: EventKind::DispatchBatch { device: d },
+                                });
+                                seq += 1;
+                            }
+                        }
+                        None => {
+                            rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us });
+                            // a shed request completes (unsuccessfully) now:
+                            // closed-loop clients observe it and move on
+                            for next in source.on_done(req.id, now) {
+                                heap.push(Event {
+                                    time: next.arrival_us,
+                                    seq,
+                                    kind: EventKind::Arrival(next),
+                                });
+                                seq += 1;
+                            }
                         }
                     }
-                    None => rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us }),
-                },
+                }
                 EventKind::DispatchBatch { device: d } => {
                     let wake_us = self.wakeup_us(d);
                     let batch_max = self.config.batch_max;
@@ -535,7 +681,8 @@ impl Fleet {
                     if dev.in_flight || dev.queue.is_empty() {
                         continue; // stale dispatch
                     }
-                    // the micro-batch: longest same-network FIFO prefix
+                    // the micro-batch: longest same-network prefix of the
+                    // queue in discipline order
                     let net = dev.queue.front().unwrap().net;
                     let mut batch: Vec<Request> = Vec::new();
                     while batch.len() < batch_max
@@ -561,9 +708,11 @@ impl Fleet {
                     let start = now;
                     let inf = dev.inference_us();
                     let mut t = start + wake_us + switch_us;
+                    let mut done: Vec<(u64, f64)> = Vec::with_capacity(batch.len());
                     for req in &batch {
                         let s = t;
                         t += inf;
+                        done.push((req.id, t));
                         completions.push(Completion {
                             id: req.id,
                             device: d,
@@ -595,38 +744,125 @@ impl Fleet {
                     batched_requests += k;
                     heap.push(Event { time: finish, seq, kind: EventKind::Finish { device: d } });
                     seq += 1;
+                    // feedback edge: completions are committed now with
+                    // future finish times, so the follow-up arrivals they
+                    // unlock (all at >= finish) can enter the event queue
+                    // immediately
+                    for (rid, fin) in done {
+                        for next in source.on_done(rid, fin) {
+                            heap.push(Event {
+                                time: next.arrival_us,
+                                seq,
+                                kind: EventKind::Arrival(next),
+                            });
+                            seq += 1;
+                        }
+                    }
                 }
                 EventKind::Finish { device: d } => {
-                    let dev = &mut self.devices[d];
-                    dev.in_flight = false;
-                    if !dev.queue.is_empty() {
+                    self.devices[d].in_flight = false;
+                    if !self.devices[d].queue.is_empty() {
                         heap.push(Event {
                             time: now,
                             seq,
                             kind: EventKind::DispatchBatch { device: d },
                         });
                         seq += 1;
+                    } else if self.config.steal {
+                        if let Some(victim) = self.steal_victim(d) {
+                            let req = self.devices[victim]
+                                .queue
+                                .pop_back()
+                                .expect("steal victim has a non-empty queue");
+                            // hand the routing projection over with the
+                            // request: the victim drains one inference
+                            // sooner, the thief one later
+                            let victim_inf = self.devices[victim].inference_us();
+                            self.devices[victim].committed_free_us =
+                                (self.devices[victim].committed_free_us - victim_inf).max(now);
+                            series.push(QueueSample {
+                                t_us: now,
+                                device: victim,
+                                depth: self.devices[victim].queue.len(),
+                            });
+                            let thief = &mut self.devices[d];
+                            thief.committed_free_us =
+                                thief.committed_free_us.max(now) + thief.inference_us();
+                            thief.queue.push_back(req);
+                            series.push(QueueSample { t_us: now, device: d, depth: 1 });
+                            steals += 1;
+                            heap.push(Event {
+                                time: now,
+                                seq,
+                                kind: EventKind::DispatchBatch { device: d },
+                            });
+                            seq += 1;
+                        }
                     }
                 }
             }
         }
-        self.finalize(completions, rejections, series, batches, batched_requests)
+        let report =
+            self.finalize(completions, rejections, series, batches, batched_requests, steals);
+        (report, injected)
+    }
+
+    /// Victim selection for work stealing: the deepest non-empty peer
+    /// queue, preferring (on equal depth) one whose tail request matches
+    /// the thief's resident network — stealing it costs no residency
+    /// switch — then the lowest device index, for determinism.
+    fn steal_victim(&self, thief: usize) -> Option<usize> {
+        let resident = self.devices[thief].resident_net;
+        let mut best: Option<(usize, bool, usize)> = None;
+        for (i, dev) in self.devices.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            let Some(tail) = dev.queue.back() else { continue };
+            let depth = dev.queue.len();
+            let no_switch = match resident {
+                None => true, // cold thief: first load is free
+                Some(r) => r == tail.net,
+            };
+            let better = match best {
+                None => true,
+                Some((bd, bs, _)) => depth > bd || (depth == bd && no_switch && !bs),
+            };
+            if better {
+                best = Some((depth, no_switch, i));
+            }
+        }
+        best.map(|(_, _, i)| i)
     }
 
     /// One-pass synchronous baseline — the coordinator's original
     /// semantics, kept as the reference the event engine is property-tested
     /// against. Only valid for the backward-compatible configuration
-    /// (unbounded queue, `batch_max == 1`, no wake-up cost).
+    /// (unbounded FIFO queue, `batch_max == 1`, no wake-up cost, no
+    /// stealing).
     pub fn run_synchronous(&mut self, requests: &[Request]) -> FleetReport {
+        self.run_synchronous_source(&mut SliceReplay(requests))
+    }
+
+    /// The synchronous baseline over an arrival source: requests are
+    /// served strictly in arrival order (ties by id), each assigned its
+    /// start/finish the moment it is processed, with completion feedback
+    /// delivered to the source immediately — so closed-loop sources
+    /// produce the same arrival stream as under the event engine (each
+    /// client's think-time RNG stream is independent, and completion
+    /// times agree bit-exactly).
+    pub fn run_synchronous_source(&mut self, source: &mut dyn WorkloadSource) -> FleetReport {
         assert_eq!(
             self.config,
             FleetConfig::default(),
-            "run_synchronous models the unbounded/unbatched configuration only"
+            "run_synchronous models the unbounded/unbatched FIFO configuration only"
         );
         self.reset();
-        let mut completions = Vec::with_capacity(requests.len());
-        for req in requests {
-            let d = self.route(req, req.arrival_us).expect("unbounded queues never shed");
+        let mut pending: BinaryHeap<SyncArrival> =
+            source.initial().into_iter().map(SyncArrival).collect();
+        let mut completions: Vec<Completion> = Vec::new();
+        while let Some(SyncArrival(req)) = pending.pop() {
+            let d = self.route(&req, req.arrival_us).expect("unbounded queues never shed");
             let dev = &mut self.devices[d];
             // mirror the event engine's residency tracking: with
             // batch_max = 1 every request is one activation, and the
@@ -656,9 +892,12 @@ impl Fleet {
                     .map(|dl| finish - req.arrival_us > dl)
                     .unwrap_or(false),
             });
+            for next in source.on_done(req.id, finish) {
+                pending.push(SyncArrival(next));
+            }
         }
         let n = completions.len() as u64;
-        self.finalize(completions, Vec::new(), Vec::new(), n, n)
+        self.finalize(completions, Vec::new(), Vec::new(), n, n, 0)
     }
 
     fn finalize(
@@ -668,6 +907,7 @@ impl Fleet {
         series: Vec<QueueSample>,
         batches: u64,
         batched_requests: u64,
+        steals: u64,
     ) -> FleetReport {
         // sustained-throughput span: first arrival to last finish (with an
         // epsilon floor), not `max(finish)` — a workload whose first
@@ -710,9 +950,48 @@ impl Fleet {
             mean_batch_size: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
             net_switches: self.devices.iter().map(|d| d.net_switches).sum(),
             switch_energy_uj: self.devices.iter().map(|d| d.switch_energy_uj).sum(),
+            steals,
             completions,
             rejections,
         }
+    }
+}
+
+/// Internal adapter replaying a borrowed arrival slice — what
+/// [`Fleet::run`] wraps its argument in, avoiding an owned copy of the
+/// workload per run.
+struct SliceReplay<'a>(&'a [Request]);
+
+impl WorkloadSource for SliceReplay<'_> {
+    fn initial(&mut self) -> Vec<Request> {
+        self.0.to_vec()
+    }
+}
+
+/// Min-heap wrapper for the synchronous baseline's pending arrivals:
+/// earliest arrival first, ties by id.
+struct SyncArrival(Request);
+
+impl PartialEq for SyncArrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.id == other.0.id
+    }
+}
+impl Eq for SyncArrival {}
+impl PartialOrd for SyncArrival {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for SyncArrival {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed on both keys: min-heap behaviour out of BinaryHeap
+        other
+            .0
+            .arrival_us
+            .partial_cmp(&self.0.arrival_us)
+            .expect("arrival times are finite")
+            .then_with(|| other.0.id.cmp(&self.0.id))
     }
 }
 
@@ -764,7 +1043,7 @@ pub fn random_devices(rng: &mut Rng) -> Vec<Device> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{merge_streams, Workload};
+    use crate::coordinator::request::{merge_streams, ClosedLoopSource, TraceSource, Workload};
     use crate::energy::{GAP8_HP, GAP8_LP};
     use crate::util::check::check;
 
@@ -900,6 +1179,336 @@ mod tests {
     }
 
     #[test]
+    fn prop_edf_with_uniform_deadlines_matches_fifo() {
+        // When every request carries the same relative deadline, absolute
+        // deadlines are arrival-ordered, so EDF must reproduce FIFO bit
+        // for bit — completions, shedding, energy, everything.
+        check("fleet-edf-uniform-is-fifo", 30, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let devices = random_devices(rng);
+            let base = FleetConfig {
+                queue_bound: *rng.pick(&[6usize, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 30_000]),
+                ..FleetConfig::default()
+            };
+            let deadline = 1e4 + rng.below(500) as f64 * 100.0;
+            let reqs =
+                workload(500.0 + rng.below(3000) as f64, 250, Some(deadline), rng.next_u64());
+            let fifo = Fleet::with_config(
+                devices.clone(),
+                policy,
+                FleetConfig { discipline: QueueDiscipline::Fifo, ..base },
+            )
+            .run(&reqs);
+            let edf = Fleet::with_config(
+                devices,
+                policy,
+                FleetConfig { discipline: QueueDiscipline::Edf, ..base },
+            )
+            .run(&reqs);
+            if fifo.completions != edf.completions {
+                return Err("completions diverged between FIFO and uniform-deadline EDF".into());
+            }
+            if fifo.rejections != edf.rejections {
+                return Err("shed sets diverged".into());
+            }
+            if fifo.active_energy_uj != edf.active_energy_uj {
+                return Err("active energy diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_conservation_under_edf_and_stealing() {
+        // Pluggable disciplines and work stealing must never lose or
+        // duplicate a request, and per-device serialization must hold.
+        check("fleet-sched-conservation", 40, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[2usize, 8, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 20_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 40_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+            };
+            let mut fleet = Fleet::with_config(random_devices(rng), policy, config);
+            let deadline = if rng.chance(0.5) { Some(3e4) } else { None };
+            let mk = |net: u32, seed: u64| {
+                Workload { rate_per_s: 1500.0, deadline_us: deadline, n_requests: 120, seed }
+                    .generate_for_net(net)
+            };
+            let reqs = merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())]);
+            let report = fleet.run(&reqs);
+            if report.completions.len() + report.shed != reqs.len() {
+                return Err(format!(
+                    "conservation violated: {} completed + {} shed != {}",
+                    report.completions.len(),
+                    report.shed,
+                    reqs.len()
+                ));
+            }
+            let mut ids: Vec<u64> = report
+                .completions
+                .iter()
+                .map(|c| c.id)
+                .chain(report.rejections.iter().map(|r| r.id))
+                .collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != reqs.len() {
+                return Err("duplicate or missing ids under EDF/steal".into());
+            }
+            report.check_fifo_no_overlap()
+        });
+    }
+
+    #[test]
+    fn prop_closed_loop_event_matches_sync() {
+        // The event-vs-synchronous bit-exactness property extends to
+        // closed-loop sources: with the default config (FIFO, no steal,
+        // unbounded, unbatched) both engines must produce identical
+        // completions AND identical feedback-driven arrival streams.
+        check("fleet-closed-loop-event-vs-sync", 25, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let devices = random_devices(rng);
+            let clients = 1 + rng.below(8) as usize;
+            let n = clients + 40 + rng.below(80) as usize;
+            // strictly positive think times: exponential draws make exact
+            // arrival ties (where engine tie-breaking may differ) measure
+            // zero; the think = 0 edge is covered by a serialized
+            // single-device unit test below
+            let think = *rng.pick(&[500.0f64, 2_000.0, 20_000.0]);
+            let seed = rng.next_u64();
+            let mk = || ClosedLoopSource::new(clients, think, n, seed).with_nets(2);
+            let mut ev = Fleet::new(devices.clone(), policy);
+            let mut sync = Fleet::new(devices, policy);
+            let (a, injected) = ev.run_source_traced(&mut mk());
+            let b = sync.run_synchronous_source(&mut mk());
+            if injected.len() != n {
+                return Err(format!(
+                    "closed loop issued {} of {n} budgeted requests",
+                    injected.len()
+                ));
+            }
+            if a.completions.len() != n || b.completions.len() != n {
+                return Err("not every issued request completed".into());
+            }
+            let sort = |mut v: Vec<Completion>| {
+                v.sort_by_key(|c| c.id);
+                v
+            };
+            let (ca, cb) = (sort(a.completions.clone()), sort(b.completions.clone()));
+            for (x, y) in ca.iter().zip(cb.iter()) {
+                if x != y {
+                    return Err(format!(
+                        "closed-loop completion diverged:\n  event: {x:?}\n  sync:  {y:?}"
+                    ));
+                }
+            }
+            if a.per_device_served != b.per_device_served
+                || a.active_energy_uj != b.active_energy_uj
+            {
+                return Err("aggregates diverged on a closed-loop source".into());
+            }
+            // causality of the feedback edge: a client's k-th arrival never
+            // precedes its (k-1)-th completion
+            let finish_of: std::collections::HashMap<u64, f64> =
+                ca.iter().map(|c| (c.id, c.finish_us)).collect();
+            for r in &injected {
+                let (client, k) = (r.id >> 32, r.id & 0xFFFF_FFFF);
+                if k > 0 {
+                    let prev = (client << 32) | (k - 1);
+                    let prev_finish = finish_of[&prev];
+                    if r.arrival_us < prev_finish {
+                        return Err(format!(
+                            "feedback violated causality: request {:#x} arrived at {} before \
+                             its predecessor finished at {prev_finish}",
+                            r.id, r.arrival_us
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_trace_replay_reproduces_run() {
+        // generate -> dump (JSONL) -> replay must reproduce the generating
+        // run bit-exactly, for any engine configuration.
+        check("fleet-trace-replay-bit-exact", 25, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let devices = random_devices(rng);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 25_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default()
+            };
+            let mut w = Workload {
+                rate_per_s: 400.0 + rng.below(2000) as f64,
+                deadline_us: if rng.chance(0.5) { Some(2e4) } else { None },
+                n_requests: 150,
+                seed: rng.next_u64(),
+            };
+            let mut original = Fleet::with_config(devices.clone(), policy, config);
+            let (want, injected) = original.run_source_traced(&mut w);
+            let text = TraceSource::to_jsonl(&injected);
+            let mut replay = TraceSource::parse_jsonl(&text).map_err(|e| e.to_string())?;
+            if replay.requests() != &injected[..] {
+                return Err("trace did not round-trip the injected stream".into());
+            }
+            let got = Fleet::with_config(devices, policy, config).run_source(&mut replay);
+            if want.completions != got.completions || want.rejections != got.rejections {
+                return Err("replayed run diverged from the generating run".into());
+            }
+            if want.active_energy_uj != got.active_energy_uj
+                || want.throughput_rps != got.throughput_rps
+                || want.steals != got.steals
+            {
+                return Err("replayed aggregates diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closed_loop_zero_think_time_is_back_to_back_and_engine_exact() {
+        // think = 0: each client resubmits the instant its previous
+        // request completes. On a single device everything serializes, so
+        // the device never idles once warm, and both engines agree.
+        let mk = || ClosedLoopSource::new(3, 0.0, 30, 77);
+        let devices = vec![Device::new("d0".into(), GAP8_LP, 200_000)];
+        let (a, injected) =
+            Fleet::new(devices.clone(), Policy::LeastLoaded).run_source_traced(&mut mk());
+        let b = Fleet::new(devices, Policy::LeastLoaded).run_synchronous_source(&mut mk());
+        assert_eq!(injected.len(), 30);
+        assert_eq!(a.completions.len(), 30);
+        let sort = |mut v: Vec<Completion>| {
+            v.sort_by_key(|c| c.id);
+            v
+        };
+        assert_eq!(sort(a.completions.clone()), sort(b.completions.clone()));
+        // back-to-back: once all three clients are in steady state the
+        // device's completion stream has no gaps
+        let mut finishes: Vec<(f64, f64)> =
+            a.completions.iter().map(|c| (c.start_us, c.finish_us)).collect();
+        finishes.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        for w in finishes.windows(2).skip(3) {
+            assert!(
+                (w[1].0 - w[0].1).abs() < 1e-6,
+                "device idled {} us in steady state",
+                w[1].0 - w[0].1
+            );
+        }
+    }
+
+    #[test]
+    fn edf_reduces_deadline_misses_under_bimodal_overload() {
+        // 1 LP device at 1.5x overload with alternating 15 ms / 3 s
+        // deadlines: under FIFO the shared backlog blows every tight
+        // deadline; EDF serves the tight class (at 0.75x capacity, stable)
+        // first and must miss far fewer.
+        let run = |discipline: QueueDiscipline| {
+            let mut reqs = Workload {
+                rate_per_s: 450.0,
+                deadline_us: None,
+                n_requests: 300,
+                seed: 2020,
+            }
+            .generate();
+            for r in &mut reqs {
+                r.deadline_us = Some(if r.id % 2 == 0 { 15_000.0 } else { 3_000_000.0 });
+            }
+            let devices = vec![Device::new("d0".into(), GAP8_LP, 300_000)];
+            let config = FleetConfig { discipline, ..FleetConfig::default() };
+            Fleet::with_config(devices, Policy::LeastLoaded, config).run(&reqs)
+        };
+        let fifo = run(QueueDiscipline::Fifo);
+        let edf = run(QueueDiscipline::Edf);
+        assert_eq!(fifo.completions.len(), edf.completions.len());
+        assert!(
+            edf.deadline_misses < fifo.deadline_misses,
+            "EDF must reduce misses: {} vs {}",
+            edf.deadline_misses,
+            fifo.deadline_misses
+        );
+        assert!(
+            edf.deadline_misses * 4 < fifo.deadline_misses,
+            "EDF advantage collapsed: {} vs {}",
+            edf.deadline_misses,
+            fifo.deadline_misses
+        );
+    }
+
+    #[test]
+    fn stealing_rebalances_pinned_tenancy_imbalance() {
+        // Two LP devices with tenancy pinning and a lopsided 2-net load:
+        // without stealing one device drowns while the other idles; with
+        // stealing the idle device drains its peer's tail, raising
+        // throughput and collapsing the utilization skew.
+        let run = |steal: bool| {
+            let a = Workload { rate_per_s: 500.0, deadline_us: None, n_requests: 200, seed: 2020 }
+                .generate_for_net(0);
+            let b = Workload { rate_per_s: 30.0, deadline_us: None, n_requests: 15, seed: 2021 }
+                .generate_for_net(1);
+            let reqs = merge_streams(&[a, b]);
+            let devices = vec![
+                Device::new("d0".into(), GAP8_LP, 300_000),
+                Device::new("d1".into(), GAP8_LP, 300_000),
+            ];
+            let config =
+                FleetConfig { net_switch_cycles: 30_000, steal, ..FleetConfig::default() };
+            Fleet::with_config(devices, Policy::TenancyAware, config).run(&reqs)
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.steals, 0);
+        assert!(on.steals > 0, "no steals on an imbalanced pinned workload");
+        assert!(
+            on.throughput_rps > off.throughput_rps,
+            "stealing must raise throughput: {} vs {}",
+            on.throughput_rps,
+            off.throughput_rps
+        );
+        assert!(
+            on.utilization_skew() < off.utilization_skew(),
+            "stealing must reduce utilization skew: {} vs {}",
+            on.utilization_skew(),
+            off.utilization_skew()
+        );
+        on.check_fifo_no_overlap().unwrap();
+        // every stolen request still completes exactly once
+        assert_eq!(on.completions.len(), 215);
+        assert_eq!(off.completions.len(), 215);
+    }
+
+    #[test]
     fn queue_bound_is_enforced_and_overflow_is_shed() {
         // 2 slow devices, 4-deep queues, heavy overload: depth never
         // exceeds the bound and the excess is shed, not lost.
@@ -907,8 +1516,7 @@ mod tests {
             Device::new("d0".into(), GAP8_LP, 400_000),
             Device::new("d1".into(), GAP8_LP, 400_000),
         ];
-        let config =
-            FleetConfig { queue_bound: 4, batch_max: 1, wakeup_cycles: 0, net_switch_cycles: 0 };
+        let config = FleetConfig { queue_bound: 4, ..FleetConfig::default() };
         let mut fleet = Fleet::with_config(devices, Policy::LeastLoaded, config);
         let reqs = workload(2000.0, 500, None, 11);
         let report = fleet.run(&reqs);
@@ -943,7 +1551,7 @@ mod tests {
                 queue_bound: 16,
                 batch_max,
                 wakeup_cycles: 90_000,
-                net_switch_cycles: 0,
+                ..FleetConfig::default()
             };
             let mut fleet = Fleet::with_config(devices, Policy::LeastLoaded, config);
             fleet.run(&workload(1800.0, 600, None, 13))
@@ -974,7 +1582,7 @@ mod tests {
             queue_bound: 64,
             batch_max: 4,
             wakeup_cycles: 50_000,
-            net_switch_cycles: 0,
+            ..FleetConfig::default()
         };
         let mut fleet = Fleet::with_config(devices, Policy::RoundRobin, config);
         let report = fleet.run(&reqs);
@@ -1099,12 +1707,8 @@ mod tests {
         // after the first (free cold load) evicts the other net
         let run = |switch_cycles: u64| {
             let devices = vec![Device::new("d0".into(), GAP8_LP, 100_000)];
-            let config = FleetConfig {
-                queue_bound: usize::MAX,
-                batch_max: 1,
-                wakeup_cycles: 0,
-                net_switch_cycles: switch_cycles,
-            };
+            let config =
+                FleetConfig { net_switch_cycles: switch_cycles, ..FleetConfig::default() };
             let mut fleet = Fleet::with_config(devices, Policy::RoundRobin, config);
             fleet.run(&alternating_net_requests(10, 10_000.0))
         };
@@ -1131,6 +1735,7 @@ mod tests {
                 batch_max: 4,
                 wakeup_cycles: 20_000,
                 net_switch_cycles: switch_cycles,
+                ..FleetConfig::default()
             };
             let devices = gap8_mixed_devices(3, 300_000);
             Fleet::with_config(devices, Policy::LeastLoaded, config)
@@ -1157,12 +1762,7 @@ mod tests {
                 Device::new("d0".into(), GAP8_LP, 100_000),
                 Device::new("d1".into(), GAP8_LP, 100_000),
             ];
-            let config = FleetConfig {
-                queue_bound: usize::MAX,
-                batch_max: 1,
-                wakeup_cycles: 0,
-                net_switch_cycles: 50_000,
-            };
+            let config = FleetConfig { net_switch_cycles: 50_000, ..FleetConfig::default() };
             Fleet::with_config(devices, policy, config)
                 .run(&alternating_net_requests(40, 10_000.0))
         };

@@ -22,7 +22,19 @@
 //!   setup, event-unit barrier release) once — batching amortizes it.
 //!   Requests inside a batch execute back-to-back (FIFO, no overlap).
 //! * **`Finish`** — the activation completes; the device goes idle and, if
-//!   its queue is non-empty, immediately re-dispatches.
+//!   its queue is non-empty, immediately re-dispatches. With
+//!   [`FleetConfig::steal`] enabled, a device that drains *steals* the
+//!   tail request of the deepest peer queue instead of idling (preferring
+//!   a tail whose network matches its own residency) and dispatches it on
+//!   the spot.
+//!
+//! Device queues are ordered by a pluggable [`QueueDiscipline`] — FIFO or
+//! earliest-deadline-first — and arrivals are pulled from a
+//! [`WorkloadSource`]: the open-loop Poisson [`Workload`], a replayable
+//! [`TraceSource`], or a [`ClosedLoopSource`] client pool whose next
+//! arrival depends on the previous completion. The engine closes that
+//! loop by feeding every completion (and shed) back through
+//! [`WorkloadSource::on_done`] — the feedback edge of the event loop.
 //!
 //! ## Queue-aware routing
 //!
@@ -71,8 +83,8 @@ pub mod shard;
 
 pub use fleet::{
     gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Device, Fleet, FleetConfig,
-    FleetReport, Policy, QueueSample, Rejection, DEFAULT_WAKEUP_CYCLES,
+    FleetReport, Policy, QueueDiscipline, QueueSample, Rejection, DEFAULT_WAKEUP_CYCLES,
 };
-pub use request::{merge_streams, Request, Workload};
+pub use request::{merge_streams, ClosedLoopSource, Request, TraceSource, Workload, WorkloadSource};
 pub use server::{Served, Server, ServeStats};
 pub use shard::{CacheHit, CacheStats, ShardConfig, ShardedFleet, ShardedReport};

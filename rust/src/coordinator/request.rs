@@ -9,10 +9,29 @@
 //! artifact runtime is deterministic, so `(net, input_digest)` fully
 //! determines the output (see [`crate::coordinator::shard`]).
 //!
-//! [`Workload`] generates open-loop Poisson arrival streams; per-tenant
-//! streams are combined with [`merge_streams`]. Repeated inputs (the
-//! cache's reason to exist) are modeled by [`Workload::generate_with_repeats`].
+//! Workload generation is abstracted behind [`WorkloadSource`], the
+//! interface the serving engines pull arrivals from. Three implementations
+//! exist:
+//!
+//! * [`Workload`] — the original *open-loop* Poisson generator: every
+//!   arrival is known up front, independent of how the system responds.
+//!   Per-tenant streams are combined with [`merge_streams`]; repeated
+//!   inputs (the result cache's reason to exist) are modeled by
+//!   [`Workload::generate_with_repeats`].
+//! * [`ClosedLoopSource`] — a *closed-loop* client pool: N clients, each
+//!   with at most one request outstanding, thinking for an exponentially
+//!   distributed time between a completion and the next submission. The
+//!   next arrival depends on the previous completion, which is the
+//!   feedback edge [`WorkloadSource::on_done`] models (driven by the
+//!   event loop in [`crate::coordinator::fleet`]).
+//! * [`TraceSource`] — a replayable arrival trace, loadable/dumpable as
+//!   JSON lines (`{arrival_us, deadline_us, input_digest, net}`) so any
+//!   generated run — open- or closed-loop — can be captured once and
+//!   replayed bit-exactly for A/B comparisons.
 
+use std::collections::{BTreeMap, HashMap};
+
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// One inference request in the fleet simulation. Times are in
@@ -118,6 +137,281 @@ fn digest_for(seed: u64, net: u32, id: u64) -> u64 {
     mix64(seed ^ mix64(((net as u64) << 40) ^ id))
 }
 
+/// A pull-based arrival source for the serving engines.
+///
+/// Open-loop sources (Poisson, traces) publish every arrival up front via
+/// [`WorkloadSource::initial`] and ignore feedback. Closed-loop sources
+/// hold requests back: the engine reports each request's completion (or
+/// shed) through [`WorkloadSource::on_done`], and the source answers with
+/// the follow-up arrivals that completion unlocked — the feedback edge of
+/// a closed-loop client pool.
+pub trait WorkloadSource {
+    /// Arrivals known at simulation start. For open-loop sources this is
+    /// the entire stream; for closed-loop sources, each client's first
+    /// request.
+    fn initial(&mut self) -> Vec<Request>;
+
+    /// Completion feedback: request `id` left the system (finished — or
+    /// was shed, in which case `t_us` is the shed time) at `t_us`.
+    /// Returns the arrivals this completion unlocks; every returned
+    /// request must have `arrival_us >= t_us`.
+    fn on_done(&mut self, id: u64, t_us: f64) -> Vec<Request> {
+        let _ = (id, t_us);
+        Vec::new()
+    }
+
+    /// Whether every arrival is known up front ([`WorkloadSource::on_done`]
+    /// never yields requests). The two-phase sharded tier can only replay
+    /// open-loop sources; closed-loop runs are recorded against a single
+    /// fleet and replayed as traces.
+    fn is_open_loop(&self) -> bool {
+        true
+    }
+}
+
+impl WorkloadSource for Workload {
+    /// The open-loop Poisson stream for network 0 — the whole workload is
+    /// independent of system behaviour, so it is published up front.
+    fn initial(&mut self) -> Vec<Request> {
+        self.generate()
+    }
+}
+
+/// A closed-loop client pool: `clients` concurrent clients, each keeping
+/// exactly one request in flight, thinking for an exponentially
+/// distributed time (mean `think_us_mean` microseconds) between a
+/// completion and its next submission, until a total budget of
+/// `n_requests` has been issued.
+///
+/// The budget is split into *per-client quotas* (`n_requests / clients`,
+/// the first `n_requests % clients` clients getting one extra) rather
+/// than decremented globally. That keeps every client's issuance chain
+/// fully self-contained: request ids encode `(client << 32) | seq`, each
+/// client draws think times from its own RNG stream, and a client's k-th
+/// request depends only on its own (k-1)-th completion — so two engines
+/// that produce identical completion times produce identical arrival
+/// streams, no matter in which order they observe different clients'
+/// completions. (A global budget would hand the last few issue slots to
+/// whichever clients completed first *in observation order*, which
+/// differs between the event-driven and synchronous engines; that breaks
+/// the bit-exactness property the per-client split restores.)
+///
+/// A shed request also triggers feedback: the client observes the
+/// rejection immediately, thinks, and submits a fresh request (retries are
+/// new requests, not resubmissions).
+#[derive(Debug, Clone)]
+pub struct ClosedLoopSource {
+    clients: usize,
+    think_us_mean: f64,
+    deadline_us: Option<f64>,
+    nets: u32,
+    seed: u64,
+    issued: usize,
+    rngs: Vec<Rng>,
+    next_seq: Vec<u64>,
+    /// Per-client issue ceilings; they sum to the `n_requests` budget.
+    quota: Vec<u64>,
+    client_of: HashMap<u64, usize>,
+}
+
+impl ClosedLoopSource {
+    /// A pool of `clients` clients with exponential think time of mean
+    /// `think_us_mean` microseconds, issuing `n_requests` requests in
+    /// total (split evenly across clients) for network 0 under RNG seed
+    /// `seed` (deterministic per seed).
+    pub fn new(
+        clients: usize,
+        think_us_mean: f64,
+        n_requests: usize,
+        seed: u64,
+    ) -> ClosedLoopSource {
+        assert!(clients >= 1, "need at least one client");
+        assert!(think_us_mean >= 0.0, "think time must be non-negative");
+        ClosedLoopSource {
+            clients,
+            think_us_mean,
+            deadline_us: None,
+            nets: 1,
+            seed,
+            issued: 0,
+            rngs: (0..clients as u64).map(|c| Rng::new(mix64(seed ^ mix64(c + 1)))).collect(),
+            next_seq: vec![0; clients],
+            quota: (0..clients)
+                .map(|c| (n_requests / clients + usize::from(c < n_requests % clients)) as u64)
+                .collect(),
+            client_of: HashMap::new(),
+        }
+    }
+
+    /// Stamp every issued request with a relative deadline.
+    pub fn with_deadline(mut self, deadline_us: f64) -> ClosedLoopSource {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    /// Spread clients across `nets` tenant networks (client `c` issues for
+    /// network `c % nets`).
+    pub fn with_nets(mut self, nets: u32) -> ClosedLoopSource {
+        assert!(nets >= 1, "need at least one network");
+        self.nets = nets;
+        self
+    }
+
+    /// Requests issued so far (never exceeds the `n_requests` budget).
+    pub fn issued(&self) -> usize {
+        self.issued
+    }
+
+    fn issue(&mut self, client: usize, at_us: f64) -> Request {
+        let think = {
+            let u = self.rngs[client].unit_f64().max(1e-12);
+            -u.ln() * self.think_us_mean
+        };
+        let net = client as u32 % self.nets;
+        let k = self.next_seq[client];
+        self.next_seq[client] += 1;
+        let id = ((client as u64) << 32) | k;
+        self.issued += 1;
+        self.client_of.insert(id, client);
+        Request {
+            id,
+            arrival_us: at_us + think,
+            deadline_us: self.deadline_us,
+            net,
+            input_digest: digest_for(self.seed, net, id),
+        }
+    }
+}
+
+impl WorkloadSource for ClosedLoopSource {
+    /// Each client thinks once from t = 0 and submits its first request
+    /// (staggered arrivals, like users opening the app at different
+    /// moments). Clients with a zero quota (`clients > n_requests`) stay
+    /// silent.
+    fn initial(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for c in 0..self.clients {
+            if self.next_seq[c] < self.quota[c] {
+                out.push(self.issue(c, 0.0));
+            }
+        }
+        out
+    }
+
+    fn on_done(&mut self, id: u64, t_us: f64) -> Vec<Request> {
+        let Some(client) = self.client_of.remove(&id) else {
+            return Vec::new();
+        };
+        if self.next_seq[client] >= self.quota[client] {
+            return Vec::new();
+        }
+        vec![self.issue(client, t_us)]
+    }
+
+    fn is_open_loop(&self) -> bool {
+        false
+    }
+}
+
+/// A replayable arrival trace: the open-loop capture of any workload —
+/// generated, recorded from a closed-loop run
+/// ([`crate::coordinator::Fleet::run_source_traced`]), or loaded from a
+/// JSON-lines file. Replaying a trace reproduces the recorded run
+/// bit-exactly (the engines are deterministic given the arrival stream).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSource {
+    requests: Vec<Request>,
+}
+
+impl TraceSource {
+    /// Wrap an arrival-ordered request list as a replayable source.
+    pub fn from_requests(requests: Vec<Request>) -> TraceSource {
+        TraceSource { requests }
+    }
+
+    /// The trace's requests, in file/replay order.
+    pub fn requests(&self) -> &[Request] {
+        &self.requests
+    }
+
+    /// Consume the source, yielding its requests.
+    pub fn into_requests(self) -> Vec<Request> {
+        self.requests
+    }
+
+    /// Serialize requests as JSON lines, one
+    /// `{"arrival_us":..,"deadline_us":..,"input_digest":"..","net":..}`
+    /// object per request (`deadline_us` is `null` when absent;
+    /// `input_digest` is a decimal string because u64 digests exceed the
+    /// exact integer range of JSON numbers). Ids are not stored: a replay
+    /// renumbers requests 0..n in line order, which matches any
+    /// arrival-ordered generator.
+    pub fn to_jsonl(requests: &[Request]) -> String {
+        let mut out = String::new();
+        for r in requests {
+            let mut obj = BTreeMap::new();
+            obj.insert("arrival_us".to_string(), Json::F64(r.arrival_us));
+            obj.insert(
+                "deadline_us".to_string(),
+                match r.deadline_us {
+                    Some(dl) => Json::F64(dl),
+                    None => Json::Null,
+                },
+            );
+            obj.insert("input_digest".to_string(), Json::Str(r.input_digest.to_string()));
+            obj.insert("net".to_string(), Json::I64(r.net as i64));
+            out.push_str(&Json::Obj(obj).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSON-lines trace (empty lines are skipped). Round-trips
+    /// [`TraceSource::to_jsonl`] exactly: f64 fields use shortest-exact
+    /// formatting and digests are decimal strings.
+    pub fn parse_jsonl(text: &str) -> Result<TraceSource, String> {
+        let mut requests: Vec<Request> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let at = |what: &str| format!("trace line {}: {what}", lineno + 1);
+            let j = Json::parse(line).map_err(|e| at(&e))?;
+            let arrival_us =
+                j.get("arrival_us").as_f64().ok_or_else(|| at("missing `arrival_us`"))?;
+            let deadline_us = match j.get("deadline_us") {
+                Json::Null => None,
+                d => Some(d.as_f64().ok_or_else(|| at("bad `deadline_us`"))?),
+            };
+            let net = u32::try_from(j.req_i64("net").map_err(|e| at(&e))?)
+                .map_err(|_| at("`net` out of range"))?;
+            let input_digest = match j.get("input_digest") {
+                Json::Str(s) => s.parse::<u64>().map_err(|_| at("bad `input_digest`"))?,
+                other => other
+                    .as_i64()
+                    .and_then(|v| u64::try_from(v).ok())
+                    .ok_or_else(|| at("bad `input_digest`"))?,
+            };
+            requests.push(Request {
+                id: requests.len() as u64,
+                arrival_us,
+                deadline_us,
+                net,
+                input_digest,
+            });
+        }
+        Ok(TraceSource { requests })
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    /// The whole trace, in recorded order (the source stays reusable).
+    fn initial(&mut self) -> Vec<Request> {
+        self.requests.clone()
+    }
+}
+
 /// Merge several per-tenant request streams into one arrival-ordered
 /// stream with globally unique ids (each request keeps its deadline,
 /// network tag and input digest). The sort is stable, so equal arrival
@@ -179,6 +473,100 @@ mod tests {
         let a = w.generate_for_net(0);
         let b = w.generate_for_net(1);
         assert!(a.iter().zip(&b).all(|(x, y)| x.input_digest != y.input_digest));
+    }
+
+    #[test]
+    fn prop_trace_jsonl_roundtrip_is_exact() {
+        // any request list — fractional times, absent deadlines, full-range
+        // u64 digests — must survive dump + parse bit-exactly (ids are
+        // assigned 0..n, so generate them that way)
+        use crate::util::check::check;
+        check("trace-jsonl-roundtrip", 60, |rng, _| {
+            let n = 1 + rng.below(40) as usize;
+            let reqs: Vec<Request> = (0..n as u64)
+                .map(|id| Request {
+                    id,
+                    arrival_us: rng.unit_f64() * 1e7,
+                    deadline_us: if rng.chance(0.5) { Some(rng.unit_f64() * 1e6) } else { None },
+                    net: rng.below(5),
+                    input_digest: rng.next_u64(),
+                })
+                .collect();
+            let text = TraceSource::to_jsonl(&reqs);
+            let back = TraceSource::parse_jsonl(&text).map_err(|e| format!("parse failed: {e}"))?;
+            if back.requests() != &reqs[..] {
+                return Err("trace round-trip diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_parse_rejects_malformed_lines() {
+        assert!(TraceSource::parse_jsonl("{\"net\":0}").is_err());
+        assert!(TraceSource::parse_jsonl("not json").is_err());
+        assert!(TraceSource::parse_jsonl(
+            "{\"arrival_us\":1.0,\"deadline_us\":null,\"input_digest\":\"x\",\"net\":0}"
+        )
+        .is_err());
+        // integer digests (hand-written traces) are accepted too
+        let t = TraceSource::parse_jsonl(
+            "{\"arrival_us\":1.5,\"deadline_us\":200.0,\"input_digest\":42,\"net\":3}\n\n",
+        )
+        .unwrap();
+        assert_eq!(t.requests().len(), 1);
+        assert_eq!(t.requests()[0].input_digest, 42);
+        assert_eq!(t.requests()[0].net, 3);
+        assert_eq!(t.requests()[0].deadline_us, Some(200.0));
+    }
+
+    #[test]
+    fn closed_loop_is_deterministic_and_respects_budget() {
+        let mk = || ClosedLoopSource::new(4, 3_000.0, 10, 99).with_nets(2).with_deadline(5e4);
+        let (mut a, mut b) = (mk(), mk());
+        let ia = a.initial();
+        assert_eq!(ia, b.initial(), "same seed must give identical initial arrivals");
+        assert_eq!(ia.len(), 4, "one outstanding request per client");
+        assert!(!a.is_open_loop());
+        // each client's first request carries its pinned network and a
+        // globally unique composed id
+        for (c, r) in ia.iter().enumerate() {
+            assert_eq!(r.net, c as u32 % 2);
+            assert_eq!(r.id >> 32, c as u64);
+            assert_eq!(r.deadline_us, Some(5e4));
+            assert!(r.arrival_us >= 0.0);
+        }
+        // feedback: a completion unlocks exactly one follow-up arrival,
+        // never earlier than the completion it reacts to
+        let next = a.on_done(ia[1].id, 7_000.0);
+        assert_eq!(next.len(), 1);
+        assert!(next[0].arrival_us >= 7_000.0);
+        assert_eq!(next[0].id >> 32, 1);
+        // unknown ids (e.g. replayed feedback) are ignored
+        assert!(a.on_done(0xDEAD_BEEF_0000_0000, 1.0).is_empty());
+        // the budget caps total issues
+        let mut issued = a.issued();
+        let mut pending: Vec<u64> = ia.iter().map(|r| r.id).collect();
+        pending.push(next[0].id);
+        let mut t = 10_000.0;
+        while let Some(id) = pending.pop() {
+            for r in a.on_done(id, t) {
+                pending.push(r.id);
+                issued += 1;
+            }
+            t += 1_000.0;
+        }
+        assert_eq!(a.issued(), 10, "budget must be fully issued and then stop");
+        let _ = issued;
+    }
+
+    #[test]
+    fn workload_is_an_open_loop_source() {
+        let mut w = Workload { rate_per_s: 300.0, deadline_us: None, n_requests: 25, seed: 4 };
+        let via_source = w.initial();
+        assert_eq!(via_source, w.generate());
+        assert!(w.is_open_loop());
+        assert!(w.on_done(0, 1.0).is_empty());
     }
 
     #[test]

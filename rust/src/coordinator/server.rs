@@ -8,7 +8,9 @@
 //! The server can memoize results ([`Server::with_cache`]): the runtime is
 //! deterministic, so outputs are cached by [`input_digest`] of the raw
 //! request bytes — the real-path counterpart of the simulated tier's
-//! coordinator cache in [`crate::coordinator::shard`].
+//! coordinator cache in [`crate::coordinator::shard`]. Like that tier's
+//! cache the memo is bounded ([`Server::with_cache_capacity`]): beyond the
+//! entry capacity the least-recently-used output is evicted.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -58,8 +60,13 @@ pub struct Server<'a> {
     queue: VecDeque<(u64, Vec<u8>, Instant)>,
     /// Queue bound; [`Server::submit`] returns `false` beyond it.
     pub max_queue: usize,
-    /// Result cache keyed by input digest (`None` = caching disabled).
-    cache: Option<HashMap<u64, ExecOutput>>,
+    /// Result cache keyed by input digest, carrying an LRU recency tick
+    /// per entry (`None` = caching disabled).
+    cache: Option<HashMap<u64, (ExecOutput, u64)>>,
+    /// Max cached outputs before LRU eviction (`usize::MAX` = unbounded).
+    cache_capacity: usize,
+    /// Monotonic recency counter for the cache.
+    lru_tick: u64,
 }
 
 impl<'a> Server<'a> {
@@ -67,12 +74,20 @@ impl<'a> Server<'a> {
     /// caching).
     pub fn new(rt: &'a mut Runtime, artifact: &'a Artifact, max_queue: usize) -> Result<Server<'a>> {
         rt.load(artifact)?;
-        Ok(Server { rt, artifact, queue: VecDeque::new(), max_queue, cache: None })
+        Ok(Server {
+            rt,
+            artifact,
+            queue: VecDeque::new(),
+            max_queue,
+            cache: None,
+            cache_capacity: usize::MAX,
+            lru_tick: 0,
+        })
     }
 
-    /// Like [`Server::new`], with result memoization enabled: repeated
-    /// input payloads are answered from the cache without touching the
-    /// runtime (sound because the runtime is deterministic).
+    /// Like [`Server::new`], with unbounded result memoization enabled:
+    /// repeated input payloads are answered from the cache without
+    /// touching the runtime (sound because the runtime is deterministic).
     pub fn with_cache(
         rt: &'a mut Runtime,
         artifact: &'a Artifact,
@@ -81,6 +96,25 @@ impl<'a> Server<'a> {
         let mut s = Server::new(rt, artifact, max_queue)?;
         s.cache = Some(HashMap::new());
         Ok(s)
+    }
+
+    /// Like [`Server::with_cache`], bounding the memo to `capacity`
+    /// outputs: inserting beyond it evicts the least recently used entry
+    /// (every hit refreshes its entry's recency).
+    pub fn with_cache_capacity(
+        rt: &'a mut Runtime,
+        artifact: &'a Artifact,
+        max_queue: usize,
+        capacity: usize,
+    ) -> Result<Server<'a>> {
+        let mut s = Server::with_cache(rt, artifact, max_queue)?;
+        s.cache_capacity = capacity.max(1);
+        Ok(s)
+    }
+
+    /// Outputs currently memoized.
+    pub fn cache_entries(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.len())
     }
 
     /// Enqueue a request; returns false when the queue is full
@@ -105,8 +139,13 @@ impl<'a> Server<'a> {
         while let Some((id, input, enq)) = self.queue.pop_front() {
             let queue_us = enq.elapsed().as_secs_f64() * 1e6;
             let digest = self.cache.as_ref().map(|_| input_digest(&input));
-            let hit: Option<ExecOutput> = match (digest, self.cache.as_ref()) {
-                (Some(d), Some(cache)) => cache.get(&d).cloned(),
+            let tick = self.lru_tick;
+            self.lru_tick += 1;
+            let hit: Option<ExecOutput> = match (digest, self.cache.as_mut()) {
+                (Some(d), Some(cache)) => cache.get_mut(&d).map(|(output, last_used)| {
+                    *last_used = tick; // LRU touch
+                    output.clone()
+                }),
                 _ => None,
             };
             let t0 = Instant::now();
@@ -114,8 +153,18 @@ impl<'a> Server<'a> {
                 Some(output) => (output, true),
                 None => {
                     let output = self.rt.execute(self.artifact, &input)?;
+                    let capacity = self.cache_capacity;
                     if let (Some(d), Some(cache)) = (digest, self.cache.as_mut()) {
-                        cache.insert(d, output.clone());
+                        cache.insert(d, (output.clone(), tick));
+                        if cache.len() > capacity {
+                            let victim = cache
+                                .iter()
+                                .min_by_key(|(_, (_, last_used))| *last_used)
+                                .map(|(k, _)| *k);
+                            if let Some(k) = victim {
+                                cache.remove(&k);
+                            }
+                        }
                     }
                     (output, false)
                 }

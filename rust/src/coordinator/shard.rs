@@ -41,7 +41,13 @@
 //! a device: no queue slot, no activation, no residency change, no active
 //! energy. Entries persist across [`ShardedFleet::run`] calls (serving
 //! state resets; the cache is the long-lived tier), so a replayed workload
-//! hits at 100%.
+//! hits at 100% when unbounded.
+//!
+//! The cache is *bounded*: [`ShardConfig::cache_capacity`] caps resolved
+//! entries with LRU eviction, and [`ShardConfig::cache_quota_per_net`]
+//! caps each tenant network separately (a tenant over quota evicts its own
+//! LRU entry, never a neighbour's). Pending (in-flight) entries are never
+//! evicted, so single-flight joins always find their owner.
 //!
 //! # Report
 //!
@@ -56,8 +62,8 @@ use std::collections::HashMap;
 
 use crate::util::stats::percentile;
 
-use super::fleet::{Device, Fleet, FleetConfig, FleetReport, Policy};
-use super::request::{mix64, Request};
+use super::fleet::{Device, Fleet, FleetConfig, FleetReport, Policy, QueueDiscipline};
+use super::request::{mix64, Request, WorkloadSource};
 
 /// Virtual nodes per shard on the consistent-hash ring: enough that the
 /// keyspace split stays within a few percent of uniform for K <= 64.
@@ -82,17 +88,30 @@ pub struct ShardConfig {
     pub tenancy_aware_routing: bool,
     /// Enable the coordinator-tier result cache.
     pub cache: bool,
+    /// Maximum *resolved* entries the result cache may hold; beyond it the
+    /// least-recently-used resolved entry is evicted. In-flight (pending)
+    /// entries are exempt — eviction never breaks single-flight join
+    /// semantics. `usize::MAX` leaves the cache unbounded.
+    pub cache_capacity: usize,
+    /// Per-network ceiling on resolved cache entries (tenant quota): a
+    /// network promoting an entry beyond its quota evicts its *own*
+    /// least-recently-used entry, so one repeat-heavy tenant cannot evict
+    /// the whole tier's working set. `usize::MAX` disables quotas.
+    pub cache_quota_per_net: usize,
 }
 
 impl Default for ShardConfig {
-    /// One shard, free router, hash-spread routing, no cache — the
-    /// configuration that reproduces a bare [`Fleet`] bit-exactly.
+    /// One shard, free router, hash-spread routing, no cache (unbounded
+    /// when enabled) — the configuration that reproduces a bare [`Fleet`]
+    /// bit-exactly.
     fn default() -> ShardConfig {
         ShardConfig {
             shards: 1,
             router_service_us: 0.0,
             tenancy_aware_routing: false,
             cache: false,
+            cache_capacity: usize::MAX,
+            cache_quota_per_net: usize::MAX,
         }
     }
 }
@@ -138,6 +157,10 @@ pub struct CacheStats {
     pub energy_saved_uj: f64,
     /// Resolved entries resident in the cache after the run.
     pub entries: usize,
+    /// Resolved entries evicted during the run by the LRU capacity bound
+    /// or a per-network quota ([`ShardConfig::cache_capacity`],
+    /// [`ShardConfig::cache_quota_per_net`]).
+    pub evictions: u64,
 }
 
 /// Aggregated view of one workload served by the sharded tier.
@@ -176,6 +199,9 @@ pub struct ShardedReport {
     pub net_switches: u64,
     /// Active energy those switches cost (included in `active_energy_uj`).
     pub switch_energy_uj: f64,
+    /// Work-stealing transfers across all shards' devices
+    /// ([`FleetConfig::steal`]).
+    pub steals: u64,
     /// Utilization skew across shards: max minus min of per-shard mean
     /// device utilization (0 = perfectly even).
     pub utilization_skew: f64,
@@ -213,10 +239,24 @@ impl ShardedReport {
 /// State of one result-cache key.
 enum CacheEntry {
     /// First miss is in flight; duplicates join it. Carries the owner id.
+    /// Never evicted — single-flight join semantics survive any bound.
     Pending(u64),
     /// The owner completed in an earlier run (or earlier in this run and
     /// was promoted at reconciliation); hits complete immediately.
+    /// `last_used` is the LRU recency stamp (bumped on every hit and at
+    /// promotion).
+    Resolved {
+        /// Monotonic recency tick of the last hit or promotion.
+        last_used: u64,
+    },
+}
+
+/// Cache lookup outcome (decouples the borrow of the cache map from the
+/// join bookkeeping below).
+enum Lookup {
     Resolved,
+    Pending(u64),
+    Miss,
 }
 
 /// The sharded serving tier: a consistent-hash front router over K
@@ -228,6 +268,8 @@ pub struct ShardedFleet {
     ring: Vec<(u64, usize)>,
     /// Result cache, persistent across runs. Keyed by `(net, digest)`.
     cache: HashMap<(u32, u64), CacheEntry>,
+    /// Monotonic recency counter for the cache's LRU bookkeeping.
+    lru_tick: u64,
 }
 
 impl ShardedFleet {
@@ -267,7 +309,14 @@ impl ShardedFleet {
             })
             .collect();
         ring.sort_unstable();
-        ShardedFleet { shards, config, ring, cache: HashMap::new() }
+        ShardedFleet { shards, config, ring, cache: HashMap::new(), lru_tick: 0 }
+    }
+
+    /// Override one shard's queue discipline (the rest keep the tier-wide
+    /// [`FleetConfig::discipline`]) — per-shard scheduling experiments on
+    /// one tier.
+    pub fn set_shard_discipline(&mut self, shard: usize, discipline: QueueDiscipline) {
+        self.shards[shard].config.discipline = discipline;
     }
 
     /// Number of shards in the tier.
@@ -288,7 +337,64 @@ impl ShardedFleet {
 
     /// Resolved entries currently resident in the cache.
     pub fn cache_entries(&self) -> usize {
-        self.cache.values().filter(|e| matches!(e, CacheEntry::Resolved)).count()
+        self.cache.values().filter(|e| matches!(e, CacheEntry::Resolved { .. })).count()
+    }
+
+    /// Resolved entries currently resident for one network (quota
+    /// accounting view).
+    pub fn cache_entries_for_net(&self, net: u32) -> usize {
+        self.cache
+            .iter()
+            .filter(|((n, _), e)| *n == net && matches!(e, CacheEntry::Resolved { .. }))
+            .count()
+    }
+
+    /// Evict the least-recently-used resolved entry (of `net`, or of any
+    /// network when `None`). Pending entries are never candidates.
+    /// Returns whether an entry was evicted.
+    fn evict_lru(&mut self, net: Option<u32>) -> bool {
+        let victim = self
+            .cache
+            .iter()
+            .filter_map(|(key, e)| match e {
+                CacheEntry::Resolved { last_used } if net.is_none() || net == Some(key.0) => {
+                    Some((*last_used, *key))
+                }
+                _ => None,
+            })
+            .min_by_key(|&(last_used, _)| last_used)
+            .map(|(_, key)| key);
+        match victim {
+            Some(key) => {
+                self.cache.remove(&key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Enforce the per-net quota then the global capacity after promoting
+    /// a resolved entry for `net`; returns how many entries were evicted.
+    /// No-op (and no scan) when both bounds are unbounded.
+    fn enforce_cache_bounds(&mut self, net: u32) -> u64 {
+        let mut evicted = 0u64;
+        if self.config.cache_quota_per_net != usize::MAX {
+            // count once, decrement per eviction: one map scan per call
+            // plus one victim scan per actual eviction
+            let mut count = self.cache_entries_for_net(net);
+            while count > self.config.cache_quota_per_net && self.evict_lru(Some(net)) {
+                count -= 1;
+                evicted += 1;
+            }
+        }
+        if self.config.cache_capacity != usize::MAX {
+            let mut count = self.cache_entries();
+            while count > self.config.cache_capacity && self.evict_lru(None) {
+                count -= 1;
+                evicted += 1;
+            }
+        }
+        evicted
     }
 
     /// Shard a request routes to (exposed for tests and tooling): the
@@ -317,6 +423,29 @@ impl ShardedFleet {
     ///
     /// [`merge_streams`]: crate::coordinator::merge_streams
     pub fn run(&mut self, requests: &[Request]) -> ShardedReport {
+        self.run_requests(requests)
+    }
+
+    /// Serve an *open-loop* [`WorkloadSource`] (a Poisson generator or a
+    /// replayed trace) through the tier.
+    ///
+    /// Closed-loop sources are rejected: the tier's two-phase structure
+    /// (route everything, then run each shard's event loop) cannot feed
+    /// completions back into arrival generation. Record the closed-loop
+    /// run against a single [`Fleet`] with
+    /// [`Fleet::run_source_traced`](super::Fleet::run_source_traced), dump
+    /// the trace, and replay it here.
+    pub fn run_source(&mut self, source: &mut dyn WorkloadSource) -> ShardedReport {
+        assert!(
+            source.is_open_loop(),
+            "the sharded tier replays open-loop sources only; record a closed-loop run \
+             against a single Fleet (run_source_traced) and replay its trace here"
+        );
+        let requests = source.initial();
+        self.run_requests(&requests)
+    }
+
+    fn run_requests(&mut self, requests: &[Request]) -> ShardedReport {
         let k = self.shards.len();
         let mut sub: Vec<Vec<Request>> = vec![Vec::new(); k];
         let mut router_free = vec![0.0f64; k];
@@ -353,16 +482,26 @@ impl ShardedFleet {
                 );
                 lookups += 1;
                 let key = (req.net, req.input_digest);
-                match self.cache.get(&key) {
-                    Some(CacheEntry::Resolved) => {
+                let tick = self.lru_tick;
+                let lookup = match self.cache.get_mut(&key) {
+                    Some(CacheEntry::Resolved { last_used }) => {
+                        *last_used = tick; // LRU touch
+                        Lookup::Resolved
+                    }
+                    Some(CacheEntry::Pending(owner)) => Lookup::Pending(*owner),
+                    None => Lookup::Miss,
+                };
+                self.lru_tick += 1;
+                match lookup {
+                    Lookup::Resolved => {
                         joiners.push((req.clone(), exit, s, None));
                         continue;
                     }
-                    Some(CacheEntry::Pending(owner)) => {
-                        joiners.push((req.clone(), exit, s, Some(*owner)));
+                    Lookup::Pending(owner) => {
+                        joiners.push((req.clone(), exit, s, Some(owner)));
                         continue;
                     }
-                    None => {
+                    Lookup::Miss => {
                         self.cache.insert(key, CacheEntry::Pending(req.id));
                         pending_keys.push((key, req.id));
                     }
@@ -383,9 +522,13 @@ impl ShardedFleet {
                 owner_finish.insert(c.id, c.finish_us);
             }
         }
+        let mut evictions = 0u64;
         for (key, owner) in pending_keys {
             if owner_finish.contains_key(&owner) {
-                self.cache.insert(key, CacheEntry::Resolved);
+                let tick = self.lru_tick;
+                self.lru_tick += 1;
+                self.cache.insert(key, CacheEntry::Resolved { last_used: tick });
+                evictions += self.enforce_cache_bounds(key.0);
             } else {
                 self.cache.remove(&key);
             }
@@ -440,6 +583,7 @@ impl ShardedFleet {
                 hit_rate: 0.0,
                 energy_saved_uj,
                 entries: self.cache_entries(),
+                evictions,
             },
             router_delay_sum,
         )
@@ -517,6 +661,7 @@ impl ShardedFleet {
             total_energy_uj: active_energy_uj + idle_energy_uj,
             net_switches: reports.iter().map(|r| r.net_switches).sum(),
             switch_energy_uj: reports.iter().map(|r| r.switch_energy_uj).sum(),
+            steals: reports.iter().map(|r| r.steals).sum(),
             utilization_skew: util_means.iter().fold(0.0f64, |a, &u| a.max(u))
                 - util_means.iter().fold(f64::INFINITY, |a, &u| a.min(u)),
             queue_depth_p50: p50,
@@ -571,6 +716,8 @@ mod tests {
 
     #[test]
     fn prop_sharded_tier_conserves_requests_for_all_k() {
+        // conservation across the whole scheduling matrix: shard count x
+        // discipline x stealing x bounded caches (capacity + quota)
         check("shard-conservation", 24, |rng, _| {
             let k = *rng.pick(&[1usize, 2, 4, 8]);
             let config = ShardConfig {
@@ -578,12 +725,16 @@ mod tests {
                 router_service_us: if rng.chance(0.5) { 120.0 } else { 0.0 },
                 tenancy_aware_routing: rng.chance(0.5),
                 cache: rng.chance(0.5),
+                cache_capacity: *rng.pick(&[1usize, 8, usize::MAX]),
+                cache_quota_per_net: *rng.pick(&[2usize, usize::MAX]),
             };
             let fleet_config = FleetConfig {
                 queue_bound: 8,
                 batch_max: 4,
                 wakeup_cycles: 10_000,
                 net_switch_cycles: 25_000,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
             };
             let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
             let reqs = tenant_workload(3, 600.0, 120, 0.4, rng.next_u64());
@@ -598,15 +749,14 @@ mod tests {
             let k = *rng.pick(&[1usize, 2, 4, 8]);
             let config = ShardConfig {
                 shards: k,
-                router_service_us: 0.0,
                 tenancy_aware_routing: rng.chance(0.5),
-                cache: false,
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: 32,
                 batch_max: 6,
                 wakeup_cycles: 40_000,
-                net_switch_cycles: 0,
+                ..FleetConfig::default()
             };
             let mut t = tier(8, k, Policy::LeastLoaded, fleet_config, config);
             let reqs = tenant_workload(4, 900.0, 100, 0.0, rng.next_u64());
@@ -648,6 +798,8 @@ mod tests {
                 batch_max: *rng.pick(&[1usize, 4]),
                 wakeup_cycles: *rng.pick(&[0u64, 30_000]),
                 net_switch_cycles: *rng.pick(&[0u64, 50_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
             };
             let reqs = tenant_workload(2, 700.0, 150, 0.3, rng.next_u64());
             let mut tier =
@@ -693,9 +845,9 @@ mod tests {
         for tenancy in [false, true] {
             let config = ShardConfig {
                 shards: 8,
-                router_service_us: 0.0,
                 tenancy_aware_routing: tenancy,
                 cache: true,
+                ..ShardConfig::default()
             };
             let t = tier(8, 8, Policy::LeastLoaded, FleetConfig::default(), config);
             let mut rng = Rng::new(11);
@@ -729,12 +881,7 @@ mod tests {
 
     #[test]
     fn ring_spreads_distinct_digests_across_shards() {
-        let config = ShardConfig {
-            shards: 4,
-            router_service_us: 0.0,
-            tenancy_aware_routing: false,
-            cache: false,
-        };
+        let config = ShardConfig { shards: 4, ..ShardConfig::default() };
         let t = tier(8, 4, Policy::LeastLoaded, FleetConfig::default(), config);
         let mut counts = [0usize; 4];
         for d in 0..4000u64 {
@@ -757,17 +904,12 @@ mod tests {
 
     #[test]
     fn cache_hits_skip_devices_and_save_energy() {
-        let config = ShardConfig {
-            shards: 2,
-            router_service_us: 0.0,
-            tenancy_aware_routing: false,
-            cache: true,
-        };
+        let config = ShardConfig { shards: 2, cache: true, ..ShardConfig::default() };
         let fleet_config = FleetConfig {
             queue_bound: 64,
             batch_max: 4,
             wakeup_cycles: 10_000,
-            net_switch_cycles: 0,
+            ..FleetConfig::default()
         };
         let reqs = tenant_workload(2, 400.0, 300, 0.6, 77);
         let mut cached = tier(4, 2, Policy::LeastLoaded, fleet_config, config);
@@ -807,12 +949,14 @@ mod tests {
             router_service_us: 50.0,
             tenancy_aware_routing: true,
             cache: true,
+            ..ShardConfig::default()
         };
         let fleet_config = FleetConfig {
             queue_bound: usize::MAX, // admit everything: all keys resolve
             batch_max: 4,
             wakeup_cycles: 10_000,
             net_switch_cycles: 50_000,
+            ..FleetConfig::default()
         };
         let mut t = tier(4, 2, Policy::TenancyAware, fleet_config, config);
         let reqs = tenant_workload(3, 300.0, 150, 0.3, 13);
@@ -847,18 +991,8 @@ mod tests {
         // a burst fills the single 1-deep queue before the first request
         // for input 42 arrives: that owner is shed, so its joiners must
         // shed with it and the key must NOT resolve into the cache
-        let config = ShardConfig {
-            shards: 1,
-            router_service_us: 0.0,
-            tenancy_aware_routing: false,
-            cache: true,
-        };
-        let fleet_config = FleetConfig {
-            queue_bound: 1,
-            batch_max: 1,
-            wakeup_cycles: 0,
-            net_switch_cycles: 0,
-        };
+        let config = ShardConfig { cache: true, ..ShardConfig::default() };
+        let fleet_config = FleetConfig { queue_bound: 1, ..FleetConfig::default() };
         let req = |id: u64, digest: u64| Request {
             id,
             arrival_us: id as f64, // 1 us apart: far faster than service
@@ -916,12 +1050,7 @@ mod tests {
                 .collect()
         };
         let run = |router_service_us: f64| {
-            let config = ShardConfig {
-                shards: 1,
-                router_service_us,
-                tenancy_aware_routing: false,
-                cache: false,
-            };
+            let config = ShardConfig { router_service_us, ..ShardConfig::default() };
             // ~1.1 ms/inference: trivially within a 15 ms deadline
             let mut t = ShardedFleet::new(
                 gap8_mixed_devices(1, 100_000),
@@ -952,7 +1081,7 @@ mod tests {
             queue_bound: 32,
             batch_max: 4,
             wakeup_cycles: 10_000,
-            net_switch_cycles: 0,
+            ..FleetConfig::default()
         };
         let capacity_rps: f64 = gap8_mixed_devices(8, 300_000)
             .iter()
@@ -960,12 +1089,7 @@ mod tests {
             .sum();
         let router_service_us = 1e6 / (0.7 * capacity_rps);
         let run = |k: usize| {
-            let config = ShardConfig {
-                shards: k,
-                router_service_us,
-                tenancy_aware_routing: false,
-                cache: false,
-            };
+            let config = ShardConfig { shards: k, router_service_us, ..ShardConfig::default() };
             let reqs = Workload {
                 rate_per_s: 4.0 * capacity_rps,
                 deadline_us: None,
@@ -988,5 +1112,127 @@ mod tests {
         // the single coordinator's router was the bottleneck: its arrivals
         // waited far longer at the front tier
         assert!(sharded.mean_router_delay_us < single.mean_router_delay_us);
+    }
+
+    #[test]
+    fn lru_capacity_bounds_entries_and_evicted_keys_miss_again() {
+        let config = ShardConfig {
+            cache: true,
+            cache_capacity: 4,
+            ..ShardConfig::default()
+        };
+        let mut t = tier(2, 1, Policy::LeastLoaded, FleetConfig::default(), config);
+        // 40 distinct inputs, far apart (no queueing): all resolve, but
+        // only 4 — the most recently used — may stay resident
+        let reqs: Vec<Request> = (0..40u64)
+            .map(|id| Request {
+                id,
+                arrival_us: id as f64 * 50_000.0,
+                deadline_us: None,
+                net: 0,
+                input_digest: 1000 + id,
+            })
+            .collect();
+        let first = t.run(&reqs);
+        first.check_conservation(reqs.len()).unwrap();
+        assert_eq!(first.cache.hits, 0);
+        assert_eq!(t.cache_entries(), 4, "capacity must bound resolved entries");
+        assert_eq!(first.cache.entries, 4);
+        assert_eq!(first.cache.evictions, 36, "36 of 40 promotions must evict");
+        // the LRU survivors are the last four inputs; an evicted key must
+        // miss (touch a device), a resident one must hit
+        let probe: Vec<Request> = [1000u64, 1039]
+            .iter()
+            .enumerate()
+            .map(|(i, &digest)| Request {
+                id: i as u64,
+                arrival_us: i as f64 * 50_000.0,
+                deadline_us: None,
+                net: 0,
+                input_digest: digest,
+            })
+            .collect();
+        let second = t.run(&probe);
+        second.check_conservation(2).unwrap();
+        assert_eq!(second.cache.hits, 1, "evicted key must miss, resident key must hit");
+        assert_eq!(second.shards[0].completions.len(), 1);
+    }
+
+    #[test]
+    fn per_net_quota_caps_each_tenant_separately() {
+        let config = ShardConfig {
+            cache: true,
+            cache_quota_per_net: 3,
+            tenancy_aware_routing: true,
+            ..ShardConfig::default()
+        };
+        let mut t = tier(2, 1, Policy::TenancyAware, FleetConfig::default(), config);
+        // two tenants, 20 distinct inputs each, no queueing pressure
+        let reqs: Vec<Request> = (0..40u64)
+            .map(|id| Request {
+                id,
+                arrival_us: id as f64 * 50_000.0,
+                deadline_us: None,
+                net: (id % 2) as u32,
+                input_digest: id,
+            })
+            .collect();
+        let report = t.run(&reqs);
+        report.check_conservation(reqs.len()).unwrap();
+        assert_eq!(t.cache_entries_for_net(0), 3, "net 0 must sit at its quota");
+        assert_eq!(t.cache_entries_for_net(1), 3, "net 1 must sit at its quota");
+        assert_eq!(t.cache_entries(), 6);
+        assert_eq!(report.cache.evictions, 34);
+    }
+
+    #[test]
+    fn steal_counters_aggregate_into_the_sharded_report() {
+        // one shard, two devices, pinned lopsided tenants: the fleet-level
+        // steals must surface in the tier report
+        let fleet_config = FleetConfig {
+            net_switch_cycles: 30_000,
+            steal: true,
+            ..FleetConfig::default()
+        };
+        let config = ShardConfig { tenancy_aware_routing: true, ..ShardConfig::default() };
+        let streams = [
+            Workload { rate_per_s: 500.0, deadline_us: None, n_requests: 200, seed: 2020 }
+                .generate_for_net(0),
+            Workload { rate_per_s: 30.0, deadline_us: None, n_requests: 15, seed: 2021 }
+                .generate_for_net(1),
+        ];
+        let reqs = merge_streams(&streams);
+        let mut t = ShardedFleet::new(
+            vec![
+                Device::new("d0".into(), crate::energy::GAP8_LP, 300_000),
+                Device::new("d1".into(), crate::energy::GAP8_LP, 300_000),
+            ],
+            Policy::TenancyAware,
+            fleet_config,
+            config,
+        );
+        let report = t.run(&reqs);
+        report.check_conservation(reqs.len()).unwrap();
+        assert!(report.steals > 0, "expected steals on a pinned imbalanced workload");
+        assert_eq!(report.steals, report.shards.iter().map(|r| r.steals).sum::<u64>());
+    }
+
+    #[test]
+    fn tier_serves_open_loop_sources_and_rejects_closed_loop() {
+        let mut t = tier(2, 2, Policy::LeastLoaded, FleetConfig::default(), ShardConfig {
+            shards: 2,
+            ..ShardConfig::default()
+        });
+        let mut w = Workload { rate_per_s: 300.0, deadline_us: None, n_requests: 80, seed: 5 };
+        let via_source = t.run_source(&mut w);
+        via_source.check_conservation(80).unwrap();
+        let direct = t.run(&w.generate());
+        assert_eq!(via_source.total_completed, direct.total_completed);
+        assert_eq!(via_source.throughput_rps, direct.throughput_rps);
+        let closed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut src = crate::coordinator::ClosedLoopSource::new(2, 1000.0, 10, 1);
+            t.run_source(&mut src)
+        }));
+        assert!(closed.is_err(), "closed-loop sources must be rejected by the tier");
     }
 }

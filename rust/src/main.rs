@@ -6,8 +6,9 @@
 
 use pulpnn_mp::bench::{ablate, figures};
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, Fleet, FleetConfig, Policy, Request, ShardConfig,
-    ShardedFleet, Workload, DEFAULT_WAKEUP_CYCLES,
+    gap8_mixed_devices, merge_streams, ClosedLoopSource, Fleet, FleetConfig, Policy,
+    QueueDiscipline, Request, ShardConfig, ShardedFleet, TraceSource, Workload,
+    DEFAULT_WAKEUP_CYCLES,
 };
 use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
@@ -43,7 +44,11 @@ networks & runtime:
   serve       edge-fleet serving simulation (--devices N --rate RPS
               --queue-bound N --batch K --wakeup-cycles C ...); scale it
               out with --shards K --tenants T --repeat-ratio F --cache
-              --router-us US --switch-cycles C --policy tenancy
+              --cache-capacity N --cache-quota N --router-us US
+              --switch-cycles C --policy tenancy; schedule it with
+              --discipline fifo|edf --steal; drive it closed-loop with
+              --closed-loop CLIENTS --think-us US, or record/replay
+              arrival traces with --trace-out/--trace-in FILE
   emit-spec   print the demo network spec JSON (shared rust/python format)
 
 common options:
@@ -332,6 +337,8 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     let tenants = args.opt_usize("tenants", 1).max(1);
     let repeat_ratio = args.opt_f64("repeat-ratio", 0.0);
     let cache = args.flag("cache");
+    let cache_capacity = args.opt_usize("cache-capacity", 0); // 0 = unbounded
+    let cache_quota = args.opt_usize("cache-quota", 0); // 0 = unbounded
     let router_us = args.opt_f64("router-us", 0.0);
     let switch_cycles =
         args.opt_u64("switch-cycles", pulpnn_mp::energy::DEFAULT_NET_SWITCH_CYCLES);
@@ -341,6 +348,21 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         "tenancy" => Policy::TenancyAware,
         _ => Policy::EnergyAware,
     };
+    // scheduling-stack knobs
+    let discipline = match args.opt("discipline", "fifo").as_str() {
+        "edf" => QueueDiscipline::Edf,
+        "fifo" => QueueDiscipline::Fifo,
+        other => {
+            eprintln!("error: --discipline expects fifo|edf, got `{other}`");
+            return 2;
+        }
+    };
+    let steal = args.flag("steal");
+    // workload-source knobs
+    let closed_loop = args.opt_usize("closed-loop", 0); // 0 = open loop
+    let think_us = args.opt_f64("think-us", 5_000.0);
+    let trace_in = args.opt_maybe("trace-in");
+    let trace_out = args.opt_maybe("trace-out");
     // per-inference cycles from the simulated demo CNN
     let net = demo_cnn().materialize().unwrap();
     let mut rng = Rng::new(seed);
@@ -361,33 +383,105 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         batch_max,
         wakeup_cycles,
         net_switch_cycles: switch_cycles,
+        discipline,
+        steal,
     };
     let deadline_us = if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None };
-    // one arrival stream per tenant network, merged in arrival order
-    let requests: Vec<Request> = merge_streams(
-        &(0..tenants as u32)
-            .map(|t| {
-                Workload {
-                    rate_per_s: rate / tenants as f64,
-                    deadline_us,
-                    n_requests: n / tenants,
-                    seed: seed.wrapping_add(t as u64),
-                }
-                .generate_with_repeats(t, repeat_ratio)
-            })
-            .collect::<Vec<_>>(),
-    );
+    // multi-tenant closed loops run on the single fleet (the client pool
+    // spreads clients across the tenant networks); only genuine tier
+    // features — shards, cache, a priced router — force the sharded path
+    let sharded = shards > 1 || cache || router_us > 0.0 || (tenants > 1 && closed_loop == 0);
+    if closed_loop > 0 && sharded {
+        eprintln!(
+            "error: --closed-loop drives the single-fleet event loop; record its trace \
+             (--trace-out) and replay it (--trace-in) to shard it"
+        );
+        return 2;
+    }
+    if closed_loop > 0 && trace_in.is_some() {
+        eprintln!("error: --closed-loop and --trace-in are mutually exclusive");
+        return 2;
+    }
+    // the arrival stream: closed loops generate their own inside the run;
+    // else a replayed trace file beats generation; else one open-loop
+    // Poisson stream per tenant network, merged in arrival order
+    let requests: Vec<Request> = if closed_loop > 0 {
+        Vec::new()
+    } else if let Some(path) = &trace_in {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error reading trace {path}: {e}");
+                return 1;
+            }
+        };
+        match TraceSource::parse_jsonl(&text) {
+            Ok(src) => {
+                println!("replaying trace {path}: {} requests", src.requests().len());
+                src.into_requests()
+            }
+            Err(e) => {
+                eprintln!("error parsing trace {path}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        merge_streams(
+            &(0..tenants as u32)
+                .map(|t| {
+                    Workload {
+                        rate_per_s: rate / tenants as f64,
+                        deadline_us,
+                        n_requests: n / tenants,
+                        seed: seed.wrapping_add(t as u64),
+                    }
+                    .generate_with_repeats(t, repeat_ratio)
+                })
+                .collect::<Vec<_>>(),
+        )
+    };
+    let dump_trace = |reqs: &[Request]| -> i32 {
+        if let Some(path) = &trace_out {
+            if let Err(e) = std::fs::write(path, TraceSource::to_jsonl(reqs)) {
+                eprintln!("error writing trace {path}: {e}");
+                return 1;
+            }
+            println!("dumped {} arrivals to {path}", reqs.len());
+        }
+        0
+    };
 
-    let sharded = shards > 1 || cache || tenants > 1 || router_us > 0.0;
     if !sharded {
         let mut fleet = Fleet::with_config(nodes, policy, config);
-        let report = fleet.run(&requests);
+        let (report, offered) = if closed_loop > 0 {
+            let mut src = ClosedLoopSource::new(closed_loop, think_us, n, seed)
+                .with_nets(tenants as u32);
+            if let Some(dl) = deadline_us {
+                src = src.with_deadline(dl);
+            }
+            println!(
+                "closed loop: {closed_loop} client(s), {} us mean think time, {n} request budget",
+                f(think_us, 0)
+            );
+            let (report, injected) = fleet.run_source_traced(&mut src);
+            let rc = dump_trace(&injected);
+            if rc != 0 {
+                return rc;
+            }
+            (report, injected.len())
+        } else {
+            let rc = dump_trace(&requests);
+            if rc != 0 {
+                return rc;
+            }
+            (fleet.run(&requests), requests.len())
+        };
         println!(
-            "\nfleet of {devices} ({policy:?}, queue_bound={}, batch_max={batch_max}), \
-             {} of {} requests served at {rate} rps:",
+            "\nfleet of {devices} ({policy:?}, {discipline:?}, queue_bound={}, \
+             batch_max={batch_max}, steal {}), {} of {offered} requests served:",
             if queue_bound == 0 { "inf".to_string() } else { queue_bound.to_string() },
+            if steal { "on" } else { "off" },
             report.completions.len(),
-            requests.len()
         );
         println!("  throughput     : {} rps", f(report.throughput_rps, 1));
         println!("  mean latency   : {} ms", f(report.mean_latency_us / 1e3, 2));
@@ -404,6 +498,7 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
             report.batches,
             f(report.mean_batch_size, 2)
         );
+        println!("  work steals    : {}", report.steals);
         println!("  per-device     : {:?}", report.per_device_served);
         println!(
             "  utilization    : {:?}",
@@ -416,11 +511,17 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         eprintln!("error: need at least one device per shard (--devices {devices} < --shards {shards})");
         return 2;
     }
+    let rc = dump_trace(&requests);
+    if rc != 0 {
+        return rc;
+    }
     let shard_config = ShardConfig {
         shards,
         router_service_us: router_us,
         tenancy_aware_routing: tenants > 1,
         cache,
+        cache_capacity: if cache_capacity == 0 { usize::MAX } else { cache_capacity },
+        cache_quota_per_net: if cache_quota == 0 { usize::MAX } else { cache_quota },
     };
     let mut tier = ShardedFleet::new(nodes, policy, config, shard_config);
     let report = tier.run(&requests);
@@ -430,8 +531,9 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     }
     println!(
         "\nsharded tier: {shards} shard(s) x {} device(s), {tenants} tenant(s), \
-         {policy:?}, cache {}:",
+         {policy:?}, {discipline:?}, steal {}, cache {}:",
         devices / shards,
+        if steal { "on" } else { "off" },
         if cache { "on" } else { "off" }
     );
     println!(
@@ -462,7 +564,12 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
             f(report.cache.hit_rate * 100.0, 1),
             f(report.cache.energy_saved_uj / 1e3, 2)
         );
+        println!(
+            "  cache bounds   : {} resident entries, {} evictions",
+            report.cache.entries, report.cache.evictions
+        );
     }
+    println!("  work steals    : {}", report.steals);
     println!(
         "  shard balance  : routed {:?}, utilization skew {}",
         report.per_shard_routed,

@@ -109,6 +109,137 @@ fn serve_simulates_sharded_multi_tenant_tier_with_cache() {
 }
 
 #[test]
+fn serve_edf_with_stealing() {
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "2",
+        "--requests",
+        "300",
+        "--rate",
+        "500",
+        "--deadline-ms",
+        "20",
+        "--discipline",
+        "edf",
+        "--steal",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("Edf"), "{out}");
+    assert!(out.contains("work steals"), "{out}");
+    assert!(!err.contains("unknown option"), "{err}");
+}
+
+#[test]
+fn serve_rejects_bad_discipline() {
+    let (_, err, ok) = run(&["serve", "--discipline", "bogus"]);
+    assert!(!ok);
+    assert!(err.contains("fifo|edf"), "{err}");
+}
+
+#[test]
+fn serve_closed_loop_reports_client_pool() {
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "2",
+        "--closed-loop",
+        "4",
+        "--think-us",
+        "2000",
+        "--requests",
+        "200",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("closed loop: 4 client(s)"), "{out}");
+    assert!(out.contains("200 requests served"), "{out}");
+}
+
+#[test]
+fn serve_closed_loop_spreads_tenants_on_the_single_fleet() {
+    // --tenants with --closed-loop must NOT trip the sharded-path guard:
+    // the client pool spreads clients across tenant networks itself
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "2",
+        "--closed-loop",
+        "4",
+        "--tenants",
+        "2",
+        "--think-us",
+        "1000",
+        "--requests",
+        "120",
+        "--policy",
+        "tenancy",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("closed loop: 4 client(s)"), "{out}");
+    assert!(out.contains("120 requests served"), "{out}");
+}
+
+#[test]
+fn serve_closed_loop_cannot_shard_directly() {
+    let (_, err, ok) = run(&["serve", "--devices", "4", "--closed-loop", "2", "--shards", "2"]);
+    assert!(!ok);
+    assert!(err.contains("--trace-out"), "{err}");
+}
+
+#[test]
+fn serve_trace_roundtrip_through_files() {
+    let path = std::env::temp_dir().join(format!("pulpnn_trace_{}.jsonl", std::process::id()));
+    let path_s = path.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "2",
+        "--requests",
+        "200",
+        "--rate",
+        "300",
+        "--trace-out",
+        path_s,
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("dumped 200 arrivals"), "{out}");
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    assert_eq!(text.lines().count(), 200);
+    let (out2, err2, ok2) = run(&["serve", "--devices", "2", "--trace-in", path_s]);
+    assert!(ok2, "{err2}");
+    assert!(out2.contains("replaying trace"), "{out2}");
+    assert!(out2.contains("200 requests served"), "{out2}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serve_bounded_cache_reports_evictions() {
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "4",
+        "--shards",
+        "2",
+        "--tenants",
+        "2",
+        "--repeat-ratio",
+        "0.5",
+        "--cache",
+        "--cache-capacity",
+        "8",
+        "--policy",
+        "tenancy",
+        "--requests",
+        "400",
+        "--rate",
+        "200",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("cache bounds"), "{out}");
+    assert!(!err.contains("unknown option"), "{err}");
+}
+
+#[test]
 fn emit_spec_roundtrips_through_loader() {
     let (out, _, ok) = run(&["emit-spec"]);
     assert!(ok);
