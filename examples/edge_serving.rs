@@ -11,8 +11,9 @@
 //! the rust golden model.
 
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, server, Fleet, FleetConfig, Policy, QueueDiscipline,
-    Server, ShardConfig, ShardedFleet, TraceSource, Workload, DEFAULT_WAKEUP_CYCLES,
+    gap8_mixed_devices, merge_streams, server, ClosedLoopSource, Fleet, FleetConfig, Policy,
+    QueueDiscipline, Server, ShardConfig, ShardedFleet, TraceSource, Workload,
+    DEFAULT_WAKEUP_CYCLES,
 };
 use pulpnn_mp::energy::{DEFAULT_NET_SWITCH_CYCLES, GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
@@ -198,6 +199,24 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
         tier_report.queue_depth_p50, tier_report.queue_depth_p95, tier_report.queue_depth_p99
     );
     assert!(tier_report.cache.hits > 0, "repeat inputs must produce cache hits");
+
+    // the same tier, driven closed-loop: the unified event loop feeds
+    // every completion (device, cache hit or join) back to the client
+    // pool, so admission self-limits — bounded queues, zero shed
+    let mut pool = ClosedLoopSource::new(16, 2_000.0, 2000, 52)
+        .with_nets(2)
+        .with_input_universe(64);
+    let closed = tier.run_source(&mut pool).expect("closed loop drives the sharded tier");
+    closed.check_conservation(pool.issued()).expect("closed-loop conservation");
+    println!(
+        "  closed loop    : 16 clients x 2 tenants, 64 shared inputs -> \
+         {} of {} completed, {} shed, {} cache hits/joins",
+        closed.total_completed,
+        pool.issued(),
+        closed.total_shed,
+        closed.cache.hits
+    );
+    assert_eq!(closed.total_shed, 0, "closed-loop admission is self-limiting");
 
     // --- phase 4: the pluggable scheduling stack on an overload trace ---
     // bimodal deadlines (a latency-critical and a bulk class) at ~1.5x of

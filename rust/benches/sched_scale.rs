@@ -20,11 +20,16 @@
 //!    run, for a non-trivial EDF + stealing + batching configuration;
 //! 5. with the default configuration (FIFO, no steal, unbounded,
 //!    unbatched) the event engine reproduces the synchronous baseline
-//!    bit-exactly on Poisson arrivals under all 4 routing policies.
+//!    bit-exactly on Poisson arrivals under all 4 routing policies;
+//! 6. a closed-loop client pool drives the *sharded* tier end-to-end
+//!    under EDF + stealing + a bounded shared-input cache: the full
+//!    budget issues, conservation is exact, and shared inputs produce
+//!    single-flight joins across clients (the unified tier event loop's
+//!    feedback edge at work).
 
 use pulpnn_mp::coordinator::{
-    merge_streams, Device, Fleet, FleetConfig, FleetReport, Policy, QueueDiscipline, Request,
-    ShardConfig, ShardedFleet, TraceSource, Workload,
+    merge_streams, ClosedLoopSource, Device, Fleet, FleetConfig, FleetReport, Policy,
+    QueueDiscipline, Request, ShardConfig, ShardedFleet, TraceSource, Workload,
 };
 use pulpnn_mp::energy::GAP8_LP;
 use pulpnn_mp::util::benchkit::Bench;
@@ -292,6 +297,42 @@ fn main() {
         assert!(a.active_energy_uj == b.active_energy_uj, "{policy:?}");
     }
     println!("event engine == synchronous baseline (FIFO/no-steal/Poisson, all 4 policies) ✓");
+
+    // ---- 6. closed loop through the sharded tier, EDF + steal + cache -
+    let cl_config = FleetConfig {
+        queue_bound: 16,
+        batch_max: 4,
+        wakeup_cycles: 10_000,
+        discipline: QueueDiscipline::Edf,
+        steal: true,
+        ..FleetConfig::default()
+    };
+    let cl_shards = ShardConfig {
+        shards: 2,
+        cache: true,
+        cache_capacity: 64,
+        ..ShardConfig::default()
+    };
+    let mut cl_tier = ShardedFleet::new(lp_devices(4), Policy::LeastLoaded, cl_config, cl_shards);
+    let mut pool = ClosedLoopSource::new(12, 1_000.0, 2400, 2020)
+        .with_deadline(60_000.0)
+        .with_input_universe(16);
+    let cl = cl_tier.run_source(&mut pool).expect("closed loop drives the sharded tier");
+    assert_eq!(pool.issued(), 2400, "the full closed-loop budget must issue");
+    cl.check_conservation(2400).unwrap();
+    for r in &cl.shards {
+        r.check_fifo_no_overlap().unwrap();
+    }
+    assert!(
+        cl.cache.hits > 0,
+        "a 16-input universe over 12 clients must produce single-flight joins: {:?}",
+        cl.cache
+    );
+    println!(
+        "closed loop through the sharded tier (EDF + steal + bounded cache): \
+         2400 issued, {} completed, {} cache hits/joins, conservation exact ✓",
+        cl.total_completed, cl.cache.hits
+    );
 
     // ---- wall-clock cost of the scheduling stack itself ---------------
     let mut b = Bench::new("sched_scale");

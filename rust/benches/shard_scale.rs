@@ -13,12 +13,23 @@
 //!    up as strictly more completed requests instead — also asserted);
 //! 3. pinned tenancy-aware routing strictly reduces weight-residency
 //!    switches vs hash-spread routing on a multi-tenant workload;
-//! 4. every cell conserves requests (completed + shed == offered) and
+//! 4. closed-loop admission through the unified tier loop is
+//!    *self-limiting*: a saturating client pool (8 -> 16 -> 32 clients
+//!    over bounded queues) sheds **zero** requests at every size while
+//!    its throughput climbs toward fleet capacity — whereas an
+//!    *open-loop* Poisson stream at the *same measured offered rate*
+//!    overflows the same bounded queues and sheds (numerically validated
+//!    against a Python mirror of the DES: closed sweep ~1792/2878/3316
+//!    rps all shed-free, open loop at the matched ~3320 rps sheds 18 of
+//!    4000);
+//! 5. the unified tier event loop is bit-exact against the retained
+//!    two-phase oracle on an open-loop multi-tenant cached workload;
+//! 6. every cell conserves requests (completed + shed == offered) and
 //!    keeps the per-device FIFO no-overlap invariant.
 
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, FleetConfig, Policy, Request, ShardConfig, ShardedFleet,
-    ShardedReport, Workload,
+    gap8_mixed_devices, merge_streams, ClosedLoopSource, FleetConfig, Policy, Request,
+    ShardConfig, ShardedFleet, ShardedReport, Workload,
 };
 use pulpnn_mp::util::benchkit::Bench;
 use pulpnn_mp::util::table::{f, Table};
@@ -215,6 +226,133 @@ fn main() {
         pinned.net_switches, spread.net_switches
     );
 
+    // 4. closed-loop admission is self-limiting where open-loop sheds —
+    //    the scenario the unified tier event loop exists for. A client
+    //    pool holds at most C requests in flight, so bounded queues never
+    //    overflow no matter how hard it saturates; an open-loop Poisson
+    //    stream at the same measured offered rate has no such feedback
+    //    and overflows the same queues.
+    let cl_fleet_config = FleetConfig {
+        queue_bound: 8,
+        batch_max: 4,
+        wakeup_cycles: 10_000,
+        net_switch_cycles: 50_000,
+        ..FleetConfig::default()
+    };
+    let cl_shard_config = ShardConfig { shards: 2, ..ShardConfig::default() };
+    let run_closed = |clients: usize| {
+        let mut tier = ShardedFleet::new(
+            gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+            Policy::LeastLoaded,
+            cl_fleet_config,
+            cl_shard_config,
+        );
+        let mut src = ClosedLoopSource::new(clients, 2_000.0, 4000, 2020);
+        let (report, injected) =
+            tier.run_source_traced(&mut src).expect("closed loop serves the tier");
+        assert_eq!(src.issued(), 4000, "the full budget must issue");
+        report.check_conservation(4000).unwrap();
+        for r in &report.shards {
+            r.check_fifo_no_overlap().unwrap();
+        }
+        // measured offered rate: injected arrivals over their span
+        let span_us = injected.last().unwrap().arrival_us - injected[0].arrival_us;
+        let offered_rps = injected.len() as f64 / (span_us / 1e6);
+        (report, offered_rps)
+    };
+    let mut closed_thr = Vec::new();
+    let mut offered_at_32 = 0.0;
+    for &clients in &[8usize, 16, 32] {
+        let (report, offered) = run_closed(clients);
+        assert_eq!(
+            report.total_shed, 0,
+            "closed-loop admission must be self-limiting: {clients} clients shed {}",
+            report.total_shed
+        );
+        println!(
+            "closed loop, {clients:2} clients: {} rps ({} offered), 0 shed ✓",
+            f(report.throughput_rps, 1),
+            f(offered, 1)
+        );
+        closed_thr.push(report.throughput_rps);
+        offered_at_32 = offered;
+    }
+    for w in closed_thr.windows(2) {
+        assert!(
+            w[1] > w[0],
+            "closed-loop throughput must climb toward capacity: {closed_thr:?}"
+        );
+    }
+    let mut open_tier = ShardedFleet::new(
+        gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+        Policy::LeastLoaded,
+        cl_fleet_config,
+        cl_shard_config,
+    );
+    let open_reqs = Workload {
+        rate_per_s: offered_at_32,
+        deadline_us: None,
+        n_requests: 4000,
+        seed: 2020,
+    }
+    .generate();
+    let open = open_tier.run(&open_reqs);
+    open.check_conservation(open_reqs.len()).unwrap();
+    assert!(
+        open.total_shed > 0,
+        "open loop at the matched offered rate ({} rps) must overflow the bounded queues",
+        f(offered_at_32, 1)
+    );
+    println!(
+        "open loop at the same {} rps offered: {} of 4000 shed — no feedback, no self-limiting ✓",
+        f(offered_at_32, 1),
+        open.total_shed
+    );
+
+    // 5. the unified loop is bit-exact against the retained two-phase
+    //    oracle on an open-loop workload (the full property lives in
+    //    `prop_unified_loop_matches_two_phase_oracle`; this is the
+    //    at-scale smoke of it, with the cache and a saturating router)
+    let oracle_config = ShardConfig {
+        shards: 2,
+        router_service_us: router_service_us(),
+        tenancy_aware_routing: true,
+        cache: true,
+        ..ShardConfig::default()
+    };
+    let oracle_fleet = FleetConfig {
+        queue_bound: 32,
+        batch_max: 4,
+        wakeup_cycles: 10_000,
+        net_switch_cycles: 50_000,
+        ..FleetConfig::default()
+    };
+    let mk_tier = || {
+        ShardedFleet::new(
+            gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+            Policy::TenancyAware,
+            oracle_fleet,
+            oracle_config,
+        )
+    };
+    let eq_reqs = workload(2, 2.0, 0.5, 3000);
+    let via_unified = mk_tier().run(&eq_reqs);
+    let via_oracle = mk_tier().run_two_phase_oracle(&eq_reqs);
+    assert_eq!(via_unified.total_completed, via_oracle.total_completed);
+    assert_eq!(via_unified.total_shed, via_oracle.total_shed);
+    assert_eq!(via_unified.cache.hits, via_oracle.cache.hits);
+    assert_eq!(via_unified.cache.shed_joins, via_oracle.cache.shed_joins);
+    assert_eq!(via_unified.per_shard_routed, via_oracle.per_shard_routed);
+    assert!(via_unified.throughput_rps == via_oracle.throughput_rps);
+    for (a, b) in via_unified.shards.iter().zip(via_oracle.shards.iter()) {
+        assert_eq!(a.completions, b.completions, "unified diverged from the two-phase oracle");
+        assert!(a.active_energy_uj == b.active_energy_uj);
+    }
+    println!(
+        "unified tier loop == two-phase oracle at scale ({} completed, {} hits, {} shed) ✓",
+        via_unified.total_completed, via_unified.cache.hits, via_unified.total_shed
+    );
+
     // wall-clock cost of the tier simulation itself (host-side scalability)
     let mut b = Bench::new("shard_scale");
     for &k in &[1usize, 8] {
@@ -224,5 +362,10 @@ fn main() {
             || run(k, 4, 2.0, 0.5, true, 3000).total_completed,
         );
     }
+    b.run_with_throughput(
+        "closed loop through the tier: 32 clients, 4000 reqs, 2 shards",
+        Some(("simReq".into(), 4000.0)),
+        || run_closed(32).0.total_completed,
+    );
     b.report();
 }

@@ -34,6 +34,18 @@
 //! bit-exactly on every source (see
 //! `prop_event_engine_matches_synchronous_baseline` and
 //! `prop_closed_loop_event_matches_sync`).
+//!
+//! The engine is also exposed *incrementally* ([`Fleet::begin_run`] /
+//! [`Fleet::inject`] / [`Fleet::next_event_us`] / [`Fleet::step`] /
+//! [`Fleet::end_run`]): an external clock can interleave K engines on one
+//! timeline, injecting arrivals mid-run and observing [`Departure`]s as
+//! they commit. That is how [`crate::coordinator::shard::ShardedFleet`]
+//! folds its per-shard routers and fleets into a single unified
+//! discrete-event loop (and how closed-loop feedback crosses the tier).
+//! Arrivals occupy tie band 0 of the event queue — at equal timestamps
+//! they are admitted before internal dispatch/finish events, in injection
+//! order — so incremental injection is indistinguishable from pre-loading
+//! the same stream up front.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -347,6 +359,35 @@ pub struct FleetReport {
     pub steals: u64,
 }
 
+/// Floor applied to the sustained-throughput span, in microseconds.
+///
+/// Throughput is `completed / (last finish - first arrival)`. A
+/// degenerate run — a single request on a zero-cycle device, or every
+/// completion landing at one instant — has a zero span; both
+/// [`FleetReport::throughput_rps`] and
+/// [`ShardedReport::throughput_rps`](super::shard::ShardedReport::throughput_rps)
+/// floor the span at 1 us, so such runs report the documented, finite
+/// value `completed * 1e6` requests/s instead of the previous epsilon
+/// floor (which exploded toward `1e15` rps) or a hard zero.
+pub const MIN_THROUGHPUT_SPAN_US: f64 = 1.0;
+
+/// Sustained throughput over `[span_start_us, span_end_us]` in
+/// requests/s: `0.0` when nothing completed, otherwise the completion
+/// count over the span floored at [`MIN_THROUGHPUT_SPAN_US`]. Shared by
+/// the fleet and sharded-tier reports so both ends of the stack agree
+/// on the degenerate-span semantics.
+pub(crate) fn sustained_throughput_rps(
+    completed: usize,
+    span_start_us: f64,
+    span_end_us: f64,
+) -> f64 {
+    if completed == 0 {
+        return 0.0;
+    }
+    let span_us = (span_end_us - span_start_us).max(MIN_THROUGHPUT_SPAN_US);
+    completed as f64 / (span_us / 1e6)
+}
+
 impl FleetReport {
     /// Utilization skew across devices: max minus min per-device active
     /// fraction (0 when the fleet is perfectly even, or empty).
@@ -393,10 +434,25 @@ impl FleetReport {
 }
 
 /// Discrete-event queue entry. The heap is a max-heap, so `Ord` is
-/// reversed: earliest time (then lowest insertion sequence) pops first.
+/// reversed: earliest time, then lowest band, then lowest insertion
+/// sequence pops first.
+///
+/// The *band* is the tie class at equal timestamps: arrivals (band 0)
+/// are always admitted before internal dispatch/finish events (band 1).
+/// With every arrival known up front this reproduces the original
+/// single-sequence ordering exactly (arrivals were pushed first, so
+/// they carried the lowest sequence numbers anyway) — but it also makes
+/// the ordering independent of *when* an arrival is injected, which is
+/// what lets the incremental stepping API ([`Fleet::inject`]) feed
+/// arrivals in mid-run (closed-loop feedback, a sharded tier's router
+/// forwards) and still behave exactly like a pre-loaded trace replay of
+/// the same stream.
 #[derive(Debug, Clone)]
 struct Event {
     time: f64,
+    /// Tie class at equal `time`: 0 = arrival, 1 = internal event.
+    band: u8,
+    /// Insertion sequence within the band.
     seq: u64,
     kind: EventKind,
 }
@@ -410,7 +466,7 @@ enum EventKind {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq
+        self.band == other.band && self.seq == other.seq
     }
 }
 impl Eq for Event {}
@@ -421,12 +477,70 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed on both keys: min-heap behaviour out of BinaryHeap
+        // reversed on every key: min-heap behaviour out of BinaryHeap
         other
             .time
             .partial_cmp(&self.time)
             .expect("event times are finite")
+            .then_with(|| other.band.cmp(&self.band))
             .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One request leaving the system during a [`Fleet::step`] — the
+/// feedback record the driver hands to [`WorkloadSource::on_done`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Departure {
+    /// Id of the departing request.
+    pub id: u64,
+    /// When it left: the finish time for completions (committed at
+    /// dispatch, so it may lie ahead of the simulation clock) or the
+    /// shed time for rejections.
+    pub t_us: f64,
+    /// `true` for a completion, `false` for an admission-control shed.
+    pub completed: bool,
+}
+
+/// Run state of one in-flight event-driven run, between
+/// [`Fleet::begin_run`] and [`Fleet::end_run`].
+struct RunState {
+    heap: BinaryHeap<Event>,
+    /// Insertion counter for arrival events (band 0).
+    arr_seq: u64,
+    /// Insertion counter for internal events (band 1).
+    int_seq: u64,
+    /// Whether injected arrivals are recorded as a replayable trace.
+    record: bool,
+    injected: Vec<Request>,
+    completions: Vec<Completion>,
+    rejections: Vec<Rejection>,
+    series: Vec<QueueSample>,
+    batches: u64,
+    batched_requests: u64,
+    steals: u64,
+}
+
+impl RunState {
+    fn new(record: bool) -> RunState {
+        RunState {
+            heap: BinaryHeap::new(),
+            arr_seq: 0,
+            int_seq: 0,
+            record,
+            injected: Vec::new(),
+            completions: Vec::new(),
+            rejections: Vec::new(),
+            series: Vec::new(),
+            batches: 0,
+            batched_requests: 0,
+            steals: 0,
+        }
+    }
+
+    /// Push an internal (band-1) event.
+    fn push_internal(&mut self, time: f64, kind: EventKind) {
+        self.heap.push(Event { time, band: 1, seq: self.int_seq, kind });
+        self.int_seq += 1;
     }
 }
 
@@ -439,6 +553,9 @@ pub struct Fleet {
     /// Serving-engine knobs.
     pub config: FleetConfig,
     rr_next: usize,
+    /// The in-flight event-driven run, if one is open (see
+    /// [`Fleet::begin_run`]).
+    run_state: Option<RunState>,
 }
 
 impl Fleet {
@@ -452,7 +569,7 @@ impl Fleet {
         assert!(!devices.is_empty());
         assert!(config.queue_bound >= 1, "queue_bound must be >= 1");
         assert!(config.batch_max >= 1, "batch_max must be >= 1");
-        Fleet { devices, policy, config, rr_next: 0 }
+        Fleet { devices, policy, config, rr_next: 0, run_state: None }
     }
 
     fn wakeup_us(&self, d: usize) -> f64 {
@@ -604,83 +721,123 @@ impl Fleet {
         self.run_source_inner(source, true)
     }
 
-    /// The event loop. `record` accumulates the injected arrival stream
-    /// (the replayable trace); plain runs skip that cost.
+    /// The event loop, expressed as a driver over the incremental
+    /// stepping API: inject the source's initial arrivals, step until
+    /// the heap drains, and feed every departure back through
+    /// [`WorkloadSource::on_done`] — the single-fleet instantiation of
+    /// the same loop the sharded tier multiplexes across K engines.
     fn run_source_inner(
         &mut self,
         source: &mut dyn WorkloadSource,
         record: bool,
     ) -> (FleetReport, Vec<Request>) {
-        self.reset();
-        let initial = source.initial();
-        let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(initial.len() + 16);
-        let mut seq = 0u64;
-        let mut injected: Vec<Request> =
-            Vec::with_capacity(if record { initial.len() } else { 0 });
-        for req in initial {
-            heap.push(Event { time: req.arrival_us, seq, kind: EventKind::Arrival(req) });
-            seq += 1;
+        self.begin_run(record);
+        for req in source.initial() {
+            self.inject(req);
         }
+        while let Some(departed) = self.step() {
+            for d in departed {
+                for next in source.on_done(d.id, d.t_us) {
+                    self.inject(next);
+                }
+            }
+        }
+        self.end_run()
+    }
 
-        let mut completions: Vec<Completion> = Vec::new();
-        let mut rejections: Vec<Rejection> = Vec::new();
-        let mut series: Vec<QueueSample> = Vec::new();
-        let mut batches = 0u64;
-        let mut batched_requests = 0u64;
-        let mut steals = 0u64;
+    /// Open an incremental event-driven run: reset all serving state and
+    /// start an empty event queue. Feed arrivals with [`Fleet::inject`],
+    /// advance with [`Fleet::step`], and close with [`Fleet::end_run`].
+    ///
+    /// This is the multiplexing interface the sharded tier drives: K
+    /// engines each hold their own event heap, and one global clock
+    /// steps whichever engine owns the earliest next event. Any run
+    /// already in progress is discarded. With `record` set, every
+    /// injected arrival is accumulated (in processing order — the
+    /// replayable trace) and returned by [`Fleet::end_run`].
+    pub fn begin_run(&mut self, record: bool) {
+        self.reset();
+        self.run_state = Some(RunState::new(record));
+    }
 
-        while let Some(ev) = heap.pop() {
-            let now = ev.time;
-            match ev.kind {
-                EventKind::Arrival(req) => {
-                    if record {
-                        injected.push(req.clone());
+    /// Inject an arrival into the open run. Arrivals occupy tie band 0
+    /// of the event queue: at equal timestamps they are admitted before
+    /// any internal dispatch/finish event, in injection order — so an
+    /// arrival stream injected incrementally (a router forwarding, a
+    /// closed-loop client reacting) behaves exactly like the same stream
+    /// pre-loaded up front.
+    ///
+    /// Panics when no run is open.
+    pub fn inject(&mut self, req: Request) {
+        let rs = self.run_state.as_mut().expect("inject: no open run (call begin_run)");
+        rs.heap.push(Event {
+            time: req.arrival_us,
+            band: 0,
+            seq: rs.arr_seq,
+            kind: EventKind::Arrival(req),
+        });
+        rs.arr_seq += 1;
+    }
+
+    /// Timestamp of the earliest pending event of the open run, or
+    /// `None` when the event queue is drained (or no run is open).
+    pub fn next_event_us(&self) -> Option<f64> {
+        self.run_state.as_ref().and_then(|rs| rs.heap.peek().map(|e| e.time))
+    }
+
+    /// Process exactly one event of the open run. Returns the requests
+    /// that left the system during this step — completions are reported
+    /// at dispatch-commit time with their (possibly future) finish
+    /// times, sheds at shed time — so the driver can fire
+    /// [`WorkloadSource::on_done`] for each and [`Fleet::inject`] the
+    /// arrivals that feedback unlocks. Returns `None` when the event
+    /// queue is drained.
+    ///
+    /// Panics when no run is open.
+    pub fn step(&mut self) -> Option<Vec<Departure>> {
+        let mut rs = self.run_state.take().expect("step: no open run (call begin_run)");
+        let Some(ev) = rs.heap.pop() else {
+            self.run_state = Some(rs);
+            return None;
+        };
+        let mut departed: Vec<Departure> = Vec::new();
+        let now = ev.time;
+        match ev.kind {
+            EventKind::Arrival(req) => {
+                if rs.record {
+                    rs.injected.push(req.clone());
+                }
+                match self.route(&req, now) {
+                    Some(d) => {
+                        let discipline = self.config.discipline;
+                        let dev = &mut self.devices[d];
+                        dev.committed_free_us =
+                            dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
+                        dev.enqueue(req, discipline);
+                        rs.series.push(QueueSample {
+                            t_us: now,
+                            device: d,
+                            depth: dev.queue.len(),
+                        });
+                        if !dev.in_flight {
+                            rs.push_internal(now, EventKind::DispatchBatch { device: d });
+                        }
                     }
-                    match self.route(&req, now) {
-                        Some(d) => {
-                            let discipline = self.config.discipline;
-                            let dev = &mut self.devices[d];
-                            dev.committed_free_us =
-                                dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
-                            dev.enqueue(req, discipline);
-                            series.push(QueueSample {
-                                t_us: now,
-                                device: d,
-                                depth: dev.queue.len(),
-                            });
-                            if !dev.in_flight {
-                                heap.push(Event {
-                                    time: now,
-                                    seq,
-                                    kind: EventKind::DispatchBatch { device: d },
-                                });
-                                seq += 1;
-                            }
-                        }
-                        None => {
-                            rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us });
-                            // a shed request completes (unsuccessfully) now:
-                            // closed-loop clients observe it and move on
-                            for next in source.on_done(req.id, now) {
-                                heap.push(Event {
-                                    time: next.arrival_us,
-                                    seq,
-                                    kind: EventKind::Arrival(next),
-                                });
-                                seq += 1;
-                            }
-                        }
+                    None => {
+                        rs.rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us });
+                        // a shed request completes (unsuccessfully) now:
+                        // closed-loop clients observe it and move on
+                        departed.push(Departure { id: req.id, t_us: now, completed: false });
                     }
                 }
-                EventKind::DispatchBatch { device: d } => {
-                    let wake_us = self.wakeup_us(d);
-                    let batch_max = self.config.batch_max;
-                    let wakeup_cycles = self.config.wakeup_cycles;
-                    let net_switch_cycles = self.config.net_switch_cycles;
-                    let dev = &mut self.devices[d];
-                    if dev.in_flight || dev.queue.is_empty() {
-                        continue; // stale dispatch
-                    }
+            }
+            EventKind::DispatchBatch { device: d } => {
+                let wake_us = self.wakeup_us(d);
+                let batch_max = self.config.batch_max;
+                let wakeup_cycles = self.config.wakeup_cycles;
+                let net_switch_cycles = self.config.net_switch_cycles;
+                let dev = &mut self.devices[d];
+                if !dev.in_flight && !dev.queue.is_empty() {
                     // the micro-batch: longest same-network prefix of the
                     // queue in discipline order
                     let net = dev.queue.front().unwrap().net;
@@ -690,7 +847,7 @@ impl Fleet {
                     {
                         batch.push(dev.queue.pop_front().unwrap());
                     }
-                    series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
+                    rs.series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
 
                     // weight residency: evicting a different resident net
                     // costs a DMA reload before the batch can start (a
@@ -708,16 +865,19 @@ impl Fleet {
                     let start = now;
                     let inf = dev.inference_us();
                     let mut t = start + wake_us + switch_us;
-                    let mut done: Vec<(u64, f64)> = Vec::with_capacity(batch.len());
                     for req in &batch {
                         let s = t;
                         t += inf;
-                        done.push((req.id, t));
-                        completions.push(Completion {
+                        // feedback edge: the completion is committed now
+                        // with its future finish time, so the follow-up
+                        // arrivals it unlocks (all at >= finish) can enter
+                        // the event queue immediately
+                        departed.push(Departure { id: req.id, t_us: t, completed: true });
+                        rs.completions.push(Completion {
                             id: req.id,
                             device: d,
                             net: req.net,
-                            batch: batches,
+                            batch: rs.batches,
                             arrival_us: req.arrival_us,
                             start_us: s,
                             finish_us: t,
@@ -740,71 +900,65 @@ impl Fleet {
                     // only; account for the activation's wake-up and
                     // residency switch
                     dev.committed_free_us += wake_us + switch_us;
-                    batches += 1;
-                    batched_requests += k;
-                    heap.push(Event { time: finish, seq, kind: EventKind::Finish { device: d } });
-                    seq += 1;
-                    // feedback edge: completions are committed now with
-                    // future finish times, so the follow-up arrivals they
-                    // unlock (all at >= finish) can enter the event queue
-                    // immediately
-                    for (rid, fin) in done {
-                        for next in source.on_done(rid, fin) {
-                            heap.push(Event {
-                                time: next.arrival_us,
-                                seq,
-                                kind: EventKind::Arrival(next),
-                            });
-                            seq += 1;
-                        }
-                    }
+                    rs.batches += 1;
+                    rs.batched_requests += k;
+                    rs.push_internal(finish, EventKind::Finish { device: d });
                 }
-                EventKind::Finish { device: d } => {
-                    self.devices[d].in_flight = false;
-                    if !self.devices[d].queue.is_empty() {
-                        heap.push(Event {
-                            time: now,
-                            seq,
-                            kind: EventKind::DispatchBatch { device: d },
+                // else: stale dispatch — nothing to do
+            }
+            EventKind::Finish { device: d } => {
+                self.devices[d].in_flight = false;
+                if !self.devices[d].queue.is_empty() {
+                    rs.push_internal(now, EventKind::DispatchBatch { device: d });
+                } else if self.config.steal {
+                    if let Some(victim) = self.steal_victim(d) {
+                        let req = self.devices[victim]
+                            .queue
+                            .pop_back()
+                            .expect("steal victim has a non-empty queue");
+                        // hand the routing projection over with the
+                        // request: the victim drains one inference
+                        // sooner, the thief one later
+                        let victim_inf = self.devices[victim].inference_us();
+                        self.devices[victim].committed_free_us =
+                            (self.devices[victim].committed_free_us - victim_inf).max(now);
+                        rs.series.push(QueueSample {
+                            t_us: now,
+                            device: victim,
+                            depth: self.devices[victim].queue.len(),
                         });
-                        seq += 1;
-                    } else if self.config.steal {
-                        if let Some(victim) = self.steal_victim(d) {
-                            let req = self.devices[victim]
-                                .queue
-                                .pop_back()
-                                .expect("steal victim has a non-empty queue");
-                            // hand the routing projection over with the
-                            // request: the victim drains one inference
-                            // sooner, the thief one later
-                            let victim_inf = self.devices[victim].inference_us();
-                            self.devices[victim].committed_free_us =
-                                (self.devices[victim].committed_free_us - victim_inf).max(now);
-                            series.push(QueueSample {
-                                t_us: now,
-                                device: victim,
-                                depth: self.devices[victim].queue.len(),
-                            });
-                            let thief = &mut self.devices[d];
-                            thief.committed_free_us =
-                                thief.committed_free_us.max(now) + thief.inference_us();
-                            thief.queue.push_back(req);
-                            series.push(QueueSample { t_us: now, device: d, depth: 1 });
-                            steals += 1;
-                            heap.push(Event {
-                                time: now,
-                                seq,
-                                kind: EventKind::DispatchBatch { device: d },
-                            });
-                            seq += 1;
-                        }
+                        let thief = &mut self.devices[d];
+                        thief.committed_free_us =
+                            thief.committed_free_us.max(now) + thief.inference_us();
+                        thief.queue.push_back(req);
+                        rs.series.push(QueueSample { t_us: now, device: d, depth: 1 });
+                        rs.steals += 1;
+                        rs.push_internal(now, EventKind::DispatchBatch { device: d });
                     }
                 }
             }
         }
-        let report =
-            self.finalize(completions, rejections, series, batches, batched_requests, steals);
-        (report, injected)
+        self.run_state = Some(rs);
+        Some(departed)
+    }
+
+    /// Close the open run: finalize the [`FleetReport`] and return it
+    /// together with the recorded arrival trace (empty unless
+    /// [`Fleet::begin_run`] was given `record = true`).
+    ///
+    /// Panics when no run is open or when events are still pending.
+    pub fn end_run(&mut self) -> (FleetReport, Vec<Request>) {
+        let rs = self.run_state.take().expect("end_run: no open run (call begin_run)");
+        assert!(rs.heap.is_empty(), "end_run: the event queue has not drained");
+        let report = self.finalize(
+            rs.completions,
+            rs.rejections,
+            rs.series,
+            rs.batches,
+            rs.batched_requests,
+            rs.steals,
+        );
+        (report, rs.injected)
     }
 
     /// Victim selection for work stealing: the deepest non-empty peer
@@ -909,12 +1063,17 @@ impl Fleet {
         batched_requests: u64,
         steals: u64,
     ) -> FleetReport {
-        // sustained-throughput span: first arrival to last finish (with an
-        // epsilon floor), not `max(finish)` — a workload whose first
-        // request arrives late must not get its throughput inflated.
+        // sustained-throughput span: first arrival to last finish (floored
+        // at MIN_THROUGHPUT_SPAN_US for degenerate single-instant runs),
+        // not `max(finish)` — a workload whose first request arrives late
+        // must not get its throughput inflated.
         let span_start = completions.iter().map(|c| c.arrival_us).fold(f64::INFINITY, f64::min);
         let span_end = completions.iter().map(|c| c.finish_us).fold(0.0f64, f64::max);
-        let span_us = if completions.is_empty() { 0.0 } else { (span_end - span_start).max(1e-9) };
+        let span_us = if completions.is_empty() {
+            0.0
+        } else {
+            (span_end - span_start).max(MIN_THROUGHPUT_SPAN_US)
+        };
         let lats: Vec<f64> = completions.iter().map(|c| c.latency_us()).collect();
         let active_energy_uj: f64 = self.devices.iter().map(|d| d.energy_uj).sum();
         let idle_energy_uj: f64 = self
@@ -924,11 +1083,7 @@ impl Fleet {
             .sum();
         FleetReport {
             shed: rejections.len(),
-            throughput_rps: if span_us > 0.0 {
-                completions.len() as f64 / (span_us / 1e6)
-            } else {
-                0.0
-            },
+            throughput_rps: sustained_throughput_rps(completions.len(), span_start, span_end),
             mean_latency_us: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
             p99_latency_us: if lats.is_empty() {
                 0.0
@@ -958,9 +1113,9 @@ impl Fleet {
 }
 
 /// Internal adapter replaying a borrowed arrival slice — what
-/// [`Fleet::run`] wraps its argument in, avoiding an owned copy of the
-/// workload per run.
-struct SliceReplay<'a>(&'a [Request]);
+/// [`Fleet::run`] (and the sharded tier's slice entry points) wrap
+/// their argument in, avoiding an owned copy of the workload per run.
+pub(crate) struct SliceReplay<'a>(pub(crate) &'a [Request]);
 
 impl WorkloadSource for SliceReplay<'_> {
     fn initial(&mut self) -> Vec<Request> {
@@ -1602,6 +1757,88 @@ mod tests {
             let net = cs[0].net;
             assert!(cs.iter().all(|c| c.net == net), "batch {batch} mixes networks");
         }
+    }
+
+    #[test]
+    fn prop_manual_stepping_matches_run() {
+        // driving the engine by hand through the incremental API must be
+        // indistinguishable from Fleet::run on the same workload, for any
+        // configuration — the property the sharded tier's multiplexer
+        // stands on
+        check("fleet-stepping-vs-run", 25, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let devices = random_devices(rng);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[3usize, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 25_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 40_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+            };
+            let mk = |net: u32, seed: u64| {
+                Workload { rate_per_s: 1000.0, deadline_us: Some(3e4), n_requests: 100, seed }
+                    .generate_for_net(net)
+            };
+            let reqs = merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())]);
+            let want = Fleet::with_config(devices.clone(), policy, config).run(&reqs);
+
+            let mut stepped = Fleet::with_config(devices, policy, config);
+            stepped.begin_run(true);
+            for req in &reqs {
+                stepped.inject(req.clone());
+            }
+            let mut departures = 0usize;
+            while stepped.next_event_us().is_some() {
+                departures += stepped.step().expect("heap is non-empty").len();
+            }
+            assert!(stepped.step().is_none(), "drained engine must report None");
+            let (got, injected) = stepped.end_run();
+            if departures != reqs.len() {
+                return Err(format!("saw {departures} departures for {} requests", reqs.len()));
+            }
+            if injected != reqs {
+                return Err("recorded trace diverged from the injected stream".into());
+            }
+            if want.completions != got.completions
+                || want.rejections != got.rejections
+                || want.active_energy_uj != got.active_energy_uj
+                || want.throughput_rps != got.throughput_rps
+                || want.steals != got.steals
+                || want.batches != got.batches
+            {
+                return Err("manual stepping diverged from Fleet::run".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_span_reports_documented_finite_throughput() {
+        // zero-cycle devices, no wake-up: every request finishes the
+        // instant it arrives, so first-arrival-to-last-finish is zero.
+        // The documented floor (MIN_THROUGHPUT_SPAN_US = 1 us) must make
+        // the report a finite `n * 1e6` rps, not 0 and not an epsilon
+        // explosion.
+        let mut fleet = gap8_fleet(1, GAP8_LP, 0, Policy::RoundRobin);
+        let reqs: Vec<Request> = (0..3u64)
+            .map(|id| Request { id, arrival_us: 500.0, deadline_us: None, net: 0, input_digest: id })
+            .collect();
+        let report = fleet.run(&reqs);
+        assert_eq!(report.completions.len(), 3);
+        for c in &report.completions {
+            assert_eq!(c.finish_us, 500.0, "{c:?}");
+        }
+        assert!(report.throughput_rps.is_finite());
+        assert_eq!(report.throughput_rps, 3e6, "3 completions over the 1 us floor");
+        // a single instantaneous request likewise: 1e6 rps, not 0
+        let single = fleet.run(&reqs[..1]);
+        assert_eq!(single.throughput_rps, 1e6);
     }
 
     #[test]

@@ -73,6 +73,17 @@
 //! rationale. With one shard, a free router, and the cache off, the tier
 //! is property-tested to reproduce a bare `Fleet` bit-exactly.
 //!
+//! The tier runs as one *unified* discrete-event simulation: each fleet
+//! engine exposes its event loop incrementally ([`Fleet::begin_run`] /
+//! [`Fleet::inject`] / [`Fleet::step`] / [`Fleet::end_run`]) and the
+//! tier multiplexes K engines plus the per-shard router FIFOs on a
+//! single global clock, so [`WorkloadSource::on_done`] fires for every
+//! departure anywhere in the tier and closed-loop sources work
+//! end-to-end (`ShardedFleet::run_source` — typed [`shard::TierError`]
+//! instead of panics for library callers). The pre-unification
+//! two-phase path survives only as the bit-exactness oracle
+//! [`shard::ShardedFleet::run_two_phase_oracle`].
+//!
 //! [`OperatingPoint::power_mw`]: crate::energy::OperatingPoint::power_mw
 //! [`OperatingPoint::idle_power_mw`]: crate::energy::OperatingPoint::idle_power_mw
 
@@ -82,9 +93,10 @@ pub mod server;
 pub mod shard;
 
 pub use fleet::{
-    gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Device, Fleet, FleetConfig,
-    FleetReport, Policy, QueueDiscipline, QueueSample, Rejection, DEFAULT_WAKEUP_CYCLES,
+    gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Departure, Device, Fleet,
+    FleetConfig, FleetReport, Policy, QueueDiscipline, QueueSample, Rejection,
+    DEFAULT_WAKEUP_CYCLES, MIN_THROUGHPUT_SPAN_US,
 };
 pub use request::{merge_streams, ClosedLoopSource, Request, TraceSource, Workload, WorkloadSource};
 pub use server::{Served, Server, ServeStats};
-pub use shard::{CacheHit, CacheStats, ShardConfig, ShardedFleet, ShardedReport};
+pub use shard::{CacheHit, CacheStats, ShardConfig, ShardedFleet, ShardedReport, TierError};

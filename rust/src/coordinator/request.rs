@@ -161,9 +161,12 @@ pub trait WorkloadSource {
     }
 
     /// Whether every arrival is known up front ([`WorkloadSource::on_done`]
-    /// never yields requests). The two-phase sharded tier can only replay
-    /// open-loop sources; closed-loop runs are recorded against a single
-    /// fleet and replayed as traces.
+    /// never yields requests). No engine branches on this anymore — since
+    /// the unified tier event loop, both the single-fleet engine and
+    /// [`ShardedFleet`](crate::coordinator::ShardedFleet) drive the
+    /// feedback edge for any source. It remains as introspection for
+    /// tooling that wants to label a run or decide whether a source's
+    /// `initial()` alone fully captures the workload.
     fn is_open_loop(&self) -> bool {
         true
     }
@@ -205,6 +208,10 @@ pub struct ClosedLoopSource {
     think_us_mean: f64,
     deadline_us: Option<f64>,
     nets: u32,
+    /// When set, inputs are drawn from a shared universe of this many
+    /// distinct payloads per network instead of being unique per request
+    /// — see [`ClosedLoopSource::with_input_universe`].
+    input_universe: Option<u64>,
     seed: u64,
     issued: usize,
     rngs: Vec<Rng>,
@@ -232,6 +239,7 @@ impl ClosedLoopSource {
             think_us_mean,
             deadline_us: None,
             nets: 1,
+            input_universe: None,
             seed,
             issued: 0,
             rngs: (0..clients as u64).map(|c| Rng::new(mix64(seed ^ mix64(c + 1)))).collect(),
@@ -257,6 +265,24 @@ impl ClosedLoopSource {
         self
     }
 
+    /// Draw every issued request's input from a shared universe of `m`
+    /// distinct payloads per network (uniformly, from the client's own
+    /// RNG stream) instead of stamping a unique digest per request.
+    ///
+    /// This is how closed-loop clients exercise the sharded tier's
+    /// result cache: two clients of one network drawing the same input
+    /// concurrently produce a single-flight owner and a joiner — and
+    /// because the tier routes on `(net, input_digest)`, they are
+    /// guaranteed to land on the same shard. Determinism is preserved:
+    /// the draw comes from the issuing client's private RNG stream, so
+    /// the arrival stream still never depends on cross-client
+    /// completion-observation order.
+    pub fn with_input_universe(mut self, m: u64) -> ClosedLoopSource {
+        assert!(m >= 1, "need at least one input in the universe");
+        self.input_universe = Some(m);
+        self
+    }
+
     /// Requests issued so far (never exceeds the `n_requests` budget).
     pub fn issued(&self) -> usize {
         self.issued
@@ -273,12 +299,18 @@ impl ClosedLoopSource {
         let id = ((client as u64) << 32) | k;
         self.issued += 1;
         self.client_of.insert(id, client);
+        let input_digest = match self.input_universe {
+            // the universe key must not depend on the issuing client or
+            // request id, so equal draws collide across the whole pool
+            Some(m) => digest_for(self.seed, net, self.rngs[client].next_u64() % m),
+            None => digest_for(self.seed, net, id),
+        };
         Request {
             id,
             arrival_us: at_us + think,
             deadline_us: self.deadline_us,
             net,
-            input_digest: digest_for(self.seed, net, id),
+            input_digest,
         }
     }
 }
@@ -558,6 +590,36 @@ mod tests {
         }
         assert_eq!(a.issued(), 10, "budget must be fully issued and then stop");
         let _ = issued;
+    }
+
+    #[test]
+    fn input_universe_bounds_distinct_digests_and_keeps_determinism() {
+        let mk = || ClosedLoopSource::new(4, 1000.0, 60, 11).with_nets(2).with_input_universe(3);
+        let (mut a, mut b) = (mk(), mk());
+        let ia = a.initial();
+        assert_eq!(ia, b.initial(), "universe draws must stay deterministic per seed");
+        let mut digests: std::collections::HashSet<(u32, u64)> =
+            ia.iter().map(|r| (r.net, r.input_digest)).collect();
+        let mut pending: Vec<u64> = ia.iter().map(|r| r.id).collect();
+        let mut t = 0.0;
+        while let Some(id) = pending.pop() {
+            t += 1_000.0;
+            let ra = a.on_done(id, t);
+            let rb = b.on_done(id, t);
+            assert_eq!(ra, rb, "feedback must stay deterministic per seed");
+            for r in ra {
+                digests.insert((r.net, r.input_digest));
+                pending.push(r.id);
+            }
+        }
+        assert_eq!(a.issued(), 60, "the budget must fully issue");
+        // a 3-input universe yields at most 3 distinct digests per net —
+        // and with 30 draws per net, certainly a repeat somewhere
+        for net in 0..2u32 {
+            let n = digests.iter().filter(|(nn, _)| *nn == net).count();
+            assert!((1..=3).contains(&n), "net {net} has {n} distinct digests");
+        }
+        assert!(digests.len() < 60, "expected shared inputs across the pool");
     }
 
     #[test]

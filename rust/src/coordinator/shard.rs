@@ -1,6 +1,43 @@
 //! The horizontally sharded serving tier: a front-tier router over K
 //! independent [`Fleet`] coordinators, with multi-network tenancy and a
-//! coordinator-tier result cache.
+//! coordinator-tier result cache — all folded into one unified
+//! discrete-event loop, so closed-loop sources work across the tier.
+//!
+//! # The unified tier event loop
+//!
+//! [`ShardedFleet::run_source`] multiplexes K fleet engines and K router
+//! FIFOs on a single global clock. Tier arrivals (the front door) live in
+//! one heap; each shard's [`Fleet`] holds its own event heap behind the
+//! incremental stepping API ([`Fleet::step`]); the loop always advances
+//! whichever owns the earliest next event — tier events first at equal
+//! timestamps, then the lowest shard index:
+//!
+//! ```text
+//!  TierArrival(req) ──► shard_of(req) ──► router FIFO (service time)
+//!        ▲                 │ exit                                  │
+//!        │                 ├─ cache resolved? → CacheHit at exit ──┤
+//!        │                 ├─ cache pending?  → join the owner     │
+//!        │                 └─ miss/off → inject into shard Fleet   │
+//!        │                               (band-0 arrival)          │
+//!        │   Fleet::step ──► Departure { completed | shed } ───────┤
+//!        └───────── WorkloadSource::on_done(id, t) ◄───────────────┘
+//!                   (the cross-tier feedback edge)
+//! ```
+//!
+//! Every departure — a fleet completion, a fleet shed, a cache hit, or a
+//! joiner settling with its owner — fires [`WorkloadSource::on_done`], so
+//! a [`ClosedLoopSource`](super::request::ClosedLoopSource) client pool
+//! drives the *whole tier* end-to-end: admission becomes self-limiting
+//! (clients wait instead of flooding bounded queues), which the
+//! closed-vs-open-loop scenario in `benches/shard_scale.rs` self-asserts.
+//!
+//! The previous two-phase path (route everything, then run each shard's
+//! fleet to completion) is retained as
+//! [`ShardedFleet::run_two_phase_oracle`], *only* as a property-test
+//! oracle: on arrival-ordered open-loop workloads the unified loop is
+//! bit-exact against it — completions, sheds, cache contents, evictions,
+//! energy — across all four routing policies, both queue disciplines,
+//! work stealing and bounded caches (`prop_unified_loop_matches_two_phase_oracle`).
 //!
 //! # Why shard
 //!
@@ -58,11 +95,16 @@
 //! residency-switch totals, cross-shard utilization skew and queue-depth
 //! percentiles.
 
-use std::collections::HashMap;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::fmt;
 
 use crate::util::stats::percentile;
 
-use super::fleet::{Device, Fleet, FleetConfig, FleetReport, Policy, QueueDiscipline};
+use super::fleet::{
+    sustained_throughput_rps, Device, Fleet, FleetConfig, FleetReport, Policy, QueueDiscipline,
+    SliceReplay,
+};
 use super::request::{mix64, Request, WorkloadSource};
 
 /// Virtual nodes per shard on the consistent-hash ring: enough that the
@@ -117,7 +159,7 @@ impl Default for ShardConfig {
 }
 
 /// A request completed at the front tier by the result cache.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CacheHit {
     /// The request's id.
     pub id: u64,
@@ -179,7 +221,11 @@ pub struct ShardedReport {
     /// Fleet-shed requests plus shed joiners.
     pub total_shed: usize,
     /// Sustained throughput: completed requests over the span from the
-    /// first arrival at the tier to the last finish anywhere in it.
+    /// first arrival at the tier to the last finish anywhere in it,
+    /// floored at
+    /// [`MIN_THROUGHPUT_SPAN_US`](super::fleet::MIN_THROUGHPUT_SPAN_US)
+    /// so degenerate single-instant runs report a documented finite
+    /// value (the same rule [`FleetReport::throughput_rps`] applies).
     pub throughput_rps: f64,
     /// Mean service latency over fleet completions (router-exit to
     /// finish; the router wait is reported separately).
@@ -252,11 +298,140 @@ enum CacheEntry {
 }
 
 /// Cache lookup outcome (decouples the borrow of the cache map from the
-/// join bookkeeping below).
+/// join bookkeeping in the two-phase oracle).
 enum Lookup {
     Resolved,
     Pending(u64),
     Miss,
+}
+
+/// Typed failures the sharded tier reports to library callers instead of
+/// panicking inside the event loop.
+///
+/// Historically [`ShardedFleet::run_source`] also `assert!`-panicked on
+/// closed-loop sources (the two-phase tier could not feed completions
+/// back); the unified event loop made that rejection obsolete — the
+/// typed-error API remains for the conditions that are still reachable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TierError {
+    /// A source yielded two requests with the same id while the result
+    /// cache was enabled — the single-flight bookkeeping keys in-flight
+    /// owners by id, so ids must be workload-unique (merge tenant
+    /// streams with [`merge_streams`](super::request::merge_streams)).
+    DuplicateRequestId(u64),
+}
+
+impl fmt::Display for TierError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TierError::DuplicateRequestId(id) => write!(
+                f,
+                "duplicate request id {id} — the result cache keys in-flight owners by id; \
+                 merge tenant streams with merge_streams first"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TierError {}
+
+/// Front-door arrival event of the unified tier loop. The heap is a
+/// max-heap, so `Ord` is reversed: earliest time, then lowest insertion
+/// sequence (FIFO among equal timestamps, matching slice order for
+/// arrival-ordered workloads) pops first.
+struct TierArrival {
+    time: f64,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for TierArrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for TierArrival {}
+impl PartialOrd for TierArrival {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TierArrival {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed on both keys: min-heap behaviour out of BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("arrival times are finite")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A request that joined a pending (single-flight) cache key: enough of
+/// the original request to score its completion against the *tier*
+/// arrival, plus its router-exit time and target shard.
+struct Joiner {
+    id: u64,
+    net: u32,
+    arrival_us: f64,
+    deadline_us: Option<f64>,
+    exit_us: f64,
+    shard: usize,
+}
+
+/// Within-run fate of a pending cache key's owner. Keys stay pending for
+/// the whole run (promotion happens at reconciliation, exactly like the
+/// two-phase oracle — that identity is what keeps the two paths
+/// bit-exact, eviction for eviction); the owner's fate decides how later
+/// joiners settle.
+#[derive(Clone, Copy)]
+enum OwnerFate {
+    /// Forwarded to a fleet, not yet departed: joiners wait.
+    InFlight,
+    /// Completed at the given finish time (committed at dispatch):
+    /// joiners complete at `max(their router exit, finish)`.
+    Finished(f64),
+    /// Shed by admission control at the given time: joiners shed with it.
+    Shed(f64),
+}
+
+/// Within-run state of one pending cache key.
+struct PendingKey {
+    fate: OwnerFate,
+    waiters: Vec<Joiner>,
+}
+
+/// Fire the feedback edge for one departure: every arrival the source
+/// unlocks enters the global tier heap (in on-done order, FIFO-stamped).
+fn push_feedback(
+    heap: &mut BinaryHeap<TierArrival>,
+    seq: &mut u64,
+    source: &mut dyn WorkloadSource,
+    id: u64,
+    t_us: f64,
+) {
+    for next in source.on_done(id, t_us) {
+        heap.push(TierArrival { time: next.arrival_us, seq: *seq, req: next });
+        *seq += 1;
+    }
+}
+
+/// A cache completion for one request, scored against its *tier* arrival
+/// and original deadline (router wait counts), finishing at `finish_us`.
+fn cache_hit(
+    id: u64,
+    net: u32,
+    arrival_us: f64,
+    deadline_us: Option<f64>,
+    finish_us: f64,
+) -> CacheHit {
+    CacheHit {
+        id,
+        net,
+        arrival_us,
+        finish_us,
+        deadline_missed: deadline_us.map(|dl| finish_us - arrival_us > dl).unwrap_or(false),
+    }
 }
 
 /// The sharded serving tier: a consistent-hash front router over K
@@ -412,40 +587,304 @@ impl ShardedFleet {
         self.ring[i % self.ring.len()].1
     }
 
-    /// Serve a full arrival-ordered workload through the tier.
+    /// Serve a full arrival-ordered workload through the tier's unified
+    /// event loop.
     ///
     /// Serving state (device queues, residency, energy) resets per run so
     /// consecutive runs are independent — but resolved cache entries
     /// persist, so replaying a workload hits the cache. With the cache
     /// enabled, request ids must be workload-unique (use [`merge_streams`]
     /// when combining tenant streams) — the single-flight bookkeeping
-    /// keys in-flight owners by id and asserts this.
+    /// keys in-flight owners by id; this convenience wrapper panics on a
+    /// duplicate, while [`ShardedFleet::run_source`] reports it as a
+    /// typed [`TierError`].
     ///
     /// [`merge_streams`]: crate::coordinator::merge_streams
     pub fn run(&mut self, requests: &[Request]) -> ShardedReport {
-        self.run_requests(requests)
+        match self.run_source(&mut SliceReplay(requests)) {
+            Ok(report) => report,
+            Err(e) => panic!("{e}"),
+        }
     }
 
-    /// Serve an *open-loop* [`WorkloadSource`] (a Poisson generator or a
-    /// replayed trace) through the tier.
+    /// Serve any [`WorkloadSource`] — open-loop (Poisson, replayed trace)
+    /// *or* closed-loop — through the unified tier event loop.
     ///
-    /// Closed-loop sources are rejected: the tier's two-phase structure
-    /// (route everything, then run each shard's event loop) cannot feed
-    /// completions back into arrival generation. Record the closed-loop
-    /// run against a single [`Fleet`] with
-    /// [`Fleet::run_source_traced`](super::Fleet::run_source_traced), dump
-    /// the trace, and replay it here.
-    pub fn run_source(&mut self, source: &mut dyn WorkloadSource) -> ShardedReport {
-        assert!(
-            source.is_open_loop(),
-            "the sharded tier replays open-loop sources only; record a closed-loop run \
-             against a single Fleet (run_source_traced) and replay its trace here"
-        );
-        let requests = source.initial();
-        self.run_requests(&requests)
+    /// Closed-loop sources work end-to-end: every departure anywhere in
+    /// the tier (a fleet completion, an admission-control shed, a cache
+    /// hit, a joiner settling with its single-flight owner) fires
+    /// [`WorkloadSource::on_done`], and the arrivals that feedback
+    /// unlocks enter the global event heap. Earlier revisions rejected
+    /// closed-loop sources here (the two-phase tier had no feedback
+    /// path); the typed-error API remains for the conditions that are
+    /// still reachable — see [`TierError`]. On an error the tier is left
+    /// mid-run; the next serving call resets it.
+    pub fn run_source(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+    ) -> Result<ShardedReport, TierError> {
+        self.run_unified(source, false).map(|(report, _)| report)
     }
 
-    fn run_requests(&mut self, requests: &[Request]) -> ShardedReport {
+    /// Like [`ShardedFleet::run_source`], additionally returning every
+    /// request that arrived at the tier, in arrival order — the
+    /// replayable open-loop trace of the run (dump it with
+    /// [`TraceSource::to_jsonl`](super::request::TraceSource::to_jsonl)).
+    pub fn run_source_traced(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+    ) -> Result<(ShardedReport, Vec<Request>), TierError> {
+        self.run_unified(source, true)
+    }
+
+    /// The unified discrete-event loop: K router FIFOs, K fleet engines
+    /// and the result cache multiplexed on one global clock. Tier
+    /// arrivals go first at equal timestamps (a forwarded request must
+    /// reach its fleet's band-0 arrival queue before that fleet processes
+    /// internal events at the same instant — this is what makes the loop
+    /// bit-exact against the pre-loading two-phase oracle on open-loop
+    /// workloads); among fleets, the lowest shard index breaks ties.
+    fn run_unified(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+        record: bool,
+    ) -> Result<(ShardedReport, Vec<Request>), TierError> {
+        let k = self.shards.len();
+        for f in &mut self.shards {
+            f.begin_run(false);
+        }
+        let mut heap: BinaryHeap<TierArrival> = BinaryHeap::new();
+        let mut seq = 0u64;
+        for req in source.initial() {
+            heap.push(TierArrival { time: req.arrival_us, seq, req });
+            seq += 1;
+        }
+        let mut injected: Vec<Request> = Vec::new();
+
+        let mut router_free = vec![0.0f64; k];
+        let mut router_delay_sum = 0.0f64;
+        let mut routed = vec![0usize; k];
+        let mut n_tier = 0usize;
+        let mut span_start = f64::INFINITY;
+
+        // result-cache run state (all untouched when the cache is off):
+        // keys stay pending for the whole run and promote at
+        // reconciliation, exactly like the two-phase oracle
+        let mut lookups = 0u64;
+        let mut seen_ids: HashSet<u64> = HashSet::new();
+        let mut pending: HashMap<(u32, u64), PendingKey> = HashMap::new();
+        let mut pending_order: Vec<(u32, u64)> = Vec::new();
+        let mut owner_key: HashMap<u64, (u32, u64)> = HashMap::new();
+        let mut cache_hits: Vec<CacheHit> = Vec::new();
+        let mut shed_joins = 0u64;
+        let mut energy_saved_uj = 0.0f64;
+
+        // per-shard mean active energy of one inference, for the
+        // energy-saved estimate
+        let shard_inference_uj: Vec<f64> = self
+            .shards
+            .iter()
+            .map(|f| {
+                f.devices.iter().map(|d| d.op.energy_uj(d.cycles_per_inference)).sum::<f64>()
+                    / f.devices.len() as f64
+            })
+            .collect();
+
+        loop {
+            // earliest pending fleet event, lowest shard index on ties
+            let mut fleet_next: Option<(f64, usize)> = None;
+            for (s, f) in self.shards.iter().enumerate() {
+                if let Some(t) = f.next_event_us() {
+                    let better = match fleet_next {
+                        None => true,
+                        Some((bt, _)) => t < bt,
+                    };
+                    if better {
+                        fleet_next = Some((t, s));
+                    }
+                }
+            }
+            let take_tier = match (heap.peek().map(|e| e.time), fleet_next) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(tt), Some((ft, _))) => tt <= ft,
+            };
+
+            if !take_tier {
+                let (_, s) = fleet_next.expect("a fleet owns the earliest event");
+                let departed =
+                    self.shards[s].step().expect("the chosen fleet has a pending event");
+                for d in departed {
+                    // the departing request itself feeds back first...
+                    push_feedback(&mut heap, &mut seq, source, d.id, d.t_us);
+                    // ...then, if it owned a pending cache key, its
+                    // waiting joiners settle with it
+                    let Some(&key) = owner_key.get(&d.id) else { continue };
+                    let p = pending.get_mut(&key).expect("owner ids map to pending keys");
+                    p.fate = if d.completed {
+                        OwnerFate::Finished(d.t_us)
+                    } else {
+                        OwnerFate::Shed(d.t_us)
+                    };
+                    for w in std::mem::take(&mut p.waiters) {
+                        let done_at = w.exit_us.max(d.t_us);
+                        if d.completed {
+                            energy_saved_uj += shard_inference_uj[w.shard];
+                            cache_hits
+                                .push(cache_hit(w.id, w.net, w.arrival_us, w.deadline_us, done_at));
+                        } else {
+                            shed_joins += 1; // owner was shed; the join sheds too
+                        }
+                        push_feedback(&mut heap, &mut seq, source, w.id, done_at);
+                    }
+                }
+                continue;
+            }
+
+            let ev = heap.pop().expect("the tier owns the earliest event");
+            let req = ev.req;
+            if record {
+                injected.push(req.clone());
+            }
+            n_tier += 1;
+            span_start = span_start.min(req.arrival_us);
+            let s = self.shard_of(&req);
+            // FIFO router queue: one coordinator front-end per shard —
+            // the delay metric counts only the wait, not the service time
+            let start = router_free[s].max(req.arrival_us);
+            let exit = start + self.config.router_service_us;
+            router_free[s] = exit;
+            router_delay_sum += start - req.arrival_us;
+            let mut fwd = req.clone();
+            fwd.arrival_us = exit;
+            // deadlines stay anchored to the *tier* arrival: the forwarded
+            // request's budget shrinks by the time spent in the router
+            if let Some(dl) = fwd.deadline_us {
+                fwd.deadline_us = Some(dl - (exit - req.arrival_us));
+            }
+
+            if self.config.cache {
+                if !seen_ids.insert(req.id) {
+                    return Err(TierError::DuplicateRequestId(req.id));
+                }
+                lookups += 1;
+                let key = (req.net, req.input_digest);
+                let tick = self.lru_tick;
+                self.lru_tick += 1;
+                if let Some(p) = pending.get_mut(&key) {
+                    // single-flight: the key is owned by an in-flight
+                    // request of this run — join it (or settle at once if
+                    // the owner's fate is already known)
+                    let joiner = Joiner {
+                        id: req.id,
+                        net: req.net,
+                        arrival_us: req.arrival_us,
+                        deadline_us: req.deadline_us,
+                        exit_us: exit,
+                        shard: s,
+                    };
+                    match p.fate {
+                        OwnerFate::InFlight => p.waiters.push(joiner),
+                        OwnerFate::Finished(fin) => {
+                            let done_at = joiner.exit_us.max(fin);
+                            energy_saved_uj += shard_inference_uj[s];
+                            cache_hits.push(cache_hit(
+                                joiner.id,
+                                joiner.net,
+                                joiner.arrival_us,
+                                joiner.deadline_us,
+                                done_at,
+                            ));
+                            push_feedback(&mut heap, &mut seq, source, req.id, done_at);
+                        }
+                        OwnerFate::Shed(t) => {
+                            shed_joins += 1;
+                            push_feedback(
+                                &mut heap,
+                                &mut seq,
+                                source,
+                                req.id,
+                                joiner.exit_us.max(t),
+                            );
+                        }
+                    }
+                    continue;
+                }
+                match self.cache.get_mut(&key) {
+                    Some(CacheEntry::Resolved { last_used }) => {
+                        *last_used = tick; // LRU touch
+                        // resolved in an earlier run: completes at router
+                        // exit, touching no device
+                        energy_saved_uj += shard_inference_uj[s];
+                        cache_hits
+                            .push(cache_hit(req.id, req.net, req.arrival_us, req.deadline_us, exit));
+                        push_feedback(&mut heap, &mut seq, source, req.id, exit);
+                        continue;
+                    }
+                    // a Pending entry can only linger in the persistent
+                    // map if a previous oracle run panicked mid-flight;
+                    // treat it as the miss it effectively is
+                    Some(CacheEntry::Pending(_)) | None => {
+                        pending.insert(
+                            key,
+                            PendingKey { fate: OwnerFate::InFlight, waiters: Vec::new() },
+                        );
+                        pending_order.push(key);
+                        owner_key.insert(req.id, key);
+                    }
+                }
+            }
+            routed[s] += 1;
+            self.shards[s].inject(fwd);
+        }
+
+        // reconcile: owners that completed resolve their key (promotion
+        // order = first-miss order, matching the two-phase oracle's
+        // bookkeeping tick for tick); owners that were shed drop it
+        let mut evictions = 0u64;
+        for key in pending_order {
+            let p = pending.remove(&key).expect("pending keys are recorded in order");
+            debug_assert!(p.waiters.is_empty(), "all owners depart before the heaps drain");
+            if matches!(p.fate, OwnerFate::Finished(_)) {
+                let tick = self.lru_tick;
+                self.lru_tick += 1;
+                self.cache.insert(key, CacheEntry::Resolved { last_used: tick });
+                evictions += self.enforce_cache_bounds(key.0);
+            }
+        }
+
+        let reports: Vec<FleetReport> =
+            self.shards.iter_mut().map(|f| f.end_run().0).collect();
+        let report = self.aggregate(
+            n_tier,
+            span_start,
+            reports,
+            routed,
+            cache_hits,
+            CacheStats {
+                lookups,
+                hits: 0, // filled in aggregate
+                shed_joins,
+                hit_rate: 0.0,
+                energy_saved_uj,
+                entries: self.cache_entries(),
+                evictions,
+            },
+            router_delay_sum,
+        );
+        Ok((report, injected))
+    }
+
+    /// The pre-unification two-phase path — route every request through
+    /// the router FIFOs and the cache up front, then run each shard's
+    /// fleet to completion and reconcile — retained **only** as the
+    /// property-test oracle the unified loop is proven bit-exact against
+    /// on arrival-ordered open-loop workloads
+    /// (`prop_unified_loop_matches_two_phase_oracle`). It cannot serve
+    /// closed-loop sources (no feedback path) and new code should call
+    /// [`ShardedFleet::run`] / [`ShardedFleet::run_source`] instead.
+    pub fn run_two_phase_oracle(&mut self, requests: &[Request]) -> ShardedReport {
         let k = self.shards.len();
         let mut sub: Vec<Vec<Request>> = vec![Vec::new(); k];
         let mut router_free = vec![0.0f64; k];
@@ -571,8 +1010,11 @@ impl ShardedFleet {
             }
         }
 
+        let span_start =
+            requests.iter().map(|r| r.arrival_us).fold(f64::INFINITY, f64::min);
         self.aggregate(
-            requests,
+            requests.len(),
+            span_start,
             reports,
             sub.iter().map(|v| v.len()).collect(),
             cache_hits,
@@ -589,9 +1031,15 @@ impl ShardedFleet {
         )
     }
 
+    /// Fold per-shard reports, cache accounting and router metrics into
+    /// one [`ShardedReport`]. `n_requests` is the number of requests that
+    /// arrived at the tier, `span_start` the earliest tier arrival (used
+    /// for the global throughput span).
+    #[allow(clippy::too_many_arguments)]
     fn aggregate(
         &self,
-        requests: &[Request],
+        n_requests: usize,
+        span_start: f64,
         reports: Vec<FleetReport>,
         per_shard_routed: Vec<usize>,
         cache_hits: Vec<CacheHit>,
@@ -608,16 +1056,14 @@ impl ShardedFleet {
         let total_shed = fleet_shed + cache.shed_joins as usize;
 
         // global serving span: first arrival at the tier to last finish
-        // anywhere in it (fleet completions or cache hits)
-        let span_start =
-            requests.iter().map(|r| r.arrival_us).fold(f64::INFINITY, f64::min);
+        // anywhere in it (fleet completions or cache hits); the
+        // degenerate-span floor is shared with FleetReport — see
+        // `MIN_THROUGHPUT_SPAN_US`
         let span_end = reports
             .iter()
             .flat_map(|r| r.completions.iter().map(|c| c.finish_us))
             .chain(cache_hits.iter().map(|h| h.finish_us))
             .fold(0.0f64, f64::max);
-        let span_us =
-            if total_completed == 0 { 0.0 } else { (span_end - span_start).max(1e-9) };
 
         let lat_sum: f64 = reports
             .iter()
@@ -648,13 +1094,9 @@ impl ShardedFleet {
             per_shard_routed,
             total_completed,
             total_shed,
-            throughput_rps: if span_us > 0.0 {
-                total_completed as f64 / (span_us / 1e6)
-            } else {
-                0.0
-            },
+            throughput_rps: sustained_throughput_rps(total_completed, span_start, span_end),
             mean_service_latency_us: lat_sum / fleet_completed.max(1) as f64,
-            mean_router_delay_us: router_delay_sum / requests.len().max(1) as f64,
+            mean_router_delay_us: router_delay_sum / n_requests.max(1) as f64,
             deadline_misses,
             active_energy_uj,
             idle_energy_uj,
@@ -1218,21 +1660,293 @@ mod tests {
     }
 
     #[test]
-    fn tier_serves_open_loop_sources_and_rejects_closed_loop() {
+    fn tier_serves_open_loop_and_closed_loop_sources() {
         let mut t = tier(2, 2, Policy::LeastLoaded, FleetConfig::default(), ShardConfig {
             shards: 2,
             ..ShardConfig::default()
         });
         let mut w = Workload { rate_per_s: 300.0, deadline_us: None, n_requests: 80, seed: 5 };
-        let via_source = t.run_source(&mut w);
+        let via_source = t.run_source(&mut w).unwrap();
         via_source.check_conservation(80).unwrap();
         let direct = t.run(&w.generate());
         assert_eq!(via_source.total_completed, direct.total_completed);
         assert_eq!(via_source.throughput_rps, direct.throughput_rps);
-        let closed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut src = crate::coordinator::ClosedLoopSource::new(2, 1000.0, 10, 1);
-            t.run_source(&mut src)
-        }));
-        assert!(closed.is_err(), "closed-loop sources must be rejected by the tier");
+        // closed-loop sources are no longer rejected: the unified loop
+        // feeds completions back across the tier, end to end
+        let mut src = crate::coordinator::ClosedLoopSource::new(2, 1000.0, 10, 1);
+        let closed = t.run_source(&mut src).expect("closed loop serves without panicking");
+        assert_eq!(src.issued(), 10, "the full budget must be issued");
+        closed.check_conservation(src.issued()).unwrap();
+        assert_eq!(closed.total_completed, 10);
+    }
+
+    #[test]
+    fn prop_unified_loop_matches_two_phase_oracle() {
+        // the tentpole property: on arrival-ordered open-loop workloads
+        // the unified event loop must be bit-exact against the retained
+        // two-phase oracle — completions, sheds, cache contents and
+        // evictions, energy — across the whole scheduling matrix (all 4
+        // policies x {FIFO, EDF} x stealing x bounded caches x router
+        // cost x tenancy x shard count), including a cache-warm replay
+        check("shard-unified-vs-oracle", 20, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4, 8]);
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: *rng.pick(&[0.0f64, 80.0]),
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.7),
+                cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
+                cache_quota_per_net: *rng.pick(&[3usize, usize::MAX]),
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, 16, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 15_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 30_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+            };
+            let mut unified = tier(8, k, policy, fleet_config, config);
+            let mut oracle = tier(8, k, policy, fleet_config, config);
+            let reqs = tenant_workload(3, 700.0, 120, 0.4, rng.next_u64());
+            for round in 0..2 {
+                let a = unified.run(&reqs);
+                let b = oracle.run_two_phase_oracle(&reqs);
+                a.check_conservation(reqs.len())?;
+                b.check_conservation(reqs.len())?;
+                let ctx = |what: &str| format!("round {round}: {what} diverged");
+                for (s, (ra, rb)) in a.shards.iter().zip(b.shards.iter()).enumerate() {
+                    if ra.completions != rb.completions {
+                        return Err(ctx(&format!("shard {s} completions")));
+                    }
+                    if ra.rejections != rb.rejections {
+                        return Err(ctx(&format!("shard {s} rejections")));
+                    }
+                    if ra.active_energy_uj != rb.active_energy_uj
+                        || ra.net_switches != rb.net_switches
+                        || ra.steals != rb.steals
+                        || ra.batches != rb.batches
+                    {
+                        return Err(ctx(&format!("shard {s} aggregates")));
+                    }
+                }
+                let sort_hits = |mut v: Vec<CacheHit>| {
+                    v.sort_by_key(|h| h.id);
+                    v
+                };
+                if sort_hits(a.cache_hits.clone()) != sort_hits(b.cache_hits.clone()) {
+                    return Err(ctx("cache hits"));
+                }
+                if a.cache.lookups != b.cache.lookups
+                    || a.cache.hits != b.cache.hits
+                    || a.cache.shed_joins != b.cache.shed_joins
+                    || a.cache.evictions != b.cache.evictions
+                    || a.cache.entries != b.cache.entries
+                {
+                    return Err(ctx(&format!("cache stats: {:?} vs {:?}", a.cache, b.cache)));
+                }
+                if (a.cache.energy_saved_uj - b.cache.energy_saved_uj).abs()
+                    > 1e-9 * (1.0 + a.cache.energy_saved_uj.abs())
+                {
+                    return Err(ctx("cache energy-saved estimate"));
+                }
+                if a.total_completed != b.total_completed
+                    || a.total_shed != b.total_shed
+                    || a.per_shard_routed != b.per_shard_routed
+                    || a.throughput_rps != b.throughput_rps
+                    || a.mean_router_delay_us != b.mean_router_delay_us
+                    || a.deadline_misses != b.deadline_misses
+                {
+                    return Err(ctx("tier totals"));
+                }
+                // the persistent cache must have evolved identically
+                if unified.cache_entries() != oracle.cache_entries() {
+                    return Err(ctx("resident cache entries"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_closed_loop_tier_conserves_and_respects_per_client_quotas() {
+        // tier-level conservation under closed loops across the
+        // scheduling matrix, plus per-client issue-quota accounting: the
+        // injected stream must contain exactly each client's quota, ids
+        // must partition into completions + sheds, and every request must
+        // be accounted for exactly once
+        check("shard-closed-loop-conservation", 18, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: *rng.pick(&[0.0f64, 100.0]),
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.5),
+                cache_capacity: *rng.pick(&[8usize, usize::MAX]),
+                ..ShardConfig::default()
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[2usize, 8, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 10_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 25_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+            };
+            let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
+            let clients = 1 + rng.below(6) as usize;
+            let budget = clients + 30 + rng.below(60) as usize;
+            let think = *rng.pick(&[0.0f64, 800.0, 5_000.0]);
+            let mut src = crate::coordinator::ClosedLoopSource::new(
+                clients,
+                think,
+                budget,
+                rng.next_u64(),
+            )
+            .with_nets(2);
+            if rng.chance(0.5) {
+                // shared input universe: repeats across clients exercise
+                // single-flight joins under closed-loop feedback
+                src = src.with_input_universe(8);
+            }
+            let (report, injected) =
+                t.run_source_traced(&mut src).map_err(|e| e.to_string())?;
+            if src.issued() != budget {
+                return Err(format!("issued {} of the {budget} budget", src.issued()));
+            }
+            if injected.len() != budget {
+                return Err(format!("trace recorded {} of {budget} arrivals", injected.len()));
+            }
+            report.check_conservation(budget)?;
+            // per-client quotas: client c owns floor + (c < budget % clients)
+            let mut per_client = vec![0usize; clients];
+            for r in &injected {
+                per_client[(r.id >> 32) as usize] += 1;
+            }
+            for (c, &n) in per_client.iter().enumerate() {
+                let quota = budget / clients + usize::from(c < budget % clients);
+                if n != quota {
+                    return Err(format!(
+                        "client {c} issued {n}, quota {quota} (per-client {per_client:?})"
+                    ));
+                }
+            }
+            // completions + sheds + cache hits partition the issued ids
+            let mut seen: Vec<u64> = report
+                .shards
+                .iter()
+                .flat_map(|r| {
+                    r.completions
+                        .iter()
+                        .map(|c| c.id)
+                        .chain(r.rejections.iter().map(|x| x.id))
+                })
+                .chain(report.cache_hits.iter().map(|h| h.id))
+                .collect();
+            // shed joiners have no per-id record; account for them by count
+            let accounted = seen.len() + report.cache.shed_joins as usize;
+            if accounted != budget {
+                return Err(format!("{accounted} of {budget} ids accounted for"));
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            if seen.len() + report.cache.shed_joins as usize != budget {
+                return Err("duplicate ids across completions/sheds/hits".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closed_loop_single_flight_join_settles_with_its_owner_on_one_shard() {
+        // four closed-loop clients all issuing the *same* input (a
+        // 1-entry input universe): the first becomes the single-flight
+        // owner and is the only request ever forwarded to a device; every
+        // other request joins it (or hits its within-run pending entry
+        // after it finishes) on the same shard — cache-key sharding
+        // guarantees owner and joiners colocate
+        let budget = 24;
+        let config = ShardConfig { shards: 2, cache: true, ..ShardConfig::default() };
+        let mut t = tier(4, 2, Policy::LeastLoaded, FleetConfig::default(), config);
+        let mut src =
+            crate::coordinator::ClosedLoopSource::new(4, 0.0, budget, 9).with_input_universe(1);
+        let (report, injected) = t.run_source_traced(&mut src).unwrap();
+        assert_eq!(src.issued(), budget);
+        report.check_conservation(budget).unwrap();
+        // all requests share one cache key, so they share one shard
+        let home = t.shard_of(&injected[0]);
+        for r in &injected {
+            assert_eq!(t.shard_of(r), home, "cache-key sharding must colocate joiners");
+        }
+        let served: usize = report.shards.iter().map(|r| r.completions.len()).sum();
+        assert_eq!(served, 1, "only the single-flight owner may touch a device");
+        assert_eq!(report.shards[1 - home].completions.len(), 0);
+        assert_eq!(report.cache.hits as usize, budget - 1, "everyone else joins or hits");
+        assert_eq!(report.cache.shed_joins, 0);
+        assert_eq!(report.total_completed, budget);
+        // joiners settle no earlier than the owner's finish
+        let owner_finish = report.shards[home].completions[0].finish_us;
+        for h in &report.cache_hits {
+            assert!(
+                h.finish_us >= owner_finish,
+                "a joiner settled at {} before its owner finished at {owner_finish}",
+                h.finish_us
+            );
+        }
+    }
+
+    #[test]
+    fn run_source_reports_duplicate_ids_as_typed_error() {
+        // library users get a typed error (not a panic) when a source
+        // yields duplicate ids while the cache is on
+        let config = ShardConfig { cache: true, ..ShardConfig::default() };
+        let mut t = tier(2, 1, Policy::LeastLoaded, FleetConfig::default(), config);
+        let dup = |id: u64, arrival_us: f64| Request {
+            id,
+            arrival_us,
+            deadline_us: None,
+            net: 0,
+            input_digest: 7,
+        };
+        let mut src =
+            crate::coordinator::TraceSource::from_requests(vec![dup(5, 0.0), dup(5, 10.0)]);
+        match t.run_source(&mut src) {
+            Err(TierError::DuplicateRequestId(id)) => {
+                assert_eq!(id, 5);
+                let msg = TierError::DuplicateRequestId(id).to_string();
+                assert!(msg.contains("merge_streams"), "{msg}");
+            }
+            other => panic!("expected DuplicateRequestId, got {other:?}"),
+        }
+        // the tier recovers on the next run
+        let ok = t.run(&[dup(0, 0.0)]);
+        ok.check_conservation(1).unwrap();
+    }
+
+    #[test]
+    fn degenerate_span_reports_the_documented_floor_in_the_tier_report() {
+        // one zero-cycle device behind a free router: a request finishes
+        // the instant it arrives. The tier must apply the same documented
+        // 1 us span floor as FleetReport — finite, not zero, not an
+        // epsilon explosion.
+        let mut t = ShardedFleet::new(
+            vec![Device::new("d0".into(), crate::energy::GAP8_LP, 0)],
+            Policy::LeastLoaded,
+            FleetConfig::default(),
+            ShardConfig::default(),
+        );
+        let reqs =
+            vec![Request { id: 0, arrival_us: 250.0, deadline_us: None, net: 0, input_digest: 1 }];
+        let report = t.run(&reqs);
+        report.check_conservation(1).unwrap();
+        assert!(report.throughput_rps.is_finite());
+        assert_eq!(report.throughput_rps, 1e6, "1 completion over the 1 us floor");
+        assert_eq!(report.shards[0].throughput_rps, 1e6, "fleet and tier rules agree");
     }
 }

@@ -47,8 +47,10 @@ networks & runtime:
               --cache-capacity N --cache-quota N --router-us US
               --switch-cycles C --policy tenancy; schedule it with
               --discipline fifo|edf --steal; drive it closed-loop with
-              --closed-loop CLIENTS --think-us US, or record/replay
-              arrival traces with --trace-out/--trace-in FILE
+              --closed-loop CLIENTS --think-us US (composes with the
+              sharded tier: --closed-loop N --shards K feeds completions
+              back across routers, fleets and the cache), or
+              record/replay arrival traces with --trace-out/--trace-in
   emit-spec   print the demo network spec JSON (shared rust/python format)
 
 common options:
@@ -389,15 +391,10 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     let deadline_us = if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None };
     // multi-tenant closed loops run on the single fleet (the client pool
     // spreads clients across the tenant networks); only genuine tier
-    // features — shards, cache, a priced router — force the sharded path
+    // features — shards, cache, a priced router — force the sharded path,
+    // and since the unified tier event loop they compose with
+    // --closed-loop (the feedback edge crosses routers and shards)
     let sharded = shards > 1 || cache || router_us > 0.0 || (tenants > 1 && closed_loop == 0);
-    if closed_loop > 0 && sharded {
-        eprintln!(
-            "error: --closed-loop drives the single-fleet event loop; record its trace \
-             (--trace-out) and replay it (--trace-in) to shard it"
-        );
-        return 2;
-    }
     if closed_loop > 0 && trace_in.is_some() {
         eprintln!("error: --closed-loop and --trace-in are mutually exclusive");
         return 2;
@@ -511,10 +508,6 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         eprintln!("error: need at least one device per shard (--devices {devices} < --shards {shards})");
         return 2;
     }
-    let rc = dump_trace(&requests);
-    if rc != 0 {
-        return rc;
-    }
     let shard_config = ShardConfig {
         shards,
         router_service_us: router_us,
@@ -524,8 +517,40 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         cache_quota_per_net: if cache_quota == 0 { usize::MAX } else { cache_quota },
     };
     let mut tier = ShardedFleet::new(nodes, policy, config, shard_config);
-    let report = tier.run(&requests);
-    if let Err(e) = report.check_conservation(requests.len()) {
+    let (report, offered) = if closed_loop > 0 {
+        // the unified tier event loop closes the feedback edge across
+        // routers, shards and the result cache, so the client pool
+        // drives the whole tier directly
+        let mut src =
+            ClosedLoopSource::new(closed_loop, think_us, n, seed).with_nets(tenants as u32);
+        if let Some(dl) = deadline_us {
+            src = src.with_deadline(dl);
+        }
+        println!(
+            "closed loop: {closed_loop} client(s), {} us mean think time, {n} request budget",
+            f(think_us, 0)
+        );
+        match tier.run_source_traced(&mut src) {
+            Ok((report, injected)) => {
+                let rc = dump_trace(&injected);
+                if rc != 0 {
+                    return rc;
+                }
+                (report, injected.len())
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let rc = dump_trace(&requests);
+        if rc != 0 {
+            return rc;
+        }
+        (tier.run(&requests), requests.len())
+    };
+    if let Err(e) = report.check_conservation(offered) {
         eprintln!("BUG: {e}");
         return 1;
     }
@@ -537,10 +562,8 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         if cache { "on" } else { "off" }
     );
     println!(
-        "  completed      : {} of {} ({} shed)",
-        report.total_completed,
-        requests.len(),
-        report.total_shed
+        "  completed      : {} of {offered} ({} shed)",
+        report.total_completed, report.total_shed
     );
     println!("  throughput     : {} rps", f(report.throughput_rps, 1));
     println!("  service latency: {} ms mean", f(report.mean_service_latency_us / 1e3, 2));

@@ -180,10 +180,60 @@ fn serve_closed_loop_spreads_tenants_on_the_single_fleet() {
 }
 
 #[test]
-fn serve_closed_loop_cannot_shard_directly() {
-    let (_, err, ok) = run(&["serve", "--devices", "4", "--closed-loop", "2", "--shards", "2"]);
-    assert!(!ok);
-    assert!(err.contains("--trace-out"), "{err}");
+fn serve_closed_loop_composes_with_the_sharded_tier() {
+    // the unified tier event loop closes the feedback edge across
+    // routers and shards, so --closed-loop --shards serves directly
+    // (earlier revisions rejected this combination)
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "4",
+        "--closed-loop",
+        "4",
+        "--think-us",
+        "1500",
+        "--shards",
+        "2",
+        "--cache",
+        "--router-us",
+        "50",
+        "--requests",
+        "160",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("closed loop: 4 client(s)"), "{out}");
+    assert!(out.contains("sharded tier: 2 shard(s)"), "{out}");
+    assert!(out.contains("completed      : 160 of 160"), "{out}");
+    assert!(!err.contains("unknown option"), "{err}");
+}
+
+#[test]
+fn serve_closed_loop_sharded_trace_dump() {
+    // a closed-loop sharded run records its injected arrivals, replayable
+    // through --trace-in as an open-loop workload
+    let path = std::env::temp_dir().join(format!("pulpnn_cl_trace_{}.jsonl", std::process::id()));
+    let path_s = path.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "4",
+        "--closed-loop",
+        "3",
+        "--shards",
+        "2",
+        "--requests",
+        "90",
+        "--trace-out",
+        path_s,
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("dumped 90 arrivals"), "{out}");
+    let (out2, err2, ok2) =
+        run(&["serve", "--devices", "4", "--shards", "2", "--trace-in", path_s]);
+    assert!(ok2, "{err2}");
+    assert!(out2.contains("replaying trace"), "{out2}");
+    assert!(out2.contains("completed      : 90 of 90"), "{out2}");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -1,0 +1,84 @@
+//! Source hygiene: corrupted doc-comment markers.
+//!
+//! A doc comment that loses a slash (`//!` becoming `/!`, or `/// Foo`
+//! becoming `/ Foo`) is silently dropped by rustdoc — the line vanishes
+//! from the rendered docs without any warning, and in expression
+//! position it can even parse as a line-wrapped division. This sweep
+//! fails tier-1 on the malformed shapes instead of losing documentation
+//! silently; the `doc markers` CI step runs the equivalent grep so the
+//! failure is also visible without a test run.
+
+use std::path::{Path, PathBuf};
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("source directory exists") {
+        let path = entry.expect("directory entry").path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// A line whose first non-whitespace token looks like a doc-comment
+/// marker that lost a slash: `/!`, or a lone `/` followed by a space and
+/// an uppercase letter, `[`, or a backtick. Legitimate line-wrapped
+/// divisions continue with lowercase identifiers, digits or `(`, so they
+/// never match.
+fn is_corrupted_marker(line: &str) -> bool {
+    let t = line.trim_start();
+    let Some(rest) = t.strip_prefix('/') else {
+        return false;
+    };
+    if rest.starts_with('!') {
+        return true;
+    }
+    match rest.strip_prefix(' ') {
+        Some(after) => after.starts_with(|c: char| c.is_ascii_uppercase() || c == '[' || c == '`'),
+        None => false,
+    }
+}
+
+#[test]
+fn no_corrupted_doc_comment_markers_anywhere_in_the_crate() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+        rust_files(&root.join(dir), &mut files);
+    }
+    assert!(files.len() > 20, "source sweep found suspiciously few files: {}", files.len());
+    let mut bad = Vec::new();
+    for path in files {
+        let text = std::fs::read_to_string(&path).expect("source file is readable UTF-8");
+        for (i, line) in text.lines().enumerate() {
+            if is_corrupted_marker(line) {
+                bad.push(format!("{}:{}: {}", path.display(), i + 1, line.trim()));
+            }
+        }
+    }
+    assert!(
+        bad.is_empty(),
+        "corrupted doc-comment markers (a `/` short of a doc comment — rustdoc drops \
+         these lines silently):\n{}",
+        bad.join("\n")
+    );
+}
+
+#[test]
+fn the_marker_detector_catches_the_known_corruption_shapes() {
+    // the shapes that have actually bitten: `//!` -> `/!` on a module
+    // doc, `/// [...]`-style lines losing slashes mid-paragraph
+    assert!(is_corrupted_marker("/! The horizontally sharded serving tier"));
+    assert!(is_corrupted_marker("    / [`merge_streams`]: crate::coordinator"));
+    assert!(is_corrupted_marker("            / FIFO router queue: one front-end"));
+    assert!(is_corrupted_marker("  / `Fleet` stepping API"));
+    // legitimate lines must never be flagged
+    assert!(!is_corrupted_marker("//! module docs"));
+    assert!(!is_corrupted_marker("/// item docs"));
+    assert!(!is_corrupted_marker("// plain comment"));
+    assert!(!is_corrupted_marker("    / f.devices.len() as f64"));
+    assert!(!is_corrupted_marker("    / r.per_device_utilization.len().max(1) as f64"));
+    assert!(!is_corrupted_marker("let x = a / b;"));
+    assert!(!is_corrupted_marker(""));
+}
