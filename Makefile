@@ -4,7 +4,7 @@ ARTIFACTS ?= artifacts
 SEED ?= 2020
 TRACES ?= traces
 
-.PHONY: all build test bench trace artifacts doc clean
+.PHONY: all build test bench bench-hot trace artifacts doc clean
 
 all: build
 
@@ -14,11 +14,19 @@ build:
 test:
 	cargo test -q
 
-# Fast self-asserting bench pass (the same budget CI uses).
+# Fast self-asserting bench pass (the same budget CI uses). des_hot also
+# emits BENCH_des_hot.json into the repo root (pulpnn-bench-v1) — the
+# machine-readable events/sec + work-counter perf trajectory.
 bench:
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench fleet_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench shard_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench sched_scale
+	PULPNN_BENCH_BUDGET_MS=50 PULPNN_BENCH_JSON=. cargo bench --bench des_hot
+
+# The full-size des_hot run (>= 1.25M simulated requests) with the JSON
+# trajectory — the events/sec baseline later perf PRs must beat.
+bench-hot:
+	PULPNN_BENCH_JSON=. cargo bench --bench des_hot
 
 # Dump the canonical 10k-request mixed-tenant arrival trace (JSONL,
 # replayable anywhere with `pulpnn serve --trace-in`).

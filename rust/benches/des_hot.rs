@@ -1,0 +1,314 @@
+//! des_hot: the serving simulator's *own* hot path, measured.
+//!
+//! The paper's thesis is that throughput comes from restructuring hot
+//! loops around the right data layout; this bench applies the same test
+//! to the simulator that serves the simulated hardware. It drives >= 1M
+//! simulated requests (at the default budget; CI's 50 ms budget shrinks
+//! the run) through a 32-device fleet and an 8-shard cached tier in both
+//! [`HotPathMode`]s and self-asserts:
+//!
+//! 1. **Bit-exactness** — the indexed engine's completions, rejections,
+//!    energy, steals, cache hits and evictions digest identically to the
+//!    instrumented naive oracle's on the full workload.
+//! 2. **Work-counter reductions** — routing scans, EDF insert work,
+//!    shard-clock polls and cache-eviction scans all drop by the
+//!    documented factors (ratios pre-validated in a python DES mirror:
+//!    route ~6.8x at D=32, EDF ~3.8x, clock polls ~4x at K=8).
+//! 3. **Regression ceilings** — deterministic per-request ceilings on
+//!    the *indexed* counters, far below the naive Θ(D)/Θ(K)/Θ(entries)
+//!    levels, so CI fails if a change quietly reintroduces a scan.
+//!
+//! Wall-clock events/sec for both modes is reported through the
+//! `pulpnn-bench-v1` path (`PULPNN_BENCH_JSON` writes
+//! `BENCH_des_hot.json`) — the perf trajectory later PRs must beat.
+
+use pulpnn_mp::coordinator::{
+    gap8_mixed_devices, merge_streams, Fleet, FleetConfig, FleetReport, HotPathMode, Policy,
+    QueueDiscipline, Request, ShardConfig, ShardedFleet, ShardedReport, Workload,
+    DEFAULT_WAKEUP_CYCLES,
+};
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::table::{f, Table};
+
+/// Demo-CNN-scale inference cost (cycles), as in the other serving
+/// benches.
+const CYCLES_PER_INFERENCE: u64 = 300_000;
+const FLEET_DEVICES: usize = 32;
+const TIER_DEVICES: usize = 16;
+const TIER_SHARDS: usize = 8;
+
+fn fnv(h: &mut u64, x: u64) {
+    *h ^= x;
+    *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+}
+
+/// Order-sensitive digest of everything the bit-exactness contract pins
+/// on a fleet report (cheaper than holding two 1M-completion reports for
+/// a structural compare).
+fn digest_fleet(r: &FleetReport) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for c in &r.completions {
+        fnv(&mut h, c.id);
+        fnv(&mut h, c.device as u64);
+        fnv(&mut h, c.batch);
+        fnv(&mut h, c.start_us.to_bits());
+        fnv(&mut h, c.finish_us.to_bits());
+    }
+    for x in &r.rejections {
+        fnv(&mut h, x.id);
+        fnv(&mut h, x.arrival_us.to_bits());
+    }
+    fnv(&mut h, r.active_energy_uj.to_bits());
+    fnv(&mut h, r.steals);
+    fnv(&mut h, r.batches);
+    h
+}
+
+/// Digest of the tier-level contract: every shard's fleet digest plus
+/// cache hits, sheds and eviction accounting.
+fn digest_tier(r: &ShardedReport) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for s in &r.shards {
+        fnv(&mut h, digest_fleet(s));
+    }
+    for c in &r.cache_hits {
+        fnv(&mut h, c.id);
+        fnv(&mut h, c.finish_us.to_bits());
+    }
+    fnv(&mut h, r.total_completed as u64);
+    fnv(&mut h, r.total_shed as u64);
+    fnv(&mut h, r.cache.hits);
+    fnv(&mut h, r.cache.evictions);
+    fnv(&mut h, r.cache.entries as u64);
+    h
+}
+
+fn fleet_capacity_rps(n: usize) -> f64 {
+    gap8_mixed_devices(n, CYCLES_PER_INFERENCE).iter().map(|d| 1e6 / d.inference_us()).sum()
+}
+
+/// ~3x overload with a None / tight / loose deadline mix, so bounded
+/// queues stay deep (EDF ordering and admission control both work hard).
+fn fleet_requests(n: usize) -> Vec<Request> {
+    let mut reqs = Workload {
+        rate_per_s: fleet_capacity_rps(FLEET_DEVICES) * 3.0,
+        deadline_us: None,
+        n_requests: n,
+        seed: 2020,
+    }
+    .generate();
+    for r in &mut reqs {
+        r.deadline_us = match r.id % 3 {
+            0 => None,
+            1 => Some(10_000.0),
+            _ => Some(100_000.0),
+        };
+    }
+    reqs
+}
+
+fn run_fleet(reqs: &[Request], mode: HotPathMode) -> FleetReport {
+    let config = FleetConfig {
+        queue_bound: 64,
+        batch_max: 4,
+        wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
+        discipline: QueueDiscipline::Edf,
+        steal: true,
+        ..FleetConfig::default()
+    };
+    let mut fleet = Fleet::with_config(
+        gap8_mixed_devices(FLEET_DEVICES, CYCLES_PER_INFERENCE),
+        Policy::LeastLoaded,
+        config,
+    );
+    fleet.set_hot_path_mode(mode);
+    fleet.run(reqs)
+}
+
+/// Two-tenant ~2x-overload stream with 40% repeated inputs: the bounded
+/// cache promotes and evicts continuously.
+fn tier_requests(n: usize) -> Vec<Request> {
+    let per_net = n / 2;
+    let rate = fleet_capacity_rps(TIER_DEVICES); // 2x overload in total
+    let mk = |net: u32, seed: u64| {
+        Workload { rate_per_s: rate, deadline_us: Some(50_000.0), n_requests: per_net, seed }
+            .generate_with_repeats(net, 0.4)
+    };
+    merge_streams(&[mk(0, 11), mk(1, 12)])
+}
+
+fn run_tier(reqs: &[Request], mode: HotPathMode) -> ShardedReport {
+    let fleet_config = FleetConfig {
+        queue_bound: 32,
+        batch_max: 4,
+        wakeup_cycles: DEFAULT_WAKEUP_CYCLES,
+        discipline: QueueDiscipline::Edf,
+        steal: true,
+        ..FleetConfig::default()
+    };
+    let config = ShardConfig {
+        shards: TIER_SHARDS,
+        router_service_us: 20.0,
+        cache: true,
+        cache_capacity: 4096,
+        ..ShardConfig::default()
+    };
+    let mut tier = ShardedFleet::new(
+        gap8_mixed_devices(TIER_DEVICES, CYCLES_PER_INFERENCE),
+        Policy::LeastLoaded,
+        fleet_config,
+        config,
+    );
+    tier.set_hot_path_mode(mode);
+    tier.run(reqs)
+}
+
+fn per_req(count: u64, n: usize) -> f64 {
+    count as f64 / n as f64
+}
+
+fn main() {
+    // PULPNN_BENCH_BUDGET_MS also sizes the workload: the full run
+    // simulates >= 1.25M requests; the CI smoke budget shrinks it
+    let budget_ms: u64 = std::env::var("PULPNN_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let (n_fleet, n_tier) =
+        if budget_ms >= 200 { (1_000_000usize, 250_000usize) } else { (60_000, 20_000) };
+
+    // ---- fleet: indexed vs naive oracle --------------------------------
+    let reqs = fleet_requests(n_fleet);
+    let idx = run_fleet(&reqs, HotPathMode::Indexed);
+    let naive = run_fleet(&reqs, HotPathMode::NaiveOracle);
+    assert_eq!(
+        digest_fleet(&idx),
+        digest_fleet(&naive),
+        "indexed fleet diverged from the naive oracle"
+    );
+    assert_eq!(idx.completions.len(), naive.completions.len());
+    assert!(idx.shed > 0, "the fleet scenario must be overloaded");
+    assert!(idx.steals > 0, "the fleet scenario must steal");
+    let (iw, nw) = (idx.work, naive.work);
+    // counter reductions (mirror-measured ~6.8x and ~3.8x; asserted with
+    // wide margins)
+    assert!(
+        nw.route_device_scans >= 2 * iw.route_device_scans,
+        "routing-scan reduction collapsed: naive {} vs indexed {}",
+        nw.route_device_scans,
+        iw.route_device_scans
+    );
+    assert!(
+        2 * nw.edf_shift_ops >= 3 * iw.edf_shift_ops,
+        "EDF insert-work reduction collapsed (<1.5x): naive {} vs indexed {}",
+        nw.edf_shift_ops,
+        iw.edf_shift_ops
+    );
+    // deterministic regression ceilings on the indexed path (a quiet
+    // return to Θ(D) scans or Θ(depth) inserts blows straight past these)
+    assert!(
+        iw.route_device_scans <= 8 * n_fleet as u64,
+        "indexed routing work regressed above 8 scans/request: {:.2}/request",
+        per_req(iw.route_device_scans, n_fleet)
+    );
+    assert!(
+        iw.edf_shift_ops <= 8 * n_fleet as u64,
+        "indexed EDF insert work regressed above 8 ops/request: {:.2}/request",
+        per_req(iw.edf_shift_ops, n_fleet)
+    );
+    // DES events processed: n arrivals + one dispatch and one finish per
+    // activation (stale dispatches excluded — this is the denominator of
+    // the events/sec figure below)
+    let fleet_events = n_fleet as u64 + 2 * idx.batches;
+
+    let mut table = Table::new(vec![
+        "scenario",
+        "counter",
+        "naive/req",
+        "indexed/req",
+        "reduction",
+    ]);
+    let mut row = |scenario: &str, counter: &str, naive_c: u64, idx_c: u64, n: usize| {
+        table.row(vec![
+            scenario.to_string(),
+            counter.to_string(),
+            f(per_req(naive_c, n), 2),
+            f(per_req(idx_c, n), 2),
+            format!("{}x", f(naive_c as f64 / (idx_c.max(1)) as f64, 1)),
+        ]);
+    };
+    let fleet_name = "fleet 32-dev EDF+steal";
+    row(fleet_name, "route device scans", nw.route_device_scans, iw.route_device_scans, n_fleet);
+    row(fleet_name, "EDF shift ops", nw.edf_shift_ops, iw.edf_shift_ops, n_fleet);
+    drop(idx);
+    drop(naive);
+
+    // ---- tier: tournament clock + O(1) LRU vs sweeps -------------------
+    let treqs = tier_requests(n_tier);
+    let tidx = run_tier(&treqs, HotPathMode::Indexed);
+    let tnaive = run_tier(&treqs, HotPathMode::NaiveOracle);
+    assert_eq!(
+        digest_tier(&tidx),
+        digest_tier(&tnaive),
+        "indexed tier diverged from the naive oracle"
+    );
+    tidx.check_conservation(treqs.len()).unwrap();
+    assert!(tidx.cache.evictions > 0, "the tier scenario must evict (bounded cache)");
+    let (tiw, tnw) = (tidx.work, tnaive.work);
+    assert!(
+        tnw.shard_clock_polls >= 2 * tiw.shard_clock_polls,
+        "shard-clock poll reduction collapsed: naive {} vs indexed {}",
+        tnw.shard_clock_polls,
+        tiw.shard_clock_polls
+    );
+    assert!(
+        tnw.cache_entry_scans >= 2 * tiw.cache_entry_scans,
+        "cache-scan reduction collapsed: naive {} vs indexed {}",
+        tnw.cache_entry_scans,
+        tiw.cache_entry_scans
+    );
+    assert!(
+        tiw.shard_clock_polls <= 16 * n_tier as u64,
+        "indexed clock polls regressed above 16/request: {:.2}/request",
+        per_req(tiw.shard_clock_polls, n_tier)
+    );
+    assert!(
+        tiw.cache_entry_scans <= 6 * n_tier as u64,
+        "indexed cache scans regressed above 6/request: {:.2}/request",
+        per_req(tiw.cache_entry_scans, n_tier)
+    );
+    let tier_batches: u64 = tidx.shards.iter().map(|s| s.batches).sum();
+    let routed: usize = tidx.per_shard_routed.iter().sum();
+    let tier_events = n_tier as u64 + routed as u64 + 2 * tier_batches;
+    let tier_name = "tier 8-shard cached";
+    row(tier_name, "shard clock polls", tnw.shard_clock_polls, tiw.shard_clock_polls, n_tier);
+    row(tier_name, "cache entry scans", tnw.cache_entry_scans, tiw.cache_entry_scans, n_tier);
+    drop(tidx);
+    drop(tnaive);
+
+    println!(
+        "DES hot-path work counters ({} fleet + {} tier simulated requests), bit-exact:\n",
+        n_fleet, n_tier
+    );
+    print!("{}", table.render());
+    println!("\nall counter reductions + ceilings self-asserted ✓\n");
+
+    // ---- wall-clock events/sec (the perf trajectory) -------------------
+    let mut b = Bench::new("des_hot");
+    b.run_with_throughput(
+        "fleet/32dev-edf-steal/indexed",
+        Some(("simEvent".into(), fleet_events as f64)),
+        || run_fleet(&reqs, HotPathMode::Indexed).completions.len(),
+    );
+    b.run_with_throughput(
+        "fleet/32dev-edf-steal/naive-oracle",
+        Some(("simEvent".into(), fleet_events as f64)),
+        || run_fleet(&reqs, HotPathMode::NaiveOracle).completions.len(),
+    );
+    b.run_with_throughput(
+        "tier/8shard-cache/indexed",
+        Some(("simEvent".into(), tier_events as f64)),
+        || run_tier(&treqs, HotPathMode::Indexed).total_completed,
+    );
+    b.report();
+}

@@ -171,7 +171,7 @@ pub fn fig5(seed: u64) -> (Vec<Fig5Row>, String) {
     }
     let best = rows
         .iter()
-        .max_by(|a, b| a.speedup_l4.partial_cmp(&b.speedup_l4).unwrap())
+        .max_by(|a, b| a.speedup_l4.total_cmp(&b.speedup_l4))
         .unwrap();
     let mut out = String::from(
         "Fig. 5 — GAP-8 (8 cores) speed-up over STM32H7 / STM32L4, Reference Layer\n\

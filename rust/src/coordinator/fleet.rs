@@ -46,9 +46,26 @@
 //! they are admitted before internal dispatch/finish events, in injection
 //! order — so incremental injection is indistinguishable from pre-loading
 //! the same stream up front.
+//!
+//! Per-event hot-path operations are O(log n) or O(1): routing queries
+//! an incremental index (`RouteIndex`: drain-time keyed sets with a
+//! lazy busy-to-idle migration frontier, per-effective-net groups for
+//! [`Policy::TenancyAware`], a queue-depth set for steal victims)
+//! instead of scanning all devices, and EDF queues are ordered trees
+//! (`EdfQueue`) instead of linear-scan inserts. (One deliberate
+//! exception: [`Policy::EnergyAware`]'s deadline pass stays a
+//! cheapest-first feasibility walk — it wants the first *feasible*
+//! device, which no single ordering can answer — though its per-request
+//! admissible-filter-and-sort is gone.) The pre-index scans are
+//! retained behind [`HotPathMode::NaiveOracle`] as an *instrumented
+//! bit-exactness oracle*: both modes produce identical reports while
+//! their [`WorkCounters`] quantify the reduction (self-asserted by
+//! `benches/des_hot.rs`; invariants documented in `docs/ARCHITECTURE.md`,
+//! "Hot-path data structures").
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::ops::Bound;
 
 use crate::energy::OperatingPoint;
 use crate::util::rng::Rng;
@@ -91,11 +108,79 @@ pub enum QueueDiscipline {
     Edf,
 }
 
-/// EDF sort key: absolute deadline, then arrival. Exact ties keep
-/// insertion order (stable insert in [`Device::enqueue`]); ids are
+/// Order-preserving map from `f64` to `u64`: `fkey(a) < fkey(b)` exactly
+/// when `a.total_cmp(&b)` is `Less`. The hot-path indexes key every float
+/// through this, so ordering is total (a NaN deadline sorts after `+inf`
+/// instead of panicking the way the old `partial_cmp().unwrap()` scans
+/// did).
+pub(crate) fn fkey(f: f64) -> u64 {
+    let b = f.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// EDF sort key: absolute deadline, then arrival, as order-preserving
+/// [`fkey`] bits. Exact ties keep insertion order (the stable linear
+/// insert, or [`EdfQueue`]'s trailing sequence number); ids are
 /// deliberately not part of the key — see [`QueueDiscipline::Edf`].
-fn edf_key(req: &Request) -> (f64, f64) {
-    (req.deadline_us.map_or(f64::INFINITY, |dl| req.arrival_us + dl), req.arrival_us)
+fn edf_key(req: &Request) -> (u64, u64) {
+    (fkey(req.deadline_us.map_or(f64::INFINITY, |dl| req.arrival_us + dl)), fkey(req.arrival_us))
+}
+
+/// A device's pending queue under EDF, backed by an ordered tree keyed
+/// `(absolute deadline, arrival, insertion seq)`: O(log n) ordered insert
+/// and O(log n) pops at *both* ends (head = next dispatch, tail = steal
+/// victim), replacing the linear-scan `position()` + `VecDeque::insert`
+/// path (which survives as the [`HotPathMode::NaiveOracle`] queue). The
+/// trailing sequence number makes equal `(deadline, arrival)` keys stable
+/// in insertion order, exactly like the stable linear insert —
+/// property-tested against it, duplicates and deadline-free requests
+/// included.
+#[derive(Debug, Clone, Default)]
+struct EdfQueue {
+    map: BTreeMap<(u64, u64, u64), Request>,
+    seq: u64,
+}
+
+impl EdfQueue {
+    fn push(&mut self, req: Request) {
+        let (dl, arr) = edf_key(&req);
+        self.map.insert((dl, arr, self.seq), req);
+        self.seq += 1;
+    }
+
+    fn front(&self) -> Option<&Request> {
+        self.map.values().next()
+    }
+
+    fn back(&self) -> Option<&Request> {
+        self.map.values().next_back()
+    }
+
+    fn pop_front(&mut self) -> Option<Request> {
+        self.map.pop_first().map(|(_, r)| r)
+    }
+
+    fn pop_back(&mut self) -> Option<Request> {
+        self.map.pop_last().map(|(_, r)| r)
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Storage behind a device's pending queue: a `VecDeque` for FIFO (and
+/// for the naive-oracle EDF linear insert), or the [`EdfQueue`] tree for
+/// indexed EDF. Selected per run by [`Fleet`]'s discipline and
+/// [`HotPathMode`].
+#[derive(Debug, Clone)]
+enum PendingQueue {
+    List(VecDeque<Request>),
+    Tree(EdfQueue),
 }
 
 /// Serving-engine knobs.
@@ -152,6 +237,70 @@ impl Default for FleetConfig {
 /// `8 * isa::cost::BARRIER_COST` of it).
 pub const DEFAULT_WAKEUP_CYCLES: u64 = 10_000;
 
+/// Which implementation the engine's per-event hot paths run on.
+///
+/// Serving semantics are identical either way — `NaiveOracle` exists so
+/// property tests and `benches/des_hot.rs` can *prove* it: both modes
+/// must produce byte-identical reports while their [`WorkCounters`]
+/// diverge (Θ(n) scans vs O(log n)/O(1) index operations). Select with
+/// [`Fleet::set_hot_path_mode`] /
+/// [`ShardedFleet::set_hot_path_mode`](super::shard::ShardedFleet::set_hot_path_mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HotPathMode {
+    /// Incremental indexes on the hot paths (the default): drain-time
+    /// keyed routing sets, tree-ordered EDF queues, the sharded tier's
+    /// shard-clock tournament and its O(1) LRU recency lists.
+    #[default]
+    Indexed,
+    /// The pre-index linear scans, retained as the *instrumented
+    /// bit-exactness oracle* — the routing/queueing/eviction analogue of
+    /// [`run_two_phase_oracle`](super::shard::ShardedFleet::run_two_phase_oracle).
+    NaiveOracle,
+}
+
+/// Deterministic hot-path work counters — the perf trajectory CI gates on
+/// (unlike wall-clock, these cannot flake). Each counts *elements
+/// examined*, so serving one workload in both [`HotPathMode`]s quantifies
+/// the index reductions exactly; `benches/des_hot.rs` self-asserts them
+/// and `docs/BENCHMARKS.md` documents the exact semantics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkCounters {
+    /// Devices (naive) or index nodes (indexed) examined while routing
+    /// arrivals and selecting steal victims.
+    pub route_device_scans: u64,
+    /// EDF ordered-insert work: elements scanned past by the naive linear
+    /// insert, or the `⌊log2(n+1)⌋ + 1` tree-descent bound per indexed
+    /// insert. Zero under FIFO.
+    pub edf_shift_ops: u64,
+    /// Per-shard next-event clocks polled by the sharded tier's global
+    /// loop: K per event for the naive sweep; one tournament peek per
+    /// event plus one refresh per shard-head change when indexed. Zero
+    /// for a bare fleet.
+    pub shard_clock_polls: u64,
+    /// Result-cache entries examined by LRU/quota bookkeeping: full-map
+    /// scans per bounded promotion and per eviction when naive, O(1)
+    /// recency-list operations when indexed. Zero for a bare fleet.
+    pub cache_entry_scans: u64,
+}
+
+impl WorkCounters {
+    /// Fold `other` into `self` (the tier aggregates shard counters this
+    /// way).
+    pub fn merge(&mut self, other: &WorkCounters) {
+        self.route_device_scans += other.route_device_scans;
+        self.edf_shift_ops += other.edf_shift_ops;
+        self.shard_clock_polls += other.shard_clock_polls;
+        self.cache_entry_scans += other.cache_entry_scans;
+    }
+
+    /// Sum of all four counters (a scalar "hot-path work" figure for
+    /// quick comparisons).
+    pub fn total(&self) -> u64 {
+        self.route_device_scans + self.edf_shift_ops + self.shard_clock_polls
+            + self.cache_entry_scans
+    }
+}
+
 /// One simulated edge node.
 #[derive(Debug, Clone)]
 pub struct Device {
@@ -165,8 +314,8 @@ pub struct Device {
     pub served: u64,
     /// Active (computing) energy, including residency-switch energy.
     pub energy_uj: f64,
-    /// Pending requests (FIFO).
-    queue: VecDeque<Request>,
+    /// Pending requests, in discipline order (see [`PendingQueue`]).
+    queue: PendingQueue,
     /// End of the in-flight activation (valid while `in_flight`).
     busy_until_us: f64,
     in_flight: bool,
@@ -195,7 +344,7 @@ impl Device {
             cycles_per_inference,
             served: 0,
             energy_uj: 0.0,
-            queue: VecDeque::new(),
+            queue: PendingQueue::List(VecDeque::new()),
             busy_until_us: 0.0,
             in_flight: false,
             committed_free_us: 0.0,
@@ -226,12 +375,70 @@ impl Device {
     /// empty. `None` on a cold device. This is what
     /// [`Policy::TenancyAware`] routes on.
     pub fn effective_net(&self) -> Option<u32> {
-        self.queue.back().map(|r| r.net).or(self.resident_net)
+        self.queue_back().map(|r| r.net).or(self.resident_net)
     }
 
     /// Current pending-queue depth (excludes the in-flight batch).
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.queue_len()
+    }
+
+    fn queue_len(&self) -> usize {
+        match &self.queue {
+            PendingQueue::List(q) => q.len(),
+            PendingQueue::Tree(t) => t.len(),
+        }
+    }
+
+    /// Head of the pending queue in discipline order (next to dispatch).
+    fn queue_front(&self) -> Option<&Request> {
+        match &self.queue {
+            PendingQueue::List(q) => q.front(),
+            PendingQueue::Tree(t) => t.front(),
+        }
+    }
+
+    /// Tail of the pending queue in discipline order (the steal victim).
+    fn queue_back(&self) -> Option<&Request> {
+        match &self.queue {
+            PendingQueue::List(q) => q.back(),
+            PendingQueue::Tree(t) => t.back(),
+        }
+    }
+
+    fn queue_pop_front(&mut self) -> Option<Request> {
+        match &mut self.queue {
+            PendingQueue::List(q) => q.pop_front(),
+            PendingQueue::Tree(t) => t.pop_front(),
+        }
+    }
+
+    fn queue_pop_back(&mut self) -> Option<Request> {
+        match &mut self.queue {
+            PendingQueue::List(q) => q.pop_back(),
+            PendingQueue::Tree(t) => t.pop_back(),
+        }
+    }
+
+    /// Reset the pending queue to the representation the run's discipline
+    /// and [`HotPathMode`] call for (tree-ordered EDF only when indexed).
+    fn reset_queue(&mut self, discipline: QueueDiscipline, mode: HotPathMode) {
+        self.queue = match (discipline, mode) {
+            (QueueDiscipline::Edf, HotPathMode::Indexed) => {
+                PendingQueue::Tree(EdfQueue::default())
+            }
+            _ => PendingQueue::List(VecDeque::new()),
+        };
+    }
+
+    /// Append a stolen request. The thief's queue is empty at steal time,
+    /// so a plain append preserves discipline order in both
+    /// representations (the tree insert keys it normally).
+    fn push_stolen(&mut self, req: Request) {
+        match &mut self.queue {
+            PendingQueue::List(q) => q.push_back(req),
+            PendingQueue::Tree(t) => t.push(req),
+        }
     }
 
     /// End of the in-flight activation (the last finish time once idle).
@@ -247,18 +454,29 @@ impl Device {
 
     /// Insert a pending request in discipline order: FIFO appends; EDF
     /// inserts before the first queued request with a strictly later
-    /// absolute deadline (stable — equal deadlines keep arrival order).
-    fn enqueue(&mut self, req: Request, discipline: QueueDiscipline) {
-        match discipline {
-            QueueDiscipline::Fifo => self.queue.push_back(req),
-            QueueDiscipline::Edf => {
+    /// `(absolute deadline, arrival)` key (stable — equal keys keep
+    /// insertion order). The tree representation pays the
+    /// `⌊log2(n+1)⌋ + 1` descent bound, the naive list scans for the
+    /// insert position; both are charged to
+    /// [`WorkCounters::edf_shift_ops`].
+    fn enqueue(&mut self, req: Request, discipline: QueueDiscipline, work: &mut WorkCounters) {
+        match (&mut self.queue, discipline) {
+            (PendingQueue::List(q), QueueDiscipline::Fifo) => q.push_back(req),
+            (PendingQueue::List(q), QueueDiscipline::Edf) => {
                 let key = edf_key(&req);
-                let pos = self
-                    .queue
-                    .iter()
-                    .position(|q| edf_key(q) > key)
-                    .unwrap_or(self.queue.len());
-                self.queue.insert(pos, req);
+                let mut pos = q.len();
+                for (i, r) in q.iter().enumerate() {
+                    work.edf_shift_ops += 1;
+                    if edf_key(r) > key {
+                        pos = i;
+                        break;
+                    }
+                }
+                q.insert(pos, req);
+            }
+            (PendingQueue::Tree(t), _) => {
+                work.edf_shift_ops += u64::from(usize::BITS - (t.len() + 1).leading_zeros());
+                t.push(req);
             }
         }
     }
@@ -357,6 +575,10 @@ pub struct FleetReport {
     /// Requests moved between device queues by work stealing
     /// ([`FleetConfig::steal`]).
     pub steals: u64,
+    /// Deterministic hot-path work counters for this run (routing scans
+    /// and EDF insert work; the shard-tier counters stay zero for a bare
+    /// fleet). See [`WorkCounters`].
+    pub work: WorkCounters,
 }
 
 /// Floor applied to the sustained-throughput span, in microseconds.
@@ -422,7 +644,7 @@ impl FleetReport {
                 .filter(|c| c.device == d)
                 .map(|c| (c.start_us, c.finish_us))
                 .collect();
-            times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            times.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in times.windows(2) {
                 if w[1].0 < w[0].1 - 1e-9 {
                     return Err(format!("device {d}: overlapping runs {w:?}"));
@@ -478,10 +700,11 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // reversed on every key: min-heap behaviour out of BinaryHeap
+        // (total_cmp: a NaN timestamp orders after +inf instead of
+        // panicking mid-loop)
         other
             .time
-            .partial_cmp(&self.time)
-            .expect("event times are finite")
+            .total_cmp(&self.time)
             .then_with(|| other.band.cmp(&self.band))
             .then_with(|| other.seq.cmp(&self.seq))
     }
@@ -515,6 +738,9 @@ struct RunState {
     completions: Vec<Completion>,
     rejections: Vec<Rejection>,
     series: Vec<QueueSample>,
+    /// Scratch buffer for the micro-batch being drained — reused across
+    /// dispatches so the hot loop allocates nothing per event.
+    batch: Vec<Request>,
     batches: u64,
     batched_requests: u64,
     steals: u64,
@@ -531,6 +757,7 @@ impl RunState {
             completions: Vec::new(),
             rejections: Vec::new(),
             series: Vec::new(),
+            batch: Vec::new(),
             batches: 0,
             batched_requests: 0,
             steals: 0,
@@ -544,6 +771,296 @@ impl RunState {
     }
 }
 
+/// Per-device snapshot of the keys a device currently holds in the
+/// routing index — what [`RouteIndex::reindex`] removes before
+/// re-inserting the device under its new state. All floats are stored as
+/// order-preserving [`fkey`] bits.
+#[derive(Debug, Clone, Copy, Default)]
+struct DevSnap {
+    /// Queue below the bound (full devices leave every routing set).
+    admissible: bool,
+    /// `committed_free_us <= now` as of the last (re)index or migration.
+    drained: bool,
+    /// `fkey(committed_free_us + inference_us)` — the busy-side key.
+    fa: u64,
+    /// `fkey(inference_us)` — the idle-side key.
+    inf: u64,
+    /// `fkey(committed_free_us)` — the release-frontier key.
+    cfu: u64,
+    /// [`Device::effective_net`] — the TenancyAware group.
+    group: Option<u32>,
+    /// Pending-queue depth — the steal-victim key.
+    depth: usize,
+}
+
+/// Per-effective-net candidate sets for [`Policy::TenancyAware`].
+#[derive(Debug, Clone, Default)]
+struct NetGroup {
+    busy: BTreeSet<(u64, usize)>,
+    idle: BTreeSet<(u64, usize)>,
+}
+
+/// The incremental routing index: every per-arrival routing query is a
+/// handful of O(log D) set peeks instead of an O(D) (or, for
+/// [`Policy::EnergyAware`], O(D log D)) scan over all devices.
+///
+/// Maintained *eagerly* — each device mutation removes the device's old
+/// keys (recorded in its [`DevSnap`]) and re-inserts the new ones, so no
+/// stale entries exist and every query is exact. Invariants (see
+/// `docs/ARCHITECTURE.md`, "Hot-path data structures"):
+///
+/// * Only *admissible* devices (queue below the bound) appear in
+///   `admissible` / `busy` / `idle` / the per-net groups / `ea_fallback`.
+/// * A device is *drained* once the event clock has passed its projected
+///   drain: drained devices sit in `idle` keyed by inference time (their
+///   projected finish is `now + inference`), busy ones in `busy` keyed by
+///   `committed_free_us + inference` (the exact float the naive scan
+///   computes, so ties break identically). The `release` frontier (keyed
+///   by `committed_free_us`) migrates busy devices to the idle side as
+///   the clock advances past them — amortized O(log D) per commitment,
+///   because only a new commitment can make a drained device busy again.
+/// * `depths` holds `(queue depth >= 1, device)` for steal-victim
+///   selection: one peek finds the max depth, and only devices tied at
+///   that depth are examined for the residency-affinity tie-break.
+///
+/// Only the sets the run's policy/steal knobs need are live; under
+/// [`HotPathMode::NaiveOracle`] the index is disabled entirely.
+#[derive(Debug, Clone, Default)]
+struct RouteIndex {
+    enabled: bool,
+    use_admissible: bool,
+    use_ll: bool,
+    use_groups: bool,
+    use_ea: bool,
+    use_depths: bool,
+    /// Admissible devices, for the RoundRobin successor query.
+    admissible: BTreeSet<usize>,
+    /// `(fkey(cfu + inf), device)` over admissible busy devices.
+    busy: BTreeSet<(u64, usize)>,
+    /// `(fkey(inf), device)` over admissible drained devices.
+    idle: BTreeSet<(u64, usize)>,
+    /// `(fkey(cfu), device)` over the devices currently in `busy` — the
+    /// busy-to-idle migration frontier.
+    release: BTreeSet<(u64, usize)>,
+    /// TenancyAware per-effective-net candidate sets.
+    groups: HashMap<Option<u32>, NetGroup>,
+    /// EnergyAware no-deadline fallback: `(fkey(cfu), energy rank)` over
+    /// admissible devices (the naive path's `min_by` on raw drain with
+    /// ties in energy order).
+    ea_fallback: BTreeSet<(u64, u32)>,
+    /// `(queue depth >= 1, device)` for steal-victim selection.
+    depths: BTreeSet<(usize, usize)>,
+    /// Devices in energy-rank order (rank -> device), fixed per run.
+    energy_order: Vec<usize>,
+    /// Inverse of `energy_order` (device -> rank).
+    energy_rank: Vec<u32>,
+    /// Current index keys per device.
+    snap: Vec<DevSnap>,
+}
+
+impl RouteIndex {
+    /// Rebuild from scratch for a run: configure which sets are live for
+    /// this policy/steal/mode combination and index every device (all
+    /// drained at t = 0).
+    fn rebuild(
+        &mut self,
+        devices: &[Device],
+        policy: Policy,
+        config: &FleetConfig,
+        mode: HotPathMode,
+    ) {
+        self.admissible.clear();
+        self.busy.clear();
+        self.idle.clear();
+        self.release.clear();
+        self.groups.clear();
+        self.ea_fallback.clear();
+        self.depths.clear();
+        self.enabled = mode == HotPathMode::Indexed;
+        self.use_admissible = self.enabled && policy == Policy::RoundRobin;
+        self.use_ll =
+            self.enabled && matches!(policy, Policy::LeastLoaded | Policy::TenancyAware);
+        self.use_groups = self.enabled && policy == Policy::TenancyAware;
+        self.use_ea = self.enabled && policy == Policy::EnergyAware;
+        self.use_depths = self.enabled && config.steal;
+        self.snap = vec![DevSnap::default(); devices.len()];
+        if self.use_ea {
+            // fixed per run (operating points and cycle counts don't
+            // change mid-run): a stable sort on per-inference energy
+            // reproduces the naive path's filter-then-stable-sort order
+            // exactly — equal energies keep ascending device index
+            let mut order: Vec<usize> = (0..devices.len()).collect();
+            order.sort_by_key(|&i| fkey(devices[i].op.energy_uj(devices[i].cycles_per_inference)));
+            self.energy_rank = vec![0; devices.len()];
+            for (rank, &d) in order.iter().enumerate() {
+                self.energy_rank[d] = rank as u32;
+            }
+            self.energy_order = order;
+        } else {
+            self.energy_order.clear();
+            self.energy_rank.clear();
+        }
+        if self.enabled {
+            for d in 0..devices.len() {
+                self.reindex(d, &devices[d], config.queue_bound, 0.0);
+            }
+        }
+    }
+
+    /// Remove a device's current index entries and re-insert them for its
+    /// new state — called after any mutation of its queue, projected
+    /// drain or residency. O(log D).
+    fn reindex(&mut self, d: usize, dev: &Device, bound: usize, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        let old = self.snap[d];
+        if old.admissible {
+            if self.use_admissible {
+                self.admissible.remove(&d);
+            }
+            if self.use_ll {
+                if old.drained {
+                    self.idle.remove(&(old.inf, d));
+                } else {
+                    self.busy.remove(&(old.fa, d));
+                    self.release.remove(&(old.cfu, d));
+                }
+            }
+            if self.use_groups {
+                let g = self.groups.entry(old.group).or_default();
+                if old.drained {
+                    g.idle.remove(&(old.inf, d));
+                } else {
+                    g.busy.remove(&(old.fa, d));
+                }
+            }
+            if self.use_ea {
+                self.ea_fallback.remove(&(old.cfu, self.energy_rank[d]));
+            }
+        }
+        if self.use_depths && old.depth >= 1 {
+            self.depths.remove(&(old.depth, d));
+        }
+        let depth = dev.queue_len();
+        let cfu = dev.committed_free_us;
+        let inf = dev.inference_us();
+        let new = DevSnap {
+            admissible: depth < bound,
+            drained: cfu <= now,
+            fa: fkey(cfu + inf),
+            inf: fkey(inf),
+            cfu: fkey(cfu),
+            group: dev.effective_net(),
+            depth,
+        };
+        if new.admissible {
+            if self.use_admissible {
+                self.admissible.insert(d);
+            }
+            if self.use_ll {
+                if new.drained {
+                    self.idle.insert((new.inf, d));
+                } else {
+                    self.busy.insert((new.fa, d));
+                    self.release.insert((new.cfu, d));
+                }
+            }
+            if self.use_groups {
+                let g = self.groups.entry(new.group).or_default();
+                if new.drained {
+                    g.idle.insert((new.inf, d));
+                } else {
+                    g.busy.insert((new.fa, d));
+                }
+            }
+            if self.use_ea {
+                self.ea_fallback.insert((new.cfu, self.energy_rank[d]));
+            }
+        }
+        if self.use_depths && depth >= 1 {
+            self.depths.insert((depth, d));
+        }
+        self.snap[d] = new;
+    }
+
+    /// Migrate devices whose projected drain the clock has passed to the
+    /// idle side. Amortized O(log D): a device re-enters the `release`
+    /// frontier only when new work is committed to it.
+    fn advance(&mut self, now: f64, work: &mut WorkCounters) {
+        if !self.use_ll {
+            return;
+        }
+        let now_key = fkey(now);
+        while let Some(&(cfu, d)) = self.release.first() {
+            if cfu > now_key {
+                break;
+            }
+            work.route_device_scans += 1;
+            self.release.remove(&(cfu, d));
+            let snap = self.snap[d];
+            self.busy.remove(&(snap.fa, d));
+            self.idle.insert((snap.inf, d));
+            if self.use_groups {
+                let g = self.groups.entry(snap.group).or_default();
+                g.busy.remove(&(snap.fa, d));
+                g.idle.insert((snap.inf, d));
+            }
+            self.snap[d].drained = true;
+        }
+    }
+
+    /// Best device of one `(busy, idle)` candidate pair at `now`: the
+    /// minimum projected finish `max(drain, now) + inference`, ties by
+    /// device index — exactly the order the naive `min_by` scan uses.
+    ///
+    /// The busy side is one peek (its stored key *is* the projected
+    /// finish). The idle side peeks the minimum-inference device and then
+    /// walks only the distinct inference values whose rounded
+    /// `now + inference` collapses onto the same float (normally none),
+    /// so index ties still resolve exactly like the scan.
+    fn best_of(
+        busy: &BTreeSet<(u64, usize)>,
+        idle: &BTreeSet<(u64, usize)>,
+        devices: &[Device],
+        now: f64,
+        work: &mut WorkCounters,
+    ) -> Option<usize> {
+        work.route_device_scans += 2;
+        let best_busy = busy.first().copied();
+        let best_idle = idle.first().map(|&(inf0, d0)| {
+            let k0 = fkey(now + devices[d0].inference_us());
+            let mut best = (k0, d0);
+            let mut lower = inf0;
+            loop {
+                // first entry of the next distinct-inference group; a
+                // larger inference can only round to an equal-or-later
+                // finish, so stop at the first strictly later one
+                let next = idle
+                    .range((Bound::Excluded((lower, usize::MAX)), Bound::Unbounded))
+                    .next()
+                    .copied();
+                let Some((inf, d)) = next else { break };
+                work.route_device_scans += 1;
+                let key = fkey(now + devices[d].inference_us());
+                if key > k0 {
+                    break;
+                }
+                if d < best.1 {
+                    best = (key, d);
+                }
+                lower = inf;
+            }
+            best
+        });
+        match (best_busy, best_idle) {
+            (None, None) => None,
+            (Some((_, d)), None) | (None, Some((_, d))) => Some(d),
+            (Some(b), Some(i)) => Some(if b <= i { b.1 } else { i.1 }),
+        }
+    }
+}
+
 /// The coordinator.
 pub struct Fleet {
     /// The devices this coordinator serves on.
@@ -553,6 +1070,13 @@ pub struct Fleet {
     /// Serving-engine knobs.
     pub config: FleetConfig,
     rr_next: usize,
+    /// Hot-path implementation selector (default
+    /// [`HotPathMode::Indexed`]).
+    mode: HotPathMode,
+    /// Work counters of the current (or just-finished) run.
+    work: WorkCounters,
+    /// The incremental routing index (rebuilt per run).
+    index: RouteIndex,
     /// The in-flight event-driven run, if one is open (see
     /// [`Fleet::begin_run`]).
     run_state: Option<RunState>,
@@ -569,7 +1093,29 @@ impl Fleet {
         assert!(!devices.is_empty());
         assert!(config.queue_bound >= 1, "queue_bound must be >= 1");
         assert!(config.batch_max >= 1, "batch_max must be >= 1");
-        Fleet { devices, policy, config, rr_next: 0, run_state: None }
+        Fleet {
+            devices,
+            policy,
+            config,
+            rr_next: 0,
+            mode: HotPathMode::default(),
+            work: WorkCounters::default(),
+            index: RouteIndex::default(),
+            run_state: None,
+        }
+    }
+
+    /// Select the hot-path implementation for subsequent runs (see
+    /// [`HotPathMode`]). `NaiveOracle` exists for property tests and the
+    /// `des_hot` bench; serving output is identical in both modes.
+    pub fn set_hot_path_mode(&mut self, mode: HotPathMode) {
+        self.mode = mode;
+    }
+
+    /// Hot-path work counters of the most recent run (also carried in
+    /// [`FleetReport::work`]).
+    pub fn work_counters(&self) -> WorkCounters {
+        self.work
     }
 
     fn wakeup_us(&self, d: usize) -> f64 {
@@ -579,53 +1125,161 @@ impl Fleet {
     /// Pick a device for a request arriving at `now`, considering only
     /// devices whose bounded queue has room. Returns `None` when every
     /// admissible queue is full (the request is shed).
+    ///
+    /// Under [`HotPathMode::Indexed`] (the default) this is a handful of
+    /// O(log D) [`RouteIndex`] queries; [`HotPathMode::NaiveOracle`]
+    /// routes with the original O(D) scans ([`Fleet::route_naive`]) —
+    /// property tests prove both pick identical devices on every
+    /// workload.
     fn route(&mut self, req: &Request, now: f64) -> Option<usize> {
+        if self.mode == HotPathMode::NaiveOracle {
+            return self.route_naive(req, now);
+        }
+        self.index.advance(now, &mut self.work);
+        match self.policy {
+            Policy::RoundRobin => {
+                // successor of the rotation cursor among admissible
+                // devices, wrapping to the smallest
+                self.work.route_device_scans += 1;
+                let d = self
+                    .index
+                    .admissible
+                    .range(self.rr_next..)
+                    .next()
+                    .or_else(|| self.index.admissible.iter().next())
+                    .copied()?;
+                self.rr_next = (d + 1) % self.devices.len();
+                Some(d)
+            }
+            Policy::LeastLoaded => RouteIndex::best_of(
+                &self.index.busy,
+                &self.index.idle,
+                &self.devices,
+                now,
+                &mut self.work,
+            ),
+            Policy::EnergyAware => self.route_energy_indexed(req, now),
+            Policy::TenancyAware => {
+                // residency-affinity ranks are strict: an admissible
+                // matching-net device always beats a cold one, which
+                // always beats an evicting one — so probe the per-net
+                // group, then the cold group, then the global sets
+                // (which, with the first two empty, hold exactly the
+                // rank-2 devices)
+                if let Some(g) = self.index.groups.get(&Some(req.net)) {
+                    if let Some(d) =
+                        RouteIndex::best_of(&g.busy, &g.idle, &self.devices, now, &mut self.work)
+                    {
+                        return Some(d);
+                    }
+                }
+                if let Some(g) = self.index.groups.get(&None) {
+                    if let Some(d) =
+                        RouteIndex::best_of(&g.busy, &g.idle, &self.devices, now, &mut self.work)
+                    {
+                        return Some(d);
+                    }
+                }
+                RouteIndex::best_of(
+                    &self.index.busy,
+                    &self.index.idle,
+                    &self.devices,
+                    now,
+                    &mut self.work,
+                )
+            }
+        }
+    }
+
+    /// EnergyAware routing over the precomputed energy order: the
+    /// deadline pass walks devices cheapest-first (inherently sequential
+    /// — it wants the first *feasible* device, not a minimum), but the
+    /// naive path's per-request admissible-filter-and-sort is gone and
+    /// the no-deadline fallback is a single peek of the
+    /// `(drain, energy rank)` set.
+    fn route_energy_indexed(&mut self, req: &Request, now: f64) -> Option<usize> {
+        if self.index.ea_fallback.is_empty() {
+            return None;
+        }
+        let bound = self.config.queue_bound;
+        if let Some(dl) = req.deadline_us {
+            for &d in &self.index.energy_order {
+                let dev = &self.devices[d];
+                if dev.queue_len() >= bound {
+                    continue;
+                }
+                self.work.route_device_scans += 1;
+                // projected drain including wake-ups: committed only
+                // accrues wake cost at dispatch, so add one wake-up per
+                // activation still needed to drain the queue plus this
+                // request (batches may split on network boundaries, so
+                // this is still a lower bound)
+                let activations = (dev.queue_len() + 1).div_ceil(self.config.batch_max);
+                let finish = dev.committed_free_us.max(now)
+                    + dev.inference_us()
+                    + activations as f64 * self.wakeup_us(d);
+                if finish - req.arrival_us <= dl {
+                    return Some(d);
+                }
+            }
+        }
+        // no deadline (or none can meet it): cheapest with the earliest
+        // projected drain
+        self.work.route_device_scans += 1;
+        let &(_, rank) = self.index.ea_fallback.first()?;
+        Some(self.index.energy_order[rank as usize])
+    }
+
+    /// The pre-index routing scans — the instrumented oracle behind
+    /// [`HotPathMode::NaiveOracle`] (identical decisions, Θ(D) work).
+    fn route_naive(&mut self, req: &Request, now: f64) -> Option<usize> {
         let bound = self.config.queue_bound;
         match self.policy {
             Policy::RoundRobin => {
                 let n = self.devices.len();
                 for k in 0..n {
                     let d = (self.rr_next + k) % n;
-                    if self.devices[d].queue.len() < bound {
+                    self.work.route_device_scans += 1;
+                    if self.devices[d].queue_len() < bound {
                         self.rr_next = (d + 1) % n;
                         return Some(d);
                     }
                 }
                 None
             }
-            Policy::LeastLoaded => self
-                .devices
-                .iter()
-                .enumerate()
-                .filter(|(_, dev)| dev.queue.len() < bound)
-                .min_by(|(_, a), (_, b)| {
-                    let fa = a.committed_free_us.max(now) + a.inference_us();
-                    let fb = b.committed_free_us.max(now) + b.inference_us();
-                    fa.partial_cmp(&fb).unwrap()
-                })
-                .map(|(i, _)| i),
+            Policy::LeastLoaded => {
+                self.work.route_device_scans +=
+                    self.devices.iter().filter(|dev| dev.queue_len() < bound).count() as u64;
+                self.devices
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, dev)| dev.queue_len() < bound)
+                    .min_by(|(_, a), (_, b)| {
+                        let fa = a.committed_free_us.max(now) + a.inference_us();
+                        let fb = b.committed_free_us.max(now) + b.inference_us();
+                        fa.total_cmp(&fb)
+                    })
+                    .map(|(i, _)| i)
+            }
             Policy::EnergyAware => {
                 // admissible devices, energy-sorted
                 let mut order: Vec<usize> = (0..self.devices.len())
-                    .filter(|&i| self.devices[i].queue.len() < bound)
+                    .filter(|&i| self.devices[i].queue_len() < bound)
                     .collect();
+                self.work.route_device_scans += order.len() as u64;
                 if order.is_empty() {
                     return None;
                 }
                 order.sort_by(|&a, &b| {
                     let ea = self.devices[a].op.energy_uj(self.devices[a].cycles_per_inference);
                     let eb = self.devices[b].op.energy_uj(self.devices[b].cycles_per_inference);
-                    ea.partial_cmp(&eb).unwrap()
+                    ea.total_cmp(&eb)
                 });
                 if let Some(dl) = req.deadline_us {
                     for &d in &order {
+                        self.work.route_device_scans += 1;
                         let dev = &self.devices[d];
-                        // projected drain including wake-ups: committed only
-                        // accrues wake cost at dispatch, so add one wake-up
-                        // per activation still needed to drain the queue
-                        // plus this request (batches may split on network
-                        // boundaries, so this is still a lower bound)
-                        let activations = (dev.queue.len() + 1).div_ceil(self.config.batch_max);
+                        let activations = (dev.queue_len() + 1).div_ceil(self.config.batch_max);
                         let finish = dev.committed_free_us.max(now)
                             + dev.inference_us()
                             + activations as f64 * self.wakeup_us(d);
@@ -634,15 +1288,13 @@ impl Fleet {
                         }
                     }
                 }
-                // no deadline (or none can meet it): cheapest with the
-                // earliest projected drain
+                self.work.route_device_scans += order.len() as u64;
                 order
                     .iter()
                     .min_by(|&&a, &&b| {
                         self.devices[a]
                             .committed_free_us
-                            .partial_cmp(&self.devices[b].committed_free_us)
-                            .unwrap()
+                            .total_cmp(&self.devices[b].committed_free_us)
                     })
                     .copied()
             }
@@ -656,15 +1308,17 @@ impl Fleet {
                     None => 1,
                     Some(_) => 2,
                 };
+                self.work.route_device_scans +=
+                    self.devices.iter().filter(|dev| dev.queue_len() < bound).count() as u64;
                 self.devices
                     .iter()
                     .enumerate()
-                    .filter(|(_, dev)| dev.queue.len() < bound)
+                    .filter(|(_, dev)| dev.queue_len() < bound)
                     .min_by(|(_, a), (_, b)| {
                         rank(a).cmp(&rank(b)).then_with(|| {
                             let fa = a.committed_free_us.max(now) + a.inference_us();
                             let fb = b.committed_free_us.max(now) + b.inference_us();
-                            fa.partial_cmp(&fb).unwrap()
+                            fa.total_cmp(&fb)
                         })
                     })
                     .map(|(i, _)| i)
@@ -673,11 +1327,16 @@ impl Fleet {
     }
 
     /// Reset all serving state so consecutive `run` calls are independent
-    /// (each report reflects exactly the workload it was given).
+    /// (each report reflects exactly the workload it was given), select
+    /// each queue's representation for this run's discipline/mode, and
+    /// rebuild the routing index.
     fn reset(&mut self) {
         self.rr_next = 0;
+        self.work = WorkCounters::default();
+        let discipline = self.config.discipline;
+        let mode = self.mode;
         for dev in &mut self.devices {
-            dev.queue.clear();
+            dev.reset_queue(discipline, mode);
             dev.busy_until_us = 0.0;
             dev.in_flight = false;
             dev.committed_free_us = 0.0;
@@ -688,6 +1347,7 @@ impl Fleet {
             dev.net_switches = 0;
             dev.switch_energy_uj = 0.0;
         }
+        self.index.rebuild(&self.devices, self.policy, &self.config, mode);
     }
 
     /// Run a fixed arrival-ordered workload through the event-driven
@@ -735,8 +1395,11 @@ impl Fleet {
         for req in source.initial() {
             self.inject(req);
         }
-        while let Some(departed) = self.step() {
-            for d in departed {
+        // one departure buffer for the whole run: the hot loop allocates
+        // nothing per event
+        let mut departed: Vec<Departure> = Vec::new();
+        while self.step_into(&mut departed) {
+            for d in &departed {
                 for next in source.on_done(d.id, d.t_us) {
                     self.inject(next);
                 }
@@ -793,19 +1456,38 @@ impl Fleet {
     /// arrivals that feedback unlocks. Returns `None` when the event
     /// queue is drained.
     ///
+    /// Allocates the departure `Vec` per call; hot drivers should prefer
+    /// [`Fleet::step_into`] with a reused buffer.
+    ///
     /// Panics when no run is open.
     pub fn step(&mut self) -> Option<Vec<Departure>> {
+        let mut departed = Vec::new();
+        if self.step_into(&mut departed) {
+            Some(departed)
+        } else {
+            None
+        }
+    }
+
+    /// Allocation-free core of [`Fleet::step`]: process exactly one
+    /// event, appending the departures to `departed` (cleared first).
+    /// Returns `false` — with nothing appended — once the event queue is
+    /// drained.
+    ///
+    /// Panics when no run is open.
+    pub fn step_into(&mut self, departed: &mut Vec<Departure>) -> bool {
+        departed.clear();
         let mut rs = self.run_state.take().expect("step: no open run (call begin_run)");
         let Some(ev) = rs.heap.pop() else {
             self.run_state = Some(rs);
-            return None;
+            return false;
         };
-        let mut departed: Vec<Departure> = Vec::new();
         let now = ev.time;
+        let bound = self.config.queue_bound;
         match ev.kind {
             EventKind::Arrival(req) => {
                 if rs.record {
-                    rs.injected.push(req.clone());
+                    rs.injected.push(req);
                 }
                 match self.route(&req, now) {
                     Some(d) => {
@@ -813,15 +1495,16 @@ impl Fleet {
                         let dev = &mut self.devices[d];
                         dev.committed_free_us =
                             dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
-                        dev.enqueue(req, discipline);
+                        dev.enqueue(req, discipline, &mut self.work);
                         rs.series.push(QueueSample {
                             t_us: now,
                             device: d,
-                            depth: dev.queue.len(),
+                            depth: dev.queue_len(),
                         });
                         if !dev.in_flight {
                             rs.push_internal(now, EventKind::DispatchBatch { device: d });
                         }
+                        self.index.reindex(d, &self.devices[d], bound, now);
                     }
                     None => {
                         rs.rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us });
@@ -837,17 +1520,18 @@ impl Fleet {
                 let wakeup_cycles = self.config.wakeup_cycles;
                 let net_switch_cycles = self.config.net_switch_cycles;
                 let dev = &mut self.devices[d];
-                if !dev.in_flight && !dev.queue.is_empty() {
+                if !dev.in_flight && dev.queue_len() > 0 {
                     // the micro-batch: longest same-network prefix of the
-                    // queue in discipline order
-                    let net = dev.queue.front().unwrap().net;
-                    let mut batch: Vec<Request> = Vec::new();
-                    while batch.len() < batch_max
-                        && dev.queue.front().is_some_and(|r| r.net == net)
+                    // queue in discipline order (drained into the reused
+                    // run-state scratch — no per-dispatch allocation)
+                    let net = dev.queue_front().unwrap().net;
+                    rs.batch.clear();
+                    while rs.batch.len() < batch_max
+                        && dev.queue_front().is_some_and(|r| r.net == net)
                     {
-                        batch.push(dev.queue.pop_front().unwrap());
+                        rs.batch.push(dev.queue_pop_front().unwrap());
                     }
-                    rs.series.push(QueueSample { t_us: now, device: d, depth: dev.queue.len() });
+                    rs.series.push(QueueSample { t_us: now, device: d, depth: dev.queue_len() });
 
                     // weight residency: evicting a different resident net
                     // costs a DMA reload before the batch can start (a
@@ -865,7 +1549,7 @@ impl Fleet {
                     let start = now;
                     let inf = dev.inference_us();
                     let mut t = start + wake_us + switch_us;
-                    for req in &batch {
+                    for req in &rs.batch {
                         let s = t;
                         t += inf;
                         // feedback edge: the completion is committed now
@@ -888,7 +1572,7 @@ impl Fleet {
                         });
                     }
                     let finish = t;
-                    let k = batch.len() as u64;
+                    let k = rs.batch.len() as u64;
                     dev.in_flight = true;
                     dev.busy_until_us = finish;
                     dev.busy_us += finish - start;
@@ -903,18 +1587,18 @@ impl Fleet {
                     rs.batches += 1;
                     rs.batched_requests += k;
                     rs.push_internal(finish, EventKind::Finish { device: d });
+                    self.index.reindex(d, &self.devices[d], bound, now);
                 }
                 // else: stale dispatch — nothing to do
             }
             EventKind::Finish { device: d } => {
                 self.devices[d].in_flight = false;
-                if !self.devices[d].queue.is_empty() {
+                if self.devices[d].queue_len() > 0 {
                     rs.push_internal(now, EventKind::DispatchBatch { device: d });
                 } else if self.config.steal {
                     if let Some(victim) = self.steal_victim(d) {
                         let req = self.devices[victim]
-                            .queue
-                            .pop_back()
+                            .queue_pop_back()
                             .expect("steal victim has a non-empty queue");
                         // hand the routing projection over with the
                         // request: the victim drains one inference
@@ -925,21 +1609,23 @@ impl Fleet {
                         rs.series.push(QueueSample {
                             t_us: now,
                             device: victim,
-                            depth: self.devices[victim].queue.len(),
+                            depth: self.devices[victim].queue_len(),
                         });
+                        self.index.reindex(victim, &self.devices[victim], bound, now);
                         let thief = &mut self.devices[d];
                         thief.committed_free_us =
                             thief.committed_free_us.max(now) + thief.inference_us();
-                        thief.queue.push_back(req);
+                        thief.push_stolen(req);
                         rs.series.push(QueueSample { t_us: now, device: d, depth: 1 });
                         rs.steals += 1;
                         rs.push_internal(now, EventKind::DispatchBatch { device: d });
+                        self.index.reindex(d, &self.devices[d], bound, now);
                     }
                 }
             }
         }
         self.run_state = Some(rs);
-        Some(departed)
+        true
     }
 
     /// Close the open run: finalize the [`FleetReport`] and return it
@@ -965,28 +1651,54 @@ impl Fleet {
     /// queue, preferring (on equal depth) one whose tail request matches
     /// the thief's resident network — stealing it costs no residency
     /// switch — then the lowest device index, for determinism.
-    fn steal_victim(&self, thief: usize) -> Option<usize> {
+    ///
+    /// Indexed mode reads the `(depth, device)` set: one peek for the
+    /// max depth, then only the devices tied at that depth are examined
+    /// for the affinity tie-break. The naive oracle scans every device.
+    fn steal_victim(&mut self, thief: usize) -> Option<usize> {
         let resident = self.devices[thief].resident_net;
-        let mut best: Option<(usize, bool, usize)> = None;
-        for (i, dev) in self.devices.iter().enumerate() {
-            if i == thief {
-                continue;
+        if self.mode == HotPathMode::NaiveOracle {
+            let mut best: Option<(usize, bool, usize)> = None;
+            for (i, dev) in self.devices.iter().enumerate() {
+                if i == thief {
+                    continue;
+                }
+                let Some(tail) = dev.queue_back() else { continue };
+                self.work.route_device_scans += 1;
+                let depth = dev.queue_len();
+                let no_switch = match resident {
+                    None => true, // cold thief: first load is free
+                    Some(r) => r == tail.net,
+                };
+                let better = match best {
+                    None => true,
+                    Some((bd, bs, _)) => depth > bd || (depth == bd && no_switch && !bs),
+                };
+                if better {
+                    best = Some((depth, no_switch, i));
+                }
             }
-            let Some(tail) = dev.queue.back() else { continue };
-            let depth = dev.queue.len();
+            return best.map(|(_, _, i)| i);
+        }
+        // the thief's own queue is empty here (stealing only fires on a
+        // drained finish), so it is never in the depth set
+        let &(depth, _) = self.index.depths.last()?;
+        let mut first: Option<usize> = None;
+        for &(_, i) in self.index.depths.range((depth, 0)..=(depth, usize::MAX)) {
+            self.work.route_device_scans += 1;
+            if first.is_none() {
+                first = Some(i);
+            }
+            let tail = self.devices[i].queue_back().expect("depth >= 1 implies a tail");
             let no_switch = match resident {
-                None => true, // cold thief: first load is free
+                None => true,
                 Some(r) => r == tail.net,
             };
-            let better = match best {
-                None => true,
-                Some((bd, bs, _)) => depth > bd || (depth == bd && no_switch && !bs),
-            };
-            if better {
-                best = Some((depth, no_switch, i));
+            if no_switch {
+                return Some(i);
             }
         }
-        best.map(|(_, _, i)| i)
+        first
     }
 
     /// One-pass synchronous baseline — the coordinator's original
@@ -1033,6 +1745,7 @@ impl Fleet {
             dev.busy_us += finish - start;
             dev.served += 1;
             dev.energy_uj += dev.op.energy_uj(dev.cycles_per_inference);
+            self.index.reindex(d, &self.devices[d], self.config.queue_bound, req.arrival_us);
             completions.push(Completion {
                 id: req.id,
                 device: d,
@@ -1106,6 +1819,7 @@ impl Fleet {
             net_switches: self.devices.iter().map(|d| d.net_switches).sum(),
             switch_energy_uj: self.devices.iter().map(|d| d.switch_energy_uj).sum(),
             steals,
+            work: self.work,
             completions,
             rejections,
         }
@@ -1144,8 +1858,7 @@ impl Ord for SyncArrival {
         other
             .0
             .arrival_us
-            .partial_cmp(&self.0.arrival_us)
-            .expect("arrival times are finite")
+            .total_cmp(&self.0.arrival_us)
             .then_with(|| other.0.id.cmp(&self.0.id))
     }
 }
@@ -1573,7 +2286,7 @@ mod tests {
         // device's completion stream has no gaps
         let mut finishes: Vec<(f64, f64)> =
             a.completions.iter().map(|c| (c.start_us, c.finish_us)).collect();
-        finishes.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        finishes.sort_by(|x, y| x.0.total_cmp(&y.0));
         for w in finishes.windows(2).skip(3) {
             assert!(
                 (w[1].0 - w[0].1).abs() < 1e-6,
@@ -1791,7 +2504,7 @@ mod tests {
             let mut stepped = Fleet::with_config(devices, policy, config);
             stepped.begin_run(true);
             for req in &reqs {
-                stepped.inject(req.clone());
+                stepped.inject(*req);
             }
             let mut departures = 0usize;
             while stepped.next_event_us().is_some() {
@@ -2030,6 +2743,231 @@ mod tests {
         assert!(
             (report.total_energy_uj - report.active_energy_uj - report.idle_energy_uj).abs()
                 < 1e-9
+        );
+    }
+
+    #[test]
+    fn prop_indexed_hot_path_matches_naive_oracle() {
+        // the tentpole property of the hot-path refactor: the indexed
+        // engine (RouteIndex, tree EDF queues, depth-indexed stealing)
+        // must reproduce the naive scan engine bit for bit across the
+        // whole scheduling matrix — completions, sheds, queue series,
+        // energy, steals, batches
+        check("fleet-indexed-vs-naive", 40, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[2usize, 8, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 20_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 40_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+            };
+            let devices = random_devices(rng);
+            let mk = |net: u32, seed: u64| {
+                Workload { rate_per_s: 1200.0, deadline_us: None, n_requests: 120, seed }
+                    .generate_for_net(net)
+            };
+            let mut reqs = merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())]);
+            // per-request deadline mix (None / tight / loose) so EDF
+            // ordering and EnergyAware's deadline walk both do real work
+            for r in &mut reqs {
+                r.deadline_us = match rng.below(3) {
+                    0 => None,
+                    1 => Some(8_000.0),
+                    _ => Some(60_000.0),
+                };
+            }
+            let mut indexed = Fleet::with_config(devices.clone(), policy, config);
+            let mut naive = Fleet::with_config(devices, policy, config);
+            naive.set_hot_path_mode(HotPathMode::NaiveOracle);
+            let a = indexed.run(&reqs);
+            let b = naive.run(&reqs);
+            if a.completions != b.completions {
+                return Err(format!("completions diverged ({policy:?}, {config:?})"));
+            }
+            if a.rejections != b.rejections {
+                return Err("rejections diverged".into());
+            }
+            if a.queue_depth_series != b.queue_depth_series {
+                return Err("queue-depth series diverged".into());
+            }
+            if a.active_energy_uj != b.active_energy_uj
+                || a.steals != b.steals
+                || a.batches != b.batches
+                || a.net_switches != b.net_switches
+                || a.per_device_served != b.per_device_served
+                || a.throughput_rps != b.throughput_rps
+            {
+                return Err("aggregates diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_edf_tree_queue_matches_linear_insert() {
+        // random push / pop-front / pop-back sequences with duplicate
+        // (deadline, arrival) keys and deadline-free requests: the tree
+        // queue must reproduce the naive stable linear insert at both
+        // ends, tie for tie
+        check("edf-tree-vs-linear", 60, |rng, _| {
+            let mut tree = EdfQueue::default();
+            let mut list: VecDeque<Request> = VecDeque::new();
+            for step in 0..200u64 {
+                let roll = rng.below(10);
+                if roll < 6 {
+                    let req = Request {
+                        id: step,
+                        arrival_us: rng.below(50) as f64 * 10.0,
+                        deadline_us: match rng.below(4) {
+                            0 => None,
+                            _ => Some(rng.below(5) as f64 * 1_000.0),
+                        },
+                        net: 0,
+                        input_digest: step,
+                    };
+                    // the naive pre-index path: stable linear-scan insert
+                    let key = edf_key(&req);
+                    let pos =
+                        list.iter().position(|q| edf_key(q) > key).unwrap_or(list.len());
+                    list.insert(pos, req);
+                    tree.push(req);
+                } else if roll < 8 {
+                    if list.pop_front() != tree.pop_front() {
+                        return Err(format!("front pop diverged at step {step}"));
+                    }
+                } else if list.pop_back() != tree.pop_back() {
+                    return Err(format!("back pop diverged at step {step}"));
+                }
+                if list.len() != tree.len()
+                    || list.front() != tree.front()
+                    || list.back() != tree.back()
+                {
+                    return Err(format!("queue state diverged at step {step}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_deadline_requests_flow_through_without_panicking() {
+        // regression for the NaN-unsafe partial_cmp().unwrap() sites: a
+        // NaN deadline must flow through EDF ordering, routing, the
+        // overlap checker and the percentile paths without panicking.
+        // Under the total order a NaN absolute deadline sorts after +inf
+        // (i.e. even later than deadline-free requests) and NaN
+        // comparisons are false, so it is never counted as missed.
+        for mode in [HotPathMode::Indexed, HotPathMode::NaiveOracle] {
+            let mut reqs = workload(1500.0, 60, Some(2e4), 99);
+            for r in reqs.iter_mut().step_by(5) {
+                r.deadline_us = Some(f64::NAN);
+            }
+            let config = FleetConfig {
+                queue_bound: 4,
+                discipline: QueueDiscipline::Edf,
+                steal: true,
+                ..FleetConfig::default()
+            };
+            let mut fleet =
+                Fleet::with_config(gap8_mixed_devices(3, 300_000), Policy::EnergyAware, config);
+            fleet.set_hot_path_mode(mode);
+            let report = fleet.run(&reqs);
+            assert_eq!(report.completions.len() + report.shed, reqs.len(), "{mode:?}");
+            report.check_fifo_no_overlap().unwrap();
+            assert!(report.p99_latency_us.is_finite());
+            for c in &report.completions {
+                if c.id % 5 == 0 {
+                    assert!(!c.deadline_missed, "NaN deadline scored as missed: {c:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_into_matches_step_with_reused_buffer() {
+        let reqs = workload(800.0, 50, None, 41);
+        let devices = gap8_mixed_devices(2, 200_000);
+        let mut a = Fleet::new(devices.clone(), Policy::LeastLoaded);
+        a.begin_run(false);
+        let mut b = Fleet::new(devices, Policy::LeastLoaded);
+        b.begin_run(false);
+        for r in &reqs {
+            a.inject(*r);
+            b.inject(*r);
+        }
+        let mut buf = Vec::new();
+        loop {
+            let via_step = a.step();
+            let more = b.step_into(&mut buf);
+            match via_step {
+                Some(v) => {
+                    assert!(more);
+                    assert_eq!(v, buf);
+                }
+                None => {
+                    assert!(!more);
+                    assert!(buf.is_empty());
+                    break;
+                }
+            }
+        }
+        let (ra, _) = a.end_run();
+        let (rb, _) = b.end_run();
+        assert_eq!(ra.completions, rb.completions);
+    }
+
+    #[test]
+    fn indexed_mode_reduces_routing_and_edf_work() {
+        // 8 devices at ~3x overload with EDF + stealing: the naive oracle
+        // scans Θ(D) devices per arrival and Θ(depth) queue slots per
+        // ordered insert; the index does O(log) work. The reports must
+        // stay bit-identical while the counters drop (ratios
+        // pre-validated in the python DES mirror: route x2.6, EDF x3.4
+        // for this shape).
+        let mut reqs =
+            Workload { rate_per_s: 10_000.0, deadline_us: None, n_requests: 600, seed: 7 }
+                .generate();
+        for r in &mut reqs {
+            r.deadline_us = Some(if r.id % 2 == 0 { 10_000.0 } else { 500_000.0 });
+        }
+        let config = FleetConfig {
+            queue_bound: 32,
+            batch_max: 4,
+            wakeup_cycles: 10_000,
+            discipline: QueueDiscipline::Edf,
+            steal: true,
+            ..FleetConfig::default()
+        };
+        let run = |mode: HotPathMode| {
+            let mut f =
+                Fleet::with_config(gap8_mixed_devices(8, 300_000), Policy::LeastLoaded, config);
+            f.set_hot_path_mode(mode);
+            f.run(&reqs)
+        };
+        let idx = run(HotPathMode::Indexed);
+        let naive = run(HotPathMode::NaiveOracle);
+        assert_eq!(idx.completions, naive.completions);
+        assert_eq!(idx.rejections, naive.rejections);
+        assert_eq!(idx.active_energy_uj, naive.active_energy_uj);
+        assert!(idx.shed > 0, "the scenario must be overloaded to exercise bounds");
+        assert!(
+            naive.work.route_device_scans * 2 > idx.work.route_device_scans * 3,
+            "route scans must drop by >1.5x: naive {} vs indexed {}",
+            naive.work.route_device_scans,
+            idx.work.route_device_scans
+        );
+        assert!(
+            naive.work.edf_shift_ops > idx.work.edf_shift_ops * 2,
+            "EDF insert work must drop by >2x: naive {} vs indexed {}",
+            naive.work.edf_shift_ops,
+            idx.work.edf_shift_ops
         );
     }
 }

@@ -94,8 +94,8 @@ pub mod shard;
 
 pub use fleet::{
     gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Departure, Device, Fleet,
-    FleetConfig, FleetReport, Policy, QueueDiscipline, QueueSample, Rejection,
-    DEFAULT_WAKEUP_CYCLES, MIN_THROUGHPUT_SPAN_US,
+    FleetConfig, FleetReport, HotPathMode, Policy, QueueDiscipline, QueueSample, Rejection,
+    WorkCounters, DEFAULT_WAKEUP_CYCLES, MIN_THROUGHPUT_SPAN_US,
 };
 pub use request::{merge_streams, ClosedLoopSource, Request, TraceSource, Workload, WorkloadSource};
 pub use server::{Served, Server, ServeStats};

@@ -36,7 +36,12 @@ use crate::util::rng::Rng;
 
 /// One inference request in the fleet simulation. Times are in
 /// microseconds of simulated wall-clock.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Request` is a 40-byte plain-old-data value and deliberately `Copy`:
+/// the serving engines inject, enqueue and trace-record requests by
+/// value on their hot paths, so nothing there ever calls `Clone` or
+/// allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     /// Workload-unique request id.
     pub id: u64,
@@ -447,10 +452,11 @@ impl WorkloadSource for TraceSource {
 /// Merge several per-tenant request streams into one arrival-ordered
 /// stream with globally unique ids (each request keeps its deadline,
 /// network tag and input digest). The sort is stable, so equal arrival
-/// times preserve stream order.
+/// times preserve stream order (`total_cmp`: a NaN arrival sorts last
+/// instead of panicking).
 pub fn merge_streams(streams: &[Vec<Request>]) -> Vec<Request> {
-    let mut all: Vec<Request> = streams.iter().flatten().cloned().collect();
-    all.sort_by(|a, b| a.arrival_us.partial_cmp(&b.arrival_us).unwrap());
+    let mut all: Vec<Request> = streams.iter().flatten().copied().collect();
+    all.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
     for (i, r) in all.iter_mut().enumerate() {
         r.id = i as u64;
     }

@@ -39,6 +39,19 @@
 //! energy — across all four routing policies, both queue disciplines,
 //! work stealing and bounded caches (`prop_unified_loop_matches_two_phase_oracle`).
 //!
+//! The loop's own per-event work is O(log K)/O(1): the earliest fleet
+//! event comes from a *shard-clock tournament* (an ordered set over
+//! per-shard next-event times, refreshed only when a shard's head
+//! changes) instead of a K-sweep per event, and the result cache's
+//! LRU/quota bookkeeping runs on intrusive recency lists with O(1)
+//! counts, touches and evictions instead of full-map scans. The old
+//! sweep and scan survive behind
+//! [`HotPathMode::NaiveOracle`](super::fleet::HotPathMode) as
+//! instrumented bit-exactness oracles
+//! (`prop_tier_indexed_hot_path_matches_naive_oracle`), and
+//! [`ShardedReport::work`] carries the deterministic work counters —
+//! see `docs/ARCHITECTURE.md`, "Hot-path data structures".
+//!
 //! # Why shard
 //!
 //! PR 1's event-driven [`Fleet`] is a *single* coordinator: one event loop
@@ -96,14 +109,14 @@
 //! percentiles.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet};
 use std::fmt;
 
 use crate::util::stats::percentile;
 
 use super::fleet::{
-    sustained_throughput_rps, Device, Fleet, FleetConfig, FleetReport, Policy, QueueDiscipline,
-    SliceReplay,
+    fkey, sustained_throughput_rps, Device, Fleet, FleetConfig, FleetReport, HotPathMode, Policy,
+    QueueDiscipline, SliceReplay, WorkCounters,
 };
 use super::request::{mix64, Request, WorkloadSource};
 
@@ -257,6 +270,11 @@ pub struct ShardedReport {
     pub queue_depth_p95: f64,
     /// 99th-percentile pending-queue depth across shards.
     pub queue_depth_p99: f64,
+    /// Deterministic hot-path work counters: the tier's own shard-clock
+    /// polls and cache-eviction scans plus every shard's routing/EDF
+    /// counters (see
+    /// [`WorkCounters`](super::fleet::WorkCounters)).
+    pub work: WorkCounters,
 }
 
 impl ShardedReport {
@@ -282,27 +300,307 @@ impl ShardedReport {
     }
 }
 
+/// Slot sentinel for the cache's intrusive recency lists.
+const NIL: u32 = u32::MAX;
+
+/// One resolved cache entry's node in the intrusive recency lists
+/// (global and per-net), plus its `last_used` stamp. The lists keep
+/// entries in exactly ascending-stamp order, so popping a list head and
+/// scanning for the minimum stamp pick the *same* victim — which is how
+/// the O(1) eviction path stays bit-exact against the naive-oracle scan
+/// (property-tested; a `debug_assert` cross-checks every oracle
+/// eviction).
+#[derive(Debug, Clone)]
+struct CacheNode {
+    key: (u32, u64),
+    last_used: u64,
+    prev_g: u32,
+    next_g: u32,
+    prev_n: u32,
+    next_n: u32,
+}
+
+/// Head/tail/length of one doubly-linked recency list (LRU at the head,
+/// MRU at the tail).
+#[derive(Debug, Clone)]
+struct RecencyList {
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl Default for RecencyList {
+    fn default() -> RecencyList {
+        RecencyList { head: NIL, tail: NIL, len: 0 }
+    }
+}
+
 /// State of one result-cache key.
+#[derive(Debug, Clone, Copy)]
 enum CacheEntry {
     /// First miss is in flight; duplicates join it. Carries the owner id.
     /// Never evicted — single-flight join semantics survive any bound.
+    /// (Only the two-phase oracle parks pending markers in the persistent
+    /// map; the unified loop keeps them in run-local state.)
     Pending(u64),
-    /// The owner completed in an earlier run (or earlier in this run and
-    /// was promoted at reconciliation); hits complete immediately.
-    /// `last_used` is the LRU recency stamp (bumped on every hit and at
-    /// promotion).
-    Resolved {
-        /// Monotonic recency tick of the last hit or promotion.
-        last_used: u64,
-    },
+    /// The owner completed and was promoted at reconciliation; hits
+    /// complete immediately. `.0` is the entry's slot in the recency
+    /// slab.
+    Resolved(u32),
 }
 
 /// Cache lookup outcome (decouples the borrow of the cache map from the
-/// join bookkeeping in the two-phase oracle).
+/// join bookkeeping in both serving paths).
 enum Lookup {
     Resolved,
     Pending(u64),
     Miss,
+}
+
+/// The persistent result cache: the key map plus a slab of resolved
+/// entries woven into two intrusive recency lists (global and per-net).
+/// Every LRU/quota operation is O(1) — a hit unlinks and re-appends its
+/// node, a promotion appends, an eviction pops a list head, and entry
+/// counts are list lengths — replacing the pre-index full-map scans per
+/// promotion and per eviction. `last_used` stamps are still kept so
+/// [`HotPathMode::NaiveOracle`] can select victims by scanning, exactly
+/// like the old implementation: identical victims, Θ(entries) counters.
+#[derive(Debug, Clone, Default)]
+struct ResultCache {
+    map: HashMap<(u32, u64), CacheEntry>,
+    nodes: Vec<CacheNode>,
+    free: Vec<u32>,
+    global: RecencyList,
+    nets: HashMap<u32, RecencyList>,
+    /// Monotonic recency stamp (strictly increasing, so victim selection
+    /// never ties).
+    tick: u64,
+}
+
+impl ResultCache {
+    fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.global = RecencyList::default();
+        self.nets.clear();
+        // the tick deliberately survives: recency stays totally ordered
+        // across clears
+    }
+
+    /// Resolved entries resident in the cache. O(1).
+    fn entries(&self) -> usize {
+        self.global.len
+    }
+
+    /// Resolved entries resident for one network. O(1).
+    fn entries_for_net(&self, net: u32) -> usize {
+        self.nets.get(&net).map_or(0, |l| l.len)
+    }
+
+    /// Keys in the map (resolved + pending) — the cost of one naive
+    /// full-map scan, for the oracle's work accounting.
+    fn map_len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Unlink a resolved node from both recency lists. O(1).
+    fn unlink(&mut self, slot: u32) {
+        let (key, prev_g, next_g, prev_n, next_n) = {
+            let n = &self.nodes[slot as usize];
+            (n.key, n.prev_g, n.next_g, n.prev_n, n.next_n)
+        };
+        if prev_g == NIL {
+            self.global.head = next_g;
+        } else {
+            self.nodes[prev_g as usize].next_g = next_g;
+        }
+        if next_g == NIL {
+            self.global.tail = prev_g;
+        } else {
+            self.nodes[next_g as usize].prev_g = prev_g;
+        }
+        self.global.len -= 1;
+        {
+            let nl = self.nets.get_mut(&key.0).expect("resolved entries have a net list");
+            if prev_n == NIL {
+                nl.head = next_n;
+            }
+            if next_n == NIL {
+                nl.tail = prev_n;
+            }
+            nl.len -= 1;
+        }
+        if prev_n != NIL {
+            self.nodes[prev_n as usize].next_n = next_n;
+        }
+        if next_n != NIL {
+            self.nodes[next_n as usize].prev_n = prev_n;
+        }
+    }
+
+    /// Append a node at the MRU end of both recency lists. O(1).
+    fn push_mru(&mut self, slot: u32) {
+        let key = self.nodes[slot as usize].key;
+        let old_tail = self.global.tail;
+        {
+            let n = &mut self.nodes[slot as usize];
+            n.prev_g = old_tail;
+            n.next_g = NIL;
+        }
+        if old_tail != NIL {
+            self.nodes[old_tail as usize].next_g = slot;
+        }
+        self.global.tail = slot;
+        if self.global.head == NIL {
+            self.global.head = slot;
+        }
+        self.global.len += 1;
+        let old_ntail = self.nets.entry(key.0).or_default().tail;
+        {
+            let n = &mut self.nodes[slot as usize];
+            n.prev_n = old_ntail;
+            n.next_n = NIL;
+        }
+        if old_ntail != NIL {
+            self.nodes[old_ntail as usize].next_n = slot;
+        }
+        let nl = self.nets.get_mut(&key.0).expect("net list created above");
+        nl.tail = slot;
+        if nl.head == NIL {
+            nl.head = slot;
+        }
+        nl.len += 1;
+    }
+
+    fn alloc(&mut self, key: (u32, u64)) -> u32 {
+        let node = CacheNode {
+            key,
+            last_used: self.tick,
+            prev_g: NIL,
+            next_g: NIL,
+            prev_n: NIL,
+            next_n: NIL,
+        };
+        self.tick += 1;
+        match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = node;
+                slot
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Probe a key, bumping a resolved entry to MRU (stamp + list move).
+    /// O(1).
+    fn lookup_touch(&mut self, key: &(u32, u64)) -> Lookup {
+        match self.map.get(key) {
+            Some(CacheEntry::Resolved(slot)) => {
+                let slot = *slot;
+                self.unlink(slot);
+                self.nodes[slot as usize].last_used = self.tick;
+                self.tick += 1;
+                self.push_mru(slot);
+                Lookup::Resolved
+            }
+            Some(CacheEntry::Pending(owner)) => Lookup::Pending(*owner),
+            None => Lookup::Miss,
+        }
+    }
+
+    /// Resolve `key` (promotion at reconciliation): a fresh MRU entry,
+    /// replacing any stale pending marker; re-touches an already-resolved
+    /// key defensively. O(1).
+    fn promote(&mut self, key: (u32, u64)) {
+        if let Some(CacheEntry::Resolved(_)) = self.map.get(&key) {
+            let _ = self.lookup_touch(&key);
+            return;
+        }
+        let slot = self.alloc(key);
+        self.map.insert(key, CacheEntry::Resolved(slot));
+        self.push_mru(slot);
+    }
+
+    /// Park a pending (single-flight) marker — two-phase-oracle path
+    /// only. Never enters the recency lists, so it is never evicted.
+    fn insert_pending(&mut self, key: (u32, u64), owner: u64) {
+        if let Some(CacheEntry::Resolved(slot)) = self.map.get(&key) {
+            let slot = *slot;
+            self.unlink(slot);
+            self.free.push(slot);
+        }
+        self.map.insert(key, CacheEntry::Pending(owner));
+    }
+
+    /// Drop a key outright (a shed owner's pending marker). O(1).
+    fn remove(&mut self, key: &(u32, u64)) {
+        match self.map.remove(key) {
+            Some(CacheEntry::Resolved(slot)) => {
+                self.unlink(slot);
+                self.free.push(slot);
+            }
+            Some(CacheEntry::Pending(_)) | None => {}
+        }
+    }
+
+    /// Evict the least-recently-used resolved entry (of `net`, or of any
+    /// network when `None`). Pending entries are never candidates.
+    /// Returns whether an entry was evicted.
+    ///
+    /// Indexed: pop the recency-list head, O(1). Naive oracle: scan the
+    /// whole map for the minimum stamp like the pre-index code,
+    /// Θ(entries) — stamps are strictly increasing, so both pick the
+    /// same victim (`debug_assert`ed here, pinned by `prop_tier_indexed_
+    /// hot_path_matches_naive_oracle`).
+    fn evict_lru(&mut self, net: Option<u32>, naive: bool, work: &mut WorkCounters) -> bool {
+        let head = match net {
+            None => self.global.head,
+            Some(n) => self.nets.get(&n).map_or(NIL, |l| l.head),
+        };
+        let victim = if naive {
+            work.cache_entry_scans += self.map.len() as u64;
+            let mut best: Option<(u64, (u32, u64))> = None;
+            for (key, e) in &self.map {
+                if let CacheEntry::Resolved(slot) = e {
+                    if net.is_none() || net == Some(key.0) {
+                        let lu = self.nodes[*slot as usize].last_used;
+                        let better = match best {
+                            None => true,
+                            Some((b, _)) => lu < b,
+                        };
+                        if better {
+                            best = Some((lu, *key));
+                        }
+                    }
+                }
+            }
+            let victim = best.map(|(_, key)| key);
+            debug_assert_eq!(
+                victim,
+                if head == NIL { None } else { Some(self.nodes[head as usize].key) },
+                "naive LRU scan and recency-list head disagree"
+            );
+            victim
+        } else {
+            work.cache_entry_scans += 1;
+            if head == NIL {
+                None
+            } else {
+                Some(self.nodes[head as usize].key)
+            }
+        };
+        match victim {
+            Some(key) => {
+                self.remove(&key);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Typed failures the sharded tier reports to library callers instead of
@@ -359,10 +657,11 @@ impl PartialOrd for TierArrival {
 impl Ord for TierArrival {
     fn cmp(&self, other: &Self) -> Ordering {
         // reversed on both keys: min-heap behaviour out of BinaryHeap
+        // (total_cmp: a NaN timestamp orders after +inf instead of
+        // panicking mid-loop)
         other
             .time
-            .partial_cmp(&self.time)
-            .expect("arrival times are finite")
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -399,6 +698,32 @@ enum OwnerFate {
 struct PendingKey {
     fate: OwnerFate,
     waiters: Vec<Joiner>,
+}
+
+/// Refresh one shard's entry in the clock tournament after its event
+/// head may have changed (an inject or a step). `entries[s]` caches the
+/// shard's current `(fkey bits, exact time)` so unchanged heads cost no
+/// set operation and the tier-vs-fleet comparison reuses the exact f64.
+fn refresh_clock(
+    clock: &mut BTreeSet<(u64, usize)>,
+    entries: &mut [Option<(u64, f64)>],
+    s: usize,
+    next: Option<f64>,
+    work: &mut WorkCounters,
+) {
+    work.shard_clock_polls += 1;
+    let new = next.map(|t| (fkey(t), t));
+    if entries[s].map(|(k, _)| k) == new.map(|(k, _)| k) {
+        entries[s] = new;
+        return;
+    }
+    if let Some((old_key, _)) = entries[s] {
+        clock.remove(&(old_key, s));
+    }
+    if let Some((new_key, _)) = new {
+        clock.insert((new_key, s));
+    }
+    entries[s] = new;
 }
 
 /// Fire the feedback edge for one departure: every arrival the source
@@ -442,9 +767,10 @@ pub struct ShardedFleet {
     /// Sorted `(ring position, shard)` points.
     ring: Vec<(u64, usize)>,
     /// Result cache, persistent across runs. Keyed by `(net, digest)`.
-    cache: HashMap<(u32, u64), CacheEntry>,
-    /// Monotonic recency counter for the cache's LRU bookkeeping.
-    lru_tick: u64,
+    cache: ResultCache,
+    /// Hot-path implementation selector for the tier loop and the cache
+    /// (propagated to every shard's [`Fleet`]).
+    mode: HotPathMode,
 }
 
 impl ShardedFleet {
@@ -484,7 +810,25 @@ impl ShardedFleet {
             })
             .collect();
         ring.sort_unstable();
-        ShardedFleet { shards, config, ring, cache: HashMap::new(), lru_tick: 0 }
+        ShardedFleet {
+            shards,
+            config,
+            ring,
+            cache: ResultCache::default(),
+            mode: HotPathMode::default(),
+        }
+    }
+
+    /// Select the hot-path implementation for the tier (the shard-clock
+    /// tournament and the O(1) LRU vs their instrumented naive oracles)
+    /// and for every shard's [`Fleet`] — see
+    /// [`HotPathMode`](super::fleet::HotPathMode). Serving output is
+    /// identical in both modes; only the [`WorkCounters`] differ.
+    pub fn set_hot_path_mode(&mut self, mode: HotPathMode) {
+        self.mode = mode;
+        for f in &mut self.shards {
+            f.set_hot_path_mode(mode);
+        }
     }
 
     /// Override one shard's queue discipline (the rest keep the tier-wide
@@ -510,61 +854,42 @@ impl ShardedFleet {
         self.cache.clear();
     }
 
-    /// Resolved entries currently resident in the cache.
+    /// Resolved entries currently resident in the cache. O(1) — a
+    /// recency-list length, not a map scan.
     pub fn cache_entries(&self) -> usize {
-        self.cache.values().filter(|e| matches!(e, CacheEntry::Resolved { .. })).count()
+        self.cache.entries()
     }
 
     /// Resolved entries currently resident for one network (quota
-    /// accounting view).
+    /// accounting view). O(1).
     pub fn cache_entries_for_net(&self, net: u32) -> usize {
-        self.cache
-            .iter()
-            .filter(|((n, _), e)| *n == net && matches!(e, CacheEntry::Resolved { .. }))
-            .count()
-    }
-
-    /// Evict the least-recently-used resolved entry (of `net`, or of any
-    /// network when `None`). Pending entries are never candidates.
-    /// Returns whether an entry was evicted.
-    fn evict_lru(&mut self, net: Option<u32>) -> bool {
-        let victim = self
-            .cache
-            .iter()
-            .filter_map(|(key, e)| match e {
-                CacheEntry::Resolved { last_used } if net.is_none() || net == Some(key.0) => {
-                    Some((*last_used, *key))
-                }
-                _ => None,
-            })
-            .min_by_key(|&(last_used, _)| last_used)
-            .map(|(_, key)| key);
-        match victim {
-            Some(key) => {
-                self.cache.remove(&key);
-                true
-            }
-            None => false,
-        }
+        self.cache.entries_for_net(net)
     }
 
     /// Enforce the per-net quota then the global capacity after promoting
     /// a resolved entry for `net`; returns how many entries were evicted.
-    /// No-op (and no scan) when both bounds are unbounded.
-    fn enforce_cache_bounds(&mut self, net: u32) -> u64 {
+    /// No-op when both bounds are unbounded. Indexed: O(1) counts plus an
+    /// O(1) recency-list pop per eviction. The naive oracle re-counts
+    /// with full map scans and scans per victim, exactly like the
+    /// pre-index code — both charged to
+    /// [`WorkCounters::cache_entry_scans`].
+    fn enforce_cache_bounds(&mut self, net: u32, work: &mut WorkCounters) -> u64 {
+        let naive = self.mode == HotPathMode::NaiveOracle;
         let mut evicted = 0u64;
         if self.config.cache_quota_per_net != usize::MAX {
-            // count once, decrement per eviction: one map scan per call
-            // plus one victim scan per actual eviction
-            let mut count = self.cache_entries_for_net(net);
-            while count > self.config.cache_quota_per_net && self.evict_lru(Some(net)) {
+            work.cache_entry_scans += if naive { self.cache.map_len() as u64 } else { 1 };
+            let mut count = self.cache.entries_for_net(net);
+            while count > self.config.cache_quota_per_net
+                && self.cache.evict_lru(Some(net), naive, work)
+            {
                 count -= 1;
                 evicted += 1;
             }
         }
         if self.config.cache_capacity != usize::MAX {
-            let mut count = self.cache_entries();
-            while count > self.config.cache_capacity && self.evict_lru(None) {
+            work.cache_entry_scans += if naive { self.cache.map_len() as u64 } else { 1 };
+            let mut count = self.cache.entries();
+            while count > self.config.cache_capacity && self.cache.evict_lru(None, naive, work) {
                 count -= 1;
                 evicted += 1;
             }
@@ -660,6 +985,19 @@ impl ShardedFleet {
             seq += 1;
         }
         let mut injected: Vec<Request> = Vec::new();
+        let mut work = WorkCounters::default();
+        let naive = self.mode == HotPathMode::NaiveOracle;
+
+        // the shard-clock tournament: per-shard next-event times in one
+        // ordered set, refreshed only when a shard's head changes, so
+        // picking the earliest fleet event is one peek instead of a
+        // K-sweep per tier event (the sweep survives as the instrumented
+        // naive oracle). Lowest (time, shard) pops first — the sweep's
+        // strict-less scan broke ties by lowest shard index too.
+        let mut clock: BTreeSet<(u64, usize)> = BTreeSet::new();
+        let mut clock_entry: Vec<Option<(u64, f64)>> = vec![None; k];
+        // one departure buffer for the whole run (no per-step allocation)
+        let mut departed = Vec::new();
 
         let mut router_free = vec![0.0f64; k];
         let mut router_delay_sum = 0.0f64;
@@ -691,19 +1029,30 @@ impl ShardedFleet {
             .collect();
 
         loop {
-            // earliest pending fleet event, lowest shard index on ties
-            let mut fleet_next: Option<(f64, usize)> = None;
-            for (s, f) in self.shards.iter().enumerate() {
-                if let Some(t) = f.next_event_us() {
-                    let better = match fleet_next {
-                        None => true,
-                        Some((bt, _)) => t < bt,
-                    };
-                    if better {
-                        fleet_next = Some((t, s));
+            // earliest pending fleet event, lowest shard index on ties:
+            // one tournament peek (indexed) or a K-sweep (naive oracle)
+            let fleet_next: Option<(f64, usize)> = if naive {
+                let mut best: Option<(f64, usize)> = None;
+                for (s, f) in self.shards.iter().enumerate() {
+                    work.shard_clock_polls += 1;
+                    if let Some(t) = f.next_event_us() {
+                        let better = match best {
+                            None => true,
+                            Some((bt, _)) => t < bt,
+                        };
+                        if better {
+                            best = Some((t, s));
+                        }
                     }
                 }
-            }
+                best
+            } else {
+                work.shard_clock_polls += 1;
+                clock.first().map(|&(_, s)| {
+                    let (_, t) = clock_entry[s].expect("clock entries track their shard");
+                    (t, s)
+                })
+            };
             let take_tier = match (heap.peek().map(|e| e.time), fleet_next) {
                 (None, None) => break,
                 (Some(_), None) => true,
@@ -713,9 +1062,13 @@ impl ShardedFleet {
 
             if !take_tier {
                 let (_, s) = fleet_next.expect("a fleet owns the earliest event");
-                let departed =
-                    self.shards[s].step().expect("the chosen fleet has a pending event");
-                for d in departed {
+                let stepped = self.shards[s].step_into(&mut departed);
+                debug_assert!(stepped, "the chosen fleet has a pending event");
+                if !naive {
+                    let next = self.shards[s].next_event_us();
+                    refresh_clock(&mut clock, &mut clock_entry, s, next, &mut work);
+                }
+                for d in &departed {
                     // the departing request itself feeds back first...
                     push_feedback(&mut heap, &mut seq, source, d.id, d.t_us);
                     // ...then, if it owned a pending cache key, its
@@ -745,7 +1098,7 @@ impl ShardedFleet {
             let ev = heap.pop().expect("the tier owns the earliest event");
             let req = ev.req;
             if record {
-                injected.push(req.clone());
+                injected.push(req);
             }
             n_tier += 1;
             span_start = span_start.min(req.arrival_us);
@@ -756,7 +1109,7 @@ impl ShardedFleet {
             let exit = start + self.config.router_service_us;
             router_free[s] = exit;
             router_delay_sum += start - req.arrival_us;
-            let mut fwd = req.clone();
+            let mut fwd = req; // Copy — no allocation, no Clone
             fwd.arrival_us = exit;
             // deadlines stay anchored to the *tier* arrival: the forwarded
             // request's budget shrinks by the time spent in the router
@@ -770,8 +1123,6 @@ impl ShardedFleet {
                 }
                 lookups += 1;
                 let key = (req.net, req.input_digest);
-                let tick = self.lru_tick;
-                self.lru_tick += 1;
                 if let Some(p) = pending.get_mut(&key) {
                     // single-flight: the key is owned by an in-flight
                     // request of this run — join it (or settle at once if
@@ -811,11 +1162,11 @@ impl ShardedFleet {
                     }
                     continue;
                 }
-                match self.cache.get_mut(&key) {
-                    Some(CacheEntry::Resolved { last_used }) => {
-                        *last_used = tick; // LRU touch
-                        // resolved in an earlier run: completes at router
-                        // exit, touching no device
+                match self.cache.lookup_touch(&key) {
+                    Lookup::Resolved => {
+                        // resolved in an earlier run (LRU-touched by the
+                        // lookup): completes at router exit, touching no
+                        // device
                         energy_saved_uj += shard_inference_uj[s];
                         cache_hits
                             .push(cache_hit(req.id, req.net, req.arrival_us, req.deadline_us, exit));
@@ -825,7 +1176,7 @@ impl ShardedFleet {
                     // a Pending entry can only linger in the persistent
                     // map if a previous oracle run panicked mid-flight;
                     // treat it as the miss it effectively is
-                    Some(CacheEntry::Pending(_)) | None => {
+                    Lookup::Pending(_) | Lookup::Miss => {
                         pending.insert(
                             key,
                             PendingKey { fate: OwnerFate::InFlight, waiters: Vec::new() },
@@ -837,6 +1188,10 @@ impl ShardedFleet {
             }
             routed[s] += 1;
             self.shards[s].inject(fwd);
+            if !naive {
+                let next = self.shards[s].next_event_us();
+                refresh_clock(&mut clock, &mut clock_entry, s, next, &mut work);
+            }
         }
 
         // reconcile: owners that completed resolve their key (promotion
@@ -847,10 +1202,8 @@ impl ShardedFleet {
             let p = pending.remove(&key).expect("pending keys are recorded in order");
             debug_assert!(p.waiters.is_empty(), "all owners depart before the heaps drain");
             if matches!(p.fate, OwnerFate::Finished(_)) {
-                let tick = self.lru_tick;
-                self.lru_tick += 1;
-                self.cache.insert(key, CacheEntry::Resolved { last_used: tick });
-                evictions += self.enforce_cache_bounds(key.0);
+                self.cache.promote(key);
+                evictions += self.enforce_cache_bounds(key.0, &mut work);
             }
         }
 
@@ -872,6 +1225,7 @@ impl ShardedFleet {
                 evictions,
             },
             router_delay_sum,
+            work,
         );
         Ok((report, injected))
     }
@@ -896,6 +1250,7 @@ impl ShardedFleet {
         let mut pending_keys: Vec<((u32, u64), u64)> = Vec::new();
         let mut lookups = 0u64;
         let mut seen_ids = std::collections::HashSet::new();
+        let mut work = WorkCounters::default();
 
         for req in requests {
             let s = self.shard_of(req);
@@ -905,7 +1260,7 @@ impl ShardedFleet {
             let exit = start + self.config.router_service_us;
             router_free[s] = exit;
             router_delay_sum += start - req.arrival_us;
-            let mut fwd = req.clone();
+            let mut fwd = *req; // Copy — no allocation, no Clone
             fwd.arrival_us = exit;
             // deadlines stay anchored to the *tier* arrival: the forwarded
             // request's budget shrinks by the time spent in the router
@@ -921,27 +1276,17 @@ impl ShardedFleet {
                 );
                 lookups += 1;
                 let key = (req.net, req.input_digest);
-                let tick = self.lru_tick;
-                let lookup = match self.cache.get_mut(&key) {
-                    Some(CacheEntry::Resolved { last_used }) => {
-                        *last_used = tick; // LRU touch
-                        Lookup::Resolved
-                    }
-                    Some(CacheEntry::Pending(owner)) => Lookup::Pending(*owner),
-                    None => Lookup::Miss,
-                };
-                self.lru_tick += 1;
-                match lookup {
+                match self.cache.lookup_touch(&key) {
                     Lookup::Resolved => {
-                        joiners.push((req.clone(), exit, s, None));
+                        joiners.push((*req, exit, s, None));
                         continue;
                     }
                     Lookup::Pending(owner) => {
-                        joiners.push((req.clone(), exit, s, Some(owner)));
+                        joiners.push((*req, exit, s, Some(owner)));
                         continue;
                     }
                     Lookup::Miss => {
-                        self.cache.insert(key, CacheEntry::Pending(req.id));
+                        self.cache.insert_pending(key, req.id);
                         pending_keys.push((key, req.id));
                     }
                 }
@@ -964,10 +1309,8 @@ impl ShardedFleet {
         let mut evictions = 0u64;
         for (key, owner) in pending_keys {
             if owner_finish.contains_key(&owner) {
-                let tick = self.lru_tick;
-                self.lru_tick += 1;
-                self.cache.insert(key, CacheEntry::Resolved { last_used: tick });
-                evictions += self.enforce_cache_bounds(key.0);
+                self.cache.promote(key);
+                evictions += self.enforce_cache_bounds(key.0, &mut work);
             } else {
                 self.cache.remove(&key);
             }
@@ -1028,13 +1371,15 @@ impl ShardedFleet {
                 evictions,
             },
             router_delay_sum,
+            work,
         )
     }
 
     /// Fold per-shard reports, cache accounting and router metrics into
     /// one [`ShardedReport`]. `n_requests` is the number of requests that
     /// arrived at the tier, `span_start` the earliest tier arrival (used
-    /// for the global throughput span).
+    /// for the global throughput span), `work` the tier loop's own
+    /// counters (every shard's are folded in here).
     #[allow(clippy::too_many_arguments)]
     fn aggregate(
         &self,
@@ -1045,7 +1390,11 @@ impl ShardedFleet {
         cache_hits: Vec<CacheHit>,
         mut cache: CacheStats,
         router_delay_sum: f64,
+        mut work: WorkCounters,
     ) -> ShardedReport {
+        for r in &reports {
+            work.merge(&r.work);
+        }
         cache.hits = cache_hits.len() as u64;
         cache.hit_rate =
             if cache.lookups > 0 { cache.hits as f64 / cache.lookups as f64 } else { 0.0 };
@@ -1109,6 +1458,7 @@ impl ShardedFleet {
             queue_depth_p50: p50,
             queue_depth_p95: p95,
             queue_depth_p99: p99,
+            work,
             cache_hits,
             cache,
             shards: reports,
@@ -1948,5 +2298,177 @@ mod tests {
         assert!(report.throughput_rps.is_finite());
         assert_eq!(report.throughput_rps, 1e6, "1 completion over the 1 us floor");
         assert_eq!(report.shards[0].throughput_rps, 1e6, "fleet and tier rules agree");
+    }
+
+    #[test]
+    fn prop_tier_indexed_hot_path_matches_naive_oracle() {
+        // the tier-level tentpole property: the shard-clock tournament,
+        // the O(1) LRU recency lists and every shard's indexed hot path
+        // must reproduce the naive-oracle tier bit for bit — completions,
+        // sheds, cache hits/evictions/entries, energy — across the
+        // scheduling matrix, including a cache-warm second round
+        check("shard-indexed-vs-naive", 16, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4, 8]);
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: *rng.pick(&[0.0f64, 80.0]),
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.7),
+                cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
+                cache_quota_per_net: *rng.pick(&[3usize, usize::MAX]),
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, 16, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 15_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 30_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+            };
+            let mut indexed = tier(8, k, policy, fleet_config, config);
+            let mut naive = tier(8, k, policy, fleet_config, config);
+            naive.set_hot_path_mode(HotPathMode::NaiveOracle);
+            let reqs = tenant_workload(3, 700.0, 120, 0.4, rng.next_u64());
+            for round in 0..2 {
+                let a = indexed.run(&reqs);
+                let b = naive.run(&reqs);
+                a.check_conservation(reqs.len())?;
+                b.check_conservation(reqs.len())?;
+                let ctx = |what: &str| format!("round {round}: {what} diverged");
+                for (s, (ra, rb)) in a.shards.iter().zip(b.shards.iter()).enumerate() {
+                    if ra.completions != rb.completions {
+                        return Err(ctx(&format!("shard {s} completions")));
+                    }
+                    if ra.rejections != rb.rejections {
+                        return Err(ctx(&format!("shard {s} rejections")));
+                    }
+                    if ra.active_energy_uj != rb.active_energy_uj
+                        || ra.net_switches != rb.net_switches
+                        || ra.steals != rb.steals
+                        || ra.batches != rb.batches
+                    {
+                        return Err(ctx(&format!("shard {s} aggregates")));
+                    }
+                }
+                if a.cache_hits != b.cache_hits {
+                    return Err(ctx("cache hits"));
+                }
+                if a.cache.lookups != b.cache.lookups
+                    || a.cache.hits != b.cache.hits
+                    || a.cache.shed_joins != b.cache.shed_joins
+                    || a.cache.evictions != b.cache.evictions
+                    || a.cache.entries != b.cache.entries
+                {
+                    return Err(ctx(&format!("cache stats: {:?} vs {:?}", a.cache, b.cache)));
+                }
+                if a.total_completed != b.total_completed
+                    || a.total_shed != b.total_shed
+                    || a.per_shard_routed != b.per_shard_routed
+                    || a.throughput_rps != b.throughput_rps
+                    || a.deadline_misses != b.deadline_misses
+                {
+                    return Err(ctx("tier totals"));
+                }
+                if indexed.cache_entries() != naive.cache_entries() {
+                    return Err(ctx("resident cache entries"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_deadline_requests_flow_through_the_tier_without_panicking() {
+        // regression for the NaN-unsafe float compares on the tier's
+        // report paths: NaN deadlines must survive routing, the router
+        // deadline-budget shrink, EDF queues and the percentile
+        // aggregation (NaN never scores as a miss)
+        let config = ShardConfig {
+            shards: 2,
+            router_service_us: 50.0,
+            cache: true,
+            ..ShardConfig::default()
+        };
+        let fleet_config =
+            FleetConfig { discipline: QueueDiscipline::Edf, ..FleetConfig::default() };
+        let mut t = tier(4, 2, Policy::LeastLoaded, fleet_config, config);
+        let mut reqs = tenant_workload(2, 800.0, 40, 0.3, 5);
+        for r in reqs.iter_mut().step_by(3) {
+            r.deadline_us = Some(f64::NAN);
+        }
+        let report = t.run(&reqs);
+        report.check_conservation(reqs.len()).unwrap();
+        assert!(report.queue_depth_p99.is_finite());
+        let nan_ids: HashSet<u64> =
+            reqs.iter().step_by(3).map(|r| r.id).collect();
+        for s in &report.shards {
+            for c in &s.completions {
+                if nan_ids.contains(&c.id) {
+                    assert!(!c.deadline_missed, "NaN deadline scored as missed: {c:?}");
+                }
+            }
+        }
+        for h in &report.cache_hits {
+            if nan_ids.contains(&h.id) {
+                assert!(!h.deadline_missed, "NaN deadline scored as missed: {h:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_indexed_mode_reduces_clock_polls_and_cache_scans() {
+        // K=8 with a tightly bounded cache and heavy repeats: the naive
+        // tier polls all 8 shard clocks per event and re-scans the cache
+        // map per bounded promotion/eviction; the tournament peeks once
+        // per event and the recency lists evict in O(1). Reports must be
+        // bit-identical while both counters collapse.
+        let config = ShardConfig {
+            shards: 8,
+            router_service_us: 40.0,
+            cache: true,
+            cache_capacity: 8,
+            cache_quota_per_net: 3,
+            ..ShardConfig::default()
+        };
+        let fleet_config = FleetConfig {
+            queue_bound: 16,
+            batch_max: 4,
+            wakeup_cycles: 10_000,
+            net_switch_cycles: 20_000,
+            discipline: QueueDiscipline::Edf,
+            steal: true,
+            ..FleetConfig::default()
+        };
+        let reqs = tenant_workload(3, 900.0, 200, 0.4, 77);
+        let mut indexed = tier(8, 8, Policy::TenancyAware, fleet_config, config);
+        let mut naive = tier(8, 8, Policy::TenancyAware, fleet_config, config);
+        naive.set_hot_path_mode(HotPathMode::NaiveOracle);
+        let a = indexed.run(&reqs);
+        let b = naive.run(&reqs);
+        a.check_conservation(reqs.len()).unwrap();
+        for (ra, rb) in a.shards.iter().zip(b.shards.iter()) {
+            assert_eq!(ra.completions, rb.completions);
+            assert_eq!(ra.rejections, rb.rejections);
+        }
+        assert_eq!(a.cache.evictions, b.cache.evictions);
+        assert!(a.cache.evictions > 0, "the scenario must evict to exercise the LRU");
+        assert!(
+            b.work.shard_clock_polls > 2 * a.work.shard_clock_polls,
+            "clock polls must drop by >2x: naive {} vs indexed {}",
+            b.work.shard_clock_polls,
+            a.work.shard_clock_polls
+        );
+        assert!(
+            b.work.cache_entry_scans > 2 * a.work.cache_entry_scans,
+            "cache scans must drop by >2x: naive {} vs indexed {}",
+            b.work.cache_entry_scans,
+            a.work.cache_entry_scans
+        );
     }
 }

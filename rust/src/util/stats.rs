@@ -34,11 +34,13 @@ impl Summary {
     }
 }
 
-/// Percentile by nearest-rank on a sorted copy (p in [0,100]).
+/// Percentile by nearest-rank on a sorted copy (p in [0,100]). The sort
+/// is a total order (`f64::total_cmp`): NaN inputs rank last instead of
+/// panicking, so report paths stay NaN-safe.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
