@@ -4,7 +4,7 @@ ARTIFACTS ?= artifacts
 SEED ?= 2020
 TRACES ?= traces
 
-.PHONY: all build test bench bench-hot trace artifacts doc clean
+.PHONY: all build test lint bench bench-hot trace artifacts doc clean
 
 all: build
 
@@ -13,6 +13,12 @@ build:
 
 test:
 	cargo test -q
+
+# pallas-lint: the determinism/invariant rules (D001-D006, see
+# docs/STATIC_ANALYSIS.md) over rust/ + examples/. --deny exits non-zero
+# on any diagnostic — the mode CI runs.
+lint: build
+	./target/release/pulpnn lint --deny
 
 # Fast self-asserting bench pass (the same budget CI uses). des_hot also
 # emits BENCH_des_hot.json into the repo root (pulpnn-bench-v1) — the

@@ -42,6 +42,7 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
     // --- phase 1: real inference through the serving queue ---
     let mut rt = Runtime::cpu()?;
     println!("runtime platform: {}", rt.platform());
+    // pallas-lint: allow(D003, reason = "example reporting: compile time of the real artifact runtime")
     let t0 = std::time::Instant::now();
     let mut srv = Server::with_cache(&mut rt, artifact, 256)?;
     println!("compiled demo CNN in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
@@ -56,6 +57,7 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
         })
         .collect();
 
+    // pallas-lint: allow(D003, reason = "example reporting: wall-clock throughput of the real serving drain")
     let t0 = std::time::Instant::now();
     for (id, x) in &inputs {
         assert!(srv.submit(*id, x.data.clone()), "queue overflow");

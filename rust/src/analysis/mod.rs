@@ -1,0 +1,135 @@
+//! `pallas-lint` — a std-only static-analysis engine enforcing the
+//! repo's determinism & invariant rules.
+//!
+//! Every engine change in PRs 1–5 was proven bit-exact against a
+//! retained oracle (event-vs-sync, unified-vs-two-phase,
+//! indexed-vs-naive), and the paper's 27-kernel cycle models stay
+//! trustworthy only because replays reproduce to the bit. That
+//! discipline used to be defended by convention alone: one iterated
+//! `HashMap`, one `partial_cmp` on an `f64`, or one wall-clock read on
+//! a simulation path silently breaks the oracle properties. This module
+//! turns the convention into tooling:
+//!
+//! * [`scanner`] — a real Rust token scanner (line/block/doc comments,
+//!   string/raw-string/char/byte literals, nesting) so rules never fire
+//!   on prose;
+//! * [`rules`] — the rule set D001–D006 with machine-readable ids,
+//!   `file:line` diagnostics, and a reason-carrying
+//!   `// pallas-lint: allow(<rule>, reason = "...")` escape hatch;
+//! * [`lint_root`] — the repo sweep over `rust/` + `examples/`, exposed
+//!   as the `pulpnn lint` CLI subcommand and enforced in tier-1 by
+//!   `rust/tests/static_analysis.rs`.
+//!
+//! The rule catalog and the rationale tying each rule to the
+//! bit-exact-replay invariant live in `docs/STATIC_ANALYSIS.md`.
+
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_file, Diagnostic, RuleInfo, RULES};
+
+/// Result of a full-tree sweep.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All surviving diagnostics, ordered by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// The directories a sweep covers, relative to the lint root.
+pub const SWEEP_DIRS: &[&str] = &["rust", "examples"];
+
+/// Collect every `.rs` file under the sweep directories of `root`, as
+/// repo-relative `/`-separated paths in sorted (deterministic) order.
+pub fn sweep_paths(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut files = Vec::new();
+    let mut any = false;
+    for dir in SWEEP_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            any = true;
+            walk(&d, &mut files)?;
+        }
+    }
+    if !any {
+        return Err(format!(
+            "lint root `{}` has none of the sweep directories {:?}",
+            root.display(),
+            SWEEP_DIRS
+        ));
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Sweep `rust/` + `examples/` under `root` and lint every file.
+pub fn lint_root(root: &Path) -> Result<LintReport, String> {
+    let files = sweep_paths(root)?;
+    let mut diagnostics = Vec::new();
+    let files_scanned = files.len();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = relative_key(root, path);
+        diagnostics.extend(rules::lint_file(&rel, &text));
+    }
+    Ok(LintReport { files_scanned, diagnostics })
+}
+
+/// Repo-relative `/`-separated path used for rule scoping and display.
+fn relative_key(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_catalog_ids_are_unique_and_sorted() {
+        let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(ids, sorted, "rule catalog must stay unique and id-ordered");
+    }
+
+    #[test]
+    fn allowable_rules_are_exactly_the_d_rules() {
+        for r in RULES {
+            let is_d = r.id.starts_with('D');
+            assert_eq!(
+                rules::is_known_rule(r.id),
+                is_d,
+                "allow annotations accept exactly the D-rules, got {}",
+                r.id
+            );
+        }
+    }
+
+    #[test]
+    fn relative_keys_use_forward_slashes() {
+        let root = Path::new("/repo");
+        let p = Path::new("/repo/rust/src/lib.rs");
+        assert_eq!(relative_key(root, p), "rust/src/lib.rs");
+    }
+}

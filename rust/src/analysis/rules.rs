@@ -1,0 +1,799 @@
+//! The `pallas-lint` rule set: determinism & invariant rules D001–D006.
+//!
+//! Every rule is lexical — it pattern-matches the token stream produced
+//! by [`crate::analysis::scanner`] — so rule text inside strings, raw
+//! strings, chars, and comments can never fire. Each diagnostic carries
+//! a machine-readable rule id and an exact 1-based line, and can be
+//! suppressed by an inline annotation **with a mandatory reason** on the
+//! same line or the line directly above:
+//!
+//! ```text
+//! // pallas-lint: allow(D004, reason = "documented panic: API contract")
+//! ```
+//!
+//! A reason-less, unknown-rule, or otherwise malformed annotation is
+//! itself a diagnostic (A000), and an annotation that suppresses nothing
+//! is flagged as stale (A001) — the sweep stays allowlist-exact.
+//!
+//! See `docs/STATIC_ANALYSIS.md` for the rule catalog and the rationale
+//! tying each rule to the repo's bit-exact-replay invariant.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::scanner::{Scan, TokKind, Token};
+
+/// A single lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Machine-readable rule id (`D001`..`D006`, `A000`, `A001`).
+    pub rule: &'static str,
+    /// Repo-relative path of the offending file.
+    pub file: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// Human explanation.
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Catalog entry for one rule (the `lint --rules` listing and the docs
+/// are generated from this table).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Machine-readable id.
+    pub id: &'static str,
+    /// One-line summary.
+    pub summary: &'static str,
+    /// Where the rule applies.
+    pub scope: &'static str,
+}
+
+/// The rule catalog, in id order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D001",
+        summary: "no HashMap/HashSet iteration (iter/keys/values/drain/retain/for-in); \
+                  iteration order is nondeterministic and breaks bit-exact replay",
+        scope: "rust/src/coordinator, rust/src/cluster, rust/src/bench",
+    },
+    RuleInfo {
+        id: "D002",
+        summary: "no partial_cmp calls on floats; f64::total_cmp is the repo rule (NaN-safe, \
+                  total order) since PR 5",
+        scope: "everywhere",
+    },
+    RuleInfo {
+        id: "D003",
+        summary: "no Instant::now/SystemTime::now on simulation paths; wall-clock reads are \
+                  confined to the bench harness",
+        scope: "everywhere except rust/src/util/benchkit.rs and rust/benches",
+    },
+    RuleInfo {
+        id: "D004",
+        summary: "no unwrap()/expect() in coordinator non-test code without a reviewed reason",
+        scope: "rust/src/coordinator, outside #[cfg(test)]/#[test] items",
+    },
+    RuleInfo {
+        id: "D005",
+        summary: "no corrupted doc-comment markers (`/!`, or a lone `/ ` before prose); \
+                  rustdoc drops such lines silently",
+        scope: "everywhere (code context only; strings/comments exempt)",
+    },
+    RuleInfo {
+        id: "D006",
+        summary: "crate roots carry #![forbid(unsafe_code)] and no unsafe token appears",
+        scope: "attribute: rust/src/lib.rs + rust/src/main.rs; token ban: everywhere",
+    },
+    RuleInfo {
+        id: "A000",
+        summary: "malformed pallas-lint annotation (unknown rule, missing or empty reason)",
+        scope: "everywhere (engine-generated; not allowable)",
+    },
+    RuleInfo {
+        id: "A001",
+        summary: "stale allow annotation: it suppresses no diagnostic",
+        scope: "everywhere (engine-generated; not allowable)",
+    },
+];
+
+/// True for rule ids that may appear in an allow annotation.
+pub fn is_known_rule(id: &str) -> bool {
+    matches!(id, "D001" | "D002" | "D003" | "D004" | "D005" | "D006")
+}
+
+/// Lint one file's source text. `path` must be repo-relative with `/`
+/// separators — rule scoping matches on it textually.
+pub fn lint_file(path: &str, text: &str) -> Vec<Diagnostic> {
+    let scan = crate::analysis::scanner::scan(text);
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    d001_hash_iteration(path, &scan, &mut raw);
+    d002_partial_cmp(path, &scan, &mut raw);
+    d003_wall_clock(path, &scan, &mut raw);
+    d004_unwrap_in_coordinator(path, &scan, &mut raw);
+    d005_corrupted_doc_markers(path, text, &scan, &mut raw);
+    d006_unsafe(path, &scan, &mut raw);
+
+    // apply allow annotations: an allow on line L suppresses matching
+    // diagnostics on L (trailing comment) and L + 1 (preceding line)
+    let mut used = vec![false; scan.allows.len()];
+    let mut out: Vec<Diagnostic> = Vec::new();
+    for d in raw {
+        let mut suppressed = false;
+        for (k, a) in scan.allows.iter().enumerate() {
+            if a.rule == d.rule && (a.line == d.line || a.line + 1 == d.line) {
+                used[k] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            out.push(d);
+        }
+    }
+    for (line, why) in &scan.malformed {
+        out.push(Diagnostic {
+            rule: "A000",
+            file: path.to_string(),
+            line: *line,
+            message: format!("malformed pallas-lint annotation: {why}"),
+        });
+    }
+    for (k, a) in scan.allows.iter().enumerate() {
+        if !used[k] {
+            out.push(Diagnostic {
+                rule: "A001",
+                file: path.to_string(),
+                line: a.line,
+                message: format!(
+                    "stale allow({}) suppresses nothing — remove it (reason was: \"{}\")",
+                    a.rule, a.reason
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn diag(out: &mut Vec<Diagnostic>, rule: &'static str, path: &str, line: u32, message: String) {
+    out.push(Diagnostic { rule, file: path.to_string(), line, message });
+}
+
+fn is_punct(t: &Token, c: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.as_bytes()[0] == c as u8
+}
+
+fn is_ident(t: &Token, name: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == name
+}
+
+// ---------------------------------------------------------------- D001
+
+const D001_DIRS: &[&str] = &["rust/src/coordinator/", "rust/src/cluster/", "rust/src/bench/"];
+
+const D001_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+    "retain_mut",
+    "extract_if",
+];
+
+/// Names in this file declared (or assigned) with a `HashMap`/`HashSet`
+/// type: `name: …HashMap<…>` struct fields and `let` bindings, plus
+/// `name = HashMap::new()` assignments. Lexical, per-file — aliases that
+/// launder a hash map through another binding are out of scope (see
+/// docs/STATIC_ANALYSIS.md, "Known limits").
+fn hash_typed_names(toks: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        if !(is_ident(&toks[i], "HashMap") || is_ident(&toks[i], "HashSet")) {
+            continue;
+        }
+        // walk back through type-position tokens to the declaring `:`
+        // (or `=` for an inferred binding); give up fast on anything
+        // that is not plausibly part of a type
+        let mut j = i;
+        let mut steps = 0;
+        while j > 0 && steps < 32 {
+            j -= 1;
+            steps += 1;
+            let t = &toks[j];
+            if is_punct(t, ':') {
+                if j > 0 && is_punct(&toks[j - 1], ':') {
+                    j -= 1; // `::` path separator — keep walking
+                    continue;
+                }
+                if j > 0 && toks[j - 1].kind == TokKind::Ident {
+                    names.insert(toks[j - 1].text.clone());
+                }
+                break;
+            }
+            if is_punct(t, '=') {
+                let arrow = j + 1 < toks.len() && is_punct(&toks[j + 1], '>');
+                if !arrow && j > 0 && toks[j - 1].kind == TokKind::Ident {
+                    names.insert(toks[j - 1].text.clone());
+                }
+                break;
+            }
+            let type_ish = t.kind == TokKind::Ident
+                || t.kind == TokKind::Lifetime
+                || is_punct(t, '<')
+                || is_punct(t, '>')
+                || is_punct(t, ',')
+                || is_punct(t, '&')
+                || is_punct(t, '(')
+                || is_punct(t, ')');
+            if !type_ish {
+                break;
+            }
+        }
+    }
+    names
+}
+
+fn d001_hash_iteration(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    if !D001_DIRS.iter().any(|d| path.starts_with(d)) {
+        return;
+    }
+    let toks = &scan.tokens;
+    let names = hash_typed_names(toks);
+    if names.is_empty() {
+        return;
+    }
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident || !names.contains(&toks[i].text) {
+            continue;
+        }
+        // `name.iter()` / `self.name.drain(..)` and friends
+        if i + 2 < toks.len()
+            && is_punct(&toks[i + 1], '.')
+            && toks[i + 2].kind == TokKind::Ident
+            && D001_ITER_METHODS.contains(&toks[i + 2].text.as_str())
+        {
+            diag(
+                out,
+                "D001",
+                path,
+                toks[i + 2].line,
+                format!(
+                    "`{}.{}` iterates a hash collection — iteration order is \
+                     nondeterministic; use BTreeMap/BTreeSet (or a slab/intrusive \
+                     list) when order can reach a report, trace, or event stream",
+                    toks[i].text, toks[i + 2].text
+                ),
+            );
+        }
+        // `for x in [&mut] [self.]name {`
+        if i + 1 < toks.len() && is_punct(&toks[i + 1], '{') {
+            let mut j = i;
+            while j >= 2 && is_punct(&toks[j - 1], '.') && toks[j - 2].kind == TokKind::Ident {
+                j -= 2;
+            }
+            while j >= 1 && (is_punct(&toks[j - 1], '&') || is_ident(&toks[j - 1], "mut")) {
+                j -= 1;
+            }
+            if j >= 1 && is_ident(&toks[j - 1], "in") {
+                diag(
+                    out,
+                    "D001",
+                    path,
+                    toks[i].line,
+                    format!(
+                        "`for … in {}` iterates a hash collection — iteration order \
+                         is nondeterministic; use BTreeMap/BTreeSet instead",
+                        toks[i].text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D002
+
+fn d002_partial_cmp(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        if !is_ident(&toks[i], "partial_cmp") {
+            continue;
+        }
+        let method_call = i >= 1 && is_punct(&toks[i - 1], '.');
+        let path_ref = i >= 2 && is_punct(&toks[i - 1], ':') && is_punct(&toks[i - 2], ':');
+        if method_call || path_ref {
+            diag(
+                out,
+                "D002",
+                path,
+                toks[i].line,
+                "`partial_cmp` is NaN-unsafe (returns None and panics downstream or \
+                 silently mis-sorts); use `f64::total_cmp` — the repo rule since PR 5"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D003
+
+fn d003_wall_clock(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    if path == "rust/src/util/benchkit.rs" || path.starts_with("rust/benches/") {
+        return;
+    }
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        let clock = is_ident(&toks[i], "Instant") || is_ident(&toks[i], "SystemTime");
+        if clock
+            && i + 3 < toks.len()
+            && is_punct(&toks[i + 1], ':')
+            && is_punct(&toks[i + 2], ':')
+            && is_ident(&toks[i + 3], "now")
+        {
+            diag(
+                out,
+                "D003",
+                path,
+                toks[i].line,
+                format!(
+                    "`{}::now` reads the wall clock — simulated time must come from \
+                     the event clock; real-time reads live in util/benchkit.rs and \
+                     benches/ (annotate genuine real-path measurements)",
+                    toks[i].text
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D004
+
+/// 1-based inclusive line ranges covered by `#[cfg(test)]` / `#[test]`
+/// items (the attribute's item runs to its matching closing brace, or to
+/// the terminating semicolon for braceless items).
+fn test_line_ranges(toks: &[Token]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        let cfg_test = is_punct(&toks[i], '#')
+            && is_punct(&toks[i + 1], '[')
+            && i + 6 < toks.len()
+            && is_ident(&toks[i + 2], "cfg")
+            && is_punct(&toks[i + 3], '(')
+            && is_ident(&toks[i + 4], "test")
+            && is_punct(&toks[i + 5], ')')
+            && is_punct(&toks[i + 6], ']');
+        let plain_test = is_punct(&toks[i], '#')
+            && is_punct(&toks[i + 1], '[')
+            && i + 3 < toks.len()
+            && is_ident(&toks[i + 2], "test")
+            && is_punct(&toks[i + 3], ']');
+        if !cfg_test && !plain_test {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + if cfg_test { 7 } else { 4 };
+        // find the item's opening brace (a `;` first means a braceless
+        // item — the region ends there)
+        let mut open = None;
+        while j < toks.len() {
+            if is_punct(&toks[j], '{') {
+                open = Some(j);
+                break;
+            }
+            if is_punct(&toks[j], ';') {
+                break;
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            let end = toks.get(j).map_or(start_line, |t| t.line);
+            ranges.push((start_line, end));
+            i = j + 1;
+            continue;
+        };
+        let mut depth = 1i32;
+        let mut k = open + 1;
+        while k < toks.len() && depth > 0 {
+            if is_punct(&toks[k], '{') {
+                depth += 1;
+            } else if is_punct(&toks[k], '}') {
+                depth -= 1;
+            }
+            k += 1;
+        }
+        let end_line = toks.get(k.saturating_sub(1)).map_or(start_line, |t| t.line);
+        ranges.push((start_line, end_line));
+        i = k;
+    }
+    ranges
+}
+
+fn d004_unwrap_in_coordinator(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    if !path.starts_with("rust/src/coordinator/") {
+        return;
+    }
+    let toks = &scan.tokens;
+    let tests = test_line_ranges(toks);
+    let in_test = |line: u32| tests.iter().any(|&(a, b)| a <= line && line <= b);
+    for i in 1..toks.len() {
+        let name = &toks[i];
+        if name.kind != TokKind::Ident || (name.text != "unwrap" && name.text != "expect") {
+            continue;
+        }
+        if !is_punct(&toks[i - 1], '.') || in_test(name.line) {
+            continue;
+        }
+        diag(
+            out,
+            "D004",
+            path,
+            name.line,
+            format!(
+                "`.{}` in coordinator non-test code — return a typed error, or annotate \
+                 the documented invariant with an allow(D004) reason",
+                name.text
+            ),
+        );
+    }
+}
+
+// ---------------------------------------------------------------- D005
+
+/// A line whose first non-whitespace token looks like a doc-comment
+/// marker that lost a slash: `/!`, or a lone `/` followed by a space and
+/// an uppercase letter, `[`, or a backtick. Legitimate line-wrapped
+/// divisions continue with lowercase identifiers, digits or `(`, so they
+/// never match.
+pub fn is_corrupted_marker(line: &str) -> bool {
+    let t = line.trim_start();
+    let Some(rest) = t.strip_prefix('/') else {
+        return false;
+    };
+    if rest.starts_with('!') {
+        return true;
+    }
+    match rest.strip_prefix(' ') {
+        Some(after) => after.starts_with(|c: char| c.is_ascii_uppercase() || c == '[' || c == '`'),
+        None => false,
+    }
+}
+
+fn d005_corrupted_doc_markers(path: &str, text: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    for (idx, line) in text.lines().enumerate() {
+        if scan.line_starts_in_code(idx + 1) && is_corrupted_marker(line) {
+            diag(
+                out,
+                "D005",
+                path,
+                (idx + 1) as u32,
+                format!(
+                    "corrupted doc-comment marker (a `/` short of a doc comment — \
+                     rustdoc drops the line silently): `{}`",
+                    line.trim()
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D006
+
+const D006_CRATE_ROOTS: &[&str] = &["rust/src/lib.rs", "rust/src/main.rs"];
+
+fn d006_unsafe(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    let toks = &scan.tokens;
+    for t in toks {
+        if is_ident(t, "unsafe") {
+            diag(
+                out,
+                "D006",
+                path,
+                t.line,
+                "`unsafe` token — the crate forbids unsafe code (#![forbid(unsafe_code)])"
+                    .to_string(),
+            );
+        }
+    }
+    if !D006_CRATE_ROOTS.contains(&path) {
+        return;
+    }
+    let mut found = false;
+    for i in 0..toks.len() {
+        if is_punct(&toks[i], '#')
+            && i + 7 < toks.len()
+            && is_punct(&toks[i + 1], '!')
+            && is_punct(&toks[i + 2], '[')
+            && is_ident(&toks[i + 3], "forbid")
+            && is_punct(&toks[i + 4], '(')
+            && is_ident(&toks[i + 5], "unsafe_code")
+            && is_punct(&toks[i + 6], ')')
+            && is_punct(&toks[i + 7], ']')
+        {
+            found = true;
+            break;
+        }
+    }
+    if !found {
+        diag(out, "D006", path, 1, "crate root is missing `#![forbid(unsafe_code)]`".to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_at(path: &str, src: &str) -> Vec<Diagnostic> {
+        lint_file(path, src)
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<(&'static str, u32)> {
+        diags.iter().map(|d| (d.rule, d.line)).collect()
+    }
+
+    // ---- D001 ---------------------------------------------------------
+
+    const COORD: &str = "rust/src/coordinator/fake.rs";
+
+    #[test]
+    fn d001_fires_on_iter_keys_values_drain_retain_and_for_in() {
+        let src = "use std::collections::{HashMap, HashSet};\n\
+                   struct S { m: HashMap<u32, u32> }\n\
+                   fn f(s: &mut S) {\n\
+                   let mut h: HashSet<u32> = HashSet::new();\n\
+                   for x in &s.m {}\n\
+                   let _ = s.m.iter();\n\
+                   let _ = s.m.keys();\n\
+                   let _ = s.m.values();\n\
+                   s.m.retain(|_, _| true);\n\
+                   h.drain();\n\
+                   }\n";
+        let got = rules_of(&lint_at(COORD, src));
+        assert_eq!(
+            got,
+            vec![
+                ("D001", 5),
+                ("D001", 6),
+                ("D001", 7),
+                ("D001", 8),
+                ("D001", 9),
+                ("D001", 10),
+            ]
+        );
+    }
+
+    #[test]
+    fn d001_point_lookups_and_btree_iteration_stay_allowed() {
+        let src = "use std::collections::{BTreeMap, HashMap};\n\
+                   fn f(m: &mut HashMap<u32, u32>, b: &BTreeMap<u32, u32>) -> Option<u32> {\n\
+                   for (k, v) in b.iter() {}\n\
+                   m.insert(1, 2);\n\
+                   m.remove(&1);\n\
+                   m.entry(3).or_default();\n\
+                   m.get(&1).copied()\n\
+                   }\n";
+        assert!(lint_at(COORD, src).is_empty());
+    }
+
+    #[test]
+    fn d001_ignores_iteration_text_in_strings_and_comments() {
+        let src = "fn f(m: &std::collections::HashMap<u32, u32>) {\n\
+                   // m.iter() would be nondeterministic\n\
+                   /* for x in m {} */\n\
+                   let _ = \"m.iter() and m.keys()\";\n\
+                   let _ = r#\"for x in m {\"#;\n\
+                   let _ = m.get(&1);\n\
+                   }\n";
+        assert!(lint_at(COORD, src).is_empty());
+    }
+
+    #[test]
+    fn d001_is_scoped_to_the_deterministic_dirs() {
+        let src = "fn f(m: &std::collections::HashMap<u32, u32>) { for x in m {} }\n";
+        assert!(!lint_at(COORD, src).is_empty());
+        assert!(lint_at("rust/src/cluster/fake.rs", src).iter().any(|d| d.rule == "D001"));
+        assert!(lint_at("rust/src/bench/fake.rs", src).iter().any(|d| d.rule == "D001"));
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d001_allow_with_reason_suppresses() {
+        let src = "fn f(m: &std::collections::HashMap<u32, u32>) {\n\
+                   // pallas-lint: allow(D001, reason = \"order folded through a sort\")\n\
+                   let mut v: Vec<u32> = m.keys().copied().collect();\n\
+                   v.sort_unstable();\n\
+                   }\n";
+        assert!(lint_at(COORD, src).is_empty());
+    }
+
+    // ---- D002 ---------------------------------------------------------
+
+    #[test]
+    fn d002_fires_on_method_calls_and_fn_pointers() {
+        let src = "fn f(v: &mut Vec<f64>) {\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   v.sort_by(f64::partial_cmp_is_fine_not_this);\n\
+                   let _ = f64::partial_cmp;\n\
+                   }\n";
+        let got = rules_of(&lint_at("rust/src/qnn/fake.rs", src));
+        assert_eq!(got, vec![("D002", 2), ("D002", 4)]);
+    }
+
+    #[test]
+    fn d002_skips_definitions_comments_and_strings() {
+        let src = "impl PartialOrd for T {\n\
+                   fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+                   Some(self.cmp(other))\n\
+                   }\n\
+                   }\n\
+                   // the old partial_cmp().unwrap() scans\n\
+                   const S: &str = \"a.partial_cmp(b)\";\n";
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
+    }
+
+    // ---- D003 ---------------------------------------------------------
+
+    #[test]
+    fn d003_fires_outside_the_bench_harness() {
+        let src = "fn f() {\n\
+                   let t = std::time::Instant::now();\n\
+                   let s = std::time::SystemTime::now();\n\
+                   }\n";
+        let got = rules_of(&lint_at("rust/src/coordinator/fake.rs", src));
+        assert_eq!(got, vec![("D003", 2), ("D003", 3)]);
+        assert!(lint_at("rust/src/util/benchkit.rs", src).is_empty());
+        assert!(lint_at("rust/benches/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d003_ignores_mentions_in_comments_and_strings() {
+        let src = "// Instant::now() is banned here\n\
+                   const S: &str = \"SystemTime::now\";\n";
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
+    }
+
+    // ---- D004 ---------------------------------------------------------
+
+    #[test]
+    fn d004_fires_in_coordinator_non_test_code_only() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   x.unwrap()\n\
+                   }\n\
+                   fn g(x: Option<u32>) -> u32 {\n\
+                   x.expect(\"invariant\")\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   }\n";
+        let got = rules_of(&lint_at(COORD, src));
+        assert_eq!(got, vec![("D004", 2), ("D004", 5)]);
+        // outside coordinator/ the rule is silent
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d004_test_fns_and_unwrap_or_variants_are_exempt() {
+        let src = "#[test]\n\
+                   fn t() { Some(1).unwrap(); }\n\
+                   fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n\
+                   fn g(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 0) }\n\
+                   // x.unwrap() in a comment\n\
+                   const S: &str = \".unwrap()\";\n";
+        assert!(lint_at(COORD, src).is_empty());
+    }
+
+    #[test]
+    fn d004_allow_on_same_or_preceding_line_suppresses() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // pallas-lint: allow(D004, reason = \"checked two lines up\")\n\
+                   x.unwrap()\n\
+                   }\n\
+                   fn g(x: Option<u32>) -> u32 {\n\
+                   x.expect(\"y\") // pallas-lint: allow(D004, reason = \"doc'd invariant\")\n\
+                   }\n";
+        assert!(lint_at(COORD, src).is_empty());
+    }
+
+    // ---- D005 ---------------------------------------------------------
+
+    #[test]
+    fn d005_fires_on_the_known_corruption_shapes_with_exact_lines() {
+        let src = "/! The horizontally sharded serving tier\n\
+                   fn f() -> u32 { 1 }\n\
+                   / [`merge_streams`]: crate::coordinator\n\
+                   / FIFO router queue: one front-end\n";
+        let got = rules_of(&lint_at("rust/src/qnn/fake.rs", src));
+        assert_eq!(got, vec![("D005", 1), ("D005", 3), ("D005", 4)]);
+    }
+
+    #[test]
+    fn d005_skips_marker_shapes_inside_strings_and_block_comments() {
+        let src = "const S: &str = \"\n\
+                   / FIFO router queue: one front-end\n\
+                   /! not a marker either\n\
+                   \";\n\
+                   /*\n\
+                   / Fleet stepping API\n\
+                   */\n\
+                   let x = a\n\
+                   / f.devices.len() as f64;\n";
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
+    }
+
+    // ---- D006 ---------------------------------------------------------
+
+    #[test]
+    fn d006_requires_forbid_on_crate_roots_and_bans_unsafe_tokens() {
+        let ok = "#![forbid(unsafe_code)]\npub mod x;\n";
+        assert!(lint_at("rust/src/lib.rs", ok).is_empty());
+        let missing = "pub mod x;\n";
+        let got = rules_of(&lint_at("rust/src/lib.rs", missing));
+        assert_eq!(got, vec![("D006", 1)]);
+        // non-root files need no attribute, but the token ban is global
+        assert!(lint_at("rust/src/qnn/fake.rs", missing).is_empty());
+        let tok = "fn f() { unsafe { core::hint::unreachable_unchecked() } }\n";
+        assert!(lint_at("rust/src/qnn/fake.rs", tok).iter().any(|d| d.rule == "D006"));
+    }
+
+    #[test]
+    fn d006_ignores_unsafe_in_comments_and_strings() {
+        let src = "#![forbid(unsafe_code)]\n\
+                   // NaN-unsafe float compares\n\
+                   const S: &str = \"unsafe\";\n";
+        assert!(lint_at("rust/src/lib.rs", src).is_empty());
+    }
+
+    // ---- annotations --------------------------------------------------
+
+    #[test]
+    fn a000_reasonless_allow_is_a_diagnostic() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   x.unwrap() // pallas-lint: allow(D004)\n\
+                   }\n";
+        let got = rules_of(&lint_at(COORD, src));
+        assert_eq!(got, vec![("A000", 2), ("D004", 2)]);
+    }
+
+    #[test]
+    fn a001_stale_allow_is_a_diagnostic() {
+        let src = "// pallas-lint: allow(D004, reason = \"nothing here needs it\")\n\
+                   fn f() -> u32 { 1 }\n";
+        let got = rules_of(&lint_at(COORD, src));
+        assert_eq!(got, vec![("A001", 1)]);
+    }
+
+    #[test]
+    fn allow_does_not_cross_rules_or_lines() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // pallas-lint: allow(D002, reason = \"wrong rule id\")\n\
+                   x.unwrap()\n\
+                   }\n";
+        let got = rules_of(&lint_at(COORD, src));
+        assert_eq!(got, vec![("A001", 2), ("D004", 3)]);
+    }
+
+    #[test]
+    fn test_region_tracking_handles_nested_braces() {
+        let toks = crate::analysis::scanner::scan(
+            "#[cfg(test)]\n\
+             mod tests {\n\
+             fn a() { if true { let x = Some(1).unwrap(); } }\n\
+             }\n\
+             fn after(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        let ranges = test_line_ranges(&toks.tokens);
+        assert_eq!(ranges, vec![(1, 4)]);
+    }
+}

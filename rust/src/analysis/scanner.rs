@@ -1,0 +1,535 @@
+//! A minimal Rust token scanner for `pallas-lint` (std-only, no syn).
+//!
+//! The scanner produces a flat token stream — identifiers, punctuation,
+//! numbers, and opaque markers for string/char literals — with 1-based
+//! line numbers, while *skipping* the interiors of comments and string
+//! literals so rule patterns never fire on prose. It understands every
+//! literal shape the rules have been bitten by in fixtures:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments
+//!   (`/* /* */ */`), including doc block comments;
+//! * string literals with escapes (`"a \" b"`), byte strings (`b"…"`),
+//!   raw strings with any hash depth (`r"…"`, `r#"…"#`, `br##"…"##`);
+//! * char and byte-char literals (`'a'`, `'\n'`, `b'\0'`) disambiguated
+//!   from lifetimes (`'a`, `'static`);
+//! * raw identifiers (`r#match`).
+//!
+//! It additionally extracts `pallas-lint:` allow annotations from line
+//! comments and records, per source line, whether the line *begins*
+//! outside any multi-line construct — the context gate the corrupted
+//! doc-marker rule (D005) needs so marker-shaped text inside strings and
+//! block comments is never flagged.
+
+/// Lexical class of a scanned token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// A single punctuation byte (`.`, `:`, `{`, ...).
+    Punct,
+    /// Numeric literal (opaque; exact spelling is irrelevant to rules).
+    Num,
+    /// String literal of any flavor (normal, byte, raw). Content opaque.
+    Str,
+    /// Character or byte-character literal. Content opaque.
+    Char,
+    /// Lifetime such as `'a` (distinct from a char literal).
+    Lifetime,
+}
+
+/// One scanned token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Lexical class.
+    pub kind: TokKind,
+    /// Identifier/number spelling, or the single punctuation character.
+    /// Empty for `Str`/`Char` (their content must never trip a rule).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+/// A parsed `// pallas-lint: allow(<rule>, reason = "...")` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// 1-based line the annotation comment sits on.
+    pub line: u32,
+    /// The rule id being allowed (e.g. `D004`).
+    pub rule: String,
+    /// The mandatory human reason.
+    pub reason: String,
+}
+
+/// The result of scanning one source file.
+#[derive(Debug)]
+pub struct Scan {
+    /// The token stream (comments and literal interiors already removed).
+    pub tokens: Vec<Token>,
+    /// Well-formed allow annotations, in source order.
+    pub allows: Vec<Allow>,
+    /// Lines carrying a `pallas-lint` marker that failed to parse as a
+    /// well-formed allow annotation, with the parse failure.
+    pub malformed: Vec<(u32, String)>,
+    /// `line_in_code[l - 1]` is true when line `l` *begins* in normal
+    /// code context — i.e. not inside a string literal or block comment
+    /// started on an earlier line.
+    pub line_in_code: Vec<bool>,
+}
+
+impl Scan {
+    /// Raw text of each source line is not retained; rules that need it
+    /// (D005) re-split the original text and consult `line_in_code`.
+    pub fn line_starts_in_code(&self, line_1based: usize) -> bool {
+        self.line_in_code.get(line_1based.wrapping_sub(1)).copied().unwrap_or(true)
+    }
+}
+
+/// Scan `text` into a [`Scan`]. Never panics on malformed input; the
+/// scanner recovers byte-by-byte so a broken literal degrades into stray
+/// punctuation rather than aborting the sweep.
+pub fn scan(text: &str) -> Scan {
+    Scanner::new(text).run()
+}
+
+struct Scanner<'a> {
+    text: &'a str,
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Scan,
+}
+
+impl<'a> Scanner<'a> {
+    fn new(text: &'a str) -> Scanner<'a> {
+        Scanner {
+            text,
+            b: text.as_bytes(),
+            i: 0,
+            line: 1,
+            out: Scan {
+                tokens: Vec::new(),
+                allows: Vec::new(),
+                malformed: Vec::new(),
+                line_in_code: vec![true],
+            },
+        }
+    }
+
+    fn peek(&self, ahead: usize) -> u8 {
+        self.b.get(self.i + ahead).copied().unwrap_or(0)
+    }
+
+    /// Consume a newline *inside* a multi-line construct: the next line
+    /// does not begin in code context.
+    fn newline_in_literal(&mut self) {
+        self.line += 1;
+        self.out.line_in_code.push(false);
+        self.i += 1;
+    }
+
+    fn push(&mut self, kind: TokKind, text: &str, line: u32) {
+        self.out.tokens.push(Token { kind, text: text.to_string(), line });
+    }
+
+    fn run(mut self) -> Scan {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.out.line_in_code.push(true);
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == b'/' => self.line_comment(),
+                b'/' if self.peek(1) == b'*' => self.block_comment(),
+                b'"' => {
+                    let line = self.line;
+                    self.escaped_string();
+                    self.push(TokKind::Str, "", line);
+                }
+                b'\'' => self.char_or_lifetime(),
+                b'0'..=b'9' => self.number(),
+                b'_' | b'a'..=b'z' | b'A'..=b'Z' => self.ident_or_prefixed_literal(),
+                _ => {
+                    // non-ASCII bytes (only legal inside literals and
+                    // comments, which are consumed above) are skipped
+                    // rather than sliced — never split a UTF-8 boundary
+                    if c.is_ascii() {
+                        let line = self.line;
+                        let ch = &self.text[self.i..self.i + 1];
+                        self.push(TokKind::Punct, ch, line);
+                    }
+                    self.i += 1;
+                }
+            }
+        }
+        self.out
+    }
+
+    /// `// …` to end of line; parses `pallas-lint:` annotations. Only a
+    /// comment whose *content* starts with the marker is an annotation —
+    /// prose that merely mentions pallas-lint (docs, examples inside doc
+    /// comments) is never parsed.
+    fn line_comment(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        let content = &self.text[start..self.i];
+        let body = content.trim_start_matches('/');
+        let body = body.strip_prefix('!').unwrap_or(body).trim_start();
+        if body.starts_with("pallas-lint") {
+            match parse_allow(body) {
+                Ok((rule, reason)) => {
+                    self.out.allows.push(Allow { line: self.line, rule, reason });
+                }
+                Err(why) => self.out.malformed.push((self.line, why)),
+            }
+        }
+    }
+
+    /// `/* … */` with nesting; newlines inside mark non-code lines.
+    fn block_comment(&mut self) {
+        self.i += 2;
+        let mut depth = 1u32;
+        while self.i < self.b.len() && depth > 0 {
+            match self.b[self.i] {
+                b'\n' => self.newline_in_literal(),
+                b'/' if self.peek(1) == b'*' => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                b'*' if self.peek(1) == b'/' => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// A `"…"` string with backslash escapes; the cursor sits on the
+    /// opening quote on entry and past the closing quote on exit.
+    fn escaped_string(&mut self) {
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => {
+                    // an escaped newline (line-continuation) still ends
+                    // the source line — keep the line counter exact
+                    if self.peek(1) == b'\n' {
+                        self.line += 1;
+                        self.out.line_in_code.push(false);
+                    }
+                    self.i += 2;
+                }
+                b'\n' => self.newline_in_literal(),
+                b'"' => {
+                    self.i += 1;
+                    return;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// A raw string: the cursor sits just past `r`/`br`, on the first
+    /// `#` or the opening quote. No escapes; closes on `"` + same hashes.
+    fn raw_string(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == b'#' {
+            hashes += 1;
+            self.i += 1;
+        }
+        debug_assert_eq!(self.peek(0), b'"');
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\n' => self.newline_in_literal(),
+                b'"' => {
+                    let mut k = 0usize;
+                    while k < hashes && self.peek(1 + k) == b'#' {
+                        k += 1;
+                    }
+                    self.i += 1 + k;
+                    if k == hashes {
+                        return;
+                    }
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// `'a'` / `'\n'` char literals vs `'a` / `'static` lifetimes.
+    fn char_or_lifetime(&mut self) {
+        let line = self.line;
+        let n1 = self.peek(1);
+        if n1 == b'\\' {
+            // escaped char literal: consume to the closing quote
+            self.i += 2;
+            while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                if self.b[self.i] == b'\n' {
+                    self.newline_in_literal();
+                } else {
+                    self.i += 1;
+                }
+            }
+            self.i += 1;
+            self.push(TokKind::Char, "", line);
+        } else if n1 != b'\'' && n1 != 0 && self.peek(2) == b'\'' {
+            self.i += 3;
+            self.push(TokKind::Char, "", line);
+        } else if n1 == b'_' || n1.is_ascii_alphabetic() {
+            let start = self.i + 1;
+            self.i += 2;
+            while self.i < self.b.len() && is_ident_byte(self.b[self.i]) {
+                self.i += 1;
+            }
+            let name = &self.text[start..self.i];
+            self.out.tokens.push(Token { kind: TokKind::Lifetime, text: name.to_string(), line });
+        } else {
+            self.i += 1; // stray quote; recover
+        }
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        while self.i < self.b.len() && is_ident_byte(self.b[self.i]) {
+            self.i += 1;
+        }
+        let text = self.text[start..self.i].to_string();
+        self.out.tokens.push(Token { kind: TokKind::Num, text, line });
+    }
+
+    /// An identifier, or a raw/byte string it prefixes (`r"…"`, `r#"…"#`,
+    /// `br#"…"#`, `b"…"`), or a raw identifier (`r#match`).
+    fn ident_or_prefixed_literal(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        while self.i < self.b.len() && is_ident_byte(self.b[self.i]) {
+            self.i += 1;
+        }
+        let word = &self.text[start..self.i];
+        let next = self.peek(0);
+        let raw_prefix = matches!(word, "r" | "br") && (next == b'"' || next == b'#');
+        if raw_prefix {
+            // `r#ident` (raw identifier) is `r` + one `#` + ident-start;
+            // distinguish it from `r#"…"#` by what follows the hashes
+            let mut k = 0usize;
+            while self.peek(k) == b'#' {
+                k += 1;
+            }
+            if self.peek(k) == b'"' {
+                self.raw_string();
+                self.push(TokKind::Str, "", line);
+            } else if word == "r" && k == 1 && is_ident_start(self.peek(1)) {
+                self.i += 1; // past the `#`
+                let id_start = self.i;
+                while self.i < self.b.len() && is_ident_byte(self.b[self.i]) {
+                    self.i += 1;
+                }
+                let name = self.text[id_start..self.i].to_string();
+                self.out.tokens.push(Token { kind: TokKind::Ident, text: name, line });
+            } else {
+                self.push(TokKind::Ident, word, line);
+            }
+        } else if word == "b" && next == b'"' {
+            self.escaped_string();
+            self.push(TokKind::Str, "", line);
+        } else {
+            // `b'x'` byte chars: push the `b`, let the quote branch run
+            self.push(TokKind::Ident, word, line);
+        }
+    }
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+/// Parse the annotation payload of a line comment that mentions
+/// `pallas-lint`. The only accepted grammar is
+/// `pallas-lint: allow(<RULE>, reason = "<nonempty>")`.
+fn parse_allow(comment: &str) -> Result<(String, String), String> {
+    let Some(pos) = comment.find("pallas-lint") else {
+        return Err("internal: marker vanished".to_string());
+    };
+    let rest = comment[pos + "pallas-lint".len()..].trim_start();
+    let Some(rest) = rest.strip_prefix(':') else {
+        return Err("expected `pallas-lint: allow(<rule>, reason = \"...\")`".to_string());
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Err("expected `allow(<rule>, reason = \"...\")` after `pallas-lint:`".to_string());
+    };
+    let Some((rule, rest)) = rest.split_once(',') else {
+        return Err("allow annotation is missing the `, reason = \"...\"` part".to_string());
+    };
+    let rule = rule.trim().to_string();
+    if !crate::analysis::rules::is_known_rule(&rule) {
+        return Err(format!("unknown rule id `{rule}` in allow annotation"));
+    }
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("reason") else {
+        return Err("allow annotation requires `reason = \"...\"`".to_string());
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('=') else {
+        return Err("allow annotation requires `reason = \"...\"`".to_string());
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('"') else {
+        return Err("allow reason must be a quoted string".to_string());
+    };
+    let Some((reason, _)) = rest.split_once('"') else {
+        return Err("allow reason string is unterminated".to_string());
+    };
+    if reason.trim().is_empty() {
+        return Err("allow reason must not be empty".to_string());
+    }
+    Ok((rule, reason.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<(String, u32)> {
+        scan(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| (t.text, t.line))
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_line_numbers_are_exact() {
+        let src = "let a = 1;\nfn foo() {}\n";
+        let got = idents(src);
+        assert_eq!(
+            got,
+            vec![
+                ("let".to_string(), 1),
+                ("a".to_string(), 1),
+                ("fn".to_string(), 2),
+                ("foo".to_string(), 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn line_comments_hide_their_content() {
+        let got = idents("x; // HashMap iter unsafe partial_cmp\ny;\n");
+        assert_eq!(got, vec![("x".to_string(), 1), ("y".to_string(), 2)]);
+    }
+
+    #[test]
+    fn nested_block_comments_hide_content_and_count_lines() {
+        let src = "a;\n/* outer /* inner unwrap() */\nstill comment */\nb;\n";
+        let got = idents(src);
+        assert_eq!(got, vec![("a".to_string(), 1), ("b".to_string(), 4)]);
+        let s = scan(src);
+        assert_eq!(s.line_in_code, vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn strings_are_opaque_including_escapes_and_comment_markers() {
+        let src = "let s = \"// not a comment \\\" unwrap() HashMap\"; t;\n";
+        let got = idents(src);
+        assert_eq!(got, vec![("let".to_string(), 1), ("s".to_string(), 1), ("t".to_string(), 1)]);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_opaque() {
+        let src = "let s = r#\"quote \" inside unwrap()\"#; let b = br##\"x\"# still\"##; z;\n";
+        let got = idents(src);
+        assert_eq!(
+            got,
+            vec![
+                ("let".to_string(), 1),
+                ("s".to_string(), 1),
+                ("let".to_string(), 1),
+                ("b".to_string(), 1),
+                ("z".to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn multiline_strings_mark_lines_as_non_code() {
+        let src = "let s = \"line one\nline two // unwrap()\";\nx;\n";
+        let s = scan(src);
+        assert_eq!(s.line_in_code, vec![true, false, true]);
+        let names: Vec<String> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(names, vec!["let", "s", "x"]);
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "let c = 'a'; let n = '\\n'; fn f<'a>(x: &'a str) -> &'static str { x }\n";
+        let s = scan(src);
+        let chars = s.tokens.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 2);
+        let lifetimes: Vec<String> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["a", "a", "static"]);
+    }
+
+    #[test]
+    fn byte_char_and_slash_in_string_do_not_confuse_the_scanner() {
+        let src = "let b0 = b'\\0'; let s = \"a / B\"; q;\n";
+        let s = scan(src);
+        assert!(s.tokens.iter().any(|t| t.kind == TokKind::Ident && t.text == "q"));
+        assert_eq!(s.line_in_code, vec![true]);
+    }
+
+    #[test]
+    fn raw_identifiers_become_plain_idents() {
+        let got = idents("let r#match = 1; r#match;\n");
+        let names: Vec<String> = got.into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["let", "match", "match"]);
+    }
+
+    #[test]
+    fn allow_annotations_parse_with_rule_and_reason() {
+        let s = scan("x; // pallas-lint: allow(D004, reason = \"documented invariant\")\n");
+        assert_eq!(s.allows.len(), 1);
+        assert_eq!(s.allows[0].rule, "D004");
+        assert_eq!(s.allows[0].reason, "documented invariant");
+        assert_eq!(s.allows[0].line, 1);
+        assert!(s.malformed.is_empty());
+    }
+
+    #[test]
+    fn reasonless_or_unknown_allow_annotations_are_malformed() {
+        let s = scan("// pallas-lint: allow(D004)\n// pallas-lint: allow(D999, reason = \"x\")\n");
+        assert_eq!(s.allows.len(), 0);
+        assert_eq!(s.malformed.len(), 2);
+        assert_eq!(s.malformed[0].0, 1);
+        assert_eq!(s.malformed[1].0, 2);
+    }
+
+    #[test]
+    fn empty_reason_is_malformed() {
+        let s = scan("// pallas-lint: allow(D001, reason = \"  \")\n");
+        assert!(s.allows.is_empty());
+        assert_eq!(s.malformed.len(), 1);
+    }
+}

@@ -1432,6 +1432,7 @@ impl Fleet {
     ///
     /// Panics when no run is open.
     pub fn inject(&mut self, req: Request) {
+        // pallas-lint: allow(D004, reason = "documented API contract: inject panics when no run is open")
         let rs = self.run_state.as_mut().expect("inject: no open run (call begin_run)");
         rs.heap.push(Event {
             time: req.arrival_us,
@@ -1477,6 +1478,7 @@ impl Fleet {
     /// Panics when no run is open.
     pub fn step_into(&mut self, departed: &mut Vec<Departure>) -> bool {
         departed.clear();
+        // pallas-lint: allow(D004, reason = "documented API contract: step panics when no run is open")
         let mut rs = self.run_state.take().expect("step: no open run (call begin_run)");
         let Some(ev) = rs.heap.pop() else {
             self.run_state = Some(rs);
@@ -1524,11 +1526,13 @@ impl Fleet {
                     // the micro-batch: longest same-network prefix of the
                     // queue in discipline order (drained into the reused
                     // run-state scratch — no per-dispatch allocation)
+                    // pallas-lint: allow(D004, reason = "guarded by queue_len() > 0 two lines up")
                     let net = dev.queue_front().unwrap().net;
                     rs.batch.clear();
                     while rs.batch.len() < batch_max
                         && dev.queue_front().is_some_and(|r| r.net == net)
                     {
+                        // pallas-lint: allow(D004, reason = "loop condition just checked queue_front().is_some_and(..)")
                         rs.batch.push(dev.queue_pop_front().unwrap());
                     }
                     rs.series.push(QueueSample { t_us: now, device: d, depth: dev.queue_len() });
@@ -1599,6 +1603,7 @@ impl Fleet {
                     if let Some(victim) = self.steal_victim(d) {
                         let req = self.devices[victim]
                             .queue_pop_back()
+                            // pallas-lint: allow(D004, reason = "steal_victim only returns devices with non-empty queues")
                             .expect("steal victim has a non-empty queue");
                         // hand the routing projection over with the
                         // request: the victim drains one inference
@@ -1634,6 +1639,7 @@ impl Fleet {
     ///
     /// Panics when no run is open or when events are still pending.
     pub fn end_run(&mut self) -> (FleetReport, Vec<Request>) {
+        // pallas-lint: allow(D004, reason = "documented API contract: end_run panics when no run is open")
         let rs = self.run_state.take().expect("end_run: no open run (call begin_run)");
         assert!(rs.heap.is_empty(), "end_run: the event queue has not drained");
         let report = self.finalize(
@@ -1689,6 +1695,7 @@ impl Fleet {
             if first.is_none() {
                 first = Some(i);
             }
+            // pallas-lint: allow(D004, reason = "loop filter guarantees depth >= 1 for candidate devices")
             let tail = self.devices[i].queue_back().expect("depth >= 1 implies a tail");
             let no_switch = match resident {
                 None => true,
@@ -1728,6 +1735,7 @@ impl Fleet {
             source.initial().into_iter().map(SyncArrival).collect();
         let mut completions: Vec<Completion> = Vec::new();
         while let Some(SyncArrival(req)) = pending.pop() {
+            // pallas-lint: allow(D004, reason = "asserted default config above: unbounded queues never shed")
             let d = self.route(&req, req.arrival_us).expect("unbounded queues never shed");
             let dev = &mut self.devices[d];
             // mirror the event engine's residency tracking: with

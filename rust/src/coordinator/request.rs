@@ -604,7 +604,7 @@ mod tests {
         let (mut a, mut b) = (mk(), mk());
         let ia = a.initial();
         assert_eq!(ia, b.initial(), "universe draws must stay deterministic per seed");
-        let mut digests: std::collections::HashSet<(u32, u64)> =
+        let mut digests: std::collections::BTreeSet<(u32, u64)> =
             ia.iter().map(|r| (r.net, r.input_digest)).collect();
         let mut pending: Vec<u64> = ia.iter().map(|r| r.id).collect();
         let mut t = 0.0;

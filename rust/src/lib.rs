@@ -4,6 +4,9 @@
 //! Quantized Neural Networks in Extreme-Edge Devices" (ACM CF'20).
 //! See DESIGN.md for the architecture and experiment index.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod arm;
 pub mod bench;
 pub mod cluster;

@@ -4,6 +4,8 @@
 //! (DESIGN.md §5); runtime commands load the AOT'd JAX/Pallas artifacts
 //! into the artifact runtime and run/serve/verify them against the golden chain.
 
+#![forbid(unsafe_code)]
+
 use pulpnn_mp::bench::{ablate, figures};
 use pulpnn_mp::coordinator::{
     gap8_mixed_devices, merge_streams, ClosedLoopSource, Fleet, FleetConfig, Policy,
@@ -52,6 +54,12 @@ networks & runtime:
               back across routers, fleets and the cache), or
               record/replay arrival traces with --trace-out/--trace-in
   emit-spec   print the demo network spec JSON (shared rust/python format)
+
+maintenance:
+  lint        run the pallas-lint determinism/invariant rules over the
+              repo sources (--root DIR, default `.`; --deny exits
+              non-zero on any diagnostic — the CI mode; --rules prints
+              the rule catalog)
 
 common options:
   --seed N           workload seed (default 2020)
@@ -119,6 +127,7 @@ fn main() {
         "infer" => cmd_infer(&mut args),
         "verify" => cmd_verify(&mut args),
         "serve" => cmd_serve(&mut args, seed),
+        "lint" => cmd_lint(&mut args),
         "emit-spec" => {
             println!("{}", demo_cnn().to_json());
             0
@@ -160,6 +169,38 @@ fn cmd_sweep(seed: u64) -> i32 {
     println!("All 27 mixed-precision kernels on the Reference Layer:\n");
     print!("{}", t.render());
     0
+}
+
+fn cmd_lint(args: &mut Args) -> i32 {
+    let root = args.opt("root", ".");
+    let deny = args.flag("deny");
+    if args.flag("rules") {
+        for r in pulpnn_mp::analysis::RULES {
+            println!("{}  {}\n      scope: {}", r.id, r.summary, r.scope);
+        }
+        return 0;
+    }
+    match pulpnn_mp::analysis::lint_root(std::path::Path::new(&root)) {
+        Ok(report) => {
+            for d in &report.diagnostics {
+                println!("{d}");
+            }
+            println!(
+                "pallas-lint: {} files scanned, {} diagnostics",
+                report.files_scanned,
+                report.diagnostics.len()
+            );
+            if deny && !report.diagnostics.is_empty() {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            2
+        }
+    }
 }
 
 fn cmd_run(args: &mut Args, seed: u64) -> i32 {
@@ -266,9 +307,11 @@ fn cmd_infer(args: &mut Args) -> i32 {
     };
     let mut rt = Runtime::cpu().expect("artifact runtime");
     println!("platform: {}", rt.platform());
+    // pallas-lint: allow(D003, reason = "CLI reporting: compile time of the real artifact runtime")
     let t0 = std::time::Instant::now();
     rt.load(a).expect("compile");
     println!("compiled `{}` in {:.1} ms", a.name, t0.elapsed().as_secs_f64() * 1e3);
+    // pallas-lint: allow(D003, reason = "CLI reporting: execution time of the real artifact runtime")
     let t0 = std::time::Instant::now();
     let out = rt.execute_recorded(a).expect("execute");
     println!("executed in {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
