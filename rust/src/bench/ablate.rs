@@ -7,6 +7,10 @@
 //! 3. TCDM bank count — contention vs. the 16-bank cluster default.
 //! 4. Threshold ladder vs. affine multiply+shift for sub-byte QntPack —
 //!    the §2.2 design decision.
+//! 5. The per-weight-precision cycle model ([`precision_cycle_model`]) —
+//!    the measured compute-cost points the serving tier's variant table
+//!    is derived from (and the pinned Fig. 4 inversion: sub-byte weights
+//!    are *slower* per MAC on this ISA).
 
 use crate::kernels::{conv_parallel, Engine, GAP8_TCDM_BANKS};
 use crate::qnn::types::{Bits, Precision};
@@ -125,6 +129,52 @@ pub fn threshold_ablation(seed: u64) -> String {
     )
 }
 
+/// One measured point of the per-weight-precision cycle model: the
+/// Reference Layer run at weight precision `wbits` (8-bit ifmaps and
+/// ofmaps), on the single-core GAP-8 engine.
+///
+/// This is the measured input to the serving tier's variant table
+/// (`coordinator::variant`): it pins the *compute-phase* cost of each
+/// precision so nobody has to trust prose. Note the direction — on both
+/// modelled ISAs sub-byte weights are *slower* per MAC (Fig. 4: 8-bit is
+/// best; 4-bit drops ~2.5x, 2-bit ~2.4x), because unpacking dominates.
+/// The serving-latency win of a degraded variant therefore comes from the
+/// memory system (smaller weights to stream/resident), never from these
+/// kernel cycles; see `qnn::footprint` and docs/ARCHITECTURE.md.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionCycles {
+    /// Weight precision of the measured kernel (ifmap/ofmap fixed at 8-bit).
+    pub wbits: Bits,
+    /// Total modelled cycles for the Reference Layer at this precision.
+    pub cycles: u64,
+    /// MACs executed, measured from the profiled `pv.sdotusp` count
+    /// (4 MACs per sdot) rather than recomputed from the layer shape.
+    pub macs: u64,
+}
+
+impl PrecisionCycles {
+    /// Measured throughput at this precision.
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// 5. Per-precision cycle model: Reference Layer at 8/4/2-bit weights,
+/// returned structured (in `Bits::ALL` order: B8, B4, B2) so the
+/// coordinator's variant table can consume measured numbers directly.
+pub fn precision_cycle_model(seed: u64) -> Vec<PrecisionCycles> {
+    Bits::ALL
+        .iter()
+        .map(|&wbits| {
+            let prec = Precision::new(Bits::B8, wbits, Bits::B8);
+            let (kernel, x) = reference_case(prec, seed);
+            let mut e = Engine::single_core();
+            let (_, stats) = kernel.run(&mut e, &x);
+            PrecisionCycles { wbits, cycles: stats.cycles, macs: e.prof.sdot * 4 }
+        })
+        .collect()
+}
+
 /// All ablations concatenated (the `pulpnn ablate` command).
 pub fn all(seed: u64) -> String {
     format!(
@@ -165,5 +215,27 @@ mod tests {
     fn threshold_ablation_runs() {
         let s = threshold_ablation(1);
         assert!(s.contains("thresholds"));
+    }
+
+    #[test]
+    fn precision_cycle_model_measures_the_inversion() {
+        // The compute model's direction is a pinned fact (Fig. 4): the
+        // same layer costs MORE cycles at lower weight precision, because
+        // sub-byte unpacking dominates the inner loop. MAC counts match
+        // across precisions (same layer, same arithmetic).
+        let pts = precision_cycle_model(1);
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].wbits, Bits::B8);
+        assert_eq!(pts[1].wbits, Bits::B4);
+        assert_eq!(pts[2].wbits, Bits::B2);
+        assert_eq!(pts[0].macs, pts[1].macs);
+        assert_eq!(pts[1].macs, pts[2].macs);
+        assert!(pts[0].cycles < pts[1].cycles, "{pts:?}");
+        assert!(pts[0].cycles < pts[2].cycles, "{pts:?}");
+        // Fig. 4 bands: 4-bit ~2.5x slower, 2-bit ~2.4x slower than 8-bit.
+        let drop4 = pts[1].cycles as f64 / pts[0].cycles as f64;
+        let drop2 = pts[2].cycles as f64 / pts[0].cycles as f64;
+        assert!((2.0..3.2).contains(&drop4), "4-bit drop {drop4}");
+        assert!((1.9..3.2).contains(&drop2), "2-bit drop {drop2}");
     }
 }

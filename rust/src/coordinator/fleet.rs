@@ -71,6 +71,7 @@ use crate::energy::OperatingPoint;
 use crate::util::rng::Rng;
 
 use super::request::{Request, WorkloadSource};
+use super::variant::{DegradePolicy, VariantTable};
 
 /// Routing policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -212,6 +213,13 @@ pub struct FleetConfig {
     /// dispatches it immediately, paying any residency switch its own
     /// `resident_net` implies.
     pub steal: bool,
+    /// Brownout (quality-elastic) serving: whether an overloaded device
+    /// may serve a request at a cheaper precision variant (from the
+    /// fleet's [`VariantTable`], see [`Fleet::set_variants`]) instead of
+    /// shedding or missing its deadline. [`DegradePolicy::Off`] (the
+    /// default) is provably inert — property tests pin brownout-off runs
+    /// bit-identical to the pre-variant engine.
+    pub degrade: DegradePolicy,
 }
 
 impl Default for FleetConfig {
@@ -227,6 +235,7 @@ impl Default for FleetConfig {
             net_switch_cycles: 0,
             discipline: QueueDiscipline::Fifo,
             steal: false,
+            degrade: DegradePolicy::Off,
         }
     }
 }
@@ -327,6 +336,9 @@ pub struct Device {
     /// Network whose weights currently reside in cluster memory (`None`
     /// until the first activation).
     resident_net: Option<u32>,
+    /// Precision-variant level of the resident weight set (0 = full
+    /// precision; only meaningful once `resident_net` is `Some`).
+    resident_variant: u8,
     /// Activations that had to evict another network's weight set.
     net_switches: u64,
     /// Active energy spent on residency switches (a component of
@@ -350,6 +362,7 @@ impl Device {
             committed_free_us: 0.0,
             busy_us: 0.0,
             resident_net: None,
+            resident_variant: 0,
             net_switches: 0,
             switch_energy_uj: 0.0,
         }
@@ -360,9 +373,25 @@ impl Device {
         self.op.time_ms(self.cycles_per_inference) * 1e3
     }
 
+    /// Wall-clock of one inference at an explicit cycle cost on this
+    /// node's operating point, in microseconds — the variant-scaled
+    /// serving paths price degraded inferences through this (it is the
+    /// exact expression of [`Device::inference_us`] when handed
+    /// `cycles_per_inference`, so a level-0 variant costs bit-identical
+    /// time).
+    pub fn inference_us_for(&self, cycles: u64) -> f64 {
+        self.op.time_ms(cycles) * 1e3
+    }
+
     /// Network whose weights currently reside on the device, if any.
     pub fn resident_net(&self) -> Option<u32> {
         self.resident_net
+    }
+
+    /// Precision-variant level of the resident weight set (0 = full
+    /// precision, and 0 while no net is resident).
+    pub fn resident_variant(&self) -> u8 {
+        self.resident_variant
     }
 
     /// Residency switches this device has paid in the current run.
@@ -491,6 +520,10 @@ pub struct Completion {
     pub device: usize,
     /// Network the request belonged to.
     pub net: u32,
+    /// Precision-variant level the request was served at (0 = full
+    /// precision; higher levels are brownout degradations, see
+    /// [`DegradePolicy`]).
+    pub variant: u8,
     /// Activation (batch) this request was served in — global counter;
     /// requests sharing it were served by one cluster wake-up.
     pub batch: u64,
@@ -544,6 +577,14 @@ pub struct FleetReport {
     /// Sustained throughput over the span from first arrival to last
     /// finish (completed requests only).
     pub throughput_rps: f64,
+    /// Completions served below full precision (`variant > 0`) — always a
+    /// subset of `completions`; 0 under [`DegradePolicy::Off`].
+    pub degraded: usize,
+    /// Quality-weighted goodput over the same span as `throughput_rps`:
+    /// each completion counts its served variant's quality weight
+    /// ([`VariantTable::quality`], 1.0 at full precision) instead of 1.
+    /// Bit-equal to `throughput_rps` when nothing degrades.
+    pub quality_weighted_goodput: f64,
     /// Mean end-to-end latency over completions.
     pub mean_latency_us: f64,
     /// 99th-percentile end-to-end latency over completions.
@@ -608,6 +649,24 @@ pub(crate) fn sustained_throughput_rps(
     }
     let span_us = (span_end_us - span_start_us).max(MIN_THROUGHPUT_SPAN_US);
     completed as f64 / (span_us / 1e6)
+}
+
+/// Quality-weighted analogue of [`sustained_throughput_rps`]: the sum of
+/// per-completion quality weights over the same floored span. With every
+/// weight at exactly 1.0 the weight sum equals `completed as f64` (an
+/// integer-valued f64 sum), so a degradation-off run's
+/// `quality_weighted_goodput` is bit-equal to its `throughput_rps`.
+pub(crate) fn sustained_weighted_rps(
+    weight_sum: f64,
+    completed: usize,
+    span_start_us: f64,
+    span_end_us: f64,
+) -> f64 {
+    if completed == 0 {
+        return 0.0;
+    }
+    let span_us = (span_end_us - span_start_us).max(MIN_THROUGHPUT_SPAN_US);
+    weight_sum / (span_us / 1e6)
 }
 
 impl FleetReport {
@@ -722,6 +781,11 @@ pub struct Departure {
     pub t_us: f64,
     /// `true` for a completion, `false` for an admission-control shed.
     pub completed: bool,
+    /// Precision-variant level the request was served at (0 = full
+    /// precision; always 0 for sheds). The sharded tier keys its result
+    /// cache on this, so single-flight joins resolve to the variant that
+    /// actually ran.
+    pub variant: u8,
 }
 
 /// Run state of one in-flight event-driven run, between
@@ -744,6 +808,13 @@ struct RunState {
     batches: u64,
     batched_requests: u64,
     steals: u64,
+    /// Brownout side-map: variant level assigned at admission, keyed by
+    /// request id, for requests not yet dispatched. Empty whenever
+    /// [`DegradePolicy::Off`] is in force (level 0 is never inserted), so
+    /// the degradation-off hot path pays only an `is_empty`/miss lookup.
+    /// Entries are removed at dispatch; lookups are get-only (never
+    /// iterated), so event order cannot depend on hash order.
+    variant_of: HashMap<u64, u8>,
 }
 
 impl RunState {
@@ -761,6 +832,7 @@ impl RunState {
             batches: 0,
             batched_requests: 0,
             steals: 0,
+            variant_of: HashMap::new(),
         }
     }
 
@@ -1077,6 +1149,9 @@ pub struct Fleet {
     work: WorkCounters,
     /// The incremental routing index (rebuilt per run).
     index: RouteIndex,
+    /// Precision-variant table brownout degrades through (the empty
+    /// default serves everything at full precision).
+    variants: VariantTable,
     /// The in-flight event-driven run, if one is open (see
     /// [`Fleet::begin_run`]).
     run_state: Option<RunState>,
@@ -1093,6 +1168,9 @@ impl Fleet {
         assert!(!devices.is_empty());
         assert!(config.queue_bound >= 1, "queue_bound must be >= 1");
         assert!(config.batch_max >= 1, "batch_max must be >= 1");
+        if let DegradePolicy::Watermark { watermark } = config.degrade {
+            assert!(watermark >= 1, "brownout watermark must be >= 1");
+        }
         Fleet {
             devices,
             policy,
@@ -1101,8 +1179,23 @@ impl Fleet {
             mode: HotPathMode::default(),
             work: WorkCounters::default(),
             index: RouteIndex::default(),
+            variants: VariantTable::default(),
             run_state: None,
         }
+    }
+
+    /// Install the precision-variant table brownout serving degrades
+    /// through. Every constructor of [`VariantTable`] enforces its
+    /// monotonicity invariants, so any installable table is valid. The
+    /// default (empty) table serves everything at full precision, as does
+    /// [`DegradePolicy::Off`] regardless of table.
+    pub fn set_variants(&mut self, table: VariantTable) {
+        self.variants = table;
+    }
+
+    /// The installed precision-variant table.
+    pub fn variants(&self) -> &VariantTable {
+        &self.variants
     }
 
     /// Select the hot-path implementation for subsequent runs (see
@@ -1120,6 +1213,48 @@ impl Fleet {
 
     fn wakeup_us(&self, d: usize) -> f64 {
         self.devices[d].op.time_ms(self.config.wakeup_cycles) * 1e3
+    }
+
+    /// Wall-clock of one inference on device `d` served at variant
+    /// `level` (the streamed-bytes cycle scale of [`VariantTable`]).
+    /// Level 0 scales by the exact integer identity, so this is
+    /// bit-identical to `inference_us()` when nothing degrades.
+    fn scaled_inference_us(&self, d: usize, level: u8) -> f64 {
+        let dev = &self.devices[d];
+        dev.inference_us_for(self.variants.scale_cycles(level, dev.cycles_per_inference))
+    }
+
+    /// Pick the precision-variant level a newly admitted request will be
+    /// served at on device `d` (0 = full precision). Only
+    /// [`DegradePolicy::Watermark`] ever degrades: one level per
+    /// `watermark` requests already pending on the routed device, plus
+    /// further levels while the projected finish at the candidate level
+    /// would still overrun the request's deadline — always clamped by the
+    /// net's accuracy floor ([`VariantTable::max_level_for`]). The
+    /// decision is made once, at admission, from deterministic engine
+    /// state (queue depth and the drain projection), so identical runs
+    /// degrade identically.
+    fn choose_variant(&self, d: usize, req: &Request, now: f64) -> u8 {
+        let DegradePolicy::Watermark { watermark } = self.config.degrade else {
+            return 0;
+        };
+        let max = self.variants.max_level_for(req.net);
+        if max == 0 {
+            return 0;
+        }
+        let dev = &self.devices[d];
+        let pressure = (dev.queue_len() / watermark.max(1)).min(max as usize) as u8;
+        let mut level = pressure;
+        if let Some(dl) = req.deadline_us {
+            while level < max {
+                let finish = dev.committed_free_us.max(now) + self.scaled_inference_us(d, level);
+                if finish - req.arrival_us <= dl {
+                    break;
+                }
+                level += 1;
+            }
+        }
+        level
     }
 
     /// Pick a device for a request arriving at `now`, considering only
@@ -1344,6 +1479,7 @@ impl Fleet {
             dev.served = 0;
             dev.energy_uj = 0.0;
             dev.resident_net = None;
+            dev.resident_variant = 0;
             dev.net_switches = 0;
             dev.switch_energy_uj = 0.0;
         }
@@ -1493,10 +1629,18 @@ impl Fleet {
                 }
                 match self.route(&req, now) {
                     Some(d) => {
+                        // brownout decision point: routing always projects
+                        // full precision; the served variant is chosen
+                        // here, after admission, and the drain projection
+                        // commits the variant-scaled service time
+                        let v = self.choose_variant(d, &req, now);
+                        let inf_v = self.scaled_inference_us(d, v);
+                        if v > 0 {
+                            rs.variant_of.insert(req.id, v);
+                        }
                         let discipline = self.config.discipline;
                         let dev = &mut self.devices[d];
-                        dev.committed_free_us =
-                            dev.committed_free_us.max(req.arrival_us) + dev.inference_us();
+                        dev.committed_free_us = dev.committed_free_us.max(req.arrival_us) + inf_v;
                         dev.enqueue(req, discipline, &mut self.work);
                         rs.series.push(QueueSample {
                             t_us: now,
@@ -1512,7 +1656,12 @@ impl Fleet {
                         rs.rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us });
                         // a shed request completes (unsuccessfully) now:
                         // closed-loop clients observe it and move on
-                        departed.push(Departure { id: req.id, t_us: now, completed: false });
+                        departed.push(Departure {
+                            id: req.id,
+                            t_us: now,
+                            completed: false,
+                            variant: 0,
+                        });
                     }
                 }
             }
@@ -1523,14 +1672,20 @@ impl Fleet {
                 let net_switch_cycles = self.config.net_switch_cycles;
                 let dev = &mut self.devices[d];
                 if !dev.in_flight && dev.queue_len() > 0 {
-                    // the micro-batch: longest same-network prefix of the
-                    // queue in discipline order (drained into the reused
-                    // run-state scratch — no per-dispatch allocation)
+                    // the micro-batch: longest same-network, same-variant
+                    // prefix of the queue in discipline order (drained
+                    // into the reused run-state scratch — no per-dispatch
+                    // allocation). Variants partition batches because one
+                    // activation loads exactly one weight set.
                     // pallas-lint: allow(D004, reason = "guarded by queue_len() > 0 two lines up")
-                    let net = dev.queue_front().unwrap().net;
+                    let front = *dev.queue_front().unwrap();
+                    let net = front.net;
+                    let v = rs.variant_of.get(&front.id).copied().unwrap_or(0);
                     rs.batch.clear();
                     while rs.batch.len() < batch_max
-                        && dev.queue_front().is_some_and(|r| r.net == net)
+                        && dev.queue_front().is_some_and(|r| {
+                            r.net == net && rs.variant_of.get(&r.id).copied().unwrap_or(0) == v
+                        })
                     {
                         // pallas-lint: allow(D004, reason = "loop condition just checked queue_front().is_some_and(..)")
                         rs.batch.push(dev.queue_pop_front().unwrap());
@@ -1538,10 +1693,14 @@ impl Fleet {
                     rs.series.push(QueueSample { t_us: now, device: d, depth: dev.queue_len() });
 
                     // weight residency: evicting a different resident net
+                    // — or the same net's weights at another precision —
                     // costs a DMA reload before the batch can start (a
                     // cold first load is free — weights are pre-staged at
                     // provisioning time)
-                    let switching = matches!(dev.resident_net, Some(r) if r != net);
+                    let switching = match dev.resident_net {
+                        Some(r) => r != net || dev.resident_variant != v,
+                        None => false,
+                    };
                     let switch_cycles = if switching { net_switch_cycles } else { 0 };
                     let switch_us = dev.op.time_ms(switch_cycles) * 1e3;
                     if switching {
@@ -1549,9 +1708,11 @@ impl Fleet {
                         dev.switch_energy_uj += dev.op.energy_uj(switch_cycles);
                     }
                     dev.resident_net = Some(net);
+                    dev.resident_variant = v;
 
                     let start = now;
-                    let inf = dev.inference_us();
+                    let serve_cycles = self.variants.scale_cycles(v, dev.cycles_per_inference);
+                    let inf = dev.inference_us_for(serve_cycles);
                     let mut t = start + wake_us + switch_us;
                     for req in &rs.batch {
                         let s = t;
@@ -1560,11 +1721,17 @@ impl Fleet {
                         // with its future finish time, so the follow-up
                         // arrivals it unlocks (all at >= finish) can enter
                         // the event queue immediately
-                        departed.push(Departure { id: req.id, t_us: t, completed: true });
+                        departed.push(Departure {
+                            id: req.id,
+                            t_us: t,
+                            completed: true,
+                            variant: v,
+                        });
                         rs.completions.push(Completion {
                             id: req.id,
                             device: d,
                             net: req.net,
+                            variant: v,
                             batch: rs.batches,
                             arrival_us: req.arrival_us,
                             start_us: s,
@@ -1577,13 +1744,17 @@ impl Fleet {
                     }
                     let finish = t;
                     let k = rs.batch.len() as u64;
+                    if !rs.variant_of.is_empty() {
+                        for req in &rs.batch {
+                            rs.variant_of.remove(&req.id);
+                        }
+                    }
                     dev.in_flight = true;
                     dev.busy_until_us = finish;
                     dev.busy_us += finish - start;
                     dev.served += k;
-                    dev.energy_uj += dev
-                        .op
-                        .energy_uj(wakeup_cycles + switch_cycles + k * dev.cycles_per_inference);
+                    dev.energy_uj +=
+                        dev.op.energy_uj(wakeup_cycles + switch_cycles + k * serve_cycles);
                     // the committed-drain projection assumed inference time
                     // only; account for the activation's wake-up and
                     // residency switch
@@ -1606,9 +1777,11 @@ impl Fleet {
                             // pallas-lint: allow(D004, reason = "steal_victim only returns devices with non-empty queues")
                             .expect("steal victim has a non-empty queue");
                         // hand the routing projection over with the
-                        // request: the victim drains one inference
+                        // request (at its admission-assigned serving
+                        // variant): the victim drains one inference
                         // sooner, the thief one later
-                        let victim_inf = self.devices[victim].inference_us();
+                        let v = rs.variant_of.get(&req.id).copied().unwrap_or(0);
+                        let victim_inf = self.scaled_inference_us(victim, v);
                         self.devices[victim].committed_free_us =
                             (self.devices[victim].committed_free_us - victim_inf).max(now);
                         rs.series.push(QueueSample {
@@ -1617,9 +1790,9 @@ impl Fleet {
                             depth: self.devices[victim].queue_len(),
                         });
                         self.index.reindex(victim, &self.devices[victim], bound, now);
+                        let thief_inf = self.scaled_inference_us(d, v);
                         let thief = &mut self.devices[d];
-                        thief.committed_free_us =
-                            thief.committed_free_us.max(now) + thief.inference_us();
+                        thief.committed_free_us = thief.committed_free_us.max(now) + thief_inf;
                         thief.push_stolen(req);
                         rs.series.push(QueueSample { t_us: now, device: d, depth: 1 });
                         rs.steals += 1;
@@ -1758,6 +1931,7 @@ impl Fleet {
                 id: req.id,
                 device: d,
                 net: req.net,
+                variant: 0,
                 batch: completions.len() as u64,
                 arrival_us: req.arrival_us,
                 start_us: start,
@@ -1802,9 +1976,18 @@ impl Fleet {
             .iter()
             .map(|d| d.op.idle_energy_uj((span_us - d.busy_us).max(0.0)))
             .sum();
+        let quality_sum: f64 =
+            completions.iter().map(|c| self.variants.quality(c.variant)).sum();
         FleetReport {
             shed: rejections.len(),
             throughput_rps: sustained_throughput_rps(completions.len(), span_start, span_end),
+            degraded: completions.iter().filter(|c| c.variant > 0).count(),
+            quality_weighted_goodput: sustained_weighted_rps(
+                quality_sum,
+                completions.len(),
+                span_start,
+                span_end,
+            ),
             mean_latency_us: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
             p99_latency_us: if lats.is_empty() {
                 0.0
@@ -2119,6 +2302,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 40_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let mut fleet = Fleet::with_config(random_devices(rng), policy, config);
             let deadline = if rng.chance(0.5) { Some(3e4) } else { None };
@@ -2501,6 +2685,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 40_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let mk = |net: u32, seed: u64| {
                 Workload { rate_per_s: 1000.0, deadline_us: Some(3e4), n_requests: 100, seed }
@@ -2775,6 +2960,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 40_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let devices = random_devices(rng);
             let mk = |net: u32, seed: u64| {
@@ -2977,5 +3163,170 @@ mod tests {
             naive.work.edf_shift_ops,
             idx.work.edf_shift_ops
         );
+    }
+
+    #[test]
+    fn prop_brownout_disabled_matches_baseline() {
+        // the degradation-off oracle: installing the full variant table
+        // while [`DegradePolicy::Off`] (the default) is in force must
+        // leave the engine bit-identical to a fleet that never heard of
+        // variants — completions (all at variant 0), sheds, queue series,
+        // energy, aggregates — across the whole scheduling matrix, in
+        // both the indexed engine and the retained naive-scan oracle
+        check("fleet-brownout-off-vs-baseline", 30, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[2usize, 8, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 20_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 40_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default() // degrade: Off
+            };
+            let devices = random_devices(rng);
+            let mk = |net: u32, seed: u64| {
+                Workload { rate_per_s: 1500.0, deadline_us: None, n_requests: 120, seed }
+                    .generate_for_net(net)
+            };
+            let mut reqs = merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())]);
+            // deadline mix so EDF ordering and the (inert under Off)
+            // deadline-escalation path see real deadline pressure
+            for r in &mut reqs {
+                r.deadline_us = match rng.below(3) {
+                    0 => None,
+                    1 => Some(8_000.0),
+                    _ => Some(60_000.0),
+                };
+            }
+            let mut baseline = Fleet::with_config(devices.clone(), policy, config);
+            let mut browned = Fleet::with_config(devices.clone(), policy, config);
+            browned.set_variants(VariantTable::mobilenet_default());
+            let mut oracle = Fleet::with_config(devices, policy, config);
+            oracle.set_variants(VariantTable::mobilenet_default());
+            oracle.set_hot_path_mode(HotPathMode::NaiveOracle);
+            let a = baseline.run(&reqs);
+            for (name, r) in [("indexed", browned.run(&reqs)), ("naive", oracle.run(&reqs))] {
+                if r.completions != a.completions {
+                    return Err(format!("{name}: completions diverged ({policy:?})"));
+                }
+                if r.rejections != a.rejections {
+                    return Err(format!("{name}: rejections diverged"));
+                }
+                if r.queue_depth_series != a.queue_depth_series {
+                    return Err(format!("{name}: queue-depth series diverged"));
+                }
+                if r.active_energy_uj != a.active_energy_uj
+                    || r.idle_energy_uj != a.idle_energy_uj
+                    || r.steals != a.steals
+                    || r.batches != a.batches
+                    || r.net_switches != a.net_switches
+                    || r.per_device_served != a.per_device_served
+                    || r.throughput_rps != a.throughput_rps
+                {
+                    return Err(format!("{name}: aggregates diverged"));
+                }
+                if r.degraded != 0 || r.completions.iter().any(|c| c.variant != 0) {
+                    return Err(format!("{name}: a brownout-off run degraded a request"));
+                }
+                // every weight is exactly 1.0, so the weighted goodput is
+                // bit-equal to the plain throughput — not approximately
+                if r.quality_weighted_goodput != r.throughput_rps {
+                    return Err(format!("{name}: weighted goodput != throughput under Off"));
+                }
+            }
+            if a.degraded != 0 || a.quality_weighted_goodput != a.throughput_rps {
+                return Err("baseline report shows degradation with no table installed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_brownout_conservation_floors_and_determinism() {
+        // under active Watermark degradation: nothing is lost or invented
+        // (completed + shed == offered, per tenant, exactly), the degraded
+        // count is exactly the completions served above level 0, every
+        // served level respects its tenant's accuracy floor, qualities
+        // stay in (0, 1], and an identical re-run reproduces the report
+        // byte for byte
+        check("fleet-brownout-watermark", 30, |rng, _| {
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, 8]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 20_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                degrade: DegradePolicy::Watermark { watermark: *rng.pick(&[1usize, 2, 4]) },
+                ..FleetConfig::default()
+            };
+            let mut table = VariantTable::mobilenet_default();
+            // tenant 1 is accuracy-floored: no variant below 0.95 quality
+            table.set_floor(1, 0.95);
+            let floor_cap = table.max_level_for(1);
+            let devices = random_devices(rng);
+            let mk = |net: u32, seed: u64| {
+                // ~3x overload with a tight/loose deadline mix, so both
+                // the queue-pressure and deadline-escalation paths fire
+                Workload { rate_per_s: 4000.0, deadline_us: Some(15_000.0), n_requests: 150, seed }
+                    .generate_for_net(net)
+            };
+            let reqs = merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())]);
+            let run = || {
+                let mut f = Fleet::with_config(devices.clone(), Policy::LeastLoaded, config);
+                f.set_variants(table.clone());
+                f.run(&reqs)
+            };
+            let a = run();
+            if format!("{a:?}") != format!("{:?}", run()) {
+                return Err("identical brownout runs produced different reports".into());
+            }
+            if a.completions.len() + a.shed != reqs.len() {
+                return Err(format!(
+                    "conservation broke: {} completed + {} shed != {} offered",
+                    a.completions.len(),
+                    a.shed,
+                    reqs.len()
+                ));
+            }
+            for net in [0u32, 1] {
+                let offered = reqs.iter().filter(|r| r.net == net).count();
+                let done = a.completions.iter().filter(|c| c.net == net).count();
+                // rejections carry only ids; recover the tenant from the
+                // offered stream (ids are unique within a run)
+                let shed = a
+                    .rejections
+                    .iter()
+                    .filter(|rej| reqs.iter().any(|r| r.id == rej.id && r.net == net))
+                    .count();
+                if done + shed != offered {
+                    return Err(format!("tenant {net} accounting broke"));
+                }
+            }
+            if a.degraded != a.completions.iter().filter(|c| c.variant > 0).count() {
+                return Err("degraded count disagrees with per-completion variants".into());
+            }
+            for c in &a.completions {
+                let q = table.quality(c.variant);
+                if !(q > 0.0 && q <= 1.0) {
+                    return Err(format!("quality {q} out of (0, 1] at variant {}", c.variant));
+                }
+                if c.net == 1 && c.variant > floor_cap {
+                    return Err(format!(
+                        "floored tenant served at level {} past its cap {floor_cap}",
+                        c.variant
+                    ));
+                }
+            }
+            if a.quality_weighted_goodput > a.throughput_rps {
+                return Err("weighted goodput exceeded throughput with weights <= 1".into());
+            }
+            Ok(())
+        });
     }
 }

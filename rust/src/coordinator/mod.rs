@@ -68,10 +68,23 @@
 //! behind a consistent-hash front router into a horizontally scalable
 //! tier, adds multi-network *weight-residency* modeling
 //! ([`FleetConfig::net_switch_cycles`], [`Policy::TenancyAware`]) and a
-//! single-flight result cache keyed on `(net, input_digest)` — see the
-//! [`shard`] module docs and `docs/ARCHITECTURE.md` for the design
-//! rationale. With one shard, a free router, and the cache off, the tier
-//! is property-tested to reproduce a bare `Fleet` bit-exactly.
+//! single-flight result cache keyed on `(net, input_digest, served
+//! variant)` — see the [`shard`] module docs and `docs/ARCHITECTURE.md`
+//! for the design rationale. With one shard, a free router, and the
+//! cache off, the tier is property-tested to reproduce a bare `Fleet`
+//! bit-exactly.
+//!
+//! # Precision-adaptive serving (brownout mode)
+//!
+//! The [`variant`] module derives per-net precision variants (8/4/2-bit
+//! and the CMix-NN mixed assignment) from the measured footprint and
+//! cycle models, and [`fleet::FleetConfig::degrade`] lets an overloaded
+//! or deadline-pressed device serve a cheaper variant instead of
+//! shedding. Served variants flow through [`fleet::Completion`],
+//! [`fleet::Departure`] and [`CacheHit`] into the `degraded` /
+//! `quality_weighted_goodput` fields of [`FleetReport`] and
+//! [`ShardedReport`]. With [`DegradePolicy::Off`] (the default) the
+//! whole machinery is property-tested to be bit-exactly inert.
 //!
 //! The tier runs as one *unified* discrete-event simulation: each fleet
 //! engine exposes its event loop incrementally ([`Fleet::begin_run`] /
@@ -91,6 +104,7 @@ pub mod fleet;
 pub mod request;
 pub mod server;
 pub mod shard;
+pub mod variant;
 
 pub use fleet::{
     gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Departure, Device, Fleet,
@@ -100,3 +114,4 @@ pub use fleet::{
 pub use request::{merge_streams, ClosedLoopSource, Request, TraceSource, Workload, WorkloadSource};
 pub use server::{Served, Server, ServeStats};
 pub use shard::{CacheHit, CacheStats, ShardConfig, ShardedFleet, ShardedReport, TierError};
+pub use variant::{DegradePolicy, VariantSpec, VariantTable};

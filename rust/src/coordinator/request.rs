@@ -41,6 +41,15 @@ use crate::util::rng::Rng;
 /// the serving engines inject, enqueue and trace-record requests by
 /// value on their hot paths, so nothing there ever calls `Clone` or
 /// allocates.
+///
+/// The precision variant a request is *served* at (brownout mode, see
+/// [`DegradePolicy`](super::variant::DegradePolicy)) is deliberately not
+/// a field here and not part of the trace schema: it is an output of the
+/// engine's degrade decision, not an arrival property, and lives in
+/// [`Completion`](super::fleet::Completion) /
+/// [`CacheHit`](super::shard::CacheHit) instead — replaying a recorded
+/// trace under a different policy may legitimately serve different
+/// variants.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     /// Workload-unique request id.

@@ -11,6 +11,13 @@
 //! coordinator cache in [`crate::coordinator::shard`]. Like that tier's
 //! cache the memo is bounded ([`Server::with_cache_capacity`]): beyond the
 //! entry capacity the least-recently-used output is evicted.
+//!
+//! Mirroring the tier's variant-aware cache keys, the memo is keyed by
+//! `(input_digest, variant)`: a coordinator running precision-adaptive
+//! (brownout) serving tags each request with the precision variant it was
+//! served at ([`Server::submit_variant`]), and outputs produced at
+//! different precisions never collide — a degraded reply can never be
+//! returned as the full-precision one.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
@@ -30,6 +37,9 @@ pub struct Served {
     pub exec_us: f64,
     /// Whether the reply came from the result cache.
     pub cached: bool,
+    /// Precision-variant tag the request was served under (0 = full
+    /// precision; the memo never mixes variants).
+    pub variant: u8,
     /// The reply payload.
     pub output: ExecOutput,
 }
@@ -57,13 +67,14 @@ pub struct ServeStats {
 pub struct Server<'a> {
     rt: &'a mut Runtime,
     artifact: &'a Artifact,
-    queue: VecDeque<(u64, Vec<u8>, Instant)>,
+    queue: VecDeque<(u64, Vec<u8>, u8, Instant)>,
     /// Queue bound; [`Server::submit`] returns `false` beyond it.
     pub max_queue: usize,
-    /// Result cache keyed by input digest, carrying an LRU recency tick
-    /// per entry (`None` = caching disabled). A `BTreeMap` so the
-    /// eviction scan visits entries in a deterministic order.
-    cache: Option<BTreeMap<u64, (ExecOutput, u64)>>,
+    /// Result cache keyed by `(input digest, variant tag)`, carrying an
+    /// LRU recency tick per entry (`None` = caching disabled). A
+    /// `BTreeMap` so the eviction scan visits entries in a deterministic
+    /// order.
+    cache: Option<BTreeMap<(u64, u8), (ExecOutput, u64)>>,
     /// Max cached outputs before LRU eviction (`usize::MAX` = unbounded).
     cache_capacity: usize,
     /// Monotonic recency counter for the cache.
@@ -118,14 +129,23 @@ impl<'a> Server<'a> {
         self.cache.as_ref().map_or(0, |c| c.len())
     }
 
-    /// Enqueue a request; returns false when the queue is full
-    /// (backpressure — the caller should retry or shed load).
+    /// Enqueue a request at full precision; returns false when the queue
+    /// is full (backpressure — the caller should retry or shed load).
     pub fn submit(&mut self, id: u64, input: Vec<u8>) -> bool {
+        self.submit_variant(id, input, 0)
+    }
+
+    /// Enqueue a request tagged with the precision variant a
+    /// brownout-mode coordinator chose for it. The tag partitions the
+    /// result memo — replies produced at different precisions are
+    /// distinct results for the same input bytes and never answer each
+    /// other's lookups.
+    pub fn submit_variant(&mut self, id: u64, input: Vec<u8>, variant: u8) -> bool {
         if self.queue.len() >= self.max_queue {
             return false;
         }
         // pallas-lint: allow(D003, reason = "real serving path: queue-wait accounting measures actual wall clock")
-        self.queue.push_back((id, input, Instant::now()));
+        self.queue.push_back((id, input, variant, Instant::now()));
         true
     }
 
@@ -138,9 +158,9 @@ impl<'a> Server<'a> {
     /// from the result cache when enabled and warm).
     pub fn drain(&mut self) -> Result<Vec<Served>> {
         let mut out = Vec::with_capacity(self.queue.len());
-        while let Some((id, input, enq)) = self.queue.pop_front() {
+        while let Some((id, input, variant, enq)) = self.queue.pop_front() {
             let queue_us = enq.elapsed().as_secs_f64() * 1e6;
-            let digest = self.cache.as_ref().map(|_| input_digest(&input));
+            let digest = self.cache.as_ref().map(|_| (input_digest(&input), variant));
             let tick = self.lru_tick;
             self.lru_tick += 1;
             let hit: Option<ExecOutput> = match (digest, self.cache.as_mut()) {
@@ -173,7 +193,7 @@ impl<'a> Server<'a> {
                 }
             };
             let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-            out.push(Served { id, queue_us, exec_us, cached, output });
+            out.push(Served { id, queue_us, exec_us, cached, variant, output });
         }
         Ok(out)
     }

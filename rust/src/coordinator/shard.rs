@@ -115,10 +115,11 @@ use std::fmt;
 use crate::util::stats::percentile;
 
 use super::fleet::{
-    fkey, sustained_throughput_rps, Device, Fleet, FleetConfig, FleetReport, HotPathMode, Policy,
-    QueueDiscipline, SliceReplay, WorkCounters,
+    fkey, sustained_throughput_rps, sustained_weighted_rps, Device, Fleet, FleetConfig,
+    FleetReport, HotPathMode, Policy, QueueDiscipline, SliceReplay, WorkCounters,
 };
 use super::request::{mix64, Request, WorkloadSource};
+use super::variant::VariantTable;
 
 /// Virtual nodes per shard on the consistent-hash ring: enough that the
 /// keyspace split stays within a few percent of uniform for K <= 64.
@@ -186,6 +187,11 @@ pub struct CacheHit {
     /// Whether even the cached reply overran the request's deadline
     /// (deadlines are relative to tier arrival).
     pub deadline_missed: bool,
+    /// Precision variant the memoized result was produced at (0 = full
+    /// precision). Cache keys incorporate the served variant, so a hit
+    /// always reports the exact precision of the result it returned —
+    /// a degraded owner's joiners inherit its degraded quality.
+    pub variant: u8,
 }
 
 impl CacheHit {
@@ -245,6 +251,16 @@ pub struct ShardedReport {
     pub mean_service_latency_us: f64,
     /// Mean time arrivals waited in the shard routers' FIFOs.
     pub mean_router_delay_us: f64,
+    /// Completions served at a degraded precision variant anywhere in
+    /// the tier: fleet completions dispatched at level > 0 plus cache
+    /// hits whose memoized result was produced at level > 0.
+    pub degraded: usize,
+    /// Quality-weighted goodput: every completion (fleet or cache)
+    /// weighted by its served variant's accuracy-retention quality in
+    /// (0, 1], over the same serving span as `throughput_rps`. With no
+    /// degradation every weight is exactly 1.0 and this equals
+    /// `throughput_rps` bit for bit.
+    pub quality_weighted_goodput: f64,
     /// Summed device active energy across shards.
     pub active_energy_uj: f64,
     /// Summed device idle energy across shards.
@@ -312,7 +328,7 @@ const NIL: u32 = u32::MAX;
 /// eviction).
 #[derive(Debug, Clone)]
 struct CacheNode {
-    key: (u32, u64),
+    key: (u32, u64, u8),
     last_used: u64,
     prev_g: u32,
     next_g: u32,
@@ -367,7 +383,7 @@ enum Lookup {
 /// like the old implementation: identical victims, Θ(entries) counters.
 #[derive(Debug, Clone, Default)]
 struct ResultCache {
-    map: HashMap<(u32, u64), CacheEntry>,
+    map: HashMap<(u32, u64, u8), CacheEntry>,
     nodes: Vec<CacheNode>,
     free: Vec<u32>,
     global: RecencyList,
@@ -475,7 +491,7 @@ impl ResultCache {
         nl.len += 1;
     }
 
-    fn alloc(&mut self, key: (u32, u64)) -> u32 {
+    fn alloc(&mut self, key: (u32, u64, u8)) -> u32 {
         let node = CacheNode {
             key,
             last_used: self.tick,
@@ -499,7 +515,7 @@ impl ResultCache {
 
     /// Probe a key, bumping a resolved entry to MRU (stamp + list move).
     /// O(1).
-    fn lookup_touch(&mut self, key: &(u32, u64)) -> Lookup {
+    fn lookup_touch(&mut self, key: &(u32, u64, u8)) -> Lookup {
         match self.map.get(key) {
             Some(CacheEntry::Resolved(slot)) => {
                 let slot = *slot;
@@ -517,7 +533,7 @@ impl ResultCache {
     /// Resolve `key` (promotion at reconciliation): a fresh MRU entry,
     /// replacing any stale pending marker; re-touches an already-resolved
     /// key defensively. O(1).
-    fn promote(&mut self, key: (u32, u64)) {
+    fn promote(&mut self, key: (u32, u64, u8)) {
         if let Some(CacheEntry::Resolved(_)) = self.map.get(&key) {
             let _ = self.lookup_touch(&key);
             return;
@@ -529,7 +545,7 @@ impl ResultCache {
 
     /// Park a pending (single-flight) marker — two-phase-oracle path
     /// only. Never enters the recency lists, so it is never evicted.
-    fn insert_pending(&mut self, key: (u32, u64), owner: u64) {
+    fn insert_pending(&mut self, key: (u32, u64, u8), owner: u64) {
         if let Some(CacheEntry::Resolved(slot)) = self.map.get(&key) {
             let slot = *slot;
             self.unlink(slot);
@@ -539,7 +555,7 @@ impl ResultCache {
     }
 
     /// Drop a key outright (a shed owner's pending marker). O(1).
-    fn remove(&mut self, key: &(u32, u64)) {
+    fn remove(&mut self, key: &(u32, u64, u8)) {
         match self.map.remove(key) {
             Some(CacheEntry::Resolved(slot)) => {
                 self.unlink(slot);
@@ -565,7 +581,7 @@ impl ResultCache {
         };
         let victim = if naive {
             work.cache_entry_scans += self.map.len() as u64;
-            let mut best: Option<(u64, (u32, u64))> = None;
+            let mut best: Option<(u64, (u32, u64, u8))> = None;
             // pallas-lint: allow(D001, reason = "retained naive oracle: min over strictly-increasing stamps is unique, so iteration order cannot change the victim (debug_asserted against the recency-list head)")
             for (key, e) in &self.map {
                 if let CacheEntry::Resolved(slot) = e {
@@ -690,9 +706,10 @@ struct Joiner {
 enum OwnerFate {
     /// Forwarded to a fleet, not yet departed: joiners wait.
     InFlight,
-    /// Completed at the given finish time (committed at dispatch):
-    /// joiners complete at `max(their router exit, finish)`.
-    Finished(f64),
+    /// Completed at the given finish time (committed at dispatch) at the
+    /// given precision variant: joiners complete at `max(their router
+    /// exit, finish)` and inherit the owner's served variant.
+    Finished(f64, u8),
     /// Shed by admission control at the given time: joiners shed with it.
     Shed(f64),
 }
@@ -745,13 +762,15 @@ fn push_feedback(
 }
 
 /// A cache completion for one request, scored against its *tier* arrival
-/// and original deadline (router wait counts), finishing at `finish_us`.
+/// and original deadline (router wait counts), finishing at `finish_us`
+/// with a result produced at precision `variant`.
 fn cache_hit(
     id: u64,
     net: u32,
     arrival_us: f64,
     deadline_us: Option<f64>,
     finish_us: f64,
+    variant: u8,
 ) -> CacheHit {
     CacheHit {
         id,
@@ -759,6 +778,7 @@ fn cache_hit(
         arrival_us,
         finish_us,
         deadline_missed: deadline_us.map(|dl| finish_us - arrival_us > dl).unwrap_or(false),
+        variant,
     }
 }
 
@@ -769,11 +789,19 @@ pub struct ShardedFleet {
     config: ShardConfig,
     /// Sorted `(ring position, shard)` points.
     ring: Vec<(u64, usize)>,
-    /// Result cache, persistent across runs. Keyed by `(net, digest)`.
+    /// Result cache, persistent across runs. Keyed by `(net, digest,
+    /// served variant)`: a result produced at a degraded precision is
+    /// memoized separately from the full-precision result, so a lookup
+    /// can never return a cheaper answer while claiming full quality.
     cache: ResultCache,
     /// Hot-path implementation selector for the tier loop and the cache
     /// (propagated to every shard's [`Fleet`]).
     mode: HotPathMode,
+    /// Tier copy of the precision-variant table (every shard fleet holds
+    /// the same one): bounds the cache probe fan-out and supplies the
+    /// quality weight of each cache hit. Empty by default — one probe
+    /// per lookup, every weight exactly 1.0.
+    variants: VariantTable,
 }
 
 impl ShardedFleet {
@@ -819,6 +847,48 @@ impl ShardedFleet {
             ring,
             cache: ResultCache::default(),
             mode: HotPathMode::default(),
+            variants: VariantTable::default(),
+        }
+    }
+
+    /// Install a precision-variant table on the tier: every shard's
+    /// [`Fleet`] gets a copy (so brownout degradation can pick variants
+    /// at dispatch) and the tier keeps one for cache-probe bounds and
+    /// hit-quality weighting. Resolved cache entries produced under an
+    /// earlier table stay resident; ones at levels the new table cannot
+    /// serve simply stop being probed and age out of the LRU.
+    pub fn set_variants(&mut self, table: VariantTable) {
+        for f in &mut self.shards {
+            f.set_variants(table.clone());
+        }
+        self.variants = table;
+    }
+
+    /// The tier's installed precision-variant table.
+    pub fn variants(&self) -> &VariantTable {
+        &self.variants
+    }
+
+    /// Probe the persistent cache for `(net, digest)` at every variant
+    /// the current table can serve `net` at, full precision first; the
+    /// first resolved entry wins (and is LRU-touched). A pending marker
+    /// (parked only by the two-phase oracle) is reported when nothing
+    /// resolved. With no variant table this is exactly one probe at
+    /// level 0 — bit-identical to the pre-variant single-key lookup.
+    /// Within one run the resolved set is static (promotion happens at
+    /// reconciliation), so probe order cannot race a promotion.
+    fn probe_cache(&mut self, net: u32, digest: u64) -> (Lookup, u8) {
+        let mut pending: Option<u64> = None;
+        for v in 0..=self.variants.max_level_for(net) {
+            match self.cache.lookup_touch(&(net, digest, v)) {
+                Lookup::Resolved => return (Lookup::Resolved, v),
+                Lookup::Pending(owner) => pending = pending.or(Some(owner)),
+                Lookup::Miss => {}
+            }
+        }
+        match pending {
+            Some(owner) => (Lookup::Pending(owner), 0),
+            None => (Lookup::Miss, 0),
         }
     }
 
@@ -1082,7 +1152,7 @@ impl ShardedFleet {
                     // pallas-lint: allow(D004, reason = "owner_key and pending are inserted together and removed together")
                     let p = pending.get_mut(&key).expect("owner ids map to pending keys");
                     p.fate = if d.completed {
-                        OwnerFate::Finished(d.t_us)
+                        OwnerFate::Finished(d.t_us, d.variant)
                     } else {
                         OwnerFate::Shed(d.t_us)
                     };
@@ -1090,8 +1160,14 @@ impl ShardedFleet {
                         let done_at = w.exit_us.max(d.t_us);
                         if d.completed {
                             energy_saved_uj += shard_inference_uj[w.shard];
-                            cache_hits
-                                .push(cache_hit(w.id, w.net, w.arrival_us, w.deadline_us, done_at));
+                            cache_hits.push(cache_hit(
+                                w.id,
+                                w.net,
+                                w.arrival_us,
+                                w.deadline_us,
+                                done_at,
+                                d.variant,
+                            ));
                         } else {
                             shed_joins += 1; // owner was shed; the join sheds too
                         }
@@ -1144,7 +1220,7 @@ impl ShardedFleet {
                     };
                     match p.fate {
                         OwnerFate::InFlight => p.waiters.push(joiner),
-                        OwnerFate::Finished(fin) => {
+                        OwnerFate::Finished(fin, v) => {
                             let done_at = joiner.exit_us.max(fin);
                             energy_saved_uj += shard_inference_uj[s];
                             cache_hits.push(cache_hit(
@@ -1153,6 +1229,7 @@ impl ShardedFleet {
                                 joiner.arrival_us,
                                 joiner.deadline_us,
                                 done_at,
+                                v,
                             ));
                             push_feedback(&mut heap, &mut seq, source, req.id, done_at);
                         }
@@ -1169,21 +1246,27 @@ impl ShardedFleet {
                     }
                     continue;
                 }
-                match self.cache.lookup_touch(&key) {
-                    Lookup::Resolved => {
+                match self.probe_cache(req.net, req.input_digest) {
+                    (Lookup::Resolved, v) => {
                         // resolved in an earlier run (LRU-touched by the
-                        // lookup): completes at router exit, touching no
-                        // device
+                        // probe): completes at router exit, touching no
+                        // device, at the variant the entry was produced at
                         energy_saved_uj += shard_inference_uj[s];
-                        cache_hits
-                            .push(cache_hit(req.id, req.net, req.arrival_us, req.deadline_us, exit));
+                        cache_hits.push(cache_hit(
+                            req.id,
+                            req.net,
+                            req.arrival_us,
+                            req.deadline_us,
+                            exit,
+                            v,
+                        ));
                         push_feedback(&mut heap, &mut seq, source, req.id, exit);
                         continue;
                     }
                     // a Pending entry can only linger in the persistent
                     // map if a previous oracle run panicked mid-flight;
                     // treat it as the miss it effectively is
-                    Lookup::Pending(_) | Lookup::Miss => {
+                    (Lookup::Pending(_), _) | (Lookup::Miss, _) => {
                         pending.insert(
                             key,
                             PendingKey { fate: OwnerFate::InFlight, waiters: Vec::new() },
@@ -1209,8 +1292,11 @@ impl ShardedFleet {
             // pallas-lint: allow(D004, reason = "pending_order records exactly the keys inserted into pending")
             let p = pending.remove(&key).expect("pending keys are recorded in order");
             debug_assert!(p.waiters.is_empty(), "all owners depart before the heaps drain");
-            if matches!(p.fate, OwnerFate::Finished(_)) {
-                self.cache.promote(key);
+            if let OwnerFate::Finished(_, v) = p.fate {
+                // the key resolves at the variant the owner was actually
+                // served at — a degraded run never poisons the
+                // full-precision entry
+                self.cache.promote((key.0, key.1, v));
                 evictions += self.enforce_cache_bounds(key.0, &mut work);
             }
         }
@@ -1252,10 +1338,12 @@ impl ShardedFleet {
         let mut router_free = vec![0.0f64; k];
         let mut router_delay_sum = 0.0f64;
         // joiners: (original request, router exit, shard, owner id if
-        // pending in this run)
-        let mut joiners: Vec<(Request, f64, usize, Option<u64>)> = Vec::new();
-        // keys newly pending in this run, to reconcile afterwards
-        let mut pending_keys: Vec<((u32, u64), u64)> = Vec::new();
+        // pending in this run, resolved entry's variant when not)
+        let mut joiners: Vec<(Request, f64, usize, Option<u64>, u8)> = Vec::new();
+        // keys newly pending in this run, to reconcile afterwards; markers
+        // always park at level 0 — the served variant is only known at
+        // reconciliation
+        let mut pending_keys: Vec<((u32, u64, u8), u64)> = Vec::new();
         let mut lookups = 0u64;
         let mut seen_ids = std::collections::HashSet::new();
         let mut work = WorkCounters::default();
@@ -1283,17 +1371,17 @@ impl ShardedFleet {
                     req.id
                 );
                 lookups += 1;
-                let key = (req.net, req.input_digest);
-                match self.cache.lookup_touch(&key) {
-                    Lookup::Resolved => {
-                        joiners.push((*req, exit, s, None));
+                let key = (req.net, req.input_digest, 0u8);
+                match self.probe_cache(req.net, req.input_digest) {
+                    (Lookup::Resolved, v) => {
+                        joiners.push((*req, exit, s, None, v));
                         continue;
                     }
-                    Lookup::Pending(owner) => {
-                        joiners.push((*req, exit, s, Some(owner)));
+                    (Lookup::Pending(owner), _) => {
+                        joiners.push((*req, exit, s, Some(owner), 0));
                         continue;
                     }
-                    Lookup::Miss => {
+                    (Lookup::Miss, _) => {
                         self.cache.insert_pending(key, req.id);
                         pending_keys.push((key, req.id));
                     }
@@ -1308,19 +1396,28 @@ impl ShardedFleet {
         // reconcile: owners that completed resolve their key (and their
         // joiners); owners that were shed (absent below) drop it, shedding
         // their joiners with them
-        let mut owner_finish: HashMap<u64, f64> = HashMap::new();
+        let mut owner_finish: HashMap<u64, (f64, u8)> = HashMap::new();
         for r in &reports {
             for c in &r.completions {
-                owner_finish.insert(c.id, c.finish_us);
+                owner_finish.insert(c.id, (c.finish_us, c.variant));
             }
         }
         let mut evictions = 0u64;
         for (key, owner) in pending_keys {
-            if owner_finish.contains_key(&owner) {
-                self.cache.promote(key);
-                evictions += self.enforce_cache_bounds(key.0, &mut work);
-            } else {
-                self.cache.remove(&key);
+            match owner_finish.get(&owner) {
+                Some(&(_, v)) => {
+                    // the key resolves at the served variant: when the
+                    // owner was degraded, drop the level-0 marker first
+                    // (remove never ticks, so the promotion's recency
+                    // stamp matches the unified loop — which parks no
+                    // marker — tick for tick)
+                    if v != key.2 {
+                        self.cache.remove(&key);
+                    }
+                    self.cache.promote((key.0, key.1, v));
+                    evictions += self.enforce_cache_bounds(key.0, &mut work);
+                }
+                None => self.cache.remove(&key),
             }
         }
 
@@ -1338,13 +1435,13 @@ impl ShardedFleet {
         let mut cache_hits: Vec<CacheHit> = Vec::new();
         let mut shed_joins = 0u64;
         let mut energy_saved_uj = 0.0f64;
-        for (req, exit, s, owner) in joiners {
+        for (req, exit, s, owner, resolved_v) in joiners {
             let finish = match owner {
-                None => Some(exit),
-                Some(oid) => owner_finish.get(&oid).map(|f| f.max(exit)),
+                None => Some((exit, resolved_v)),
+                Some(oid) => owner_finish.get(&oid).map(|&(f, v)| (f.max(exit), v)),
             };
             match finish {
-                Some(f) => {
+                Some((f, v)) => {
                     energy_saved_uj += shard_inference_uj[s];
                     cache_hits.push(CacheHit {
                         id: req.id,
@@ -1355,6 +1452,7 @@ impl ShardedFleet {
                             .deadline_us
                             .map(|dl| f - req.arrival_us > dl)
                             .unwrap_or(false),
+                        variant: v,
                     });
                 }
                 None => shed_joins += 1, // owner was shed; the join sheds too
@@ -1447,6 +1545,19 @@ impl ShardedFleet {
         let idle_energy_uj: f64 = reports.iter().map(|r| r.idle_energy_uj).sum();
         let deadline_misses = reports.iter().map(|r| r.deadline_misses).sum::<usize>()
             + cache_hits.iter().filter(|h| h.deadline_missed).count();
+        // quality weight of everything the tier completed: fleet
+        // completions at their dispatched variant, cache hits at the
+        // variant their memoized result was produced at. With no table
+        // (or no degradation) every weight is exactly 1.0, the sum is
+        // exactly `total_completed as f64`, and the weighted goodput
+        // below bit-equals `throughput_rps`.
+        let quality_sum: f64 = reports
+            .iter()
+            .flat_map(|r| r.completions.iter().map(|c| self.variants.quality(c.variant)))
+            .sum::<f64>()
+            + cache_hits.iter().map(|h| self.variants.quality(h.variant)).sum::<f64>();
+        let degraded = reports.iter().map(|r| r.degraded).sum::<usize>()
+            + cache_hits.iter().filter(|h| h.variant > 0).count();
         ShardedReport {
             per_shard_routed,
             total_completed,
@@ -1454,6 +1565,13 @@ impl ShardedFleet {
             throughput_rps: sustained_throughput_rps(total_completed, span_start, span_end),
             mean_service_latency_us: lat_sum / fleet_completed.max(1) as f64,
             mean_router_delay_us: router_delay_sum / n_requests.max(1) as f64,
+            degraded,
+            quality_weighted_goodput: sustained_weighted_rps(
+                quality_sum,
+                total_completed,
+                span_start,
+                span_end,
+            ),
             deadline_misses,
             active_energy_uj,
             idle_energy_uj,
@@ -1535,6 +1653,7 @@ mod tests {
                 net_switch_cycles: 25_000,
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
             let reqs = tenant_workload(3, 600.0, 120, 0.4, rng.next_u64());
@@ -1647,6 +1766,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 50_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let reqs = tenant_workload(2, 700.0, 150, 0.3, rng.next_u64());
             let mut tier =
@@ -2116,6 +2236,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 30_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let mut unified = tier(8, k, policy, fleet_config, config);
             let mut oracle = tier(8, k, policy, fleet_config, config);
@@ -2203,6 +2324,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 25_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
             let clients = 1 + rng.below(6) as usize;
@@ -2385,6 +2507,7 @@ mod tests {
                 net_switch_cycles: *rng.pick(&[0u64, 30_000]),
                 discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
                 steal: rng.chance(0.5),
+                ..FleetConfig::default()
             };
             let mut indexed = tier(8, k, policy, fleet_config, config);
             let mut naive = tier(8, k, policy, fleet_config, config);
@@ -2525,5 +2648,184 @@ mod tests {
             b.work.cache_entry_scans,
             a.work.cache_entry_scans
         );
+    }
+
+    #[test]
+    fn prop_tier_brownout_disabled_matches_baseline() {
+        // the tier half of the degradation-off oracle: a tier with the
+        // full variant table installed but DegradePolicy::Off must be
+        // byte-identical (whole ShardedReport, via Debug) to a tier that
+        // never heard of variants, across the scheduling matrix with
+        // bounded caches — and the two-phase oracle must agree too, so
+        // the widened (net, digest, variant) cache keys are pinned
+        // equivalent to the old (net, digest) keys when nothing degrades
+        check("tier-brownout-off-vs-baseline", 16, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4, 8]);
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: *rng.pick(&[0.0f64, 80.0]),
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.7),
+                cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
+                cache_quota_per_net: *rng.pick(&[3usize, usize::MAX]),
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, 16, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 15_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 30_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default() // degrade: Off
+            };
+            let reqs = tenant_workload(3, 700.0, 120, 0.4, rng.next_u64());
+            let mut plain = tier(8, k, policy, fleet_config, config);
+            let mut browned = tier(8, k, policy, fleet_config, config);
+            browned.set_variants(VariantTable::mobilenet_default());
+            let mut oracle = tier(8, k, policy, fleet_config, config);
+            oracle.set_variants(VariantTable::mobilenet_default());
+            // cache-warm second round included: the variant-widened keys
+            // must replay identically too
+            for round in 0..2 {
+                let a = plain.run(&reqs);
+                let b = browned.run(&reqs);
+                if format!("{a:?}") != format!("{b:?}") {
+                    return Err(format!(
+                        "round {round}: Off-with-table tier diverged from baseline ({policy:?}, k={k})"
+                    ));
+                }
+                if b.degraded != 0 || b.cache_hits.iter().any(|h| h.variant != 0) {
+                    return Err(format!("round {round}: brownout-off tier degraded a request"));
+                }
+                if b.quality_weighted_goodput != b.throughput_rps {
+                    return Err(format!(
+                        "round {round}: weighted goodput != throughput under Off"
+                    ));
+                }
+                // the two-phase oracle path settles joiners in a different
+                // order, so compare it the way the unified-vs-oracle
+                // property does: per-shard payloads plus sorted hits
+                let c = oracle.run_two_phase_oracle(&reqs);
+                c.check_conservation(reqs.len())?;
+                for (s, (rb, rc)) in b.shards.iter().zip(c.shards.iter()).enumerate() {
+                    if rb.completions != rc.completions || rb.rejections != rc.rejections {
+                        return Err(format!("round {round}: oracle shard {s} diverged"));
+                    }
+                }
+                let sort_hits = |mut v: Vec<CacheHit>| {
+                    v.sort_by_key(|h| h.id);
+                    v
+                };
+                if sort_hits(b.cache_hits.clone()) != sort_hits(c.cache_hits.clone()) {
+                    return Err(format!("round {round}: oracle cache hits diverged"));
+                }
+                if c.degraded != 0 || c.quality_weighted_goodput != c.throughput_rps {
+                    return Err(format!("round {round}: oracle shows degradation under Off"));
+                }
+                if browned.cache_entries() != oracle.cache_entries()
+                    || browned.cache_entries() != plain.cache_entries()
+                {
+                    return Err(format!("round {round}: resident cache entries diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tier_brownout_conservation_and_determinism() {
+        // active Watermark degradation at tier scope, result cache on:
+        // conservation still holds exactly, the tier's degraded count is
+        // exactly the degraded completions plus the cache hits that
+        // joined a degraded owner's result, the floored tenant never
+        // serves past its cap, and two identical closed-loop brownout
+        // runs reproduce the report and the recorded trace byte for byte
+        use crate::coordinator::request::{ClosedLoopSource, TraceSource};
+        use crate::coordinator::variant::DegradePolicy;
+        check("tier-brownout-watermark", 10, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: 120.0,
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: true,
+                cache_capacity: *rng.pick(&[4usize, usize::MAX]),
+                cache_quota_per_net: usize::MAX,
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[2usize, 4]),
+                batch_max: 4,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                degrade: DegradePolicy::Watermark { watermark: *rng.pick(&[1usize, 2]) },
+                ..FleetConfig::default()
+            };
+            let mut table = VariantTable::mobilenet_default();
+            table.set_floor(1, 0.95);
+            let floor_cap = table.max_level_for(1);
+            let seed = rng.next_u64();
+            let mut outputs: Vec<(String, String)> = Vec::new();
+            let mut first: Option<(ShardedReport, usize)> = None;
+            for _ in 0..2 {
+                let mut src = ClosedLoopSource::new(8, 400.0, 120, seed)
+                    .with_nets(3)
+                    .with_input_universe(5);
+                let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
+                t.set_variants(table.clone());
+                let (report, trace) = t
+                    .run_source_traced(&mut src)
+                    .map_err(|e| format!("tier run failed: {e}"))?;
+                outputs.push((format!("{report:?}"), TraceSource::to_jsonl(&trace)));
+                if first.is_none() {
+                    first = Some((report, trace.len()));
+                }
+            }
+            if outputs[0].0 != outputs[1].0 {
+                return Err("identical brownout runs produced different reports".into());
+            }
+            if outputs[0].1 != outputs[1].1 {
+                return Err("identical brownout runs produced different traces".into());
+            }
+            let Some((report, offered)) = first else {
+                return Err("no report captured".into());
+            };
+            report.check_conservation(offered)?;
+            let degraded_completions: usize = report
+                .shards
+                .iter()
+                .flat_map(|r| r.completions.iter())
+                .filter(|c| c.variant > 0)
+                .count();
+            let degraded_joins =
+                report.cache_hits.iter().filter(|h| h.variant > 0).count();
+            if report.degraded != degraded_completions + degraded_joins {
+                return Err(format!(
+                    "tier degraded count {} != {} completions + {} degraded joins",
+                    report.degraded, degraded_completions, degraded_joins
+                ));
+            }
+            for c in report.shards.iter().flat_map(|r| r.completions.iter()) {
+                let q = table.quality(c.variant);
+                if !(q > 0.0 && q <= 1.0) {
+                    return Err(format!("quality {q} out of (0, 1]"));
+                }
+                if c.net == 1 && c.variant > floor_cap {
+                    return Err(format!(
+                        "floored tenant served at level {} past its cap {floor_cap}",
+                        c.variant
+                    ));
+                }
+            }
+            if report.quality_weighted_goodput > report.throughput_rps {
+                return Err("weighted goodput exceeded throughput with weights <= 1".into());
+            }
+            Ok(())
+        });
     }
 }

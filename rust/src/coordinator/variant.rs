@@ -1,0 +1,349 @@
+//! Per-net precision variants and the brownout [`DegradePolicy`].
+//!
+//! The paper's 27-kernel library gives one network many servable
+//! *operating points*: the same architecture quantized to different
+//! precision assignments, with very different memory footprints and
+//! accuracy. This module derives a [`VariantTable`] for a net from the
+//! repo's own measured models — `qnn::footprint` for packed
+//! weight/activation bytes and MACs, `qnn::footprint::quality_proxy` for
+//! the accuracy-anchored quality weight, and `bench::ablate`'s
+//! [`precision_cycle_model`] for the measured per-precision kernel
+//! cycles — so no number in the table is invented.
+//!
+//! # Why serving cost scales with *bytes*, not kernel cycles
+//!
+//! The measured compute model runs *against* degradation: on both
+//! modelled ISAs sub-byte weights are slower per MAC (Fig. 4: 4-bit costs
+//! ~2.5x the cycles of 8-bit on GAP-8, and `arm::kernels` pins the same
+//! direction on Cortex-M), because unpacking dominates the inner loop.
+//! The reason mixed precision exists — the paper's own motivation — is
+//! that an extreme-edge device cannot hold a MobileNet-scale weight set
+//! resident: serving cost at the tier is dominated by moving the
+//! variant's working set through the memory hierarchy (the same physics
+//! the fleet already charges as `net_switch_cycles`, "evict + DMA
+//! reload"). A variant's service-cycle scale factor is therefore the
+//! ratio of its streamed bytes (packed weights + peak activations, from
+//! [`footprint_report`]) to the full-precision variant's — monotone
+//! decreasing in precision by construction — while the measured (and
+//! *inverted*) kernel-compute cost is recorded per variant as
+//! [`VariantSpec::kernel_cycles`] so the trade-off stays visible.
+//!
+//! Level 0 always scales by `num == den`, which is exact in integer
+//! arithmetic: an engine with [`DegradePolicy::Off`] is bit-identical to
+//! the pre-brownout engine (property-pinned in `fleet`/`shard`).
+
+use std::collections::HashMap;
+
+use crate::bench::ablate::precision_cycle_model;
+use crate::qnn::footprint::{
+    footprint_report, mobilenet_v1_inventory, quality_proxy, Assignment,
+};
+use crate::qnn::types::Bits;
+
+/// When may the engine serve a cheaper precision variant instead of
+/// shedding? Carried on `FleetConfig`; `Off` is the default and is
+/// property-pinned to be bit-identical to the pre-brownout engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DegradePolicy {
+    /// Never degrade: requests are served at full precision or shed.
+    #[default]
+    Off,
+    /// Brownout mode: degrade one variant level per `watermark` requests
+    /// already queued at the routed device, and as far as needed (never
+    /// past the net's accuracy floor) when a deadline cannot be met at
+    /// full precision.
+    Watermark {
+        /// Queue depth that buys one level of degradation.
+        watermark: usize,
+    },
+}
+
+/// One servable precision variant of a network: a precision assignment
+/// plus everything the serving tier needs to price it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantSpec {
+    /// Variant level; 0 is full precision, higher levels are cheaper.
+    pub level: u8,
+    /// Short human name (`u8`, `u4`, `u2`, `cmix`).
+    pub name: &'static str,
+    /// The precision assignment this variant serves.
+    pub assignment: Assignment,
+    /// Packed weight bytes, from [`footprint_report`].
+    pub weight_bytes: usize,
+    /// Peak packed activation bytes (input + output), from
+    /// [`footprint_report`].
+    pub activation_bytes: usize,
+    /// Service-cycle scale numerator: this variant's streamed bytes.
+    pub cycle_num: u64,
+    /// Service-cycle scale denominator: level 0's streamed bytes.
+    pub cycle_den: u64,
+    /// Measured Reference Layer kernel cycles at this variant's nearest
+    /// uniform weight precision (`bench::ablate::precision_cycle_model`).
+    /// Note the direction — this *grows* as precision drops (the Fig. 4
+    /// inversion); see the module docs for why service cost does not.
+    pub kernel_cycles: u64,
+    /// Accuracy-retention quality weight in (0, 1]; exactly 1.0 at level
+    /// 0 (`qnn::footprint::quality_proxy`).
+    pub quality: f64,
+}
+
+impl VariantSpec {
+    /// Scale a full-precision cycle count to this variant (exact integer
+    /// arithmetic; the identity when `cycle_num == cycle_den`).
+    pub fn scale_cycles(&self, cycles: u64) -> u64 {
+        ((cycles as u128 * self.cycle_num as u128) / self.cycle_den as u128) as u64
+    }
+}
+
+/// The precision variants a fleet may serve, ordered by level (0 = full
+/// precision first), plus per-net accuracy floors that cap how deep
+/// brownout may degrade each tenant.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct VariantTable {
+    levels: Vec<VariantSpec>,
+    /// Per-net minimum acceptable quality (get-only lookups; never
+    /// iterated, so event order cannot depend on hash order).
+    floors: HashMap<u32, f64>,
+}
+
+impl VariantTable {
+    /// The MobileNetV1 uniform-precision ladder (8 -> 4 -> 2 bit), the
+    /// default brownout table: every number derives from
+    /// [`footprint_report`], [`quality_proxy`] and
+    /// [`precision_cycle_model`].
+    pub fn mobilenet_default() -> VariantTable {
+        VariantTable::mobilenet(&[
+            Assignment::UniformBits(8),
+            Assignment::UniformBits(4),
+            Assignment::UniformBits(2),
+        ])
+    }
+
+    /// Build a table for MobileNetV1 from an ordered list of precision
+    /// assignments (level 0 first). Panics if the list is empty, if a
+    /// later level is not strictly smaller (in streamed bytes) than its
+    /// predecessor, or if qualities are not strictly decreasing — the
+    /// invariants the degrade policy relies on.
+    pub fn mobilenet(assignments: &[Assignment]) -> VariantTable {
+        assert!(!assignments.is_empty(), "variant table needs at least level 0");
+        let inv = mobilenet_v1_inventory();
+        let kernel = precision_cycle_model(1);
+        let base = footprint_report(&inv, assignments[0]);
+        let base_bytes = (base.weight_bytes + base.peak_activation_bytes) as u64;
+        let mut levels = Vec::with_capacity(assignments.len());
+        for (i, &a) in assignments.iter().enumerate() {
+            let fp = footprint_report(&inv, a);
+            let bytes = (fp.weight_bytes + fp.peak_activation_bytes) as u64;
+            let (name, wbits) = match a {
+                Assignment::UniformBits(8) => ("u8", Bits::B8),
+                Assignment::UniformBits(4) => ("u4", Bits::B4),
+                Assignment::UniformBits(2) => ("u2", Bits::B2),
+                // the mixed assignment's MAC-weighted depth (~1.3) sits
+                // nearest the uniform 4-bit measurement
+                Assignment::MixedCmix => ("cmix", Bits::B4),
+                Assignment::UniformBits(_) => ("int32", Bits::B8),
+            };
+            let kernel_cycles = kernel
+                .iter()
+                .find(|p| p.wbits == wbits)
+                .map(|p| p.cycles)
+                .unwrap_or(0);
+            levels.push(VariantSpec {
+                level: i as u8,
+                name,
+                assignment: a,
+                weight_bytes: fp.weight_bytes,
+                activation_bytes: fp.peak_activation_bytes,
+                cycle_num: bytes,
+                cycle_den: base_bytes,
+                kernel_cycles,
+                quality: quality_proxy(&inv, a),
+            });
+        }
+        let table = VariantTable { levels, floors: HashMap::new() };
+        table.validate();
+        table
+    }
+
+    /// A single-level identity table (full precision only) — the table an
+    /// engine without variants behaves as; `Default` uses it.
+    pub fn trivial() -> VariantTable {
+        VariantTable::default()
+    }
+
+    fn validate(&self) {
+        for w in self.levels.windows(2) {
+            assert!(
+                w[1].cycle_num < w[0].cycle_num,
+                "variant levels must strictly shrink in streamed bytes: {} !< {}",
+                w[1].cycle_num,
+                w[0].cycle_num
+            );
+            assert!(
+                w[1].quality < w[0].quality,
+                "variant quality must strictly decrease with level"
+            );
+        }
+        if let Some(l0) = self.levels.first() {
+            assert!(l0.quality == 1.0, "level 0 must be full quality");
+            assert!(l0.cycle_num == l0.cycle_den, "level 0 must scale by identity");
+        }
+        for s in &self.levels {
+            assert!(s.quality > 0.0 && s.quality <= 1.0, "quality out of (0,1]");
+            assert!(s.cycle_den > 0, "zero denominator");
+        }
+    }
+
+    /// Number of levels beyond full precision (0 for the trivial table).
+    pub fn max_level(&self) -> u8 {
+        (self.levels.len().max(1) - 1) as u8
+    }
+
+    /// The spec for a level, if the table defines it.
+    pub fn spec(&self, level: u8) -> Option<&VariantSpec> {
+        self.levels.get(level as usize)
+    }
+
+    /// Quality weight served at `level`: the spec's weight, or exactly
+    /// 1.0 for level 0 of the trivial (empty) table.
+    pub fn quality(&self, level: u8) -> f64 {
+        self.spec(level).map(|s| s.quality).unwrap_or(1.0)
+    }
+
+    /// Scale a full-precision cycle count to `level` (identity for level
+    /// 0 and for levels the table does not define).
+    pub fn scale_cycles(&self, level: u8, cycles: u64) -> u64 {
+        match self.spec(level) {
+            Some(s) => s.scale_cycles(cycles),
+            None => cycles,
+        }
+    }
+
+    /// Set an accuracy floor for a net: brownout will never serve `net`
+    /// at a level whose quality is below `min_quality`.
+    pub fn set_floor(&mut self, net: u32, min_quality: f64) {
+        self.floors.insert(net, min_quality);
+    }
+
+    /// The floor configured for `net`, if any.
+    pub fn floor(&self, net: u32) -> Option<f64> {
+        self.floors.get(&net).copied()
+    }
+
+    /// Deepest level `net` may legally be served at: the table's last
+    /// level, truncated by the net's accuracy floor.
+    pub fn max_level_for(&self, net: u32) -> u8 {
+        let mut max = self.max_level();
+        if let Some(floor) = self.floors.get(&net) {
+            while max > 0 && self.quality(max) < *floor {
+                max -= 1;
+            }
+        }
+        max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::DeviceClass;
+
+    #[test]
+    fn default_table_is_trivial_identity() {
+        let t = VariantTable::default();
+        assert_eq!(t.max_level(), 0);
+        assert_eq!(t.quality(0), 1.0);
+        assert_eq!(t.scale_cycles(0, 123_456), 123_456);
+        assert_eq!(t.scale_cycles(3, 123_456), 123_456);
+        assert_eq!(t.max_level_for(7), 0);
+    }
+
+    #[test]
+    fn mobilenet_table_cycles_and_energy_monotone_down() {
+        // Satellite pin: as bits drop 8 -> 4 -> 2, service cycles and
+        // energy are strictly monotone non-increasing (strictly
+        // decreasing here), for every device class.
+        let t = VariantTable::mobilenet_default();
+        assert_eq!(t.max_level(), 2);
+        for base in [1_000u64, 300_000, 30_000_000] {
+            let c: Vec<u64> = (0..3).map(|l| t.scale_cycles(l, base)).collect();
+            assert!(c[0] > c[1] && c[1] > c[2], "cycles not decreasing: {c:?}");
+            for class in DeviceClass::ALL {
+                let e: Vec<f64> =
+                    c.iter().map(|&cy| class.op().energy_uj(class.scale_cycles(cy))).collect();
+                assert!(e[0] > e[1] && e[1] > e[2], "energy not decreasing: {e:?}");
+            }
+        }
+        // level 0 is the exact identity at any magnitude
+        assert_eq!(t.scale_cycles(0, u64::MAX / 2), u64::MAX / 2);
+    }
+
+    #[test]
+    fn mobilenet_table_footprint_matches_footprint_report() {
+        let t = VariantTable::mobilenet_default();
+        let inv = mobilenet_v1_inventory();
+        for (level, a) in
+            [(0u8, Assignment::UniformBits(8)), (1, Assignment::UniformBits(4)), (2, Assignment::UniformBits(2))]
+        {
+            let fp = footprint_report(&inv, a);
+            let s = t.spec(level).unwrap();
+            assert_eq!(s.weight_bytes, fp.weight_bytes);
+            assert_eq!(s.activation_bytes, fp.peak_activation_bytes);
+            assert_eq!(s.assignment, a);
+        }
+        // ~4.2 MB of packed 8-bit weights; halves per level
+        let w0 = t.spec(0).unwrap().weight_bytes;
+        assert!((4_000_000..4_500_000).contains(&w0), "{w0}");
+        assert!(t.spec(1).unwrap().weight_bytes * 2 <= w0 + 8);
+    }
+
+    #[test]
+    fn mobilenet_table_quality_anchored() {
+        let t = VariantTable::mobilenet_default();
+        assert_eq!(t.quality(0), 1.0); // exactly, not approximately
+        for l in 1..=t.max_level() {
+            let q = t.quality(l);
+            assert!(q > 0.0 && q < 1.0, "level {l} quality {q}");
+            assert!(q < t.quality(l - 1), "quality must strictly decrease");
+        }
+    }
+
+    #[test]
+    fn mobilenet_table_records_the_kernel_inversion() {
+        // The measured compute model is preserved, direction and all:
+        // kernel cycles GROW as precision drops (Fig. 4), even though
+        // service cycles shrink. Both facts in one table, per the docs.
+        let t = VariantTable::mobilenet_default();
+        let k: Vec<u64> = (0..3).map(|l| t.spec(l).unwrap().kernel_cycles).collect();
+        assert!(k[0] > 0);
+        assert!(k[1] > k[0] && k[2] > k[0], "inversion not recorded: {k:?}");
+    }
+
+    #[test]
+    fn accuracy_floor_truncates_levels() {
+        let mut t = VariantTable::mobilenet_default();
+        let q1 = t.quality(1);
+        let q2 = t.quality(2);
+        t.set_floor(7, (q1 + q2) / 2.0); // between level 1 and level 2
+        assert_eq!(t.max_level_for(7), 1);
+        t.set_floor(8, 1.0); // full precision only
+        assert_eq!(t.max_level_for(8), 0);
+        assert_eq!(t.max_level_for(9), 2); // no floor: full ladder
+        assert!(t.floor(7).is_some());
+        assert_eq!(t.floor(9), None);
+    }
+
+    #[test]
+    fn cmix_fits_between_uniform_levels() {
+        let t = VariantTable::mobilenet(&[
+            Assignment::UniformBits(8),
+            Assignment::MixedCmix,
+            Assignment::UniformBits(2),
+        ]);
+        assert_eq!(t.max_level(), 2);
+        assert_eq!(t.spec(1).unwrap().name, "cmix");
+        // energy/cycles still strictly monotone through the mixed level
+        let c: Vec<u64> = (0..3).map(|l| t.scale_cycles(l, 300_000)).collect();
+        assert!(c[0] > c[1] && c[1] > c[2], "{c:?}");
+    }
+}

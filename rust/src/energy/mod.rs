@@ -62,6 +62,92 @@ pub const STM32H7_OP: OperatingPoint =
 pub const STM32L4_OP: OperatingPoint =
     OperatingPoint { name: "STM32L4", freq_mhz: 80.0, power_mw: 10.0, idle_power_mw: 1.0 };
 
+/// Measured 8-bit Reference Layer cycle anchor for the GAP-8 8-core
+/// cluster: ~16 MACs/cycle over 4.72 MMAC -> ~295k cycles (paper Fig. 5).
+pub const GAP8_REFERENCE_CYCLES: u64 = 295_000;
+/// Measured 8-bit Reference Layer cycle anchor for the STM32H7 (Cortex-M7,
+/// ~0.64 MACs/cycle -> ~7.37M cycles; the paper's 21-25x speed gap).
+pub const STM32H7_REFERENCE_CYCLES: u64 = 7_370_000;
+/// Measured 8-bit Reference Layer cycle anchor for the STM32L4 (Cortex-M4,
+/// ~0.35 MACs/cycle -> ~13.5M cycles).
+pub const STM32L4_REFERENCE_CYCLES: u64 = 13_500_000;
+
+/// A hardware class a fleet device can belong to: an [`OperatingPoint`]
+/// (power/frequency) paired with the class's measured Reference Layer
+/// cycle anchor, so heterogeneous fleets derive per-class inference cost
+/// from the paper's measured speed gaps instead of invented multipliers.
+///
+/// A device of class `c` serving a net whose GAP-8 cost is `base` cycles
+/// is charged `base * c.reference_cycles() / GAP8_REFERENCE_CYCLES`
+/// cycles at its own clock — e.g. an M7-class device runs the same net
+/// ~25x more cycles than a GAP-8-class one, exactly the paper's gap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// GAP-8 cluster at the 1.0 V / 90 MHz low-power point.
+    Gap8Lp,
+    /// GAP-8 cluster at the 1.2 V / 175 MHz high-performance point.
+    Gap8Hp,
+    /// STM32H743 (Cortex-M7) at 400 MHz.
+    M7,
+    /// STM32L476 (Cortex-M4) at 80 MHz.
+    L4,
+}
+
+impl DeviceClass {
+    /// All classes, in descending per-cycle capability order.
+    pub const ALL: [DeviceClass; 4] =
+        [DeviceClass::Gap8Hp, DeviceClass::Gap8Lp, DeviceClass::M7, DeviceClass::L4];
+
+    /// The class's power/frequency operating point.
+    pub fn op(self) -> OperatingPoint {
+        match self {
+            DeviceClass::Gap8Lp => GAP8_LP,
+            DeviceClass::Gap8Hp => GAP8_HP,
+            DeviceClass::M7 => STM32H7_OP,
+            DeviceClass::L4 => STM32L4_OP,
+        }
+    }
+
+    /// Measured 8-bit Reference Layer cycles on this class (the per-class
+    /// speed anchor; GAP-8 modes share the cluster's cycle count and
+    /// differ only in clock/power).
+    pub fn reference_cycles(self) -> u64 {
+        match self {
+            DeviceClass::Gap8Lp | DeviceClass::Gap8Hp => GAP8_REFERENCE_CYCLES,
+            DeviceClass::M7 => STM32H7_REFERENCE_CYCLES,
+            DeviceClass::L4 => STM32L4_REFERENCE_CYCLES,
+        }
+    }
+
+    /// Scale a GAP-8-denominated cycle count to this class via the
+    /// measured anchors (exact integer arithmetic, round-down).
+    pub fn scale_cycles(self, gap8_cycles: u64) -> u64 {
+        ((gap8_cycles as u128 * self.reference_cycles() as u128)
+            / GAP8_REFERENCE_CYCLES as u128) as u64
+    }
+
+    /// Parse a short class name as used by `serve --device-classes`.
+    pub fn parse(s: &str) -> Option<DeviceClass> {
+        match s {
+            "lp" | "gap8-lp" => Some(DeviceClass::Gap8Lp),
+            "hp" | "gap8-hp" => Some(DeviceClass::Gap8Hp),
+            "m7" | "h7" => Some(DeviceClass::M7),
+            "l4" | "m4" => Some(DeviceClass::L4),
+            _ => None,
+        }
+    }
+
+    /// Short name (the `parse` canonical spelling).
+    pub fn short_name(self) -> &'static str {
+        match self {
+            DeviceClass::Gap8Lp => "lp",
+            DeviceClass::Gap8Hp => "hp",
+            DeviceClass::M7 => "m7",
+            DeviceClass::L4 => "l4",
+        }
+    }
+}
+
 impl OperatingPoint {
     /// Execution time for a cycle count, in milliseconds.
     pub fn time_ms(&self, cycles: u64) -> f64 {
@@ -104,9 +190,9 @@ mod tests {
         // 8-bit Reference Layer: GAP-8 8-core ~ 16 MACs/cycle -> ~295k
         // cycles for 4.72 MMAC; H7 ~ 0.64 -> 7.37M cycles; L4 ~ 0.35 ->
         // 13.5M cycles. The paper reports 45x/21x (LP) and 31x/15x (HP).
-        let gap_cycles = 295_000u64;
-        let h7_cycles = 7_370_000u64;
-        let l4_cycles = 13_500_000u64;
+        let gap_cycles = GAP8_REFERENCE_CYCLES;
+        let h7_cycles = STM32H7_REFERENCE_CYCLES;
+        let l4_cycles = STM32L4_REFERENCE_CYCLES;
         let lp = GAP8_LP.energy_uj(gap_cycles);
         let hp = GAP8_HP.energy_uj(gap_cycles);
         let h7 = STM32H7_OP.energy_uj(h7_cycles);
@@ -135,6 +221,31 @@ mod tests {
         assert!(DEFAULT_NET_SWITCH_CYCLES > 0);
         // ~0.56 ms / ~13 uJ at the LP point
         assert!((GAP8_LP.time_ms(DEFAULT_NET_SWITCH_CYCLES) - 0.5556).abs() < 1e-3);
+    }
+
+    #[test]
+    fn device_class_scaling_reproduces_paper_speed_gaps() {
+        // scale_cycles is anchored on the measured Reference Layer runs:
+        // GAP-8 classes are identity; M7 is ~25x, L4 ~46x more cycles.
+        assert_eq!(DeviceClass::Gap8Hp.scale_cycles(300_000), 300_000);
+        assert_eq!(DeviceClass::Gap8Lp.scale_cycles(300_000), 300_000);
+        let m7 = DeviceClass::M7.scale_cycles(300_000) as f64 / 300_000.0;
+        let l4 = DeviceClass::L4.scale_cycles(300_000) as f64 / 300_000.0;
+        assert!((21.0..28.0).contains(&m7), "M7 factor {m7} (paper 21-25x)");
+        assert!((40.0..50.0).contains(&l4), "L4 factor {l4}");
+        // wall-clock: an M7 at 400 MHz still loses to GAP-8 HP at 175 MHz
+        let gap_us = GAP8_HP.time_us(300_000);
+        let m7_us = STM32H7_OP.time_us(DeviceClass::M7.scale_cycles(300_000));
+        assert!(m7_us / gap_us > 8.0, "paper's wall-clock gap: {}", m7_us / gap_us);
+    }
+
+    #[test]
+    fn device_class_parse_round_trips() {
+        for c in DeviceClass::ALL {
+            assert_eq!(DeviceClass::parse(c.short_name()), Some(c));
+            assert!(c.op().freq_mhz > 0.0);
+        }
+        assert_eq!(DeviceClass::parse("tpu"), None);
     }
 
     #[test]

@@ -8,11 +8,11 @@
 
 use pulpnn_mp::bench::{ablate, figures};
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, ClosedLoopSource, Fleet, FleetConfig, Policy,
-    QueueDiscipline, Request, ShardConfig, ShardedFleet, TraceSource, Workload,
-    DEFAULT_WAKEUP_CYCLES,
+    gap8_mixed_devices, merge_streams, ClosedLoopSource, DegradePolicy, Device, Fleet,
+    FleetConfig, Policy, QueueDiscipline, Request, ShardConfig, ShardedFleet, TraceSource,
+    VariantTable, Workload, DEFAULT_WAKEUP_CYCLES,
 };
-use pulpnn_mp::energy::{GAP8_HP, GAP8_LP};
+use pulpnn_mp::energy::{DeviceClass, GAP8_HP, GAP8_LP};
 use pulpnn_mp::kernels::netrun::GapBackend;
 use pulpnn_mp::qnn::network::demo_cnn;
 use pulpnn_mp::qnn::tensor::QTensor;
@@ -52,7 +52,12 @@ networks & runtime:
               --closed-loop CLIENTS --think-us US (composes with the
               sharded tier: --closed-loop N --shards K feeds completions
               back across routers, fleets and the cache), or
-              record/replay arrival traces with --trace-out/--trace-in
+              record/replay arrival traces with --trace-out/--trace-in;
+              brownout mode: --brownout WATERMARK serves a cheaper
+              precision variant instead of shedding once a queue passes
+              the watermark (--floors NET:MINQ,.. pins per-tenant
+              accuracy floors), and --device-classes lp,hp,m7,l4 builds
+              a heterogeneous fleet from the paper's measured classes
   emit-spec   print the demo network spec JSON (shared rust/python format)
 
 maintenance:
@@ -403,6 +408,10 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         }
     };
     let steal = args.flag("steal");
+    // brownout (precision-adaptive serving) knobs
+    let brownout = args.opt_usize("brownout", 0); // 0 = off
+    let device_classes = args.opt_maybe("device-classes");
+    let floors = args.opt_maybe("floors");
     // workload-source knobs
     let closed_loop = args.opt_usize("closed-loop", 0); // 0 = open loop
     let think_us = args.opt_f64("think-us", 5_000.0);
@@ -419,8 +428,28 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         f(GAP8_LP.time_ms(cycles), 2),
         f(GAP8_HP.time_ms(cycles), 2)
     );
-    // half LP, half HP fleet
-    let nodes = gap8_mixed_devices(devices, cycles);
+    // half LP, half HP fleet — or an explicit heterogeneous mix, with
+    // each class's inference cost scaled by its measured Reference Layer
+    // anchor (fig. 5's speed gaps, not invented multipliers)
+    let nodes = match &device_classes {
+        Some(spec) => {
+            let mut nodes = Vec::new();
+            for (i, name) in spec.split(',').enumerate() {
+                let Some(cls) = DeviceClass::parse(name.trim()) else {
+                    eprintln!("error: --device-classes expects lp|hp|m7|l4, got `{name}`");
+                    return 2;
+                };
+                nodes.push(Device::new(
+                    format!("{}{i}", cls.short_name()),
+                    cls.op(),
+                    cls.scale_cycles(cycles),
+                ));
+            }
+            nodes
+        }
+        None => gap8_mixed_devices(devices, cycles),
+    };
+    let devices = nodes.len();
     // a single-tenant workload never switches nets, so the knob is
     // harmlessly inert there (bit-exactness is regression-tested)
     let config = FleetConfig {
@@ -430,6 +459,37 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         net_switch_cycles: switch_cycles,
         discipline,
         steal,
+        degrade: if brownout > 0 {
+            DegradePolicy::Watermark { watermark: brownout }
+        } else {
+            DegradePolicy::Off
+        },
+    };
+    // the brownout variant table: the measured MobileNetV1 8/4/2-bit
+    // ladder, with optional per-tenant accuracy floors
+    let variants: Option<VariantTable> = if brownout > 0 {
+        let mut table = VariantTable::mobilenet_default();
+        if let Some(spec) = &floors {
+            for part in spec.split(',') {
+                let parsed = part.split_once(':').and_then(|(net, q)| {
+                    Some((net.trim().parse::<u32>().ok()?, q.trim().parse::<f64>().ok()?))
+                });
+                match parsed {
+                    Some((net, q)) => table.set_floor(net, q),
+                    None => {
+                        eprintln!("error: --floors expects NET:MIN_QUALITY,.., got `{part}`");
+                        return 2;
+                    }
+                }
+            }
+        }
+        println!(
+            "brownout: watermark {brownout} — queues past the watermark serve \
+             a reduced-precision variant instead of shedding"
+        );
+        Some(table)
+    } else {
+        None
     };
     let deadline_us = if deadline_ms > 0.0 { Some(deadline_ms * 1e3) } else { None };
     // multi-tenant closed loops run on the single fleet (the client pool
@@ -493,6 +553,9 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
 
     if !sharded {
         let mut fleet = Fleet::with_config(nodes, policy, config);
+        if let Some(table) = variants.clone() {
+            fleet.set_variants(table);
+        }
         let (report, offered) = if closed_loop > 0 {
             let mut src = ClosedLoopSource::new(closed_loop, think_us, n, seed)
                 .with_nets(tenants as u32);
@@ -533,6 +596,10 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         );
         println!("  deadline misses: {}", report.deadline_misses);
         println!("  shed requests  : {}", report.shed);
+        if brownout > 0 {
+            println!("  degraded       : {}", report.degraded);
+            println!("  quality goodput: {} rps", f(report.quality_weighted_goodput, 1));
+        }
         println!(
             "  activations    : {} ({} requests/batch mean)",
             report.batches,
@@ -560,6 +627,9 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         cache_quota_per_net: if cache_quota == 0 { usize::MAX } else { cache_quota },
     };
     let mut tier = ShardedFleet::new(nodes, policy, config, shard_config);
+    if let Some(table) = variants.clone() {
+        tier.set_variants(table);
+    }
     let (report, offered) = if closed_loop > 0 {
         // the unified tier event loop closes the feedback edge across
         // routers, shards and the result cache, so the client pool
@@ -609,6 +679,10 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         report.total_completed, report.total_shed
     );
     println!("  throughput     : {} rps", f(report.throughput_rps, 1));
+    if brownout > 0 {
+        println!("  degraded       : {}", report.degraded);
+        println!("  quality goodput: {} rps", f(report.quality_weighted_goodput, 1));
+    }
     println!("  service latency: {} ms mean", f(report.mean_service_latency_us / 1e3, 2));
     println!("  router wait    : {} ms mean", f(report.mean_router_delay_us / 1e3, 3));
     println!("  deadline misses: {}", report.deadline_misses);

@@ -37,6 +37,8 @@ fn the_sweep_covers_the_linter_and_the_simulator_alike() {
     let has = |suffix: &str| files.iter().any(|p| p.ends_with(suffix));
     assert!(has("rust/src/analysis/rules.rs"), "the linter must lint itself");
     assert!(has("rust/src/coordinator/shard.rs"), "the simulator tier is in scope");
+    assert!(has("rust/src/coordinator/variant.rs"), "the brownout variant table is in scope");
+    assert!(has("rust/benches/brownout_scale.rs"), "self-asserting benches are in scope");
     assert!(has("examples/edge_serving.rs"), "examples are in scope");
     assert!(has("rust/tests/static_analysis.rs"), "tests are in scope");
 }
