@@ -148,6 +148,7 @@ fn main() -> pulpnn_mp::util::error::Result<()> {
         cache: true,
         cache_capacity: 1024,
         cache_quota_per_net: 768,
+        ..ShardConfig::default()
     };
     let mut tier = ShardedFleet::new(nodes, Policy::TenancyAware, tier_fleet_config, shard_config);
     let tenants: Vec<_> = (0..2u32)

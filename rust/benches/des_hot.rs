@@ -21,10 +21,16 @@
 //! Wall-clock events/sec for both modes is reported through the
 //! `pulpnn-bench-v1` path (`PULPNN_BENCH_JSON` writes
 //! `BENCH_des_hot.json`) — the perf trajectory later PRs must beat.
+//!
+//! 4. **Parallel thread sweep** — the tier scenario re-runs under
+//!    `ExecMode::Parallel` for T ∈ {1, 2, 4, 8} (T <= 2 at the CI smoke
+//!    budget), self-asserts every T's digest against the single-threaded
+//!    loop's, and reports per-T simEvent/s next to the single-threaded
+//!    entries.
 
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, Fleet, FleetConfig, FleetReport, HotPathMode, Policy,
-    QueueDiscipline, Request, ShardConfig, ShardedFleet, ShardedReport, Workload,
+    gap8_mixed_devices, merge_streams, ExecMode, Fleet, FleetConfig, FleetReport, HotPathMode,
+    Policy, QueueDiscipline, Request, ShardConfig, ShardedFleet, ShardedReport, Workload,
     DEFAULT_WAKEUP_CYCLES,
 };
 use pulpnn_mp::util::benchkit::Bench;
@@ -137,7 +143,7 @@ fn tier_requests(n: usize) -> Vec<Request> {
     merge_streams(&[mk(0, 11), mk(1, 12)])
 }
 
-fn run_tier(reqs: &[Request], mode: HotPathMode) -> ShardedReport {
+fn run_tier_exec(reqs: &[Request], mode: HotPathMode, exec: ExecMode) -> ShardedReport {
     let fleet_config = FleetConfig {
         queue_bound: 32,
         batch_max: 4,
@@ -151,6 +157,7 @@ fn run_tier(reqs: &[Request], mode: HotPathMode) -> ShardedReport {
         router_service_us: 20.0,
         cache: true,
         cache_capacity: 4096,
+        exec,
         ..ShardConfig::default()
     };
     let mut tier = ShardedFleet::new(
@@ -161,6 +168,10 @@ fn run_tier(reqs: &[Request], mode: HotPathMode) -> ShardedReport {
     );
     tier.set_hot_path_mode(mode);
     tier.run(reqs)
+}
+
+fn run_tier(reqs: &[Request], mode: HotPathMode) -> ShardedReport {
+    run_tier_exec(reqs, mode, ExecMode::SingleThread)
 }
 
 fn per_req(count: u64, n: usize) -> f64 {
@@ -283,8 +294,23 @@ fn main() {
     let tier_name = "tier 8-shard cached";
     row(tier_name, "shard clock polls", tnw.shard_clock_polls, tiw.shard_clock_polls, n_tier);
     row(tier_name, "cache entry scans", tnw.cache_entry_scans, tiw.cache_entry_scans, n_tier);
+    let tier_digest = digest_tier(&tidx);
     drop(tidx);
     drop(tnaive);
+
+    // ---- parallel conservative DES: thread sweep, bit-exact ------------
+    // every T must reproduce the single-threaded tier digest exactly —
+    // the conservative-window engine is a layout change, not a semantic
+    // one (CI's 50 ms budget trims the sweep to T <= 2)
+    let thread_sweep: &[usize] = if budget_ms >= 200 { &[1, 2, 4, 8] } else { &[1, 2] };
+    for &t in thread_sweep {
+        let par = run_tier_exec(&treqs, HotPathMode::Indexed, ExecMode::Parallel { threads: t });
+        assert_eq!(
+            digest_tier(&par),
+            tier_digest,
+            "parallel tier (threads={t}) diverged from the single-threaded loop"
+        );
+    }
 
     println!(
         "DES hot-path work counters ({} fleet + {} tier simulated requests), bit-exact:\n",
@@ -310,5 +336,18 @@ fn main() {
         Some(("simEvent".into(), tier_events as f64)),
         || run_tier(&treqs, HotPathMode::Indexed).total_completed,
     );
+    // per-T wall-clock of the parallel engine on the same tier shape —
+    // the simEvent/s trajectory of the thread sweep lands in
+    // BENCH_des_hot.json next to the single-threaded entries
+    for &t in thread_sweep {
+        b.run_with_throughput(
+            &format!("tier/8shard-cache/parallel-t{t}"),
+            Some(("simEvent".into(), tier_events as f64)),
+            || {
+                run_tier_exec(&treqs, HotPathMode::Indexed, ExecMode::Parallel { threads: t })
+                    .total_completed
+            },
+        );
+    }
     b.report();
 }

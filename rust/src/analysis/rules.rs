@@ -1,4 +1,4 @@
-//! The `pallas-lint` rule set: determinism & invariant rules D001–D006.
+//! The `pallas-lint` rule set: determinism & invariant rules D001–D007.
 //!
 //! Every rule is lexical — it pattern-matches the token stream produced
 //! by [`crate::analysis::scanner`] — so rule text inside strings, raw
@@ -25,7 +25,7 @@ use crate::analysis::scanner::{Scan, TokKind, Token};
 /// A single lint finding.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Diagnostic {
-    /// Machine-readable rule id (`D001`..`D006`, `A000`, `A001`).
+    /// Machine-readable rule id (`D001`..`D007`, `A000`, `A001`).
     pub rule: &'static str,
     /// Repo-relative path of the offending file.
     pub file: String,
@@ -90,6 +90,13 @@ pub const RULES: &[RuleInfo] = &[
         scope: "attribute: rust/src/lib.rs + rust/src/main.rs; token ban: everywhere",
     },
     RuleInfo {
+        id: "D007",
+        summary: "no concurrency primitives (std::thread, std::sync::mpsc, Mutex/RwLock/\
+                  Condvar, atomics) outside the conservative parallel engine; \
+                  nondeterministic interleaving must never leak into engine code",
+        scope: "everywhere except rust/src/coordinator/parallel.rs and rust/src/util/benchkit.rs",
+    },
+    RuleInfo {
         id: "A000",
         summary: "malformed pallas-lint annotation (unknown rule, missing or empty reason)",
         scope: "everywhere (engine-generated; not allowable)",
@@ -103,7 +110,7 @@ pub const RULES: &[RuleInfo] = &[
 
 /// True for rule ids that may appear in an allow annotation.
 pub fn is_known_rule(id: &str) -> bool {
-    matches!(id, "D001" | "D002" | "D003" | "D004" | "D005" | "D006")
+    matches!(id, "D001" | "D002" | "D003" | "D004" | "D005" | "D006" | "D007")
 }
 
 /// Lint one file's source text. `path` must be repo-relative with `/`
@@ -117,6 +124,7 @@ pub fn lint_file(path: &str, text: &str) -> Vec<Diagnostic> {
     d004_unwrap_in_coordinator(path, &scan, &mut raw);
     d005_corrupted_doc_markers(path, text, &scan, &mut raw);
     d006_unsafe(path, &scan, &mut raw);
+    d007_concurrency(path, &scan, &mut raw);
 
     // apply allow annotations: an allow on line L suppresses matching
     // diagnostics on L (trailing comment) and L + 1 (preceding line)
@@ -530,6 +538,59 @@ fn d006_unsafe(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
     }
 }
 
+// ---------------------------------------------------------------- D007
+
+/// Files where concurrency primitives are reviewed and allowed: the
+/// conservative parallel engine (whose determinism is pinned byte-exact
+/// against the single-threaded loop) and the bench harness (real-time
+/// measurement only, never simulation state).
+const D007_ALLOWED_FILES: &[&str] =
+    &["rust/src/coordinator/parallel.rs", "rust/src/util/benchkit.rs"];
+
+/// Sync-primitive type names banned outside the allowed files.
+const D007_TYPES: &[&str] = &["Mutex", "RwLock", "Condvar"];
+
+fn d007_concurrency(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
+    if D007_ALLOWED_FILES.contains(&path) {
+        return;
+    }
+    let toks = &scan.tokens;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let sync_type = D007_TYPES.contains(&t.text.as_str());
+        let atomic = t.text.starts_with("Atomic") && t.text.len() > "Atomic".len();
+        // `thread::…` / `mpsc::…` path segments (spawn, scope, channel);
+        // a bare `thread` binding or `.thread()` accessor never matches
+        let path_seg = (t.text == "thread" || t.text == "mpsc")
+            && i + 2 < toks.len()
+            && is_punct(&toks[i + 1], ':')
+            && is_punct(&toks[i + 2], ':');
+        // `use std::sync::mpsc;` and `use std::thread;` imports
+        let import = (t.text == "thread" || t.text == "mpsc")
+            && i >= 2
+            && is_punct(&toks[i - 1], ':')
+            && is_punct(&toks[i - 2], ':');
+        if sync_type || atomic || path_seg || import {
+            diag(
+                out,
+                "D007",
+                path,
+                t.line,
+                format!(
+                    "`{}` is a concurrency primitive — threads, channels, locks and \
+                     atomics are confined to coordinator/parallel.rs (the conservative \
+                     parallel engine, pinned bit-exact against the single-threaded \
+                     loop) and util/benchkit.rs; engine code must stay deterministic",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -753,6 +814,61 @@ mod tests {
                    // NaN-unsafe float compares\n\
                    const S: &str = \"unsafe\";\n";
         assert!(lint_at("rust/src/lib.rs", src).is_empty());
+    }
+
+    // ---- D007 ---------------------------------------------------------
+
+    #[test]
+    fn d007_fires_on_threads_channels_locks_and_atomics() {
+        let src = "use std::sync::{Mutex, Condvar};\n\
+                   use std::sync::mpsc;\n\
+                   use std::sync::atomic::AtomicUsize;\n\
+                   fn f() {\n\
+                   let h = std::thread::spawn(|| 1);\n\
+                   let l: std::sync::RwLock<u32> = std::sync::RwLock::new(0);\n\
+                   let (tx, rx) = mpsc::channel::<u32>();\n\
+                   }\n";
+        let got = rules_of(&lint_at("rust/src/qnn/fake.rs", src));
+        assert_eq!(
+            got,
+            vec![
+                ("D007", 1),
+                ("D007", 1),
+                ("D007", 2),
+                ("D007", 3),
+                ("D007", 5),
+                ("D007", 6),
+                ("D007", 6),
+                ("D007", 7),
+            ]
+        );
+    }
+
+    #[test]
+    fn d007_is_silent_in_the_reviewed_files() {
+        let src = "use std::sync::Mutex;\n\
+                   fn f() { let h = std::thread::spawn(|| 1); }\n";
+        assert!(lint_at("rust/src/coordinator/parallel.rs", src).is_empty());
+        assert!(lint_at("rust/src/util/benchkit.rs", src).is_empty());
+        assert!(!lint_at("rust/src/coordinator/shard.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d007_ignores_bindings_accessors_comments_and_strings() {
+        let src = "fn f() -> u32 {\n\
+                   let thread = 1;\n\
+                   // std::thread::spawn in a comment stays silent\n\
+                   let _ = \"Mutex and mpsc::channel\";\n\
+                   thread + 1\n\
+                   }\n";
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d007_allow_with_reason_suppresses() {
+        let src = "// pallas-lint: allow(D007, reason = \"reviewed: measurement-only helper\")\n\
+                   use std::sync::Mutex;\n";
+        assert!(lint_at("rust/src/qnn/fake.rs", src).is_empty());
     }
 
     // ---- annotations --------------------------------------------------

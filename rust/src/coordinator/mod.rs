@@ -97,10 +97,18 @@
 //! two-phase path survives only as the bit-exactness oracle
 //! [`shard::ShardedFleet::run_two_phase_oracle`].
 //!
+//! With [`shard::ExecMode::Parallel`] the same unified loop executes on
+//! OS threads: the [`parallel`] module advances the K shard engines
+//! inside conservative lookahead windows bounded by
+//! [`shard::ShardConfig::router_service_us`] and replays every
+//! cross-shard interaction deterministically, byte-identical to the
+//! single-threaded loop (which remains the property-test oracle).
+//!
 //! [`OperatingPoint::power_mw`]: crate::energy::OperatingPoint::power_mw
 //! [`OperatingPoint::idle_power_mw`]: crate::energy::OperatingPoint::idle_power_mw
 
 pub mod fleet;
+pub mod parallel;
 pub mod request;
 pub mod server;
 pub mod shard;
@@ -111,7 +119,12 @@ pub use fleet::{
     FleetConfig, FleetReport, HotPathMode, Policy, QueueDiscipline, QueueSample, Rejection,
     WorkCounters, DEFAULT_WAKEUP_CYCLES, MIN_THROUGHPUT_SPAN_US,
 };
-pub use request::{merge_streams, ClosedLoopSource, Request, TraceSource, Workload, WorkloadSource};
+pub use request::{
+    merge_streams, BurstyWorkload, ClosedLoopSource, Request, TraceSource, Workload,
+    WorkloadSource,
+};
 pub use server::{Served, Server, ServeStats};
-pub use shard::{CacheHit, CacheStats, ShardConfig, ShardedFleet, ShardedReport, TierError};
+pub use shard::{
+    CacheHit, CacheStats, ExecMode, ShardConfig, ShardedFleet, ShardedReport, TierError,
+};
 pub use variant::{DegradePolicy, VariantSpec, VariantTable};

@@ -1,0 +1,993 @@
+//! Conservative parallel execution of the unified tier event loop: the K
+//! shard engines advance on OS threads inside provably safe lookahead
+//! windows, and a deterministic reducer replays every cross-shard
+//! interaction in exact single-threaded order — so
+//! [`ExecMode::Parallel`] is **byte-identical** to
+//! [`ExecMode::SingleThread`] (reports *and* recorded traces) for any
+//! workload, any thread count, and any OS schedule.
+//!
+//! # Why this is safe: the lookahead rule
+//!
+//! The unified loop ([`ShardedFleet::run_source`]) multiplexes two event
+//! bands on one global clock: *tier* arrivals (the front-door heap) and
+//! *fleet* events (each shard's private heap). Shards never talk to each
+//! other directly — every cross-shard effect flows through the tier
+//! band: a router forward (which delays an arrival by at least
+//! [`ShardConfig::router_service_us`], the **lookahead** `L`), a
+//! single-flight cache join, or a [`WorkloadSource::on_done`] feedback
+//! arrival. That gives the classic conservative-DES bound: once the
+//! earliest tier event sits at `tt` and the earliest fleet event at
+//! `ft`, no *future* tier processing can inject a fleet event before
+//!
+//! ```text
+//!   horizon H = min(tt, ft + L)
+//! ```
+//!
+//! because an injection born from a tier event at `t >= ft` exits its
+//! router FIFO at `max(router_free, t) + L >= ft + L`, and feedback
+//! arrivals are non-anticipatory (`on_done(id, t)` only returns arrivals
+//! at `>= t`, and a departure's time is never earlier than the fleet
+//! event that produced it). Every fleet event strictly before `H` is
+//! therefore *committed*: no thread interleaving can invalidate it. The
+//! engine repeatedly picks such a window, lets worker threads step every
+//! shard with events `< H` to completion **in parallel**, and then
+//! merges the results deterministically.
+//!
+//! # The round/merge state machine
+//!
+//! ```text
+//!  ┌──────────────────────────── main thread ────────────────────────────┐
+//!  │ scan: tt = tier head, (ft, s) = min shard head                      │
+//!  │  ├─ tt <= ft → pop + process one tier event (router/cache/inject)   │
+//!  │  ├─ H = min(tt, ft+L) <= ft → degenerate window (L = 0): step the   │
+//!  │  │                            min shard once, exactly sequentially  │
+//!  │  └─ else: WINDOW ROUND                                              │
+//!  │       dispatch Job{shard, H} per busy shard ──► worker pool         │
+//!  │                                                 (affinity s % W)    │
+//!  │       workers: lock shard s, pop every event < H, record one        │
+//!  │       batch (pre-step clock, departures) per step, send Done        │
+//!  │       REDUCE: repeatedly take the earliest recorded batch           │
+//!  │       (time, then lowest shard); first drain tier events <= its     │
+//!  │       time (router forwards, joins, feedback — may inject at >= H,  │
+//!  │       which no recorded batch can observe); then apply the batch's  │
+//!  │       departures (on_done + single-flight owner settlement)         │
+//!  └─────────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The reducer replays rounds in exactly the `(time, band, shard, seq)`
+//! order the single-threaded loop uses: tier events first at equal
+//! timestamps (`tt <= b`), then the lowest shard index among equal fleet
+//! times — the same tie rules as the sequential `take_tier` match and
+//! the shard-clock tournament. Batches are keyed on the *pre-step* event
+//! clock (a departure's `t_us` may legitimately lie ahead of it —
+//! finishes are committed at dispatch), and equal-time steps of one
+//! shard stay separate batches so feedback arrivals at the same instant
+//! interleave tier-first, exactly as the sequential loop would.
+//!
+//! # Why bit-exactness holds
+//!
+//! * Worker threads only ever touch *their* shard's [`Fleet`] (each is
+//!   behind its own mutex, locked once per job) — per-fleet event order,
+//!   `arr_seq`/`int_seq` stamping, and every [`WorkCounters`] a fleet
+//!   accrues are untouched by scheduling.
+//! * All shared state — router FIFOs, the result cache, single-flight
+//!   bookkeeping, the [`WorkloadSource`] — lives on the main thread and
+//!   is mutated only during the deterministic replay, through the *same*
+//!   shared helpers the sequential loop uses ([`shard_for`],
+//!   [`probe_cache_parts`], [`reconcile_pending`]).
+//! * The tier's own `shard_clock_polls` counter is synthesized in closed
+//!   form from the replayed event counts (`T` tier events, `S` fleet
+//!   steps, `J` injections): the sequential indexed loop polls once per
+//!   iteration and refreshes once per step and per inject —
+//!   `T + 2S + J + 1` — and the naive oracle sweeps all K shards every
+//!   iteration — `K (T + S + 1)`. Both formulas are exact, so even the
+//!   deterministic work counters match byte for byte.
+//!
+//! Property-pinned by `prop_parallel_matches_single_thread_across_matrix`
+//! (all policies × {FIFO, EDF} × steal × bounded cache × brownout ×
+//! open/closed loop × K × thread counts) and
+//! `prop_parallel_two_runs_byte_identical`, the same oracle discipline as
+//! [`HotPathMode::NaiveOracle`].
+//!
+//! # The `Send` boundary
+//!
+//! ```text
+//!   main thread (owns)                 worker w (borrows)
+//!   ─────────────────────────────      ────────────────────────────
+//!   TierSim: heap, router FIFOs,       &[Mutex<&mut Fleet>] ── locks
+//!   cache, pending/owner maps,    ◄──  only fleets[job.shard]
+//!   WorkloadSource, trace buffer       mpsc::Receiver<Job>
+//!   (never crosses threads)            mpsc::Sender<Done>
+//! ```
+//!
+//! Only `Fleet` (all-owned data — asserted `Send` at compile time below)
+//! and the plain-data `Job`/`Done` messages cross the boundary. The
+//! `WorkloadSource` trait object needs no `Send` bound at all, which
+//! keeps the public serving API unchanged. Concurrency primitives are
+//! confined to this file by lint rule `D007`.
+
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use super::fleet::{Departure, Fleet, HotPathMode, WorkCounters};
+use super::request::{Request, WorkloadSource};
+use super::shard::{
+    cache_hit, probe_cache_parts, push_feedback, reconcile_pending, shard_for, CacheHit,
+    CacheStats, ExecMode, Joiner, Lookup, OwnerFate, PendingKey, ResultCache, ShardConfig,
+    ShardedFleet, ShardedReport, TierArrival, TierError,
+};
+use super::variant::VariantTable;
+
+/// Compile-time proof that the types crossing the worker boundary are
+/// `Send` (the `Send`-boundary contract in the module docs). A `Fleet`
+/// is all-owned data — if a future field breaks that (an `Rc`, a raw
+/// pointer), this stops compiling instead of the scoped-thread spawn
+/// erroring somewhere less obvious.
+#[allow(dead_code)]
+fn assert_worker_types_are_send() {
+    fn is_send<T: Send>() {}
+    is_send::<Fleet>();
+    is_send::<Job>();
+    is_send::<Done>();
+}
+
+/// One window assignment for a worker: advance `shard` through every
+/// event strictly before `horizon`.
+struct Job {
+    shard: usize,
+    horizon: f64,
+}
+
+/// A worker's completed window for one shard: the number of events
+/// stepped, the shard's next event time after the window, and one batch
+/// per step — `(pre-step event clock, departures)` in step order.
+struct Done {
+    shard: usize,
+    steps: u64,
+    next: Option<f64>,
+    batches: Vec<(f64, Vec<Departure>)>,
+}
+
+/// Step one fleet through every event strictly before `horizon`,
+/// recording one `(pre-step clock, departures)` batch per step. Strictly
+/// `<`: an event at exactly the horizon may tie with a tier arrival, and
+/// the sequential loop processes the tier band first at equal
+/// timestamps, so it must stay for the next round. Batches are keyed on
+/// the pre-step event clock (never a departure's `t_us`, which finishes
+/// commit ahead of), and every step keeps its own batch even when it
+/// departs nothing — the reducer's tier-drain rule is per batch.
+fn advance_window(fleet: &mut Fleet, horizon: f64) -> (u64, Vec<(f64, Vec<Departure>)>) {
+    let mut steps = 0u64;
+    let mut batches: Vec<(f64, Vec<Departure>)> = Vec::new();
+    let mut buf: Vec<Departure> = Vec::new();
+    loop {
+        let t = match fleet.next_event_us() {
+            Some(t) if t < horizon => t,
+            _ => break,
+        };
+        let stepped = fleet.step_into(&mut buf);
+        debug_assert!(stepped, "a fleet with a pending event must step");
+        steps += 1;
+        batches.push((t, std::mem::take(&mut buf)));
+    }
+    (steps, batches)
+}
+
+/// The main-thread half of the engine: the tier band (front-door heap,
+/// router FIFOs, result cache, single-flight bookkeeping, trace buffer)
+/// plus the split borrows of the [`ShardedFleet`] it runs for. Exactly
+/// the run-local state of the sequential loop — only the K fleets live
+/// elsewhere (behind per-shard mutexes, so workers can step them).
+struct TierSim<'a> {
+    config: ShardConfig,
+    record: bool,
+    ring: &'a [(u64, usize)],
+    cache: &'a mut ResultCache,
+    variants: &'a VariantTable,
+    heap: BinaryHeap<TierArrival>,
+    seq: u64,
+    injected: Vec<Request>,
+    n_tier: usize,
+    span_start: f64,
+    router_free: Vec<f64>,
+    router_delay_sum: f64,
+    routed: Vec<usize>,
+    lookups: u64,
+    seen_ids: HashSet<u64>,
+    pending: HashMap<(u32, u64), PendingKey>,
+    pending_order: Vec<(u32, u64)>,
+    owner_key: HashMap<u64, (u32, u64)>,
+    cache_hits: Vec<CacheHit>,
+    shed_joins: u64,
+    energy_saved_uj: f64,
+    shard_inference_uj: Vec<f64>,
+}
+
+impl TierSim<'_> {
+    /// Process the earliest tier arrival — the mirror of the sequential
+    /// loop's tier branch, statement for statement: route through the
+    /// shard's router FIFO, then resolve against the cache (join /
+    /// resolved hit / miss). Returns the forwarded request and its
+    /// target shard when the arrival must be injected into a fleet
+    /// (cache miss or cache off), `None` when it completed at the tier.
+    fn tier_event(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+    ) -> Result<Option<(usize, Request)>, TierError> {
+        // pallas-lint: allow(D004, reason = "callers only pump the tier band after peeking a head")
+        let ev = self.heap.pop().expect("the tier owns the earliest event");
+        let req = ev.req;
+        if self.record {
+            self.injected.push(req);
+        }
+        self.n_tier += 1;
+        self.span_start = self.span_start.min(req.arrival_us);
+        let s = shard_for(&self.config, self.ring, self.routed.len(), &req);
+        // FIFO router queue: one coordinator front-end per shard —
+        // the delay metric counts only the wait, not the service time
+        let start = self.router_free[s].max(req.arrival_us);
+        let exit = start + self.config.router_service_us;
+        self.router_free[s] = exit;
+        self.router_delay_sum += start - req.arrival_us;
+        let mut fwd = req; // Copy — no allocation, no Clone
+        fwd.arrival_us = exit;
+        // deadlines stay anchored to the *tier* arrival: the forwarded
+        // request's budget shrinks by the time spent in the router
+        if let Some(dl) = fwd.deadline_us {
+            fwd.deadline_us = Some(dl - (exit - req.arrival_us));
+        }
+
+        if self.config.cache {
+            if !self.seen_ids.insert(req.id) {
+                return Err(TierError::DuplicateRequestId(req.id));
+            }
+            self.lookups += 1;
+            let key = (req.net, req.input_digest);
+            if let Some(p) = self.pending.get_mut(&key) {
+                // single-flight: the key is owned by an in-flight
+                // request of this run — join it (or settle at once if
+                // the owner's fate is already known)
+                let joiner = Joiner {
+                    id: req.id,
+                    net: req.net,
+                    arrival_us: req.arrival_us,
+                    deadline_us: req.deadline_us,
+                    exit_us: exit,
+                    shard: s,
+                };
+                match p.fate {
+                    OwnerFate::InFlight => p.waiters.push(joiner),
+                    OwnerFate::Finished(fin, v) => {
+                        let done_at = joiner.exit_us.max(fin);
+                        self.energy_saved_uj += self.shard_inference_uj[s];
+                        self.cache_hits.push(cache_hit(
+                            joiner.id,
+                            joiner.net,
+                            joiner.arrival_us,
+                            joiner.deadline_us,
+                            done_at,
+                            v,
+                        ));
+                        push_feedback(&mut self.heap, &mut self.seq, source, req.id, done_at);
+                    }
+                    OwnerFate::Shed(t) => {
+                        self.shed_joins += 1;
+                        push_feedback(
+                            &mut self.heap,
+                            &mut self.seq,
+                            source,
+                            req.id,
+                            joiner.exit_us.max(t),
+                        );
+                    }
+                }
+                return Ok(None);
+            }
+            match probe_cache_parts(&mut *self.cache, self.variants, req.net, req.input_digest) {
+                (Lookup::Resolved, v) => {
+                    // resolved in an earlier run (LRU-touched by the
+                    // probe): completes at router exit, touching no
+                    // device, at the variant the entry was produced at
+                    self.energy_saved_uj += self.shard_inference_uj[s];
+                    self.cache_hits.push(cache_hit(
+                        req.id,
+                        req.net,
+                        req.arrival_us,
+                        req.deadline_us,
+                        exit,
+                        v,
+                    ));
+                    push_feedback(&mut self.heap, &mut self.seq, source, req.id, exit);
+                    return Ok(None);
+                }
+                // a Pending entry can only linger in the persistent
+                // map if a previous oracle run panicked mid-flight;
+                // treat it as the miss it effectively is
+                (Lookup::Pending(_), _) | (Lookup::Miss, _) => {
+                    self.pending.insert(
+                        key,
+                        PendingKey { fate: OwnerFate::InFlight, waiters: Vec::new() },
+                    );
+                    self.pending_order.push(key);
+                    self.owner_key.insert(req.id, key);
+                }
+            }
+        }
+        self.routed[s] += 1;
+        Ok(Some((s, fwd)))
+    }
+
+    /// Apply one replayed batch's departures — the mirror of the
+    /// sequential loop's fleet branch after the step: the departing
+    /// request feeds back first, then its pending cache key's waiting
+    /// joiners settle with it.
+    fn apply_departures(&mut self, source: &mut dyn WorkloadSource, departed: &[Departure]) {
+        for d in departed {
+            // the departing request itself feeds back first...
+            push_feedback(&mut self.heap, &mut self.seq, source, d.id, d.t_us);
+            // ...then, if it owned a pending cache key, its
+            // waiting joiners settle with it
+            let Some(&key) = self.owner_key.get(&d.id) else { continue };
+            // pallas-lint: allow(D004, reason = "owner_key and pending are inserted together and removed together")
+            let p = self.pending.get_mut(&key).expect("owner ids map to pending keys");
+            p.fate = if d.completed {
+                OwnerFate::Finished(d.t_us, d.variant)
+            } else {
+                OwnerFate::Shed(d.t_us)
+            };
+            for w in std::mem::take(&mut p.waiters) {
+                let done_at = w.exit_us.max(d.t_us);
+                if d.completed {
+                    self.energy_saved_uj += self.shard_inference_uj[w.shard];
+                    self.cache_hits.push(cache_hit(
+                        w.id,
+                        w.net,
+                        w.arrival_us,
+                        w.deadline_us,
+                        done_at,
+                        d.variant,
+                    ));
+                } else {
+                    self.shed_joins += 1; // owner was shed; the join sheds too
+                }
+                push_feedback(&mut self.heap, &mut self.seq, source, w.id, done_at);
+            }
+        }
+    }
+}
+
+/// Process one tier event end to end: the tier-band bookkeeping in
+/// [`TierSim::tier_event`] plus, on a forward, the band-0 injection into
+/// the target fleet (under its lock) and the shard's next-event refresh.
+fn pump_tier(
+    sim: &mut TierSim<'_>,
+    source: &mut dyn WorkloadSource,
+    fleets: &[Mutex<&mut Fleet>],
+    next_time: &mut [Option<f64>],
+) -> Result<(), TierError> {
+    if let Some((s, fwd)) = sim.tier_event(source)? {
+        // pallas-lint: allow(D004, reason = "a shard lock is only poisoned if a worker panicked, which recv() surfaces first")
+        let mut f = fleets[s].lock().expect("shard lock poisoned");
+        f.inject(fwd);
+        next_time[s] = f.next_event_us();
+    }
+    Ok(())
+}
+
+/// The engine's main loop: scan → (tier event | degenerate step | window
+/// round) until both bands drain. `pool` is `Some` only when worker
+/// threads exist; a one-worker engine runs the identical windowed
+/// algorithm inline (and so does any round with a single busy shard —
+/// a channel round-trip buys nothing there).
+fn drive(
+    sim: &mut TierSim<'_>,
+    source: &mut dyn WorkloadSource,
+    fleets: &[Mutex<&mut Fleet>],
+    next_time: &mut [Option<f64>],
+    pool: Option<(&[mpsc::Sender<Job>], &mpsc::Receiver<Done>)>,
+    steps: &mut u64,
+) -> Result<(), TierError> {
+    let k = fleets.len();
+    let lookahead = sim.config.router_service_us;
+    let mut departed: Vec<Departure> = Vec::new();
+    loop {
+        // earliest pending fleet event, lowest shard index on ties —
+        // the cached heads make this one O(K) scan per decision, with
+        // no fleet lock taken
+        let mut fleet_next: Option<(f64, usize)> = None;
+        for (s, head) in next_time.iter().enumerate() {
+            if let Some(t) = *head {
+                let better = match fleet_next {
+                    None => true,
+                    Some((bt, _)) => t < bt,
+                };
+                if better {
+                    fleet_next = Some((t, s));
+                }
+            }
+        }
+        let tier_head = sim.heap.peek().map(|e| e.time);
+        let take_tier = match (tier_head, fleet_next) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(tt), Some((ft, _))) => tt <= ft,
+        };
+        if take_tier {
+            pump_tier(sim, source, fleets, next_time)?;
+            continue;
+        }
+
+        // pallas-lint: allow(D004, reason = "take_tier == false implies fleet_next was Some in the match above")
+        let (ft, s_min) = fleet_next.expect("a fleet owns the earliest event");
+        let horizon = match tier_head {
+            Some(tt) => tt.min(ft + lookahead),
+            None => ft + lookahead,
+        };
+        if horizon <= ft {
+            // degenerate window: a zero lookahead (or one absorbed by
+            // float rounding at large clocks) admits no parallel round,
+            // so take exactly the sequential loop's fleet branch — one
+            // step of the min shard — and rescan
+            {
+                // pallas-lint: allow(D004, reason = "a shard lock is only poisoned if a worker panicked, which recv() surfaces first")
+                let mut f = fleets[s_min].lock().expect("shard lock poisoned");
+                let stepped = f.step_into(&mut departed);
+                debug_assert!(stepped, "the chosen fleet has a pending event");
+                next_time[s_min] = f.next_event_us();
+            }
+            *steps += 1;
+            sim.apply_departures(source, &departed);
+            continue;
+        }
+
+        // window round: every shard with an event before the horizon is
+        // safe to advance to it in parallel (lookahead rule, module docs)
+        let mut busy: Vec<usize> = Vec::new();
+        for (s, head) in next_time.iter().enumerate() {
+            if let Some(t) = *head {
+                if t < horizon {
+                    busy.push(s);
+                }
+            }
+        }
+        debug_assert!(!busy.is_empty(), "the min shard is busy by construction");
+        let mut round: Vec<Option<Vec<(f64, Vec<Departure>)>>> = vec![None; k];
+        match pool {
+            Some((jobs, done)) if busy.len() > 1 => {
+                for &s in &busy {
+                    let tx = &jobs[s % jobs.len()];
+                    // pallas-lint: allow(D004, reason = "workers outlive the reducer; a dead worker is surfaced by recv below")
+                    tx.send(Job { shard: s, horizon }).expect("worker job channel closed");
+                }
+                for _ in 0..busy.len() {
+                    // pallas-lint: allow(D004, reason = "recv fails only when every worker died; propagate the panic")
+                    let d = done.recv().expect("a parallel worker died");
+                    next_time[d.shard] = d.next;
+                    *steps += d.steps;
+                    round[d.shard] = Some(d.batches);
+                }
+            }
+            _ => {
+                for &s in &busy {
+                    // pallas-lint: allow(D004, reason = "a shard lock is only poisoned if a worker panicked, which recv() surfaces first")
+                    let mut f = fleets[s].lock().expect("shard lock poisoned");
+                    let (n, batches) = advance_window(&mut f, horizon);
+                    next_time[s] = f.next_event_us();
+                    *steps += n;
+                    round[s] = Some(batches);
+                }
+            }
+        }
+
+        // REDUCE: replay the recorded batches in exact sequential order —
+        // earliest batch first, lowest shard on ties (the ascending scan
+        // with strict `<` is the tournament's tie rule), and before each
+        // batch every tier event at or before its time (the sequential
+        // `tt <= ft` tier-first rule). Tier events replayed here may
+        // inject new band-0 arrivals, but only at router exits >= the
+        // horizon — no recorded batch could have observed them.
+        let mut cursor = vec![0usize; k];
+        loop {
+            let mut best: Option<(f64, usize)> = None;
+            for &s in &busy {
+                if let Some(batches) = &round[s] {
+                    if cursor[s] < batches.len() {
+                        let b = batches[cursor[s]].0;
+                        let better = match best {
+                            None => true,
+                            Some((bb, _)) => b < bb,
+                        };
+                        if better {
+                            best = Some((b, s));
+                        }
+                    }
+                }
+            }
+            let Some((b, s)) = best else { break };
+            while let Some(tt) = sim.heap.peek().map(|e| e.time) {
+                if tt > b {
+                    break;
+                }
+                pump_tier(sim, source, fleets, next_time)?;
+            }
+            // pallas-lint: allow(D004, reason = "best was drawn from round[s] at cursor[s] just above")
+            let recorded = round[s].as_mut().expect("busy shards recorded a round");
+            let batch = std::mem::take(&mut recorded[cursor[s]].1);
+            cursor[s] += 1;
+            sim.apply_departures(source, &batch);
+        }
+    }
+    Ok(())
+}
+
+/// Run one workload through the tier on the conservative parallel
+/// engine. Byte-identical to the sequential loop — see the module docs
+/// for the argument and `prop_parallel_matches_single_thread_across_matrix`
+/// for the proof harness. `threads` is clamped to `[1, K]`; one worker
+/// runs the same windowed engine inline without spawning.
+pub(crate) fn run_parallel(
+    tier: &mut ShardedFleet,
+    source: &mut dyn WorkloadSource,
+    record: bool,
+    threads: usize,
+) -> Result<(ShardedReport, Vec<Request>), TierError> {
+    let k = tier.shards.len();
+    let config = tier.config;
+    debug_assert!(
+        matches!(config.exec, ExecMode::Parallel { .. }),
+        "run_dispatch routes only Parallel configs here"
+    );
+    let naive = tier.mode == HotPathMode::NaiveOracle;
+    // per-shard mean active energy of one inference, for the
+    // energy-saved estimate
+    let shard_inference_uj: Vec<f64> = tier
+        .shards
+        .iter()
+        .map(|f| {
+            f.devices.iter().map(|d| d.op.energy_uj(d.cycles_per_inference)).sum::<f64>()
+                / f.devices.len() as f64
+        })
+        .collect();
+    for f in &mut tier.shards {
+        f.begin_run(false);
+    }
+
+    let mut sim = TierSim {
+        config,
+        record,
+        ring: &tier.ring,
+        cache: &mut tier.cache,
+        variants: &tier.variants,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        injected: Vec::new(),
+        n_tier: 0,
+        span_start: f64::INFINITY,
+        router_free: vec![0.0f64; k],
+        router_delay_sum: 0.0,
+        routed: vec![0usize; k],
+        lookups: 0,
+        seen_ids: HashSet::new(),
+        pending: HashMap::new(),
+        pending_order: Vec::new(),
+        owner_key: HashMap::new(),
+        cache_hits: Vec::new(),
+        shed_joins: 0,
+        energy_saved_uj: 0.0,
+        shard_inference_uj,
+    };
+    for req in source.initial() {
+        let seq = sim.seq;
+        sim.heap.push(TierArrival { time: req.arrival_us, seq, req });
+        sim.seq += 1;
+    }
+
+    // the Send boundary: each fleet behind its own mutex, so a worker
+    // can step one shard while the main thread owns everything else
+    let fleets: Vec<Mutex<&mut Fleet>> = tier.shards.iter_mut().map(Mutex::new).collect();
+    let mut next_time: Vec<Option<f64>> = fleets
+        .iter()
+        // pallas-lint: allow(D004, reason = "no worker exists yet; the lock cannot be poisoned")
+        .map(|m| m.lock().expect("shard lock poisoned").next_event_us())
+        .collect();
+    let workers = threads.clamp(1, k);
+    let mut steps = 0u64;
+
+    let result = if workers == 1 {
+        drive(&mut sim, source, &fleets, &mut next_time, None, &mut steps)
+    } else {
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        let mut job_txs: Vec<mpsc::Sender<Job>> = Vec::with_capacity(workers);
+        let mut job_rxs: Vec<mpsc::Receiver<Job>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            job_txs.push(tx);
+            job_rxs.push(rx);
+        }
+        std::thread::scope(|scope| {
+            for rx in job_rxs {
+                let done = done_tx.clone();
+                let fleets = &fleets;
+                scope.spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // pallas-lint: allow(D004, reason = "only this worker locks its affine shards during a round")
+                        let mut f = fleets[job.shard].lock().expect("shard lock poisoned");
+                        let (steps, batches) = advance_window(&mut f, job.horizon);
+                        let next = f.next_event_us();
+                        drop(f);
+                        // the reducer may have bailed on a tier error —
+                        // a closed done channel is a normal shutdown
+                        let _ = done.send(Done { shard: job.shard, steps, next, batches });
+                    }
+                });
+            }
+            drop(done_tx);
+            let r = drive(
+                &mut sim,
+                source,
+                &fleets,
+                &mut next_time,
+                Some((&job_txs, &done_rx)),
+                &mut steps,
+            );
+            // closing the job channels is what lets the scope join:
+            // every worker's recv() errors out and its loop ends
+            drop(job_txs);
+            r
+        })
+    };
+    drop(fleets);
+    result?;
+
+    // the tier's own counters, synthesized in closed form (module docs):
+    // the fleets' organic counters ride in their reports via aggregate
+    let mut work = WorkCounters::default();
+    let t = sim.n_tier as u64;
+    let j = sim.routed.iter().sum::<usize>() as u64;
+    work.shard_clock_polls =
+        if naive { k as u64 * (t + steps + 1) } else { t + 2 * steps + j + 1 };
+
+    // reconcile: owners that completed resolve their key (promotion
+    // order = first-miss order, shared with the sequential loop)
+    let pending_order = std::mem::take(&mut sim.pending_order);
+    let evictions = reconcile_pending(
+        &mut *sim.cache,
+        &config,
+        naive,
+        &mut sim.pending,
+        pending_order,
+        &mut work,
+    );
+
+    let reports = tier.shards.iter_mut().map(|f| f.end_run().0).collect();
+    let TierSim {
+        injected,
+        n_tier,
+        span_start,
+        router_delay_sum,
+        routed,
+        lookups,
+        cache_hits,
+        shed_joins,
+        energy_saved_uj,
+        ..
+    } = sim;
+    let report = tier.aggregate(
+        n_tier,
+        span_start,
+        reports,
+        routed,
+        cache_hits,
+        CacheStats {
+            lookups,
+            hits: 0, // filled in aggregate
+            shed_joins,
+            hit_rate: 0.0,
+            energy_saved_uj,
+            entries: tier.cache_entries(),
+            evictions,
+        },
+        router_delay_sum,
+        work,
+    );
+    Ok((report, injected))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{
+        gap8_mixed_devices, FleetConfig, Policy, QueueDiscipline,
+    };
+    use crate::coordinator::request::{
+        merge_streams, ClosedLoopSource, TraceSource, Workload,
+    };
+    use crate::coordinator::variant::DegradePolicy;
+    use crate::util::check::check;
+
+    /// A merged multi-tenant Poisson workload with optional repeats
+    /// (mirrors the shard-module test helper; test modules are private).
+    fn tenant_workload(
+        nets: u32,
+        rate_per_net: f64,
+        n_per_net: usize,
+        repeat: f64,
+        seed: u64,
+    ) -> Vec<Request> {
+        let streams: Vec<Vec<Request>> = (0..nets)
+            .map(|net| {
+                Workload {
+                    rate_per_s: rate_per_net,
+                    deadline_us: None,
+                    n_requests: n_per_net,
+                    seed: seed.wrapping_add(net as u64),
+                }
+                .generate_with_repeats(net, repeat)
+            })
+            .collect();
+        merge_streams(&streams)
+    }
+
+    /// Serve two rounds (cold then cache-warm) on a fresh tier under the
+    /// given engine, returning the per-round `(report debug, trace
+    /// JSONL)` byte strings.
+    #[allow(clippy::too_many_arguments)]
+    fn two_rounds(
+        exec: ExecMode,
+        config: ShardConfig,
+        policy: Policy,
+        fleet_config: FleetConfig,
+        naive: bool,
+        brownout: bool,
+        closed_loop: bool,
+        seed: u64,
+    ) -> Result<Vec<(String, String)>, String> {
+        let config = ShardConfig { exec, ..config };
+        let mut t = ShardedFleet::new(
+            gap8_mixed_devices(8, 300_000),
+            policy,
+            fleet_config,
+            config,
+        );
+        if brownout {
+            t.set_variants(VariantTable::mobilenet_default());
+        }
+        if naive {
+            t.set_hot_path_mode(HotPathMode::NaiveOracle);
+        }
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let (report, trace) = if closed_loop {
+                let mut src = ClosedLoopSource::new(6, 800.0, 80, seed)
+                    .with_nets(3)
+                    .with_input_universe(5)
+                    .with_deadline(60_000.0);
+                t.run_source_traced(&mut src)
+            } else {
+                let mut src =
+                    TraceSource::from_requests(tenant_workload(3, 600.0, 70, 0.4, seed));
+                t.run_source_traced(&mut src)
+            }
+            .map_err(|e| format!("tier run failed: {e}"))?;
+            out.push((format!("{report:?}"), TraceSource::to_jsonl(&trace)));
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn prop_parallel_matches_single_thread_across_matrix() {
+        // the tentpole property: across the full scheduling matrix —
+        // all four policies x {FIFO, EDF} x stealing x bounded caches x
+        // brownout x open/closed loop x naive-oracle counters x shard
+        // and thread counts (including threads > K) — the parallel
+        // engine must reproduce the sequential loop's report AND its
+        // recorded trace byte for byte, on a cold cache and on a warm
+        // one (round 2 replays round 1's arrivals into a populated
+        // cache under the open-loop shapes)
+        check("parallel-vs-single-thread", 18, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4, 8]);
+            let threads = *rng.pick(&[2usize, 3, 4, 8]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: *rng.pick(&[0.0f64, 80.0, 120.0]),
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.7),
+                cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
+                cache_quota_per_net: *rng.pick(&[2usize, usize::MAX]),
+                ..ShardConfig::default()
+            };
+            let brownout = rng.chance(0.3);
+            let fleet_config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, 8, 32]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: 10_000,
+                net_switch_cycles: 25_000,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                degrade: if brownout {
+                    DegradePolicy::Watermark { watermark: 2 }
+                } else {
+                    DegradePolicy::Off
+                },
+                ..FleetConfig::default()
+            };
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let naive = rng.chance(0.25);
+            let closed_loop = rng.chance(0.5);
+            let seed = rng.next_u64();
+
+            let single = two_rounds(
+                ExecMode::SingleThread,
+                config,
+                policy,
+                fleet_config,
+                naive,
+                brownout,
+                closed_loop,
+                seed,
+            )?;
+            let parallel = two_rounds(
+                ExecMode::Parallel { threads },
+                config,
+                policy,
+                fleet_config,
+                naive,
+                brownout,
+                closed_loop,
+                seed,
+            )?;
+            for (round, (s, p)) in single.iter().zip(&parallel).enumerate() {
+                if s.0 != p.0 {
+                    return Err(format!(
+                        "round {round}: ShardedReport diverged (k={k}, threads={threads}, \
+                         closed_loop={closed_loop}, naive={naive})"
+                    ));
+                }
+                if s.1 != p.1 {
+                    return Err(format!(
+                        "round {round}: recorded trace diverged (k={k}, threads={threads})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_parallel_two_runs_byte_identical() {
+        // the PR 6 determinism property extended to the parallel path:
+        // scheduling jitter between worker threads must never reach the
+        // output — two runs of one random config are byte-identical
+        check("parallel-run-byte-identical", 10, |rng, _| {
+            let k = *rng.pick(&[2usize, 4, 8]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: 120.0,
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: true,
+                cache_capacity: *rng.pick(&[4usize, usize::MAX]),
+                cache_quota_per_net: usize::MAX,
+                exec: ExecMode::Parallel { threads: 4 },
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 8,
+                batch_max: 4,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default()
+            };
+            let seed = rng.next_u64();
+            let mut outputs: Vec<(String, String)> = Vec::new();
+            for _ in 0..2 {
+                let mut src = ClosedLoopSource::new(6, 800.0, 90, seed)
+                    .with_nets(3)
+                    .with_input_universe(5);
+                let mut t = ShardedFleet::new(
+                    gap8_mixed_devices(8, 300_000),
+                    Policy::TenancyAware,
+                    fleet_config,
+                    config,
+                );
+                let (report, trace) = t
+                    .run_source_traced(&mut src)
+                    .map_err(|e| format!("tier run failed: {e}"))?;
+                outputs.push((format!("{report:?}"), TraceSource::to_jsonl(&trace)));
+            }
+            if outputs[0].0 != outputs[1].0 {
+                return Err("identical parallel runs produced different reports".into());
+            }
+            if outputs[0].1 != outputs[1].1 {
+                return Err("identical parallel runs produced different traces".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_one_thread_matches_single_thread_on_pinned_scenario() {
+        // threads: 1 exercises the windowed engine inline (no spawns, no
+        // channels) — pin it against the sequential loop on a fixed
+        // cache-heavy closed-loop scenario, including a zero-lookahead
+        // router (the degenerate-window path)
+        for router_service_us in [0.0f64, 100.0] {
+            let mk_config = |exec| ShardConfig {
+                shards: 4,
+                router_service_us,
+                tenancy_aware_routing: false,
+                cache: true,
+                cache_capacity: 32,
+                cache_quota_per_net: 8,
+                exec,
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 8,
+                batch_max: 4,
+                wakeup_cycles: 10_000,
+                discipline: QueueDiscipline::Edf,
+                steal: true,
+                ..FleetConfig::default()
+            };
+            let mut run = |exec| {
+                let mut t = ShardedFleet::new(
+                    gap8_mixed_devices(8, 300_000),
+                    Policy::LeastLoaded,
+                    fleet_config,
+                    mk_config(exec),
+                );
+                let mut src = ClosedLoopSource::new(5, 700.0, 60, 424_242)
+                    .with_nets(2)
+                    .with_input_universe(4)
+                    .with_deadline(50_000.0);
+                let (report, trace) = t.run_source_traced(&mut src).unwrap();
+                (format!("{report:?}"), TraceSource::to_jsonl(&trace))
+            };
+            let single = run(ExecMode::SingleThread);
+            let parallel = run(ExecMode::Parallel { threads: 1 });
+            assert_eq!(
+                single.0, parallel.0,
+                "threads:1 report diverged at router_service_us={router_service_us}"
+            );
+            assert_eq!(single.1, parallel.1, "threads:1 trace diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_surfaces_duplicate_request_ids_like_the_sequential_loop() {
+        // the typed-error path must shut the worker pool down cleanly
+        // and report the same TierError the sequential loop does
+        let dup = |id| Request {
+            id,
+            arrival_us: id as f64,
+            deadline_us: None,
+            net: 0,
+            input_digest: 7,
+        };
+        let reqs = vec![dup(1), dup(1)];
+        for exec in [ExecMode::SingleThread, ExecMode::Parallel { threads: 4 }] {
+            let mut t = ShardedFleet::new(
+                gap8_mixed_devices(4, 300_000),
+                Policy::LeastLoaded,
+                FleetConfig::default(),
+                ShardConfig {
+                    shards: 4,
+                    router_service_us: 25.0,
+                    cache: true,
+                    exec,
+                    ..ShardConfig::default()
+                },
+            );
+            let mut src = TraceSource::from_requests(reqs.clone());
+            match t.run_source_traced(&mut src) {
+                Err(TierError::DuplicateRequestId(1)) => {}
+                other => panic!("expected DuplicateRequestId(1) under {exec:?}, got {other:?}"),
+            }
+        }
+    }
+}

@@ -10,7 +10,7 @@
 //! determines the output (see [`crate::coordinator::shard`]).
 //!
 //! Workload generation is abstracted behind [`WorkloadSource`], the
-//! interface the serving engines pull arrivals from. Three implementations
+//! interface the serving engines pull arrivals from. Four implementations
 //! exist:
 //!
 //! * [`Workload`] — the original *open-loop* Poisson generator: every
@@ -18,6 +18,12 @@
 //!   Per-tenant streams are combined with [`merge_streams`]; repeated
 //!   inputs (the result cache's reason to exist) are modeled by
 //!   [`Workload::generate_with_repeats`].
+//! * [`BurstyWorkload`] — a two-state Markov-modulated Poisson process
+//!   (MMPP): arrivals alternate between a *high*-rate burst state and a
+//!   *low*-rate quiet state with exponentially distributed dwell times.
+//!   The flash-crowd arrival shape an autoscaling controller has to
+//!   survive, and a deliberately uneven load for the parallel tier
+//!   engine's lookahead windows.
 //! * [`ClosedLoopSource`] — a *closed-loop* client pool: N clients, each
 //!   with at most one request outstanding, thinking for an exponentially
 //!   distributed time between a completion and the next submission. The
@@ -149,6 +155,115 @@ impl Workload {
 /// unique per `(seed, net, id)` up to 64-bit collisions.
 fn digest_for(seed: u64, net: u32, id: u64) -> u64 {
     mix64(seed ^ mix64(((net as u64) << 40) ^ id))
+}
+
+/// Bursty open-loop arrivals: a two-state Markov-modulated Poisson
+/// process (MMPP). The generator alternates between a **high**-rate
+/// burst state and a **low**-rate quiet state; time spent in each state
+/// is exponentially distributed with its own mean dwell, and within a
+/// state arrivals are Poisson at that state's rate. This is the classic
+/// flash-crowd/diurnal stand-in: the same mean load as a plain Poisson
+/// stream, but with an index of dispersion well above 1 — deep queues
+/// during bursts, idle devices between them.
+///
+/// Determinism: three independent RNG streams are derived from `seed` —
+/// one per arrival state plus one for the dwell times — so the burst
+/// *schedule* is identical across parameter tweaks to the opposite
+/// state's rate, and two generators with equal seeds are bit-identical.
+/// On a state switch the pending inter-arrival draw is discarded and
+/// re-drawn at the new rate, which is distributionally exact for
+/// exponential inter-arrivals (memorylessness).
+///
+/// The stream starts in the high state (a burst from t = 0, the worst
+/// case for admission control). Like every open-loop generator the
+/// output is trace-dumpable: feed `generate()` to
+/// [`TraceSource::to_jsonl`] and the replay is bit-exact.
+#[derive(Debug, Clone)]
+pub struct BurstyWorkload {
+    /// Arrival rate inside a burst, in requests/s (must be > 0).
+    pub high_rate_per_s: f64,
+    /// Arrival rate between bursts, in requests/s (must be > 0).
+    pub low_rate_per_s: f64,
+    /// Mean dwell time in the high (burst) state, microseconds.
+    pub high_dwell_us_mean: f64,
+    /// Mean dwell time in the low (quiet) state, microseconds.
+    pub low_dwell_us_mean: f64,
+    /// Deadline stamped on every request (relative to its arrival).
+    pub deadline_us: Option<f64>,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    /// RNG seed: streams are bit-reproducible per seed.
+    pub seed: u64,
+}
+
+impl BurstyWorkload {
+    /// Generate the stream for network 0 (single-tenant shorthand).
+    pub fn generate(&self) -> Vec<Request> {
+        self.generate_for_net(0)
+    }
+
+    /// Generate the stream tagged with a network id (combine streams
+    /// with [`merge_streams`]). Every request gets a distinct input
+    /// digest, exactly like [`Workload::generate_for_net`].
+    pub fn generate_for_net(&self, net: u32) -> Vec<Request> {
+        assert!(
+            self.high_rate_per_s > 0.0 && self.low_rate_per_s > 0.0,
+            "MMPP rates must be positive"
+        );
+        assert!(
+            self.high_dwell_us_mean > 0.0 && self.low_dwell_us_mean > 0.0,
+            "MMPP dwell means must be positive"
+        );
+        // per-state arrival streams + a dwell stream: the burst schedule
+        // and each state's arrivals are independently reproducible
+        let mut rng_high = Rng::new(mix64(self.seed ^ 0xB125_7000_0000_0001));
+        let mut rng_low = Rng::new(mix64(self.seed ^ 0xB125_7000_0000_0002));
+        let mut rng_dwell = Rng::new(mix64(self.seed ^ 0xB125_7000_0000_0003));
+        let exp = |rng: &mut Rng, mean_us: f64| {
+            let u = rng.unit_f64().max(1e-12);
+            -u.ln() * mean_us
+        };
+        let mut t = 0.0f64;
+        let mut high = true;
+        let mut state_end = exp(&mut rng_dwell, self.high_dwell_us_mean);
+        (0..self.n_requests as u64)
+            .map(|id| {
+                loop {
+                    let dt = if high {
+                        exp(&mut rng_high, 1e6 / self.high_rate_per_s)
+                    } else {
+                        exp(&mut rng_low, 1e6 / self.low_rate_per_s)
+                    };
+                    if t + dt <= state_end {
+                        t += dt;
+                        break;
+                    }
+                    // dwell expired before the next arrival: switch state
+                    // and re-draw the inter-arrival at the new rate
+                    // (exact by memorylessness)
+                    t = state_end;
+                    high = !high;
+                    let mean =
+                        if high { self.high_dwell_us_mean } else { self.low_dwell_us_mean };
+                    state_end = t + exp(&mut rng_dwell, mean);
+                }
+                Request {
+                    id,
+                    arrival_us: t,
+                    deadline_us: self.deadline_us,
+                    net,
+                    input_digest: digest_for(self.seed, net, id),
+                }
+            })
+            .collect()
+    }
+}
+
+impl WorkloadSource for BurstyWorkload {
+    /// The open-loop MMPP stream for network 0, published up front.
+    fn initial(&mut self) -> Vec<Request> {
+        self.generate()
+    }
 }
 
 /// A pull-based arrival source for the serving engines.
@@ -635,6 +750,83 @@ mod tests {
             assert!((1..=3).contains(&n), "net {net} has {n} distinct digests");
         }
         assert!(digests.len() < 60, "expected shared inputs across the pool");
+    }
+
+    #[test]
+    fn bursty_workload_is_deterministic_sorted_and_open_loop() {
+        let w = BurstyWorkload {
+            high_rate_per_s: 5_000.0,
+            low_rate_per_s: 200.0,
+            high_dwell_us_mean: 20_000.0,
+            low_dwell_us_mean: 20_000.0,
+            deadline_us: Some(4e4),
+            n_requests: 500,
+            seed: 21,
+        };
+        let reqs = w.generate();
+        assert_eq!(reqs, w.generate(), "same seed must be bit-identical");
+        assert_eq!(reqs.len(), 500);
+        assert!(reqs.windows(2).all(|p| p[0].arrival_us <= p[1].arrival_us));
+        assert!(reqs.iter().all(|r| r.deadline_us == Some(4e4)));
+        // distinct digests, like the plain Poisson generator
+        let mut d: Vec<u64> = reqs.iter().map(|r| r.input_digest).collect();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 500);
+        let mut src = w.clone();
+        assert_eq!(src.initial(), reqs);
+        assert!(src.is_open_loop());
+        assert!(src.on_done(0, 1.0).is_empty());
+    }
+
+    #[test]
+    fn bursty_workload_is_overdispersed_vs_poisson() {
+        // the reason MMPP exists: with a 100x rate split the
+        // inter-arrival coefficient of variation must sit well above
+        // the exponential's CV = 1 (squared CV = index of dispersion
+        // for intervals); a plain Poisson stream at any rate sits near 1
+        let w = BurstyWorkload {
+            high_rate_per_s: 20_000.0,
+            low_rate_per_s: 200.0,
+            high_dwell_us_mean: 20_000.0,
+            low_dwell_us_mean: 20_000.0,
+            deadline_us: None,
+            n_requests: 3_000,
+            seed: 9,
+        };
+        let cv2 = |reqs: &[Request]| {
+            let gaps: Vec<f64> =
+                reqs.windows(2).map(|p| p[1].arrival_us - p[0].arrival_us).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let bursty = cv2(&w.generate());
+        assert!(bursty > 2.0, "MMPP squared CV {bursty} not overdispersed");
+        let poisson = Workload { rate_per_s: 1_000.0, deadline_us: None, n_requests: 3_000, seed: 9 };
+        let plain = cv2(&poisson.generate());
+        assert!((0.5..2.0).contains(&plain), "Poisson squared CV {plain} off baseline");
+        assert!(bursty > 3.0 * plain, "burstiness not clearly above Poisson: {bursty} vs {plain}");
+    }
+
+    #[test]
+    fn bursty_workload_trace_roundtrips() {
+        // trace-dumpable like every open-loop generator: JSONL capture
+        // and replay are bit-exact (ids are already 0..n in line order)
+        let w = BurstyWorkload {
+            high_rate_per_s: 8_000.0,
+            low_rate_per_s: 300.0,
+            high_dwell_us_mean: 10_000.0,
+            low_dwell_us_mean: 30_000.0,
+            deadline_us: None,
+            n_requests: 120,
+            seed: 33,
+        };
+        let reqs = w.generate();
+        let text = TraceSource::to_jsonl(&reqs);
+        let back = TraceSource::parse_jsonl(&text).unwrap();
+        assert_eq!(back.requests(), &reqs[..]);
     }
 
     #[test]

@@ -125,6 +125,34 @@ use super::variant::VariantTable;
 /// keyspace split stays within a few percent of uniform for K <= 64.
 const RING_VNODES: usize = 64;
 
+/// Execution engine for the unified tier event loop.
+///
+/// Both modes produce **byte-identical** output — reports and recorded
+/// traces — for any workload and any thread count; the parallel engine
+/// exists purely for wall-clock speed on multi-core hosts. The
+/// single-threaded loop is retained untouched as the bit-exactness
+/// oracle, exactly the way [`HotPathMode::NaiveOracle`] pins the indexed
+/// hot paths (`prop_parallel_matches_single_thread_across_matrix` in
+/// [`parallel`](super::parallel)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// The reference engine: one thread multiplexes the K fleet engines,
+    /// the router FIFOs and the result cache on the global clock.
+    #[default]
+    SingleThread,
+    /// Conservative parallel DES: the K shard engines advance on OS
+    /// threads inside safe lookahead windows bounded by
+    /// [`ShardConfig::router_service_us`], and a deterministic reducer
+    /// replays cross-shard interactions in exact single-threaded order —
+    /// see [`parallel`](super::parallel) for the round/merge state
+    /// machine and the bit-exactness argument.
+    Parallel {
+        /// Worker threads stepping shard engines (clamped to `[1, K]`;
+        /// `1` still runs the windowed engine, just on one worker).
+        threads: usize,
+    },
+}
+
 /// Front-tier knobs for the sharded serving tier.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ShardConfig {
@@ -154,6 +182,9 @@ pub struct ShardConfig {
     /// least-recently-used entry, so one repeat-heavy tenant cannot evict
     /// the whole tier's working set. `usize::MAX` disables quotas.
     pub cache_quota_per_net: usize,
+    /// Execution engine for the unified loop ([`ExecMode::SingleThread`]
+    /// or the bit-identical [`ExecMode::Parallel`]).
+    pub exec: ExecMode,
 }
 
 impl Default for ShardConfig {
@@ -168,6 +199,7 @@ impl Default for ShardConfig {
             cache: false,
             cache_capacity: usize::MAX,
             cache_quota_per_net: usize::MAX,
+            exec: ExecMode::SingleThread,
         }
     }
 }
@@ -367,7 +399,7 @@ enum CacheEntry {
 
 /// Cache lookup outcome (decouples the borrow of the cache map from the
 /// join bookkeeping in both serving paths).
-enum Lookup {
+pub(crate) enum Lookup {
     Resolved,
     Pending(u64),
     Miss,
@@ -382,7 +414,7 @@ enum Lookup {
 /// [`HotPathMode::NaiveOracle`] can select victims by scanning, exactly
 /// like the old implementation: identical victims, Θ(entries) counters.
 #[derive(Debug, Clone, Default)]
-struct ResultCache {
+pub(crate) struct ResultCache {
     map: HashMap<(u32, u64, u8), CacheEntry>,
     nodes: Vec<CacheNode>,
     free: Vec<u32>,
@@ -405,7 +437,7 @@ impl ResultCache {
     }
 
     /// Resolved entries resident in the cache. O(1).
-    fn entries(&self) -> usize {
+    pub(crate) fn entries(&self) -> usize {
         self.global.len
     }
 
@@ -656,10 +688,10 @@ impl std::error::Error for TierError {}
 /// max-heap, so `Ord` is reversed: earliest time, then lowest insertion
 /// sequence (FIFO among equal timestamps, matching slice order for
 /// arrival-ordered workloads) pops first.
-struct TierArrival {
-    time: f64,
-    seq: u64,
-    req: Request,
+pub(crate) struct TierArrival {
+    pub(crate) time: f64,
+    pub(crate) seq: u64,
+    pub(crate) req: Request,
 }
 
 impl PartialEq for TierArrival {
@@ -688,13 +720,13 @@ impl Ord for TierArrival {
 /// A request that joined a pending (single-flight) cache key: enough of
 /// the original request to score its completion against the *tier*
 /// arrival, plus its router-exit time and target shard.
-struct Joiner {
-    id: u64,
-    net: u32,
-    arrival_us: f64,
-    deadline_us: Option<f64>,
-    exit_us: f64,
-    shard: usize,
+pub(crate) struct Joiner {
+    pub(crate) id: u64,
+    pub(crate) net: u32,
+    pub(crate) arrival_us: f64,
+    pub(crate) deadline_us: Option<f64>,
+    pub(crate) exit_us: f64,
+    pub(crate) shard: usize,
 }
 
 /// Within-run fate of a pending cache key's owner. Keys stay pending for
@@ -703,7 +735,7 @@ struct Joiner {
 /// bit-exact, eviction for eviction); the owner's fate decides how later
 /// joiners settle.
 #[derive(Clone, Copy)]
-enum OwnerFate {
+pub(crate) enum OwnerFate {
     /// Forwarded to a fleet, not yet departed: joiners wait.
     InFlight,
     /// Completed at the given finish time (committed at dispatch) at the
@@ -715,9 +747,9 @@ enum OwnerFate {
 }
 
 /// Within-run state of one pending cache key.
-struct PendingKey {
-    fate: OwnerFate,
-    waiters: Vec<Joiner>,
+pub(crate) struct PendingKey {
+    pub(crate) fate: OwnerFate,
+    pub(crate) waiters: Vec<Joiner>,
 }
 
 /// Refresh one shard's entry in the clock tournament after its event
@@ -748,7 +780,7 @@ fn refresh_clock(
 
 /// Fire the feedback edge for one departure: every arrival the source
 /// unlocks enters the global tier heap (in on-done order, FIFO-stamped).
-fn push_feedback(
+pub(crate) fn push_feedback(
     heap: &mut BinaryHeap<TierArrival>,
     seq: &mut u64,
     source: &mut dyn WorkloadSource,
@@ -764,7 +796,7 @@ fn push_feedback(
 /// A cache completion for one request, scored against its *tier* arrival
 /// and original deadline (router wait counts), finishing at `finish_us`
 /// with a result produced at precision `variant`.
-fn cache_hit(
+pub(crate) fn cache_hit(
     id: u64,
     net: u32,
     arrival_us: f64,
@@ -785,23 +817,119 @@ fn cache_hit(
 /// The sharded serving tier: a consistent-hash front router over K
 /// independent [`Fleet`] coordinators and a persistent result cache.
 pub struct ShardedFleet {
-    shards: Vec<Fleet>,
-    config: ShardConfig,
+    pub(crate) shards: Vec<Fleet>,
+    pub(crate) config: ShardConfig,
     /// Sorted `(ring position, shard)` points.
-    ring: Vec<(u64, usize)>,
+    pub(crate) ring: Vec<(u64, usize)>,
     /// Result cache, persistent across runs. Keyed by `(net, digest,
     /// served variant)`: a result produced at a degraded precision is
     /// memoized separately from the full-precision result, so a lookup
     /// can never return a cheaper answer while claiming full quality.
-    cache: ResultCache,
+    pub(crate) cache: ResultCache,
     /// Hot-path implementation selector for the tier loop and the cache
     /// (propagated to every shard's [`Fleet`]).
-    mode: HotPathMode,
+    pub(crate) mode: HotPathMode,
     /// Tier copy of the precision-variant table (every shard fleet holds
     /// the same one): bounds the cache probe fan-out and supplies the
     /// quality weight of each cache hit. Empty by default — one probe
     /// per lookup, every weight exactly 1.0.
-    variants: VariantTable,
+    pub(crate) variants: VariantTable,
+}
+
+/// [`ShardedFleet::shard_of`] with the shard count passed explicitly —
+/// the parallel engine routes while the shard vector is individually
+/// locked, so it cannot go through `&self`.
+pub(crate) fn shard_for(
+    config: &ShardConfig,
+    ring: &[(u64, usize)],
+    k: usize,
+    req: &Request,
+) -> usize {
+    if config.tenancy_aware_routing {
+        return req.net as usize % k;
+    }
+    let key = mix64((req.net as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ req.input_digest);
+    let i = match ring.binary_search(&(key, usize::MAX)) {
+        Ok(i) => i,
+        Err(i) => i,
+    };
+    ring[i % ring.len()].1
+}
+
+/// [`ShardedFleet::probe_cache`] over the split-borrowed parts (the
+/// parallel engine holds the cache and the variant table as disjoint
+/// borrows alongside the locked shard vector).
+pub(crate) fn probe_cache_parts(
+    cache: &mut ResultCache,
+    variants: &VariantTable,
+    net: u32,
+    digest: u64,
+) -> (Lookup, u8) {
+    let mut pending: Option<u64> = None;
+    for v in 0..=variants.max_level_for(net) {
+        match cache.lookup_touch(&(net, digest, v)) {
+            Lookup::Resolved => return (Lookup::Resolved, v),
+            Lookup::Pending(owner) => pending = pending.or(Some(owner)),
+            Lookup::Miss => {}
+        }
+    }
+    match pending {
+        Some(owner) => (Lookup::Pending(owner), 0),
+        None => (Lookup::Miss, 0),
+    }
+}
+
+/// [`ShardedFleet::enforce_cache_bounds`] over the split-borrowed parts.
+pub(crate) fn enforce_cache_bounds_parts(
+    cache: &mut ResultCache,
+    config: &ShardConfig,
+    naive: bool,
+    net: u32,
+    work: &mut WorkCounters,
+) -> u64 {
+    let mut evicted = 0u64;
+    if config.cache_quota_per_net != usize::MAX {
+        work.cache_entry_scans += if naive { cache.map_len() as u64 } else { 1 };
+        let mut count = cache.entries_for_net(net);
+        while count > config.cache_quota_per_net && cache.evict_lru(Some(net), naive, work) {
+            count -= 1;
+            evicted += 1;
+        }
+    }
+    if config.cache_capacity != usize::MAX {
+        work.cache_entry_scans += if naive { cache.map_len() as u64 } else { 1 };
+        let mut count = cache.entries();
+        while count > config.cache_capacity && cache.evict_lru(None, naive, work) {
+            count -= 1;
+            evicted += 1;
+        }
+    }
+    evicted
+}
+
+/// Resolve the run's pending single-flight keys into the persistent
+/// cache, in first-miss order — the shared reconciliation step of the
+/// single-threaded and parallel engines (promotion order is what keeps
+/// eviction decisions bit-identical across engines and oracles).
+pub(crate) fn reconcile_pending(
+    cache: &mut ResultCache,
+    config: &ShardConfig,
+    naive: bool,
+    pending: &mut HashMap<(u32, u64), PendingKey>,
+    pending_order: Vec<(u32, u64)>,
+    work: &mut WorkCounters,
+) -> u64 {
+    let mut evictions = 0u64;
+    for key in pending_order {
+        // pallas-lint: allow(D004, reason = "pending_order records exactly the keys inserted into pending")
+        let p = pending.remove(&key).expect("pending keys are recorded in order");
+        debug_assert!(p.waiters.is_empty(), "all owners depart before the heaps drain");
+        if let OwnerFate::Finished(_, v) = p.fate {
+            cache.promote((key.0, key.1, v));
+            evictions += enforce_cache_bounds_parts(cache, config, naive, key.0, work);
+        }
+    }
+    evictions
 }
 
 impl ShardedFleet {
@@ -878,18 +1006,7 @@ impl ShardedFleet {
     /// Within one run the resolved set is static (promotion happens at
     /// reconciliation), so probe order cannot race a promotion.
     fn probe_cache(&mut self, net: u32, digest: u64) -> (Lookup, u8) {
-        let mut pending: Option<u64> = None;
-        for v in 0..=self.variants.max_level_for(net) {
-            match self.cache.lookup_touch(&(net, digest, v)) {
-                Lookup::Resolved => return (Lookup::Resolved, v),
-                Lookup::Pending(owner) => pending = pending.or(Some(owner)),
-                Lookup::Miss => {}
-            }
-        }
-        match pending {
-            Some(owner) => (Lookup::Pending(owner), 0),
-            None => (Lookup::Miss, 0),
-        }
+        probe_cache_parts(&mut self.cache, &self.variants, net, digest)
     }
 
     /// Select the hot-path implementation for the tier (the shard-clock
@@ -948,41 +1065,14 @@ impl ShardedFleet {
     /// [`WorkCounters::cache_entry_scans`].
     fn enforce_cache_bounds(&mut self, net: u32, work: &mut WorkCounters) -> u64 {
         let naive = self.mode == HotPathMode::NaiveOracle;
-        let mut evicted = 0u64;
-        if self.config.cache_quota_per_net != usize::MAX {
-            work.cache_entry_scans += if naive { self.cache.map_len() as u64 } else { 1 };
-            let mut count = self.cache.entries_for_net(net);
-            while count > self.config.cache_quota_per_net
-                && self.cache.evict_lru(Some(net), naive, work)
-            {
-                count -= 1;
-                evicted += 1;
-            }
-        }
-        if self.config.cache_capacity != usize::MAX {
-            work.cache_entry_scans += if naive { self.cache.map_len() as u64 } else { 1 };
-            let mut count = self.cache.entries();
-            while count > self.config.cache_capacity && self.cache.evict_lru(None, naive, work) {
-                count -= 1;
-                evicted += 1;
-            }
-        }
-        evicted
+        enforce_cache_bounds_parts(&mut self.cache, &self.config, naive, net, work)
     }
 
     /// Shard a request routes to (exposed for tests and tooling): the
     /// first ring point at or after the `(net, input_digest)` hash — or
     /// plain `net % K` under tenancy-aware pinning.
     pub fn shard_of(&self, req: &Request) -> usize {
-        if self.config.tenancy_aware_routing {
-            return req.net as usize % self.shards.len();
-        }
-        let key = mix64((req.net as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ req.input_digest);
-        let i = match self.ring.binary_search(&(key, usize::MAX)) {
-            Ok(i) => i,
-            Err(i) => i,
-        };
-        self.ring[i % self.ring.len()].1
+        shard_for(&self.config, &self.ring, self.shards.len(), req)
     }
 
     /// Serve a full arrival-ordered workload through the tier's unified
@@ -1021,7 +1111,7 @@ impl ShardedFleet {
         &mut self,
         source: &mut dyn WorkloadSource,
     ) -> Result<ShardedReport, TierError> {
-        self.run_unified(source, false).map(|(report, _)| report)
+        self.run_dispatch(source, false).map(|(report, _)| report)
     }
 
     /// Like [`ShardedFleet::run_source`], additionally returning every
@@ -1032,7 +1122,24 @@ impl ShardedFleet {
         &mut self,
         source: &mut dyn WorkloadSource,
     ) -> Result<(ShardedReport, Vec<Request>), TierError> {
-        self.run_unified(source, true)
+        self.run_dispatch(source, true)
+    }
+
+    /// Dispatch one run to the engine [`ShardConfig::exec`] selects. Both
+    /// engines produce byte-identical reports and traces
+    /// (`prop_parallel_matches_single_thread_across_matrix`); the
+    /// single-threaded loop is the oracle.
+    fn run_dispatch(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+        record: bool,
+    ) -> Result<(ShardedReport, Vec<Request>), TierError> {
+        match self.config.exec {
+            ExecMode::SingleThread => self.run_unified(source, record),
+            ExecMode::Parallel { threads } => {
+                super::parallel::run_parallel(self, source, record, threads)
+            }
+        }
     }
 
     /// The unified discrete-event loop: K router FIFOs, K fleet engines
@@ -1287,19 +1394,14 @@ impl ShardedFleet {
         // reconcile: owners that completed resolve their key (promotion
         // order = first-miss order, matching the two-phase oracle's
         // bookkeeping tick for tick); owners that were shed drop it
-        let mut evictions = 0u64;
-        for key in pending_order {
-            // pallas-lint: allow(D004, reason = "pending_order records exactly the keys inserted into pending")
-            let p = pending.remove(&key).expect("pending keys are recorded in order");
-            debug_assert!(p.waiters.is_empty(), "all owners depart before the heaps drain");
-            if let OwnerFate::Finished(_, v) = p.fate {
-                // the key resolves at the variant the owner was actually
-                // served at — a degraded run never poisons the
-                // full-precision entry
-                self.cache.promote((key.0, key.1, v));
-                evictions += self.enforce_cache_bounds(key.0, &mut work);
-            }
-        }
+        let evictions = reconcile_pending(
+            &mut self.cache,
+            &self.config,
+            naive,
+            &mut pending,
+            pending_order,
+            &mut work,
+        );
 
         let reports: Vec<FleetReport> =
             self.shards.iter_mut().map(|f| f.end_run().0).collect();
@@ -1487,7 +1589,7 @@ impl ShardedFleet {
     /// for the global throughput span), `work` the tier loop's own
     /// counters (every shard's are folded in here).
     #[allow(clippy::too_many_arguments)]
-    fn aggregate(
+    pub(crate) fn aggregate(
         &self,
         n_requests: usize,
         span_start: f64,
@@ -1645,6 +1747,7 @@ mod tests {
                 cache: rng.chance(0.5),
                 cache_capacity: *rng.pick(&[1usize, 8, usize::MAX]),
                 cache_quota_per_net: *rng.pick(&[2usize, usize::MAX]),
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: 8,
@@ -1679,6 +1782,7 @@ mod tests {
                 cache: true,
                 cache_capacity: *rng.pick(&[4usize, usize::MAX]),
                 cache_quota_per_net: usize::MAX,
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: 8,
@@ -2228,6 +2332,7 @@ mod tests {
                 cache: rng.chance(0.7),
                 cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
                 cache_quota_per_net: *rng.pick(&[3usize, usize::MAX]),
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: *rng.pick(&[4usize, 16, usize::MAX]),
@@ -2499,6 +2604,7 @@ mod tests {
                 cache: rng.chance(0.7),
                 cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
                 cache_quota_per_net: *rng.pick(&[3usize, usize::MAX]),
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: *rng.pick(&[4usize, 16, usize::MAX]),
@@ -2674,6 +2780,7 @@ mod tests {
                 cache: rng.chance(0.7),
                 cache_capacity: *rng.pick(&[4usize, 64, usize::MAX]),
                 cache_quota_per_net: *rng.pick(&[3usize, usize::MAX]),
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: *rng.pick(&[4usize, 16, usize::MAX]),
@@ -2757,6 +2864,7 @@ mod tests {
                 cache: true,
                 cache_capacity: *rng.pick(&[4usize, usize::MAX]),
                 cache_quota_per_net: usize::MAX,
+                ..ShardConfig::default()
             };
             let fleet_config = FleetConfig {
                 queue_bound: *rng.pick(&[2usize, 4]),

@@ -8,7 +8,7 @@
 
 use pulpnn_mp::bench::{ablate, figures};
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, ClosedLoopSource, DegradePolicy, Device, Fleet,
+    gap8_mixed_devices, merge_streams, ClosedLoopSource, DegradePolicy, Device, ExecMode, Fleet,
     FleetConfig, Policy, QueueDiscipline, Request, ShardConfig, ShardedFleet, TraceSource,
     VariantTable, Workload, DEFAULT_WAKEUP_CYCLES,
 };
@@ -47,7 +47,9 @@ networks & runtime:
               --queue-bound N --batch K --wakeup-cycles C ...); scale it
               out with --shards K --tenants T --repeat-ratio F --cache
               --cache-capacity N --cache-quota N --router-us US
-              --switch-cycles C --policy tenancy; schedule it with
+              --switch-cycles C --policy tenancy; run the K shard
+              engines on real OS threads with --threads T (conservative
+              parallel DES, bit-identical output); schedule it with
               --discipline fifo|edf --steal; drive it closed-loop with
               --closed-loop CLIENTS --think-us US (composes with the
               sharded tier: --closed-loop N --shards K feeds completions
@@ -384,6 +386,7 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     let wakeup_cycles = args.opt_u64("wakeup-cycles", DEFAULT_WAKEUP_CYCLES);
     // sharded-tier knobs (all default to the plain single-coordinator path)
     let shards = args.opt_usize("shards", 1).max(1);
+    let threads = args.opt_usize("threads", 1).max(1);
     let tenants = args.opt_usize("tenants", 1).max(1);
     let repeat_ratio = args.opt_f64("repeat-ratio", 0.0);
     let cache = args.flag("cache");
@@ -625,7 +628,19 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         cache,
         cache_capacity: if cache_capacity == 0 { usize::MAX } else { cache_capacity },
         cache_quota_per_net: if cache_quota == 0 { usize::MAX } else { cache_quota },
+        exec: if threads > 1 {
+            ExecMode::Parallel { threads }
+        } else {
+            ExecMode::SingleThread
+        },
     };
+    if threads > 1 {
+        println!(
+            "parallel: {threads} worker thread(s) advance the {shards} shard \
+             engine(s) inside conservative lookahead windows (bit-identical \
+             to --threads 1)"
+        );
+    }
     let mut tier = ShardedFleet::new(nodes, policy, config, shard_config);
     if let Some(table) = variants.clone() {
         tier.set_variants(table);
