@@ -4,7 +4,7 @@ ARTIFACTS ?= artifacts
 SEED ?= 2020
 TRACES ?= traces
 
-.PHONY: all build test lint bench bench-hot trace artifacts doc clean
+.PHONY: all build test lint lint-json bench bench-hot trace artifacts doc clean
 
 all: build
 
@@ -14,11 +14,18 @@ build:
 test:
 	cargo test -q
 
-# pallas-lint: the determinism/invariant rules (D001-D006, see
+# pallas-lint: the determinism/invariant rules (D001-D010, see
 # docs/STATIC_ANALYSIS.md) over rust/ + examples/. --deny exits non-zero
-# on any diagnostic — the mode CI runs.
+# on any active (non-allowed) diagnostic — the mode CI runs.
 lint: build
 	./target/release/pulpnn lint --deny
+
+# Machine-readable sweep: JSONL (one object per diagnostic, suppressed
+# ones included with "allowed":true) into $(ARTIFACTS)/pallas-lint.jsonl;
+# CI uploads the same file as a build artifact.
+lint-json: build
+	mkdir -p $(ARTIFACTS)
+	./target/release/pulpnn lint --format json > $(ARTIFACTS)/pallas-lint.jsonl
 
 # Fast self-asserting bench pass (the same budget CI uses). des_hot and
 # brownout_scale also emit BENCH_des_hot.json / BENCH_brownout.json into

@@ -13,18 +13,30 @@
 //! * [`scanner`] — a real Rust token scanner (line/block/doc comments,
 //!   string/raw-string/char/byte literals, nesting) so rules never fire
 //!   on prose;
-//! * [`rules`] — the rule set D001–D006 with machine-readable ids,
-//!   `file:line` diagnostics, and a reason-carrying
-//!   `// pallas-lint: allow(<rule>, reason = "...")` escape hatch;
-//! * [`lint_root`] — the repo sweep over `rust/` + `examples/`, exposed
-//!   as the `pulpnn lint` CLI subcommand and enforced in tier-1 by
+//! * [`structure`] — a brace-matched item tree (modules, fns with param
+//!   lists, impls, struct/enum fields, let bindings, exact line spans)
+//!   built over the token stream; the structural base for D004's test
+//!   exemption and the units layer;
+//! * [`units`] — units-of-measure inference from identifier suffixes
+//!   (`_us`, `_cycles`, `_uj`, …) powering D008 (mixed-unit arithmetic)
+//!   and D009 (coordinator panic-surface audit);
+//! * [`rules`] — the rule set D001–D010 with machine-readable ids,
+//!   `file:line` diagnostics, JSONL serialization, and a
+//!   reason-carrying `// pallas-lint: allow(<rules>, reason = "...")` /
+//!   `allow-item(…)` escape hatch (multi-id, per-id staleness);
+//! * [`lint_root`] — the repo sweep over `rust/` + `examples/` plus the
+//!   sweep-level docs-drift check (D010), exposed as the `pulpnn lint`
+//!   CLI subcommand and enforced in tier-1 by
 //!   `rust/tests/static_analysis.rs`.
 //!
-//! The rule catalog and the rationale tying each rule to the
-//! bit-exact-replay invariant live in `docs/STATIC_ANALYSIS.md`.
+//! The rule catalog, the unit-suffix table, and the rationale tying each
+//! rule to the bit-exact-replay invariant live in
+//! `docs/STATIC_ANALYSIS.md`.
 
 pub mod rules;
 pub mod scanner;
+pub mod structure;
+pub mod units;
 
 use std::path::{Path, PathBuf};
 
@@ -78,7 +90,13 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
     Ok(())
 }
 
-/// Sweep `rust/` + `examples/` under `root` and lint every file.
+/// The docs file whose rule table D010 diffs against the catalog.
+pub const DOCS_CATALOG: &str = "docs/STATIC_ANALYSIS.md";
+
+/// Sweep `rust/` + `examples/` under `root` and lint every file, then
+/// run the sweep-level docs-drift check (D010) against
+/// `docs/STATIC_ANALYSIS.md`. A missing docs file is itself drift —
+/// every registered rule reports its row as absent.
 pub fn lint_root(root: &Path) -> Result<LintReport, String> {
     let files = sweep_paths(root)?;
     let mut diagnostics = Vec::new();
@@ -89,6 +107,8 @@ pub fn lint_root(root: &Path) -> Result<LintReport, String> {
         let rel = relative_key(root, path);
         diagnostics.extend(rules::lint_file(&rel, &text));
     }
+    let docs_text = std::fs::read_to_string(root.join(DOCS_CATALOG)).unwrap_or_default();
+    diagnostics.extend(rules::d010_docs_drift(&docs_text));
     Ok(LintReport { files_scanned, diagnostics })
 }
 

@@ -49,15 +49,22 @@ pub struct Token {
     pub line: u32,
 }
 
-/// A parsed `// pallas-lint: allow(<rule>, reason = "...")` annotation.
+/// A parsed `// pallas-lint: allow(<rules>, reason = "...")` or
+/// `allow-item(<rules>, reason = "...")` annotation. One comment may
+/// carry several rule ids; staleness (A001) is accounted per id.
 #[derive(Debug, Clone)]
 pub struct Allow {
     /// 1-based line the annotation comment sits on.
     pub line: u32,
-    /// The rule id being allowed (e.g. `D004`).
-    pub rule: String,
-    /// The mandatory human reason.
+    /// The rule ids being allowed (e.g. `[D004, D008]`), in written order.
+    pub rules: Vec<String>,
+    /// The mandatory human reason (shared by every id in the comment).
     pub reason: String,
+    /// True for `allow-item(…)`: instead of covering the annotation line
+    /// and the next, the allow attaches to the item (fn/impl/mod/…) whose
+    /// attributes or header start on the next line and covers that item's
+    /// whole line span.
+    pub item_scoped: bool,
 }
 
 /// The result of scanning one source file.
@@ -181,8 +188,8 @@ impl<'a> Scanner<'a> {
         let body = body.strip_prefix('!').unwrap_or(body).trim_start();
         if body.starts_with("pallas-lint") {
             match parse_allow(body) {
-                Ok((rule, reason)) => {
-                    self.out.allows.push(Allow { line: self.line, rule, reason });
+                Ok((rules, reason, item_scoped)) => {
+                    self.out.allows.push(Allow { line: self.line, rules, reason, item_scoped });
                 }
                 Err(why) => self.out.malformed.push((self.line, why)),
             }
@@ -355,9 +362,10 @@ fn is_ident_start(c: u8) -> bool {
 }
 
 /// Parse the annotation payload of a line comment that mentions
-/// `pallas-lint`. The only accepted grammar is
-/// `pallas-lint: allow(<RULE>, reason = "<nonempty>")`.
-fn parse_allow(comment: &str) -> Result<(String, String), String> {
+/// `pallas-lint`. The accepted grammar is
+/// `pallas-lint: allow(<RULE>[, <RULE>…], reason = "<nonempty>")`, or
+/// `allow-item(…)` with the same payload for item-scoped coverage.
+fn parse_allow(comment: &str) -> Result<(Vec<String>, String, bool), String> {
     let Some(pos) = comment.find("pallas-lint") else {
         return Err("internal: marker vanished".to_string());
     };
@@ -366,17 +374,37 @@ fn parse_allow(comment: &str) -> Result<(String, String), String> {
         return Err("expected `pallas-lint: allow(<rule>, reason = \"...\")`".to_string());
     };
     let rest = rest.trim_start();
-    let Some(rest) = rest.strip_prefix("allow(") else {
-        return Err("expected `allow(<rule>, reason = \"...\")` after `pallas-lint:`".to_string());
+    let (mut rest, item_scoped) = if let Some(r) = rest.strip_prefix("allow-item(") {
+        (r, true)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (r, false)
+    } else {
+        return Err(
+            "expected `allow(...)` or `allow-item(...)` after `pallas-lint:`".to_string()
+        );
     };
-    let Some((rule, rest)) = rest.split_once(',') else {
-        return Err("allow annotation is missing the `, reason = \"...\"` part".to_string());
-    };
-    let rule = rule.trim().to_string();
-    if !crate::analysis::rules::is_known_rule(&rule) {
-        return Err(format!("unknown rule id `{rule}` in allow annotation"));
+    let mut rules: Vec<String> = Vec::new();
+    loop {
+        let Some((head, tail)) = rest.split_once(',') else {
+            return Err("allow annotation is missing the `, reason = \"...\"` part".to_string());
+        };
+        let head = head.trim();
+        let tail = tail.trim_start();
+        if head.is_empty() {
+            return Err("empty rule id in allow annotation".to_string());
+        }
+        if !crate::analysis::rules::is_known_rule(head) {
+            return Err(format!("unknown rule id `{head}` in allow annotation"));
+        }
+        if rules.iter().any(|r| r == head) {
+            return Err(format!("duplicate rule id `{head}` in allow annotation"));
+        }
+        rules.push(head.to_string());
+        rest = tail;
+        if rest.starts_with("reason") {
+            break;
+        }
     }
-    let rest = rest.trim_start();
     let Some(rest) = rest.strip_prefix("reason") else {
         return Err("allow annotation requires `reason = \"...\"`".to_string());
     };
@@ -394,7 +422,7 @@ fn parse_allow(comment: &str) -> Result<(String, String), String> {
     if reason.trim().is_empty() {
         return Err("allow reason must not be empty".to_string());
     }
-    Ok((rule, reason.to_string()))
+    Ok((rules, reason.to_string(), item_scoped))
 }
 
 #[cfg(test)]
@@ -511,10 +539,36 @@ mod tests {
     fn allow_annotations_parse_with_rule_and_reason() {
         let s = scan("x; // pallas-lint: allow(D004, reason = \"documented invariant\")\n");
         assert_eq!(s.allows.len(), 1);
-        assert_eq!(s.allows[0].rule, "D004");
+        assert_eq!(s.allows[0].rules, vec!["D004"]);
         assert_eq!(s.allows[0].reason, "documented invariant");
         assert_eq!(s.allows[0].line, 1);
+        assert!(!s.allows[0].item_scoped);
         assert!(s.malformed.is_empty());
+    }
+
+    #[test]
+    fn allow_annotations_accept_multiple_rule_ids() {
+        let s = scan("// pallas-lint: allow(D004, D008, reason = \"one comment, two rules\")\n");
+        assert_eq!(s.allows.len(), 1);
+        assert_eq!(s.allows[0].rules, vec!["D004", "D008"]);
+        assert_eq!(s.allows[0].reason, "one comment, two rules");
+        assert!(s.malformed.is_empty());
+    }
+
+    #[test]
+    fn allow_item_annotations_parse_as_item_scoped() {
+        let s = scan("// pallas-lint: allow-item(D009, reason = \"slab ids are dense\")\n");
+        assert_eq!(s.allows.len(), 1);
+        assert_eq!(s.allows[0].rules, vec!["D009"]);
+        assert!(s.allows[0].item_scoped);
+    }
+
+    #[test]
+    fn duplicate_rule_ids_in_one_allow_are_malformed() {
+        let s = scan("// pallas-lint: allow(D004, D004, reason = \"twice\")\n");
+        assert!(s.allows.is_empty());
+        assert_eq!(s.malformed.len(), 1);
+        assert!(s.malformed[0].1.contains("duplicate"), "{}", s.malformed[0].1);
     }
 
     #[test]

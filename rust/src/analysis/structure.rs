@@ -1,0 +1,836 @@
+//! Structural layer over the [`crate::analysis::scanner`] token stream:
+//! a brace-matched **item tree**.
+//!
+//! The PR 6 rules were purely lexical; the only structure they recovered
+//! was an ad-hoc `#[cfg(test)]` brace matcher inside `rules.rs`. This
+//! module generalizes that into a real (still std-only, still
+//! syntax-error-tolerant) item parser: modules, `fn`s with their
+//! parameter name/type lists, `impl`/`trait` blocks, `struct`/`enum`
+//! fields, and `let` bindings — each with exact 1-based line spans and
+//! token-index extents. [`test_line_ranges`] subsumes the old matcher
+//! (the tier-1 sweep pins the two bit-equal on the whole tree), and the
+//! units-of-measure pass (`units.rs`, rules D008/D009) walks the same
+//! tree.
+//!
+//! The parser is deliberately *recognizing*, not validating: anything it
+//! does not understand (macros, patterns, generics soup) is walked
+//! token-by-token so nested items are still found, and unbalanced input
+//! degrades to truncated spans rather than a panic — the scanner
+//! robustness corpus in `rust/tests/static_analysis.rs` hammers this.
+
+use crate::analysis::scanner::{Scan, TokKind, Token};
+
+/// What kind of item a tree node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ItemKind {
+    /// `mod name { … }` or `mod name;`
+    Mod,
+    /// `fn name(params) { … }` (or a braceless trait-method signature)
+    Fn,
+    /// `impl Type { … }` / `impl Trait for Type { … }`
+    Impl,
+    /// `struct Name { … }` / tuple / unit structs
+    Struct,
+    /// `enum Name { … }`
+    Enum,
+    /// `trait Name { … }`
+    Trait,
+    /// `let [mut] name [: ty] = …;` — a binding, recorded flat inside
+    /// its enclosing fn so the units pass can propagate through it
+    Let,
+}
+
+/// A named binding with the flattened text of its declared type
+/// (`name: ty` — fn params and struct fields).
+#[derive(Debug, Clone)]
+pub struct Binding {
+    /// Binding name.
+    pub name: String,
+    /// Flattened type text (tokens joined by spaces; opaque literals
+    /// render as `"..."`). Empty when no type was written.
+    pub ty: String,
+    /// 1-based line of the name token.
+    pub line: u32,
+}
+
+/// One node of the item tree.
+#[derive(Debug, Clone)]
+pub struct Item {
+    /// Item kind.
+    pub kind: ItemKind,
+    /// Item name (`""` for unnamed impls the parser could not resolve).
+    pub name: String,
+    /// 1-based line of the item keyword (`fn`, `struct`, …).
+    pub line: u32,
+    /// 1-based line where the item's attributes start (equals `line`
+    /// when the item has no attributes). Item-scoped allows attach here.
+    pub attr_line: u32,
+    /// 1-based line of the closing brace / terminating semicolon.
+    pub end_line: u32,
+    /// True when the item is a `#[cfg(test)]` / `#[test]` item or is
+    /// nested inside one.
+    pub is_test: bool,
+    /// `fn` parameters (`self` forms and pattern params are skipped).
+    pub params: Vec<Binding>,
+    /// Named `struct`/`enum` fields.
+    pub fields: Vec<Binding>,
+    /// For [`ItemKind::Let`]: token-index range `[lo, hi)` of the
+    /// initializer expression in the originating [`Scan`].
+    pub rhs: Option<(usize, usize)>,
+    /// For [`ItemKind::Fn`]: token-index range `[lo, hi)` of the body.
+    pub body: Option<(usize, usize)>,
+    /// Nested items (a fn's lets, a mod's fns, …).
+    pub children: Vec<Item>,
+}
+
+const ITEM_KEYWORDS: &[&str] = &["mod", "fn", "impl", "struct", "enum", "trait"];
+const MODIFIER_IDENTS: &[&str] = &["pub", "const", "async", "unsafe", "extern", "default"];
+
+fn is_p(t: &Token, c: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.as_bytes()[0] == c as u8
+}
+
+/// Build the item tree for a scanned file.
+pub fn build(scan: &Scan) -> Vec<Item> {
+    parse_region(&scan.tokens, 0, scan.tokens.len(), false)
+}
+
+/// Walk the tree depth-first, visiting every node.
+pub fn walk<'a>(items: &'a [Item], f: &mut dyn FnMut(&'a Item)) {
+    for it in items {
+        f(it);
+        walk(&it.children, f);
+    }
+}
+
+/// 1-based inclusive line ranges covered by test items — the structural
+/// replacement for the PR 6 ad-hoc `#[cfg(test)]` brace matcher. Only
+/// outermost test items are reported.
+pub fn test_line_ranges(items: &[Item]) -> Vec<(u32, u32)> {
+    fn rec(items: &[Item], out: &mut Vec<(u32, u32)>) {
+        for it in items {
+            if it.is_test {
+                out.push((it.attr_line, it.end_line));
+            } else {
+                rec(&it.children, out);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    rec(items, &mut out);
+    out
+}
+
+/// Index of the `}` matching the `{` at `open` (or the region end on
+/// unbalanced input).
+fn match_brace(toks: &[Token], open: usize, end: usize) -> usize {
+    let mut depth = 1i32;
+    let mut k = open + 1;
+    while k < end {
+        if is_p(&toks[k], '{') {
+            depth += 1;
+        } else if is_p(&toks[k], '}') {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    end.saturating_sub(1)
+}
+
+/// `i` at `#`; returns (index past the attribute, whether it is exactly
+/// `#[test]` or `#[cfg(test)]` — the two shapes the repo uses).
+fn skip_attr(toks: &[Token], i: usize, end: usize) -> (usize, bool) {
+    let mut j = i + 1;
+    if j < end && is_p(&toks[j], '!') {
+        j += 1;
+    }
+    if j >= end || !is_p(&toks[j], '[') {
+        return (i + 1, false);
+    }
+    let mut depth = 1i32;
+    let mut k = j + 1;
+    let body_start = k;
+    while k < end && depth > 0 {
+        if is_p(&toks[k], '[') {
+            depth += 1;
+        } else if is_p(&toks[k], ']') {
+            depth -= 1;
+        }
+        k += 1;
+    }
+    let body = &toks[body_start..k.saturating_sub(1).max(body_start)];
+    let names: Vec<&str> = body
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.as_str())
+        .collect();
+    let is_test = names == ["test"]
+        || (names == ["cfg", "test"]
+            && body.len() == 4
+            && is_p(&body[1], '(')
+            && is_p(&body[3], ')'));
+    (k, is_test)
+}
+
+/// `i` just past a `<`; returns the index past the matching `>`. A `>`
+/// directly preceded by `-` is an arrow head (`->` inside a closure
+/// bound), not an angle close.
+fn skip_generics(toks: &[Token], i: usize, end: usize) -> usize {
+    let mut depth = 1i32;
+    let mut k = i;
+    while k < end && depth > 0 {
+        let t = &toks[k];
+        if is_p(t, '<') {
+            depth += 1;
+        } else if is_p(t, '>') && !(k > 0 && is_p(&toks[k - 1], '-')) {
+            depth -= 1;
+        }
+        k += 1;
+    }
+    k
+}
+
+fn ty_text(toks: &[Token], lo: usize, hi: usize) -> String {
+    let parts: Vec<&str> = toks[lo..hi.min(toks.len())]
+        .iter()
+        .map(|t| if t.text.is_empty() { "\"...\"" } else { t.text.as_str() })
+        .collect();
+    parts.join(" ")
+}
+
+/// Top-level comma segments of a bracketed group `[lo, hi)` (angle- and
+/// bracket-aware).
+fn split_commas(toks: &[Token], lo: usize, hi: usize) -> Vec<(usize, usize)> {
+    let mut segs = Vec::new();
+    let mut depth = 0i32;
+    let mut start = lo;
+    let mut k = lo;
+    while k < hi {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "<" => depth += 1,
+                ">" if !(k > 0 && is_p(&toks[k - 1], '-')) => depth -= 1,
+                "," if depth == 0 => {
+                    segs.push((start, k));
+                    start = k + 1;
+                }
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    if start < hi {
+        segs.push((start, hi));
+    }
+    segs
+}
+
+/// `ident : ty` bindings of a fn parameter group (`self` forms and
+/// pattern params are skipped).
+fn parse_fn_params(toks: &[Token], lo: usize, hi: usize) -> Vec<Binding> {
+    let mut params = Vec::new();
+    for (a, b) in split_commas(toks, lo, hi) {
+        let mut k = a;
+        while k < b && is_p(&toks[k], '#') {
+            k = skip_attr(toks, k, b).0;
+        }
+        while k < b
+            && (is_p(&toks[k], '&')
+                || toks[k].kind == TokKind::Lifetime
+                || (toks[k].kind == TokKind::Ident && toks[k].text == "mut"))
+        {
+            k += 1;
+        }
+        if k >= b {
+            continue;
+        }
+        let t = &toks[k];
+        if t.kind == TokKind::Ident && t.text == "self" {
+            continue;
+        }
+        let colon = k + 1 < b
+            && is_p(&toks[k + 1], ':')
+            && !(k + 2 < b && is_p(&toks[k + 2], ':'));
+        if t.kind == TokKind::Ident && colon {
+            params.push(Binding {
+                name: t.text.clone(),
+                ty: ty_text(toks, k + 2, b),
+                line: t.line,
+            });
+        }
+    }
+    params
+}
+
+/// Named fields at the top level of a struct body.
+fn parse_struct_fields(toks: &[Token], lo: usize, hi: usize) -> Vec<Binding> {
+    let mut fields = Vec::new();
+    for (a, b) in split_commas(toks, lo, hi) {
+        let mut k = a;
+        while k < b && is_p(&toks[k], '#') {
+            k = skip_attr(toks, k, b).0;
+        }
+        if k < b && toks[k].kind == TokKind::Ident && toks[k].text == "pub" {
+            k += 1;
+            if k < b && is_p(&toks[k], '(') {
+                let mut depth = 1i32;
+                k += 1;
+                while k < b && depth > 0 {
+                    if is_p(&toks[k], '(') {
+                        depth += 1;
+                    } else if is_p(&toks[k], ')') {
+                        depth -= 1;
+                    }
+                    k += 1;
+                }
+            }
+        }
+        if k < b && toks[k].kind == TokKind::Ident && k + 1 < b && is_p(&toks[k + 1], ':') {
+            fields.push(Binding {
+                name: toks[k].text.clone(),
+                ty: ty_text(toks, k + 2, b),
+                line: toks[k].line,
+            });
+        }
+    }
+    fields
+}
+
+/// Named fields of struct-like enum variants: `ident :` directly after a
+/// `{` or `,` anywhere inside the enum body (`::` paths excluded).
+fn parse_enum_fields(toks: &[Token], lo: usize, hi: usize) -> Vec<Binding> {
+    let mut fields = Vec::new();
+    let mut k = lo;
+    while k < hi {
+        let t = &toks[k];
+        let field_colon = t.kind == TokKind::Ident
+            && k + 1 < hi
+            && is_p(&toks[k + 1], ':')
+            && !(k + 2 < hi && is_p(&toks[k + 2], ':'))
+            && k > lo
+            && (is_p(&toks[k - 1], '{') || is_p(&toks[k - 1], ','));
+        if field_colon {
+            let mut end_k = k + 2;
+            let mut depth = 0i32;
+            while end_k < hi {
+                let tt = &toks[end_k];
+                if tt.kind == TokKind::Punct {
+                    match tt.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => {
+                            if depth == 0 {
+                                break;
+                            }
+                            depth -= 1;
+                        }
+                        "<" => depth += 1,
+                        ">" if !is_p(&toks[end_k - 1], '-') => depth -= 1,
+                        "," if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                end_k += 1;
+            }
+            fields.push(Binding {
+                name: t.text.clone(),
+                ty: ty_text(toks, k + 2, end_k),
+                line: t.line,
+            });
+        }
+        k += 1;
+    }
+    fields
+}
+
+/// Scan `[i, end)` for items. Tokens that do not open an item are walked
+/// through one-by-one, so items nested inside plain blocks (match arms,
+/// loops) are still found.
+fn parse_region(toks: &[Token], mut i: usize, end: usize, inherited_test: bool) -> Vec<Item> {
+    let mut items = Vec::new();
+    let mut pending_test = false;
+    let mut pending_attr_line: Option<u32> = None;
+    while i < end {
+        let t = &toks[i];
+        if is_p(t, '#') {
+            let (next, attr_test) = skip_attr(toks, i, end);
+            if pending_attr_line.is_none() {
+                pending_attr_line = Some(t.line);
+            }
+            pending_test = pending_test || attr_test;
+            i = next;
+            continue;
+        }
+        if t.kind == TokKind::Ident && MODIFIER_IDENTS.contains(&t.text.as_str()) {
+            // visibility / qualifiers keep pending attributes alive
+            if t.text == "pub" && i + 1 < end && is_p(&toks[i + 1], '(') {
+                let mut depth = 1i32;
+                let mut close = i + 2;
+                while close < end && depth > 0 {
+                    if is_p(&toks[close], '(') {
+                        depth += 1;
+                    } else if is_p(&toks[close], ')') {
+                        depth -= 1;
+                    }
+                    close += 1;
+                }
+                i = close;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if t.kind == TokKind::Ident && ITEM_KEYWORDS.contains(&t.text.as_str()) {
+            let attr_line = pending_attr_line.unwrap_or(t.line);
+            let (item, next) =
+                parse_item(toks, i, end, inherited_test || pending_test, attr_line);
+            if let Some(item) = item {
+                items.push(item);
+            }
+            i = next;
+            pending_test = false;
+            pending_attr_line = None;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "let" {
+            let (item, next) = parse_let(toks, i, end, inherited_test);
+            if let Some(item) = item {
+                items.push(item);
+            }
+            i = next;
+            pending_test = false;
+            pending_attr_line = None;
+            continue;
+        }
+        pending_test = false;
+        pending_attr_line = None;
+        i += 1;
+    }
+    items
+}
+
+fn new_item(kind: ItemKind, name: &str, line: u32, attr_line: u32, end_line: u32, is_test: bool) -> Item {
+    Item {
+        kind,
+        name: name.to_string(),
+        line,
+        attr_line,
+        end_line,
+        is_test,
+        params: Vec::new(),
+        fields: Vec::new(),
+        rhs: None,
+        body: None,
+        children: Vec::new(),
+    }
+}
+
+/// `i` at an item keyword; returns the parsed item (when recognizable)
+/// and the index to resume scanning at.
+fn parse_item(
+    toks: &[Token],
+    i: usize,
+    end: usize,
+    is_test: bool,
+    attr_line: u32,
+) -> (Option<Item>, usize) {
+    let kw = toks[i].text.as_str();
+    let kw_line = toks[i].line;
+    match kw {
+        "mod" => {
+            if i + 1 < end && toks[i + 1].kind == TokKind::Ident {
+                let name = toks[i + 1].text.clone();
+                let j = i + 2;
+                if j < end && is_p(&toks[j], ';') {
+                    let it =
+                        new_item(ItemKind::Mod, &name, kw_line, attr_line, toks[j].line, is_test);
+                    return (Some(it), j + 1);
+                }
+                if j < end && is_p(&toks[j], '{') {
+                    let close = match_brace(toks, j, end);
+                    let mut it =
+                        new_item(ItemKind::Mod, &name, kw_line, attr_line, toks[close].line, is_test);
+                    it.children = parse_region(toks, j + 1, close, is_test);
+                    return (Some(it), close + 1);
+                }
+            }
+            (None, i + 1)
+        }
+        "fn" => parse_fn(toks, i, end, is_test, attr_line),
+        "struct" | "enum" => {
+            if !(i + 1 < end && toks[i + 1].kind == TokKind::Ident) {
+                return (None, i + 1);
+            }
+            let kind = if kw == "struct" { ItemKind::Struct } else { ItemKind::Enum };
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            if j < end && is_p(&toks[j], '<') {
+                j = skip_generics(toks, j + 1, end);
+            }
+            if j < end && is_p(&toks[j], '{') {
+                let close = match_brace(toks, j, end);
+                let mut it = new_item(kind, &name, kw_line, attr_line, toks[close].line, is_test);
+                it.fields = if kind == ItemKind::Struct {
+                    parse_struct_fields(toks, j + 1, close)
+                } else {
+                    parse_enum_fields(toks, j + 1, close)
+                };
+                return (Some(it), close + 1);
+            }
+            // tuple / unit struct: runs to the `;` at depth 0
+            let mut depth = 0i32;
+            while j < end {
+                let tt = &toks[j];
+                if tt.kind == TokKind::Punct {
+                    match tt.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        ";" if depth == 0 => {
+                            let it =
+                                new_item(kind, &name, kw_line, attr_line, tt.line, is_test);
+                            return (Some(it), j + 1);
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            (None, end)
+        }
+        "impl" | "trait" => {
+            let kind = if kw == "impl" { ItemKind::Impl } else { ItemKind::Trait };
+            let mut j = i + 1;
+            let mut name = String::new();
+            let mut depth = 0i32;
+            while j < end {
+                let tt = &toks[j];
+                if tt.kind == TokKind::Ident && name.is_empty() && tt.text != "for" && tt.text != "where"
+                {
+                    name = tt.text.clone();
+                }
+                if tt.kind == TokKind::Punct {
+                    match tt.text.as_str() {
+                        "<" => {
+                            j = skip_generics(toks, j + 1, end);
+                            continue;
+                        }
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" if depth == 0 => break,
+                        ";" if depth == 0 => {
+                            let it =
+                                new_item(kind, &name, kw_line, attr_line, tt.line, is_test);
+                            return (Some(it), j + 1);
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if j >= end {
+                return (None, end);
+            }
+            let close = match_brace(toks, j, end);
+            let mut it = new_item(kind, &name, kw_line, attr_line, toks[close].line, is_test);
+            it.children = parse_region(toks, j + 1, close, is_test);
+            (Some(it), close + 1)
+        }
+        _ => (None, i + 1),
+    }
+}
+
+fn parse_fn(
+    toks: &[Token],
+    i: usize,
+    end: usize,
+    is_test: bool,
+    attr_line: u32,
+) -> (Option<Item>, usize) {
+    let kw_line = toks[i].line;
+    if !(i + 1 < end && toks[i + 1].kind == TokKind::Ident) {
+        return (None, i + 1);
+    }
+    let name = toks[i + 1].text.clone();
+    let mut j = i + 2;
+    if j < end && is_p(&toks[j], '<') {
+        j = skip_generics(toks, j + 1, end);
+    }
+    if !(j < end && is_p(&toks[j], '(')) {
+        return (None, j);
+    }
+    let p_open = j;
+    let mut depth = 1i32;
+    let mut k = j + 1;
+    while k < end && depth > 0 {
+        if is_p(&toks[k], '(') {
+            depth += 1;
+        } else if is_p(&toks[k], ')') {
+            depth -= 1;
+        }
+        k += 1;
+    }
+    let p_close = k.saturating_sub(1);
+    let params = parse_fn_params(toks, p_open + 1, p_close);
+    // body: the first `{` (or terminating `;`) at bracket depth 0 after
+    // the parameter group — return types and where clauses are skipped
+    let mut depth = 0i32;
+    while k < end {
+        let tt = &toks[k];
+        if tt.kind == TokKind::Punct {
+            match tt.text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => break,
+                ";" if depth == 0 => {
+                    let mut it =
+                        new_item(ItemKind::Fn, &name, kw_line, attr_line, tt.line, is_test);
+                    it.params = params;
+                    return (Some(it), k + 1);
+                }
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    if k >= end {
+        let end_line = if end > 0 { toks[end - 1].line } else { kw_line };
+        let mut it = new_item(ItemKind::Fn, &name, kw_line, attr_line, end_line, is_test);
+        it.params = params;
+        return (Some(it), end);
+    }
+    let close = match_brace(toks, k, end);
+    let mut it = new_item(ItemKind::Fn, &name, kw_line, attr_line, toks[close].line, is_test);
+    it.params = params;
+    it.body = Some((k + 1, close));
+    it.children = parse_region(toks, k + 1, close, is_test);
+    (Some(it), close + 1)
+}
+
+/// `i` at `let`. Records simple `let [mut] name [: ty] = rhs;` bindings;
+/// pattern lets are skipped. The returned resume index only advances
+/// past the binding name so the initializer is re-scanned for nested
+/// items by the caller.
+fn parse_let(toks: &[Token], i: usize, end: usize, is_test: bool) -> (Option<Item>, usize) {
+    let kw_line = toks[i].line;
+    let mut j = i + 1;
+    if j < end && toks[j].kind == TokKind::Ident && toks[j].text == "mut" {
+        j += 1;
+    }
+    if !(j < end && toks[j].kind == TokKind::Ident) {
+        return (None, i + 1);
+    }
+    let name_t = &toks[j];
+    let mut k = j + 1;
+    if !(k < end && (is_p(&toks[k], ':') || is_p(&toks[k], '='))) {
+        return (None, i + 1); // pattern let (`let Some(x) = …`), etc.
+    }
+    if ITEM_KEYWORDS.contains(&name_t.text.as_str()) || name_t.text == "let" {
+        return (None, i + 1);
+    }
+    if is_p(&toks[k], ':') {
+        // `: ty` up to the `=` / `;` at depth 0
+        let mut depth = 0i32;
+        k += 1;
+        while k < end {
+            let tt = &toks[k];
+            if tt.kind == TokKind::Punct {
+                match tt.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    "<" => depth += 1,
+                    ">" if !is_p(&toks[k - 1], '-') => depth -= 1,
+                    "=" | ";" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+    }
+    let mut it = new_item(ItemKind::Let, &name_t.text, kw_line, kw_line, name_t.line, is_test);
+    if k < end && is_p(&toks[k], '=') {
+        let lo = k + 1;
+        let mut depth = 0i32;
+        let mut m = lo;
+        while m < end {
+            let tt = &toks[m];
+            if tt.kind == TokKind::Punct {
+                match tt.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    ";" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            m += 1;
+        }
+        it.rhs = Some((lo, m));
+        it.end_line = if m < end { toks[m].line } else { name_t.line };
+    } else if k < end && is_p(&toks[k], ';') {
+        it.end_line = toks[k].line;
+    }
+    (Some(it), j + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    fn tree(src: &str) -> Vec<Item> {
+        build(&scan(src))
+    }
+
+    fn flat<'a>(items: &'a [Item]) -> Vec<&'a Item> {
+        let mut out = Vec::new();
+        walk(items, &mut |it| out.push(it));
+        out
+    }
+
+    #[test]
+    fn fn_spans_params_and_body_are_exact() {
+        let src = "fn route(req_us: u64, depth: usize) -> u64 {\n\
+                   let t_us = req_us + 1;\n\
+                   t_us\n\
+                   }\n";
+        let items = tree(src);
+        assert_eq!(items.len(), 1);
+        let f = &items[0];
+        assert_eq!(f.kind, ItemKind::Fn);
+        assert_eq!(f.name, "route");
+        assert_eq!((f.line, f.end_line), (1, 4));
+        let names: Vec<&str> = f.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["req_us", "depth"]);
+        assert_eq!(f.params[0].ty, "u64");
+        assert_eq!(f.children.len(), 1);
+        assert_eq!(f.children[0].kind, ItemKind::Let);
+        assert_eq!(f.children[0].name, "t_us");
+    }
+
+    #[test]
+    fn struct_and_enum_fields_are_collected() {
+        let src = "pub struct Dev {\n\
+                   pub busy_us: u64,\n\
+                   energy_uj: f64,\n\
+                   }\n\
+                   enum Ev {\n\
+                   Arrive { at_us: u64 },\n\
+                   Done(u32),\n\
+                   }\n";
+        let items = tree(src);
+        assert_eq!(items.len(), 2);
+        let s = &items[0];
+        let field_names: Vec<&str> = s.fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(field_names, vec!["busy_us", "energy_uj"]);
+        let e = &items[1];
+        assert_eq!(e.kind, ItemKind::Enum);
+        let variant_fields: Vec<&str> = e.fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(variant_fields, vec!["at_us"]);
+    }
+
+    #[test]
+    fn impl_blocks_nest_their_fns() {
+        let src = "impl Fleet {\n\
+                   fn a(&self) {}\n\
+                   pub fn b(&mut self, x_us: u64) -> u64 { x_us }\n\
+                   }\n";
+        let items = tree(src);
+        assert_eq!(items[0].kind, ItemKind::Impl);
+        assert_eq!(items[0].name, "Fleet");
+        let fns: Vec<&str> = items[0].children.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(fns, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn cfg_test_marks_the_subtree_and_ranges_match() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   #[test]\n\
+                   fn t() { if true { let x = 1; } }\n\
+                   }\n";
+        let items = tree(src);
+        assert!(!items[0].is_test);
+        assert!(items[1].is_test);
+        assert_eq!(test_line_ranges(&items), vec![(2, 6)]);
+    }
+
+    #[test]
+    fn generics_with_arrows_do_not_break_fn_headers() {
+        let src = "fn apply<F: Fn(u64) -> u64>(f: F, seed_us: u64) -> u64 { f(seed_us) }\n";
+        let items = tree(src);
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].name, "apply");
+        let names: Vec<&str> = items[0].params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["f", "seed_us"]);
+    }
+
+    #[test]
+    fn lets_inside_nested_blocks_are_found() {
+        let src = "fn f() {\n\
+                   for i in 0..3 {\n\
+                   let inner_us = 1;\n\
+                   }\n\
+                   match x { _ => { let deep = 2; } }\n\
+                   }\n";
+        let items = tree(src);
+        let lets: Vec<&str> = flat(&items)
+            .into_iter()
+            .filter(|it| it.kind == ItemKind::Let)
+            .map(|it| it.name.as_str())
+            .collect();
+        assert_eq!(lets, vec!["inner_us", "deep"]);
+    }
+
+    #[test]
+    fn pattern_lets_and_mod_decls_are_tolerated() {
+        let src = "mod deep;\n\
+                   fn f(o: Option<u32>) {\n\
+                   let Some(x) = o else { return };\n\
+                   let (a, b) = (1, 2);\n\
+                   }\n";
+        let items = tree(src);
+        assert_eq!(items[0].kind, ItemKind::Mod);
+        assert_eq!(items[0].name, "deep");
+        let lets = flat(&items).into_iter().filter(|it| it.kind == ItemKind::Let).count();
+        assert_eq!(lets, 0);
+    }
+
+    #[test]
+    fn unbalanced_input_degrades_without_panicking() {
+        for src in [
+            "fn broken( {",
+            "struct S { a: u32",
+            "impl T { fn f() {",
+            "let x = ;",
+            "fn g<T(a: T) {}",
+            "#[cfg(test)",
+        ] {
+            let _ = tree(src); // must not panic
+        }
+    }
+
+    #[test]
+    fn let_rhs_token_range_covers_the_initializer() {
+        let src = "fn f() { let y_us = base_us + 3; }\n";
+        let s = scan(src);
+        let items = build(&s);
+        let lets: Vec<&Item> = {
+            let mut v = Vec::new();
+            walk(&items, &mut |it| {
+                if it.kind == ItemKind::Let {
+                    v.push(it);
+                }
+            });
+            v
+        };
+        assert_eq!(lets.len(), 1);
+        let (lo, hi) = lets[0].rhs.expect("initializer range");
+        let texts: Vec<&str> = s.tokens[lo..hi].iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["base_us", "+", "3"]);
+    }
+}

@@ -1,0 +1,704 @@
+//! Units-of-measure checking over the item tree (rules **D008** and
+//! **D009**).
+//!
+//! The codebase carries physical dimensions in identifier suffixes
+//! (`_us`, `_cycles`, `_uj`, … — see `docs/STATIC_ANALYSIS.md` for the
+//! full table). This pass infers a unit environment per `fn` — parameters
+//! by suffix, `let` bindings by suffix or by propagation through simple
+//! initializer chains — and flags additive/comparison operators whose two
+//! operands carry *different known* units (D008). Multiplicative context
+//! is deliberately excluded: `count * cycles` is `cycles`, so an operand
+//! adjacent to `*`, `/`, or `%` is never used as evidence.
+//!
+//! Conversions are recognized by name: a call through `*_to_us` produces
+//! `us`, a callee with a unit suffix produces that unit, `len()` produces
+//! a count, and a `*_to_<non-unit>` call is trusted as an explicit exit
+//! from the unit system.
+//!
+//! D009 is the panic-surface audit for coordinator non-test paths:
+//! panic-family macros and unchecked indexing/slicing must either go away
+//! or carry an `allow(D009)` / `allow-item(D009)` annotation stating the
+//! invariant that makes them unreachable.
+
+use crate::analysis::scanner::{Scan, TokKind, Token};
+use crate::analysis::structure::{walk, Item, ItemKind};
+use std::collections::HashMap;
+
+/// Identifier suffix → unit name. `_len`/`_depth` are dimensionless
+/// counts. Suffixes are unambiguous; the table is ordered for docs only.
+pub const SUFFIX_UNITS: &[(&str, &str)] = &[
+    ("_us", "us"),
+    ("_ms", "ms"),
+    ("_cycles", "cycles"),
+    ("_uj", "uj"),
+    ("_mw", "mw"),
+    ("_rps", "rps"),
+    ("_bytes", "bytes"),
+    ("_bits", "bits"),
+    ("_len", "count"),
+    ("_depth", "count"),
+];
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "match", "return", "in", "let", "mut", "move", "loop",
+    "while", "for", "break", "continue", "as", "ref", "impl", "fn", "pub",
+    "use", "where", "dyn", "enum", "struct", "trait", "type", "const",
+    "static", "crate", "self", "Self", "super", "mod", "true", "false",
+];
+
+fn is_kw(name: &str) -> bool {
+    KEYWORDS.contains(&name)
+}
+
+fn is_p(t: &Token, c: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.as_bytes()[0] == c as u8
+}
+
+/// Unit implied by an identifier's suffix, if any.
+pub fn suffix_unit(name: &str) -> Option<&'static str> {
+    for (suf, unit) in SUFFIX_UNITS {
+        if name.ends_with(suf) && name.len() > suf.len() {
+            return Some(unit);
+        }
+    }
+    None
+}
+
+/// What a call through `callee` produces:
+/// `Some(Some(unit))` — a unit; `Some(None)` — a trusted exit from the
+/// unit system (`*_to_<non-unit>`); `None` — opaque, unit unknown.
+fn conversion_unit(callee: &str) -> Option<Option<&'static str>> {
+    if let Some(pos) = callee.rfind("_to_") {
+        let target = &callee[pos + "_to_".len()..];
+        for (suf, unit) in SUFFIX_UNITS {
+            if target == &suf[1..] {
+                return Some(Some(unit));
+            }
+        }
+        return Some(None); // named conversion out of the unit system
+    }
+    if let Some(u) = suffix_unit(callee) {
+        return Some(Some(u));
+    }
+    if callee == "len" {
+        return Some(Some("count"));
+    }
+    None
+}
+
+fn match_close(toks: &[Token], open_idx: usize, hi: usize, open_c: char, close_c: char) -> usize {
+    let mut depth = 1i32;
+    let mut k = open_idx + 1;
+    while k < hi {
+        if is_p(&toks[k], open_c) {
+            depth += 1;
+        } else if is_p(&toks[k], close_c) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    hi.saturating_sub(1)
+}
+
+fn match_open(toks: &[Token], close_idx: usize, lo: usize, open_c: char, close_c: char) -> usize {
+    let mut depth = 1i32;
+    let mut k = close_idx;
+    while k > lo {
+        k -= 1;
+        if is_p(&toks[k], close_c) {
+            depth += 1;
+        } else if is_p(&toks[k], open_c) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    lo
+}
+
+/// Unit of the expression `[lo, hi)` if it is a simple chain:
+/// `[& mut *]* ident (.field | ::seg | [..] | (..) | ?)* [as ty]`.
+/// Returns `(unit, display_name)` — unit `None` when unknown.
+fn eval_chain(
+    toks: &[Token],
+    mut lo: usize,
+    mut hi: usize,
+    env: &HashMap<&str, &'static str>,
+) -> (Option<&'static str>, String) {
+    // strip a trailing top-level `as <ty>` cast
+    let mut depth = 0i32;
+    let mut k = lo;
+    while k < hi {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct && matches!(t.text.as_str(), "(" | "[" | "{") {
+            depth += 1;
+        } else if t.kind == TokKind::Punct && matches!(t.text.as_str(), ")" | "]" | "}") {
+            depth -= 1;
+        } else if depth == 0 && t.kind == TokKind::Ident && t.text == "as" {
+            hi = k;
+            break;
+        }
+        k += 1;
+    }
+    // leading borrows / derefs
+    while lo < hi
+        && (is_p(&toks[lo], '&')
+            || is_p(&toks[lo], '*')
+            || (toks[lo].kind == TokKind::Ident && toks[lo].text == "mut"))
+    {
+        lo += 1;
+    }
+    // fully parenthesized: recurse
+    if lo < hi && is_p(&toks[lo], '(') && match_close(toks, lo, hi, '(', ')') == hi - 1 {
+        return eval_chain(toks, lo + 1, hi - 1, env);
+    }
+    if lo >= hi || toks[lo].kind != TokKind::Ident || is_kw(&toks[lo].text) {
+        return (None, String::new());
+    }
+    let mut cur: &str = &toks[lo].text;
+    let mut unit: Option<&'static str> = env.get(cur).copied().or_else(|| suffix_unit(cur));
+    let mut k = lo + 1;
+    while k < hi {
+        let t = &toks[k];
+        if is_p(t, '.') && k + 1 < hi && toks[k + 1].kind == TokKind::Ident {
+            cur = &toks[k + 1].text;
+            unit = suffix_unit(cur);
+            k += 2;
+        } else if is_p(t, ':')
+            && k + 1 < hi
+            && is_p(&toks[k + 1], ':')
+            && k + 2 < hi
+            && toks[k + 2].kind == TokKind::Ident
+        {
+            cur = &toks[k + 2].text;
+            unit = suffix_unit(cur);
+            k += 3;
+        } else if is_p(t, '[') {
+            k = match_close(toks, k, hi, '[', ']') + 1; // indexing keeps the unit
+        } else if is_p(t, '(') {
+            match conversion_unit(cur) {
+                Some(Some(u)) => unit = Some(u),
+                Some(None) => return (None, cur.to_string()), // trusted exit
+                None => return (None, String::new()),         // opaque call
+            }
+            k = match_close(toks, k, hi, '(', ')') + 1;
+        } else if is_p(t, '?') {
+            k += 1;
+        } else {
+            return (None, String::new()); // not a simple chain
+        }
+    }
+    (unit, cur.to_string())
+}
+
+/// `name → unit` environment for one fn: params by suffix, then lets in
+/// initializer source order (suffix first, else propagation through a
+/// simple RHS chain).
+fn fn_env<'a>(scan: &'a Scan, fn_item: &'a Item) -> HashMap<&'a str, &'static str> {
+    let mut env: HashMap<&str, &'static str> = HashMap::new();
+    for p in &fn_item.params {
+        if let Some(u) = suffix_unit(&p.name) {
+            env.insert(p.name.as_str(), u);
+        }
+    }
+    let mut lets: Vec<&Item> = Vec::new();
+    walk(&fn_item.children, &mut |it| {
+        if it.kind == ItemKind::Let {
+            lets.push(it);
+        }
+    });
+    lets.sort_by_key(|it| it.rhs.map(|(lo, _)| lo).unwrap_or(usize::MAX));
+    for it in lets {
+        let mut u = suffix_unit(&it.name);
+        if u.is_none() {
+            if let Some((lo, hi)) = it.rhs {
+                u = eval_chain(&scan.tokens, lo, hi, &env).0;
+            }
+        }
+        if let Some(u) = u {
+            env.insert(it.name.as_str(), u);
+        }
+    }
+    env
+}
+
+/// Token range `[a, end_idx + 1)` of the postfix chain ending at
+/// `end_idx`, or `None` when the left operand is not a simple chain.
+fn left_operand(toks: &[Token], end_idx: usize, lo: usize) -> Option<(usize, usize)> {
+    let mut k = end_idx;
+    if k < lo {
+        return None;
+    }
+    loop {
+        let t = &toks[k];
+        if is_p(t, ')') {
+            let open = match_open(toks, k, lo, '(', ')');
+            if open == lo && !is_p(&toks[lo], '(') {
+                return None;
+            }
+            if open == 0 {
+                return None;
+            }
+            k = open - 1;
+        } else if is_p(t, ']') {
+            let open = match_open(toks, k, lo, '[', ']');
+            if open == lo && !is_p(&toks[lo], '[') {
+                return None;
+            }
+            if open == 0 {
+                return None;
+            }
+            k = open - 1;
+        } else if t.kind == TokKind::Ident && !is_kw(&t.text) {
+            if k >= lo + 1 && is_p(&toks[k - 1], '.') {
+                if k < 2 {
+                    return None;
+                }
+                k -= 2;
+            } else if k >= lo + 2 && is_p(&toks[k - 1], ':') && is_p(&toks[k - 2], ':') {
+                if k < 3 {
+                    return None;
+                }
+                k -= 3;
+            } else {
+                return Some((k, end_idx + 1));
+            }
+        } else {
+            return None;
+        }
+        if k < lo {
+            return None;
+        }
+    }
+}
+
+/// Token range `[start, k)` of the chain beginning at `start_idx`, or
+/// `None` when the right operand is not a simple chain.
+fn right_operand(toks: &[Token], start_idx: usize, hi: usize) -> Option<(usize, usize)> {
+    let mut k = start_idx;
+    while k < hi
+        && (is_p(&toks[k], '&')
+            || is_p(&toks[k], '*')
+            || (toks[k].kind == TokKind::Ident && toks[k].text == "mut"))
+    {
+        k += 1;
+    }
+    if k >= hi || toks[k].kind != TokKind::Ident || is_kw(&toks[k].text) {
+        return None;
+    }
+    let start = k;
+    k += 1;
+    while k < hi {
+        let t = &toks[k];
+        if is_p(t, '.') && k + 1 < hi && toks[k + 1].kind == TokKind::Ident {
+            k += 2;
+        } else if is_p(t, ':')
+            && k + 1 < hi
+            && is_p(&toks[k + 1], ':')
+            && k + 2 < hi
+            && toks[k + 2].kind == TokKind::Ident
+        {
+            k += 3;
+        } else if is_p(t, '[') {
+            k = match_close(toks, k, hi, '[', ']') + 1;
+        } else if is_p(t, '(') {
+            k = match_close(toks, k, hi, '(', ')') + 1;
+        } else if is_p(t, '?') {
+            k += 1;
+        } else {
+            break;
+        }
+    }
+    Some((start, k))
+}
+
+const TWOCHAR_FIRSTS: &str = "=!<>+-*/%&|^";
+
+/// Every additive / comparison operator site in `[lo, hi)`:
+/// `(op, left_end_idx, right_start_idx, line)`.
+fn op_sites(toks: &[Token], lo: usize, hi: usize) -> Vec<(&'static str, usize, usize, u32)> {
+    let mut out = Vec::new();
+    let mut k = lo;
+    while k < hi {
+        let t = &toks[k];
+        if t.kind != TokKind::Punct {
+            k += 1;
+            continue;
+        }
+        let c = t.text.as_str();
+        let nxt = if k + 1 < hi && toks[k + 1].kind == TokKind::Punct {
+            toks[k + 1].text.as_str()
+        } else {
+            ""
+        };
+        let prv = if k >= 1 && k - 1 >= lo && toks[k - 1].kind == TokKind::Punct {
+            toks[k - 1].text.as_str()
+        } else {
+            ""
+        };
+        match c {
+            "+" => {
+                if nxt == "=" {
+                    out.push(("+=", k.wrapping_sub(1), k + 2, t.line));
+                    k += 2;
+                    continue;
+                }
+                out.push(("+", k.wrapping_sub(1), k + 1, t.line));
+            }
+            "-" => {
+                if nxt == ">" {
+                    k += 2;
+                    continue;
+                }
+                if nxt == "=" {
+                    out.push(("-=", k.wrapping_sub(1), k + 2, t.line));
+                    k += 2;
+                    continue;
+                }
+                out.push(("-", k.wrapping_sub(1), k + 1, t.line));
+            }
+            "<" => {
+                if prv == "<" || prv == ":" || nxt == "<" {
+                    k += 1;
+                    continue;
+                }
+                if nxt == "=" {
+                    out.push(("<=", k.wrapping_sub(1), k + 2, t.line));
+                    k += 2;
+                    continue;
+                }
+                out.push(("<", k.wrapping_sub(1), k + 1, t.line));
+            }
+            ">" => {
+                if prv == ">" || prv == "-" || prv == "=" || nxt == ">" {
+                    k += 1;
+                    continue;
+                }
+                if nxt == "=" {
+                    out.push((">=", k.wrapping_sub(1), k + 2, t.line));
+                    k += 2;
+                    continue;
+                }
+                out.push((">", k.wrapping_sub(1), k + 1, t.line));
+            }
+            "=" if nxt == "=" && (prv.is_empty() || !TWOCHAR_FIRSTS.contains(prv)) => {
+                out.push(("==", k.wrapping_sub(1), k + 2, t.line));
+                k += 2;
+                continue;
+            }
+            "=" if prv == "!" => {
+                out.push(("!=", k.wrapping_sub(2), k + 1, t.line));
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    out
+}
+
+/// A raw finding before allow application: `(rule, line, message)`.
+pub type UnitsFinding = (&'static str, u32, String);
+
+fn d008_fn(scan: &Scan, fn_item: &Item, child_fn_spans: &[(usize, usize)], out: &mut Vec<UnitsFinding>) {
+    let env = fn_env(scan, fn_item);
+    let toks = &scan.tokens;
+    let (lo, hi) = match fn_item.body {
+        Some(b) => b,
+        None => return,
+    };
+    for (op, le, rs, line) in op_sites(toks, lo, hi) {
+        if le == usize::MAX || le < lo {
+            continue;
+        }
+        if child_fn_spans.iter().any(|&(a, b)| a <= le && le < b) {
+            continue;
+        }
+        let (l_lo, l_hi) = match left_operand(toks, le, lo) {
+            Some(r) => r,
+            None => continue,
+        };
+        // an operand adjacent to * / % is part of a product — its unit is
+        // not the identifier's unit (count * cycles is cycles), so skip
+        if l_lo > lo
+            && toks[l_lo - 1].kind == TokKind::Punct
+            && matches!(toks[l_lo - 1].text.as_str(), "*" | "/" | "%")
+        {
+            continue;
+        }
+        let (lu, lname) = eval_chain(toks, l_lo, l_hi, &env);
+        let lu = match lu {
+            Some(u) => u,
+            None => continue,
+        };
+        let (r_lo, r_hi) = match right_operand(toks, rs, hi) {
+            Some(r) => r,
+            None => continue,
+        };
+        if r_hi < hi
+            && toks[r_hi].kind == TokKind::Punct
+            && matches!(toks[r_hi].text.as_str(), "*" | "/" | "%")
+        {
+            continue;
+        }
+        let (ru, rname) = eval_chain(toks, r_lo, r_hi, &env);
+        let ru = match ru {
+            Some(u) => u,
+            None => continue,
+        };
+        if lu != ru {
+            out.push((
+                "D008",
+                line,
+                format!(
+                    "`{lname}` ({lu}) {op} `{rname}` ({ru}) mixes units — \
+                     convert through a named `*_to_*` fn or fix the operand"
+                ),
+            ));
+        }
+    }
+}
+
+const PANIC_MACROS: &[&str] = &[
+    "panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne",
+];
+
+fn d009_fn(scan: &Scan, fn_item: &Item, child_fn_spans: &[(usize, usize)], out: &mut Vec<UnitsFinding>) {
+    let toks = &scan.tokens;
+    let (lo, hi) = match fn_item.body {
+        Some(b) => b,
+        None => return,
+    };
+    let mut k = lo;
+    while k < hi {
+        if child_fn_spans.iter().any(|&(a, b)| a <= k && k < b) {
+            k += 1;
+            continue;
+        }
+        let t = &toks[k];
+        if t.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && k + 1 < hi
+            && is_p(&toks[k + 1], '!')
+        {
+            out.push((
+                "D009",
+                t.line,
+                format!(
+                    "`{}!` on a coordinator non-test path — return a typed \
+                     error or annotate the invariant with allow(D009)",
+                    t.text
+                ),
+            ));
+            k += 2;
+            continue;
+        }
+        if is_p(t, '[') && k > lo {
+            let prev = &toks[k - 1];
+            let indexable = (prev.kind == TokKind::Ident
+                && !is_kw(&prev.text)
+                && prev.text != "self")
+                || is_p(prev, ')')
+                || is_p(prev, ']');
+            if indexable {
+                let close = match_close(toks, k, hi, '[', ']');
+                let inner = &toks[k + 1..close.max(k + 1)];
+                let literal = inner.len() == 1 && inner[0].kind == TokKind::Num;
+                let full_range =
+                    inner.len() == 2 && is_p(&inner[0], '.') && is_p(&inner[1], '.');
+                if !literal && !full_range {
+                    out.push((
+                        "D009",
+                        t.line,
+                        "indexing/slicing can panic on a coordinator non-test \
+                         path — use get()/checked access or annotate the \
+                         bounds invariant with allow(D009)"
+                            .to_string(),
+                    ));
+                }
+                k = close + 1;
+                continue;
+            }
+        }
+        k += 1;
+    }
+}
+
+/// Which of the units-layer rules to run.
+#[derive(Clone, Copy)]
+pub struct UnitsRules {
+    /// Run the mixed-unit arithmetic check (all non-test fns, tree-wide).
+    pub d008: bool,
+    /// Run the panic-surface audit (coordinator non-test fns only).
+    pub d009: bool,
+}
+
+/// Run the enabled units-layer rules over every non-test `fn` in the
+/// tree. Nested fns are excluded from their parent's scan (each gets its
+/// own visit).
+pub fn fn_units_pass(scan: &Scan, items: &[Item], rules: UnitsRules) -> Vec<UnitsFinding> {
+    let mut out = Vec::new();
+    let mut fns: Vec<&Item> = Vec::new();
+    walk(items, &mut |it| {
+        if it.kind == ItemKind::Fn && it.body.is_some() {
+            fns.push(it);
+        }
+    });
+    for f in fns {
+        if f.is_test {
+            continue;
+        }
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        walk(&f.children, &mut |c| {
+            if c.kind == ItemKind::Fn {
+                if let Some(b) = c.body {
+                    spans.push(b);
+                }
+            }
+        });
+        if rules.d008 {
+            d008_fn(scan, f, &spans, &mut out);
+        }
+        if rules.d009 {
+            d009_fn(scan, f, &spans, &mut out);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+    use crate::analysis::structure::build;
+
+    fn run(src: &str, rules: UnitsRules) -> Vec<(u32, String)> {
+        let s = scan(src);
+        let items = build(&s);
+        fn_units_pass(&s, &items, rules)
+            .into_iter()
+            .map(|(_, line, msg)| (line, msg))
+            .collect()
+    }
+
+    const D008_ONLY: UnitsRules = UnitsRules { d008: true, d009: false };
+    const D009_ONLY: UnitsRules = UnitsRules { d008: false, d009: true };
+
+    #[test]
+    fn mixed_unit_addition_fires() {
+        let src = "fn f(lat_us: u64, lat_cycles: u64) -> u64 {\n\
+                   lat_us + lat_cycles\n\
+                   }\n";
+        let got = run(src, D008_ONLY);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 2);
+        assert!(got[0].1.contains("(us)"), "{}", got[0].1);
+        assert!(got[0].1.contains("(cycles)"), "{}", got[0].1);
+    }
+
+    #[test]
+    fn same_unit_and_unknown_operands_stay_silent() {
+        let src = "fn f(a_us: u64, b_us: u64, n: u64) -> u64 {\n\
+                   let c_us = a_us + b_us;\n\
+                   c_us + n\n\
+                   }\n";
+        assert!(run(src, D008_ONLY).is_empty());
+    }
+
+    #[test]
+    fn unit_propagates_through_simple_lets() {
+        let src = "fn f(start_us: u64, budget_ms: u64) {\n\
+                   let deadline = start_us;\n\
+                   if deadline > budget_ms {}\n\
+                   }\n";
+        let got = run(src, D008_ONLY);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 3);
+    }
+
+    #[test]
+    fn named_conversions_are_trusted() {
+        let src = "fn f(t_us: u64, b_ms: u64) -> bool {\n\
+                   us_to_ms(t_us) > b_ms\n\
+                   }\n";
+        assert!(run(src, D008_ONLY).is_empty());
+    }
+
+    #[test]
+    fn products_are_excluded_from_unit_evidence() {
+        let src = "fn f(base_cycles: u64, k_len: u64, per_cycles: u64) -> u64 {\n\
+                   base_cycles + k_len * per_cycles\n\
+                   }\n";
+        assert!(run(src, D008_ONLY).is_empty());
+    }
+
+    #[test]
+    fn comparison_between_units_fires() {
+        let src = "fn f(t_us: u64, e_uj: u64) -> bool {\n\
+                   t_us >= e_uj\n\
+                   }\n";
+        let got = run(src, D008_ONLY);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 2);
+    }
+
+    #[test]
+    fn mention_in_string_or_comment_does_not_fire() {
+        let src = "fn f() -> &'static str {\n\
+                   // a_us + b_cycles would mix units\n\
+                   \"a_us + b_cycles\"\n\
+                   }\n";
+        assert!(run(src, D008_ONLY).is_empty());
+    }
+
+    #[test]
+    fn test_fns_are_exempt_from_both_rules() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   #[test]\n\
+                   fn t(xs: Vec<u64>, a_us: u64, b_ms: u64) {\n\
+                   let _ = xs[3] + a_us - b_ms;\n\
+                   panic!(\"boom\");\n\
+                   }\n\
+                   }\n";
+        assert!(run(src, UnitsRules { d008: true, d009: true }).is_empty());
+    }
+
+    #[test]
+    fn panic_macros_and_indexing_fire_d009() {
+        let src = "fn f(xs: &[u64], i: usize) -> u64 {\n\
+                   if i > xs.len() { panic!(\"oob\") }\n\
+                   xs[i]\n\
+                   }\n";
+        let got = run(src, D009_ONLY);
+        let lines: Vec<u32> = got.iter().map(|g| g.0).collect();
+        assert_eq!(lines, vec![2, 3]);
+        assert!(got[0].1.contains("`panic!`"));
+        assert!(got[1].1.contains("indexing/slicing"));
+    }
+
+    #[test]
+    fn literal_index_full_range_and_debug_assert_are_exempt() {
+        let src = "fn f(xs: &[u64; 4]) -> u64 {\n\
+                   debug_assert!(xs.len() == 4);\n\
+                   let all = &xs[..];\n\
+                   let _ = all;\n\
+                   xs[0]\n\
+                   }\n";
+        assert!(run(src, D009_ONLY).is_empty());
+    }
+
+    #[test]
+    fn nested_fns_are_scanned_independently_not_doubly() {
+        let src = "fn outer(a_us: u64) -> u64 {\n\
+                   fn inner(b_ms: u64, c_us: u64) -> u64 { b_ms + c_us }\n\
+                   inner(a_us, a_us)\n\
+                   }\n";
+        let got = run(src, D008_ONLY);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 2);
+    }
+}

@@ -205,6 +205,7 @@ impl BurstyWorkload {
     /// Generate the stream tagged with a network id (combine streams
     /// with [`merge_streams`]). Every request gets a distinct input
     /// digest, exactly like [`Workload::generate_for_net`].
+    // pallas-lint: allow-item(D009, reason = "the asserts validate generator config; panicking on misuse is the contract")
     pub fn generate_for_net(&self, net: u32) -> Vec<Request> {
         assert!(
             self.high_rate_per_s > 0.0 && self.low_rate_per_s > 0.0,
@@ -355,6 +356,7 @@ impl ClosedLoopSource {
     /// `think_us_mean` microseconds, issuing `n_requests` requests in
     /// total (split evenly across clients) for network 0 under RNG seed
     /// `seed` (deterministic per seed).
+    // pallas-lint: allow-item(D009, reason = "the asserts validate generator config; panicking on misuse is the contract")
     pub fn new(
         clients: usize,
         think_us_mean: f64,
@@ -388,6 +390,7 @@ impl ClosedLoopSource {
 
     /// Spread clients across `nets` tenant networks (client `c` issues for
     /// network `c % nets`).
+    // pallas-lint: allow-item(D009, reason = "the asserts validate generator config; panicking on misuse is the contract")
     pub fn with_nets(mut self, nets: u32) -> ClosedLoopSource {
         assert!(nets >= 1, "need at least one network");
         self.nets = nets;
@@ -406,6 +409,7 @@ impl ClosedLoopSource {
     /// the draw comes from the issuing client's private RNG stream, so
     /// the arrival stream still never depends on cross-client
     /// completion-observation order.
+    // pallas-lint: allow-item(D009, reason = "the asserts validate generator config; panicking on misuse is the contract")
     pub fn with_input_universe(mut self, m: u64) -> ClosedLoopSource {
         assert!(m >= 1, "need at least one input in the universe");
         self.input_universe = Some(m);
@@ -417,6 +421,7 @@ impl ClosedLoopSource {
         self.issued
     }
 
+    // pallas-lint: allow-item(D009, reason = "ring indices are reduced modulo the universe length before use")
     fn issue(&mut self, client: usize, at_us: f64) -> Request {
         let think = {
             let u = self.rngs[client].unit_f64().max(1e-12);
@@ -449,6 +454,7 @@ impl WorkloadSource for ClosedLoopSource {
     /// (staggered arrivals, like users opening the app at different
     /// moments). Clients with a zero quota (`clients > n_requests`) stay
     /// silent.
+    // pallas-lint: allow-item(D009, reason = "ring indices are reduced modulo the universe length before use")
     fn initial(&mut self) -> Vec<Request> {
         let mut out = Vec::new();
         for c in 0..self.clients {
@@ -459,6 +465,7 @@ impl WorkloadSource for ClosedLoopSource {
         out
     }
 
+    // pallas-lint: allow-item(D009, reason = "ring indices are reduced modulo the universe length before use")
     fn on_done(&mut self, id: u64, t_us: f64) -> Vec<Request> {
         let Some(client) = self.client_of.remove(&id) else {
             return Vec::new();

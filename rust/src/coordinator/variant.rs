@@ -124,6 +124,7 @@ impl VariantTable {
     /// later level is not strictly smaller (in streamed bytes) than its
     /// predecessor, or if qualities are not strictly decreasing — the
     /// invariants the degrade policy relies on.
+    // pallas-lint: allow-item(D009, reason = "table construction asserts the static variant invariants once")
     pub fn mobilenet(assignments: &[Assignment]) -> VariantTable {
         assert!(!assignments.is_empty(), "variant table needs at least level 0");
         let inv = mobilenet_v1_inventory();
@@ -171,6 +172,7 @@ impl VariantTable {
         VariantTable::default()
     }
 
+    // pallas-lint: allow-item(D009, reason = "this is the validator itself: its asserts are the documented panic contract")
     fn validate(&self) {
         for w in self.levels.windows(2) {
             assert!(

@@ -122,8 +122,8 @@ impl DeviceClass {
     /// Scale a GAP-8-denominated cycle count to this class via the
     /// measured anchors (exact integer arithmetic, round-down).
     pub fn scale_cycles(self, gap8_cycles: u64) -> u64 {
-        ((gap8_cycles as u128 * self.reference_cycles() as u128)
-            / GAP8_REFERENCE_CYCLES as u128) as u64
+        let widened = gap8_cycles as u128 * self.reference_cycles() as u128;
+        (widened / GAP8_REFERENCE_CYCLES as u128) as u64
     }
 
     /// Parse a short class name as used by `serve --device-classes`.

@@ -65,8 +65,11 @@ networks & runtime:
 maintenance:
   lint        run the pallas-lint determinism/invariant rules over the
               repo sources (--root DIR, default `.`; --deny exits
-              non-zero on any diagnostic — the CI mode; --rules prints
-              the rule catalog)
+              non-zero on any active diagnostic — the CI mode; --rules
+              prints the rule catalog; --explain RULE prints one rule's
+              rationale; --format text|json — json emits one JSON object
+              per diagnostic, allowed ones included, keys
+              allowed/file/line/message/rule)
 
 common options:
   --seed N           workload seed (default 2020)
@@ -181,23 +184,53 @@ fn cmd_sweep(seed: u64) -> i32 {
 fn cmd_lint(args: &mut Args) -> i32 {
     let root = args.opt("root", ".");
     let deny = args.flag("deny");
+    let format = args.opt("format", "text");
+    if let Some(id) = args.opt_maybe("explain") {
+        let Some(r) = pulpnn_mp::analysis::RULES.iter().find(|r| r.id == id) else {
+            eprintln!("pallas-lint: unknown rule `{id}` (see `lint --rules` for the catalog)");
+            return 2;
+        };
+        println!("{} — {}", r.id, r.summary);
+        println!("scope: {}", r.scope);
+        println!();
+        println!("{}", r.explain);
+        return 0;
+    }
     if args.flag("rules") {
         for r in pulpnn_mp::analysis::RULES {
             println!("{}  {}\n      scope: {}", r.id, r.summary, r.scope);
         }
         return 0;
     }
+    if format != "text" && format != "json" {
+        eprintln!("pallas-lint: --format must be text|json, got `{format}`");
+        return 2;
+    }
     match pulpnn_mp::analysis::lint_root(std::path::Path::new(&root)) {
         Ok(report) => {
-            for d in &report.diagnostics {
-                println!("{d}");
+            let active = report.diagnostics.iter().filter(|d| !d.allowed).count();
+            let allowed = report.diagnostics.len() - active;
+            if format == "json" {
+                // pure JSONL on stdout (one object per diagnostic,
+                // suppressed ones included with allowed=true); the
+                // human summary goes to stderr
+                for d in &report.diagnostics {
+                    println!("{}", d.to_json());
+                }
+                eprintln!(
+                    "pallas-lint: {} files scanned, {} diagnostics ({} allowed)",
+                    report.files_scanned, active, allowed
+                );
+            } else {
+                for d in report.diagnostics.iter().filter(|d| !d.allowed) {
+                    println!("{d}");
+                }
+                println!(
+                    "pallas-lint: {} files scanned, {} diagnostics ({} allowed)",
+                    report.files_scanned, active, allowed
+                );
             }
-            println!(
-                "pallas-lint: {} files scanned, {} diagnostics",
-                report.files_scanned,
-                report.diagnostics.len()
-            );
-            if deny && !report.diagnostics.is_empty() {
+            if deny && active > 0 {
                 1
             } else {
                 0

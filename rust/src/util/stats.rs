@@ -45,6 +45,57 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Streaming percentile tracker over fixed-size windows.
+///
+/// Long-running serve/bench loops want p50/p95/p99 without retaining the
+/// whole sample history. `push` fills a fixed ring; each time the window
+/// fills, its percentiles (nearest-rank via [`percentile`], so
+/// `total_cmp` NaN-safety carries over) are folded into running window
+/// summaries. `flush` reports any partial tail window so no sample is
+/// silently dropped.
+#[derive(Debug, Clone)]
+pub struct WindowedPercentiles {
+    window: Vec<f64>,
+    capacity: usize,
+    /// (p50, p95, p99) of each completed window, in arrival order.
+    pub windows: Vec<(f64, f64, f64)>,
+}
+
+impl WindowedPercentiles {
+    pub fn new(capacity: usize) -> WindowedPercentiles {
+        assert!(capacity > 0, "WindowedPercentiles::new(0)");
+        WindowedPercentiles { window: Vec::with_capacity(capacity), capacity, windows: Vec::new() }
+    }
+
+    /// Add a sample; closes and summarizes the window when it fills.
+    pub fn push(&mut self, x: f64) {
+        self.window.push(x);
+        if self.window.len() == self.capacity {
+            self.close_window();
+        }
+    }
+
+    /// Close a partial tail window, if any, then return the per-window
+    /// summaries in arrival order.
+    pub fn flush(&mut self) -> &[(f64, f64, f64)] {
+        if !self.window.is_empty() {
+            self.close_window();
+        }
+        &self.windows
+    }
+
+    /// Number of samples in the currently open (unreported) window.
+    pub fn pending(&self) -> usize {
+        self.window.len()
+    }
+
+    fn close_window(&mut self) {
+        let w = &self.window;
+        self.windows.push((percentile(w, 50.0), percentile(w, 95.0), percentile(w, 99.0)));
+        self.window.clear();
+    }
+}
+
 /// Geometric mean (all inputs must be positive).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -86,5 +137,45 @@ mod tests {
     fn geomean_of_ratios() {
         let g = geomean(&[2.0, 8.0]);
         assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_percentiles_match_the_batch_percentile_fn() {
+        let samples: Vec<f64> = (0..25).map(|i| ((i * 7) % 25) as f64).collect();
+        let mut wp = WindowedPercentiles::new(10);
+        for &x in &samples {
+            wp.push(x);
+        }
+        assert_eq!(wp.pending(), 5, "25 samples over windows of 10 leave a 5-sample tail");
+        let windows = wp.flush().to_vec();
+        assert_eq!(windows.len(), 3);
+        for (i, chunk) in samples.chunks(10).enumerate() {
+            let expect =
+                (percentile(chunk, 50.0), percentile(chunk, 95.0), percentile(chunk, 99.0));
+            assert_eq!(windows[i], expect, "window {i} disagrees with the batch percentile fn");
+        }
+    }
+
+    #[test]
+    fn windowed_percentiles_flush_is_idempotent_and_nan_safe() {
+        let mut wp = WindowedPercentiles::new(4);
+        for x in [1.0, f64::NAN, 2.0] {
+            wp.push(x);
+        }
+        let first = wp.flush().to_vec();
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].0, 2.0, "NaN ranks last under total_cmp, so p50 of 3 is 2.0");
+        assert_eq!(wp.pending(), 0);
+        assert_eq!(wp.flush().len(), 1, "flushing with nothing pending adds no window");
+    }
+
+    #[test]
+    fn windowed_percentiles_exact_fill_leaves_no_tail() {
+        let mut wp = WindowedPercentiles::new(3);
+        for x in [3.0, 1.0, 2.0, 9.0, 7.0, 8.0] {
+            wp.push(x);
+        }
+        assert_eq!(wp.pending(), 0);
+        assert_eq!(wp.flush(), &[(2.0, 3.0, 3.0), (8.0, 9.0, 9.0)]);
     }
 }

@@ -306,3 +306,77 @@ fn seed_changes_workload_but_not_shape() {
     assert!(a.contains("MACs/cycle"));
     assert!(b.contains("MACs/cycle"));
 }
+
+// ---------------------------------------------------------------- lint
+
+/// Build a throwaway lint root with one allowed D008, one active D004,
+/// and a docs catalog row for every registered rule (so D010 is quiet).
+fn lint_fixture_root(tag: &str) -> std::path::PathBuf {
+    let root = std::env::temp_dir().join(format!("pallas_lint_cli_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let coord = root.join("rust/src/coordinator");
+    std::fs::create_dir_all(&coord).unwrap();
+    std::fs::create_dir_all(root.join("docs")).unwrap();
+    std::fs::write(
+        root.join("rust/mixed.rs"),
+        "fn scaled(a_us: u64, b_ms: u64) -> u64 {\n    \
+         // pallas-lint: allow(D008, reason = \"golden fixture\")\n    \
+         a_us + b_ms\n}\n",
+    )
+    .unwrap();
+    std::fs::write(coord.join("g.rs"), "fn pick(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n")
+        .unwrap();
+    let mut docs = String::from("| rule | summary |\n|---|---|\n");
+    for r in pulpnn_mp::analysis::RULES {
+        docs.push_str(&format!("| {} | {} |\n", r.id, r.summary));
+    }
+    std::fs::write(root.join("docs/STATIC_ANALYSIS.md"), docs).unwrap();
+    root
+}
+
+#[test]
+fn lint_json_output_is_golden_pinned() {
+    let root = lint_fixture_root("json");
+    let (out, err, ok) = run(&["lint", "--root", root.to_str().unwrap(), "--format", "json"]);
+    assert!(ok, "{err}");
+    let golden = concat!(
+        "{\"allowed\":true,\"file\":\"rust/mixed.rs\",\"line\":3,\"message\":\"`a_us` (us) + \
+         `b_ms` (ms) mixes units \u{2014} convert through a named `*_to_*` fn or fix the \
+         operand\",\"rule\":\"D008\"}\n",
+        "{\"allowed\":false,\"file\":\"rust/src/coordinator/g.rs\",\"line\":2,\"message\":\"\
+         `.unwrap` in coordinator non-test code \u{2014} return a typed error, or annotate \
+         the documented invariant with an allow(D004) reason\",\"rule\":\"D004\"}\n",
+    );
+    assert_eq!(out, golden, "lint --format json must match the documented JSONL schema");
+    assert!(err.contains("2 files scanned, 1 diagnostics (1 allowed)"), "{err}");
+    for line in out.lines() {
+        let parsed = pulpnn_mp::util::json::Json::parse(line).expect("each line is valid JSON");
+        assert!(parsed.get("rule").as_str().is_some());
+        assert!(parsed.get("file").as_str().is_some());
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn lint_text_mode_hides_allowed_and_deny_gates_on_active() {
+    let root = lint_fixture_root("deny");
+    let (out, _, ok) = run(&["lint", "--root", root.to_str().unwrap()]);
+    assert!(ok, "plain lint reports but does not gate");
+    assert!(out.contains("D004"), "{out}");
+    assert!(!out.contains("D008"), "allowed diagnostics stay out of text mode: {out}");
+    let (_, _, deny_ok) = run(&["lint", "--root", root.to_str().unwrap(), "--deny"]);
+    assert!(!deny_ok, "the active D004 must fail --deny");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn lint_explain_prints_the_rationale_and_rejects_unknown_rules() {
+    let (out, _, ok) = run(&["lint", "--explain", "D008"]);
+    assert!(ok);
+    assert!(out.contains("D008"), "{out}");
+    assert!(out.contains("scope:"), "{out}");
+    assert!(out.len() > 120, "explain text should carry real rationale: {out}");
+    let (_, err, bad_ok) = run(&["lint", "--explain", "D999"]);
+    assert!(!bad_ok);
+    assert!(err.contains("unknown rule"), "{err}");
+}
