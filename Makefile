@@ -14,7 +14,7 @@ build:
 test:
 	cargo test -q
 
-# pallas-lint: the determinism/invariant rules (D001-D010, see
+# pallas-lint: the determinism/invariant rules (D001-D011, see
 # docs/STATIC_ANALYSIS.md) over rust/ + examples/. --deny exits non-zero
 # on any active (non-allowed) diagnostic — the mode CI runs.
 lint: build
@@ -27,16 +27,18 @@ lint-json: build
 	mkdir -p $(ARTIFACTS)
 	./target/release/pulpnn lint --format json > $(ARTIFACTS)/pallas-lint.jsonl
 
-# Fast self-asserting bench pass (the same budget CI uses). des_hot and
-# brownout_scale also emit BENCH_des_hot.json / BENCH_brownout.json into
-# the repo root (pulpnn-bench-v1) — the machine-readable events/sec +
-# work-counter perf trajectory and the brownout serving timings.
+# Fast self-asserting bench pass (the same budget CI uses). des_hot,
+# brownout_scale and fault_tolerance also emit BENCH_des_hot.json /
+# BENCH_brownout.json / BENCH_fault.json into the repo root
+# (pulpnn-bench-v1) — the machine-readable events/sec + work-counter
+# perf trajectory and the brownout/fault-recovery serving timings.
 bench:
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench fleet_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench shard_scale
 	PULPNN_BENCH_BUDGET_MS=50 cargo bench --bench sched_scale
 	PULPNN_BENCH_BUDGET_MS=50 PULPNN_BENCH_JSON=. cargo bench --bench des_hot
 	PULPNN_BENCH_BUDGET_MS=50 PULPNN_BENCH_JSON=. cargo bench --bench brownout_scale
+	PULPNN_BENCH_BUDGET_MS=50 PULPNN_BENCH_JSON=. cargo bench --bench fault_tolerance
 
 # The full-size des_hot run (>= 1.25M simulated requests) with the JSON
 # trajectory — the events/sec baseline later perf PRs must beat.

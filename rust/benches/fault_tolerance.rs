@@ -1,0 +1,307 @@
+//! Fault tolerance under injected crashes: a 2-device fleet at 2x
+//! overload riding through scripted crash/recover cycles on device 0,
+//! recovery-off (zero retry budget) vs retry + failover, plus the
+//! sharded tier under a generated device-fault schedule with a router
+//! brownout, on both execution engines.
+//!
+//! Self-checking — the bench aborts if any of these fail:
+//!
+//! 1. the seeded fault generator has the pinned MTBF/MTTR shape: over a
+//!    long horizon the per-device mean up-interval and mean repair
+//!    interval land within 2x of the configured `mtbf_us`/`mttr_us`
+//!    (hundreds of exponential draws — the band is >10 sigma wide), and
+//!    regenerating with the same seed reproduces the schedule
+//!    bit-exactly;
+//! 2. recovery-off loses work, retry + failover gets it back: with a
+//!    zero retry budget the four crashes strictly fail requests
+//!    (`failed > 0`, goodput drops below the offered count), while the
+//!    default budget re-routes every aborted request to the healthy
+//!    device and completes the *entire* offered stream — strictly more
+//!    completions than recovery-off, zero failures;
+//! 3. exactly-once accounting holds in every cell: completed + shed +
+//!    failed == offered, and the downtime samples are exactly the four
+//!    scripted 20 ms repair intervals in both recovery modes;
+//! 4. the sharded tier under an *active* plan (generated device faults
+//!    + a scripted router outage on shard 0) conserves requests and
+//!    produces a byte-identical `ShardedReport` on
+//!    [`ExecMode::Parallel`] at T in {2, 4} vs the single-threaded
+//!    reference — fault injection preserves the conservative engine's
+//!    bit-exactness contract.
+//!
+//! With `PULPNN_BENCH_JSON=.` the wall-clock timings land in
+//! `BENCH_fault.json` (pulpnn-bench-v1), wired into `make bench` and
+//! the CI bench-smoke step.
+
+use pulpnn_mp::coordinator::{
+    gap8_mixed_devices, ExecMode, FaultEvent, FaultKind, FaultParams, FaultPlan, Fleet,
+    FleetConfig, FleetReport, Policy, Request, RetryPolicy, ShardConfig, ShardedFleet, Workload,
+};
+use pulpnn_mp::util::benchkit::Bench;
+use pulpnn_mp::util::table::{f, Table};
+
+const CYCLES_PER_INFERENCE: u64 = 300_000;
+const N_FLEET_DEVICES: usize = 2;
+const N_TIER_DEVICES: usize = 8;
+const N_REQUESTS: usize = 3000;
+/// Scripted repair time for every fleet-scenario crash, microseconds.
+const REPAIR_US: f64 = 20_000.0;
+
+/// Aggregate service capacity of the 2-device fleet in requests/s.
+fn capacity_rps() -> f64 {
+    gap8_mixed_devices(N_FLEET_DEVICES, CYCLES_PER_INFERENCE)
+        .iter()
+        .map(|d| 1e6 / d.inference_us())
+        .sum()
+}
+
+/// Uniform (deterministic, non-Poisson) two-tenant arrivals at 2x the
+/// fleet's capacity: both device queues stay backlogged for the whole
+/// span, so every scripted crash catches in-flight work.
+fn overload_requests() -> Vec<Request> {
+    let gap_us = 1e6 / (2.0 * capacity_rps());
+    (0..N_REQUESTS as u64)
+        .map(|i| Request {
+            id: i,
+            arrival_us: i as f64 * gap_us,
+            deadline_us: None,
+            net: (i % 2) as u32,
+            input_digest: i,
+        })
+        .collect()
+}
+
+/// Four crash/recover cycles on device 0, spread across the arrival
+/// span, each with a fixed 20 ms repair.
+fn crash_plan(span_us: f64) -> FaultPlan {
+    let mut events = Vec::new();
+    for frac in [0.2, 0.4, 0.6, 0.8] {
+        let t = span_us * frac;
+        events.push(FaultEvent { t_us: t, kind: FaultKind::Crash { device: 0 } });
+        events.push(FaultEvent { t_us: t + REPAIR_US, kind: FaultKind::Recover { device: 0 } });
+    }
+    FaultPlan::scripted(events)
+}
+
+/// Run the fleet scenario under the scripted crash plan with the given
+/// retry policy, asserting exactly-once accounting.
+fn run_fleet(reqs: &[Request], retry: RetryPolicy) -> FleetReport {
+    let span_us = reqs.last().map(|r| r.arrival_us).unwrap_or(0.0);
+    let mut fleet = Fleet::with_config(
+        gap8_mixed_devices(N_FLEET_DEVICES, CYCLES_PER_INFERENCE),
+        Policy::LeastLoaded,
+        FleetConfig::default(),
+    );
+    fleet.set_faults(crash_plan(span_us), retry);
+    let report = fleet.run(reqs);
+    assert_eq!(
+        report.completions.len() + report.shed + report.failures.len(),
+        reqs.len(),
+        "fleet lost requests: {} completed + {} shed + {} failed != {} offered",
+        report.completions.len(),
+        report.shed,
+        report.failures.len(),
+        reqs.len()
+    );
+    assert_eq!(report.faults, 4, "every scripted crash must land (device was up each time)");
+    assert_eq!(
+        report.recovery_us,
+        vec![REPAIR_US; 4],
+        "downtime samples must be exactly the scripted repair intervals"
+    );
+    report
+}
+
+/// The tier scenario: 8 devices across 2 shards, result cache on a
+/// repeat-heavy stream, generated device faults plus a router outage.
+fn tier_plan(horizon_us: f64) -> FaultPlan {
+    let params =
+        FaultParams { mtbf_us: 100_000.0, mttr_us: 30_000.0, straggler_factor: 1.5, seed: 17 };
+    let mut events = FaultPlan::generate(&params, N_TIER_DEVICES, horizon_us).events().to_vec();
+    events.push(FaultEvent {
+        t_us: horizon_us * 0.3,
+        kind: FaultKind::RouterOutageStart { shard: 0 },
+    });
+    events
+        .push(FaultEvent { t_us: horizon_us * 0.5, kind: FaultKind::RouterOutageEnd { shard: 0 } });
+    FaultPlan::scripted(events)
+}
+
+fn run_tier(exec: ExecMode, reqs: &[Request]) -> pulpnn_mp::coordinator::ShardedReport {
+    let horizon = reqs.last().map(|r| r.arrival_us).unwrap_or(0.0) + 1e5;
+    let config = ShardConfig {
+        shards: 2,
+        router_service_us: 120.0,
+        cache: true,
+        exec,
+        ..ShardConfig::default()
+    };
+    let mut tier = ShardedFleet::new(
+        gap8_mixed_devices(N_TIER_DEVICES, CYCLES_PER_INFERENCE),
+        Policy::LeastLoaded,
+        FleetConfig { queue_bound: 16, batch_max: 4, ..FleetConfig::default() },
+        config,
+    );
+    tier.set_faults(tier_plan(horizon), RetryPolicy::default());
+    let report = tier.run(reqs);
+    report.check_conservation(reqs.len()).unwrap();
+    report
+}
+
+fn main() {
+    // 1. the generator's pinned shape: per-device mean up/repair
+    //    intervals within 2x of the configured means, bit-stable per seed
+    let params =
+        FaultParams { mtbf_us: 50_000.0, mttr_us: 10_000.0, straggler_factor: 1.0, seed: 7 };
+    let horizon = 5_000_000.0;
+    let plan = FaultPlan::generate(&params, N_TIER_DEVICES, horizon);
+    assert_eq!(
+        plan.to_jsonl(),
+        FaultPlan::generate(&params, N_TIER_DEVICES, horizon).to_jsonl(),
+        "the seeded generator must be bit-reproducible"
+    );
+    let mut last_event = vec![(0.0f64, true); N_TIER_DEVICES]; // (time, device up)
+    let (mut up_sum, mut up_n, mut down_sum, mut down_n) = (0.0f64, 0u32, 0.0f64, 0u32);
+    for e in plan.events() {
+        match e.kind {
+            FaultKind::Crash { device } => {
+                let (since, up) = last_event[device];
+                assert!(up, "generator scheduled a crash on a down device");
+                up_sum += e.t_us - since;
+                up_n += 1;
+                last_event[device] = (e.t_us, false);
+            }
+            FaultKind::Recover { device } => {
+                let (since, up) = last_event[device];
+                assert!(!up, "generator scheduled a recover on an up device");
+                down_sum += e.t_us - since;
+                down_n += 1;
+                last_event[device] = (e.t_us, true);
+            }
+            _ => {}
+        }
+    }
+    let (mean_up, mean_down) = (up_sum / up_n.max(1) as f64, down_sum / down_n.max(1) as f64);
+    assert!(up_n > 100, "horizon must yield a large sample (got {up_n} crashes)");
+    assert!(
+        mean_up > params.mtbf_us / 2.0 && mean_up < params.mtbf_us * 2.0,
+        "mean up-interval {mean_up} us is not within 2x of mtbf {} us",
+        params.mtbf_us
+    );
+    assert!(
+        mean_down > params.mttr_us / 2.0 && mean_down < params.mttr_us * 2.0,
+        "mean repair {mean_down} us is not within 2x of mttr {} us",
+        params.mttr_us
+    );
+    println!(
+        "generator shape: {} crashes, mean up {} us (mtbf {}), mean repair {} us (mttr {}) ✓",
+        up_n,
+        f(mean_up, 0),
+        f(params.mtbf_us, 0),
+        f(mean_down, 0),
+        f(params.mttr_us, 0)
+    );
+
+    // 2 + 3. recovery-off vs retry + failover on the crash-scripted fleet
+    let reqs = overload_requests();
+    let off = run_fleet(&reqs, RetryPolicy::off());
+    let on = run_fleet(&reqs, RetryPolicy::default());
+    let mut t = Table::new(vec![
+        "recovery",
+        "completed",
+        "failed",
+        "retries",
+        "throughput [rps]",
+        "p. recovery [ms]",
+    ]);
+    for (name, r) in [("off", &off), ("retry+failover", &on)] {
+        t.row(vec![
+            name.to_string(),
+            r.completions.len().to_string(),
+            r.failures.len().to_string(),
+            r.retries.to_string(),
+            f(r.throughput_rps, 1),
+            f(r.recovery_us.iter().sum::<f64>() / r.recovery_us.len().max(1) as f64 / 1e3, 1),
+        ]);
+    }
+    println!(
+        "\nFault tolerance at 2x overload ({N_FLEET_DEVICES} devices, 4 scripted crashes \
+         on d0, {REPAIR_US} us repairs, {N_REQUESTS} requests):\n"
+    );
+    print!("{}", t.render());
+    assert!(
+        !off.failures.is_empty(),
+        "recovery-off rode through 4 mid-load crashes without failing anything"
+    );
+    assert!(
+        off.failures.iter().all(|fl| fl.attempts == 0),
+        "zero-budget failures must record zero attempts"
+    );
+    assert_eq!(
+        on.completions.len(),
+        reqs.len(),
+        "retry + failover must complete the entire offered stream (unbounded queues, \
+         a healthy device always available)"
+    );
+    assert!(on.failures.is_empty() && on.shed == 0);
+    assert!(
+        on.completions.len() > off.completions.len(),
+        "retry + failover did not recover goodput: {} vs {} completed",
+        on.completions.len(),
+        off.completions.len()
+    );
+    assert!(on.retries > 0, "failover path never exercised");
+    println!(
+        "\nrecovery: {} -> {} completed ({} failed without retries, {} retries with) ✓",
+        off.completions.len(),
+        on.completions.len(),
+        off.failures.len(),
+        on.retries
+    );
+
+    // 4. parallel digest equality under the active tier plan
+    let tier_reqs: Vec<Request> = Workload {
+        rate_per_s: 4000.0,
+        deadline_us: None,
+        n_requests: N_REQUESTS,
+        seed: 2020,
+    }
+    .generate_with_repeats(0, 0.4);
+    let single = run_tier(ExecMode::SingleThread, &tier_reqs);
+    let want = format!("{single:?}");
+    for threads in [2usize, 4] {
+        let got = run_tier(ExecMode::Parallel { threads }, &tier_reqs);
+        assert_eq!(
+            format!("{got:?}"),
+            want,
+            "ExecMode::Parallel {{ threads: {threads} }} diverged under the active fault plan"
+        );
+    }
+    assert!(single.faults > 0, "the generated tier plan injected nothing");
+    println!(
+        "tier under faults: {} completed, {} failed, {} faults, {} retries — parallel \
+         digests equal at T in {{2, 4}} ✓",
+        single.total_completed,
+        single.total_failed,
+        single.faults,
+        single.retries
+    );
+
+    // wall-clock cost of the fault-mode engine (host-side)
+    let mut b = Bench::new("fault");
+    b.run_with_throughput(
+        "fleet: 2x overload, 4 crashes, recovery off",
+        Some(("simReq".into(), N_REQUESTS as f64)),
+        || run_fleet(&reqs, RetryPolicy::off()).completions.len(),
+    );
+    b.run_with_throughput(
+        "fleet: 2x overload, 4 crashes, retry + failover",
+        Some(("simReq".into(), N_REQUESTS as f64)),
+        || run_fleet(&reqs, RetryPolicy::default()).completions.len(),
+    );
+    b.run_with_throughput(
+        "tier: 2 shards, cache, generated faults + outage, single-thread",
+        Some(("simReq".into(), N_REQUESTS as f64)),
+        || run_tier(ExecMode::SingleThread, &tier_reqs).total_completed,
+    );
+    b.report();
+}

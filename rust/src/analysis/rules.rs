@@ -1,4 +1,4 @@
-//! The `pallas-lint` rule set: determinism & invariant rules D001–D010.
+//! The `pallas-lint` rule set: determinism & invariant rules D001–D011.
 //!
 //! Rules D001–D007 are lexical — they pattern-match the token stream
 //! produced by [`crate::analysis::scanner`] — so rule text inside
@@ -41,7 +41,7 @@ use crate::analysis::units::{self, UnitsRules};
 /// A single lint finding.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Diagnostic {
-    /// Machine-readable rule id (`D001`..`D010`, `A000`, `A001`).
+    /// Machine-readable rule id (`D001`..`D011`, `A000`, `A001`).
     pub rule: &'static str,
     /// Repo-relative path of the offending file.
     pub file: String,
@@ -228,13 +228,38 @@ pub const RULES: &[RuleInfo] = &[
                   directions, so adding a rule without documenting it — or documenting \
                   a rule that no longer exists — fails the sweep.",
     },
+    RuleInfo {
+        id: "D011",
+        summary: "fault-injection entropy confined to coordinator/faults.rs: no Rng on \
+                  coordinator recovery/retry paths (request.rs workload generators exempt)",
+        scope: "rust/src/coordinator, outside #[cfg(test)]/#[test] items; faults.rs and \
+                request.rs exempt",
+        explain: "Fault-mode runs must stay bit-replayable: every crash, recovery, \
+                  straggler episode and outage window comes from the seeded FaultPlan \
+                  streams in coordinator/faults.rs, and retry backoff is a closed-form \
+                  deterministic schedule (RetryPolicy::backoff_us — no jitter). An Rng \
+                  anywhere else in the coordinator could smuggle fresh entropy into a \
+                  recovery decision, so the `Rng` ident itself is the tripwire. \
+                  request.rs is exempt (arrival-shape entropy, seeded per workload); \
+                  property-test fleet-shape helpers carry an allow-item naming why.",
+    },
 ];
 
 /// True for rule ids that may appear in an allow annotation.
 pub fn is_known_rule(id: &str) -> bool {
     matches!(
         id,
-        "D001" | "D002" | "D003" | "D004" | "D005" | "D006" | "D007" | "D008" | "D009" | "D010"
+        "D001"
+            | "D002"
+            | "D003"
+            | "D004"
+            | "D005"
+            | "D006"
+            | "D007"
+            | "D008"
+            | "D009"
+            | "D010"
+            | "D011"
     )
 }
 
@@ -251,6 +276,7 @@ pub fn lint_file(path: &str, text: &str) -> Vec<Diagnostic> {
     d005_corrupted_doc_markers(path, text, &scan, &mut raw);
     d006_unsafe(path, &scan, &mut raw);
     d007_concurrency(path, &scan, &mut raw);
+    d011_fault_entropy(path, &scan, &items, &mut raw);
     let units_rules = UnitsRules {
         d008: true,
         d009: path.starts_with("rust/src/coordinator/"),
@@ -751,6 +777,39 @@ fn d007_concurrency(path: &str, scan: &Scan, out: &mut Vec<Diagnostic>) {
     }
 }
 
+// ---------------------------------------------------------------- D011
+
+/// Files inside the confinement scope that may legitimately construct or
+/// hold an `Rng`: the fault-plan generator itself, and the workload
+/// generators (arrival-shape entropy is seeded per workload and predates
+/// fault injection; it never feeds a recovery decision).
+const D011_EXEMPT_FILES: &[&str] =
+    &["rust/src/coordinator/faults.rs", "rust/src/coordinator/request.rs"];
+
+fn d011_fault_entropy(path: &str, scan: &Scan, items: &[Item], out: &mut Vec<Diagnostic>) {
+    if !path.starts_with("rust/src/coordinator/") || D011_EXEMPT_FILES.contains(&path) {
+        return;
+    }
+    let toks = &scan.tokens;
+    let tests = structure::test_line_ranges(items);
+    let in_test = |line: u32| tests.iter().any(|&(a, b)| a <= line && line <= b);
+    for t in toks.iter() {
+        if t.kind == TokKind::Ident && t.text == "Rng" && !in_test(t.line) {
+            diag(
+                out,
+                "D011",
+                path,
+                t.line,
+                "`Rng` on a coordinator path — fault/recovery entropy is confined to \
+                 coordinator/faults.rs (seeded FaultPlan streams; request.rs holds the \
+                 workload-shape generators); retry and failover decisions must be \
+                 deterministic"
+                    .to_string(),
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1158,6 +1217,47 @@ mod tests {
             docs.push_str(&format!("| `{}` | {} |\n", r.id, r.summary));
         }
         assert!(d010_docs_drift(&docs).is_empty());
+    }
+
+    // ---- D011 ---------------------------------------------------------
+
+    #[test]
+    fn d011_fires_on_rng_in_coordinator_non_test_code() {
+        let src = "use crate::util::rng::Rng;\n\
+                   fn retry_with_jitter(rng: &mut Rng) -> f64 {\n\
+                   rng.unit_f64() * 100.0\n\
+                   }\n";
+        let got = rules_of(&lint_at(COORD, src));
+        assert_eq!(got, vec![("D011", 1), ("D011", 2)]);
+    }
+
+    #[test]
+    fn d011_is_silent_in_exempt_files_tests_and_outside_coordinator() {
+        let src = "use crate::util::rng::Rng;\n\
+                   fn gen(rng: &mut Rng) -> u64 { rng.next_u64() }\n";
+        assert!(lint_at("rust/src/coordinator/faults.rs", src).is_empty());
+        assert!(lint_at("rust/src/coordinator/request.rs", src).is_empty());
+        assert!(lint_at("rust/src/util/rng.rs", src).is_empty());
+        let in_tests = "#[cfg(test)]\n\
+                        mod tests {\n\
+                        use crate::util::rng::Rng;\n\
+                        fn h() { let _ = Rng::new(1); }\n\
+                        }\n";
+        assert!(lint_at(COORD, in_tests).is_empty());
+    }
+
+    #[test]
+    fn d011_allow_item_suppresses_with_reason() {
+        let src = "// pallas-lint: allow(D011, reason = \"property-test fleet shapes\")\n\
+                   use crate::util::rng::Rng;\n\
+                   // pallas-lint: allow-item(D011, reason = \"property-test fleet shapes\")\n\
+                   fn random_thing(rng: &mut Rng) -> u64 {\n\
+                   rng.next_u64()\n\
+                   }\n";
+        assert!(lint_at(COORD, src).is_empty());
+        let all = lint_all(COORD, src);
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|d| d.rule == "D011" && d.allowed));
     }
 
     // ---- annotations --------------------------------------------------

@@ -1,0 +1,549 @@
+//! Deterministic fault injection for the serving engines.
+//!
+//! A [`FaultPlan`] is a time-sorted schedule of [`FaultEvent`]s — device
+//! crashes and recoveries, straggler episodes, per-shard router outage
+//! windows — installed on a [`Fleet`](super::fleet::Fleet) or a
+//! [`ShardedFleet`](super::shard::ShardedFleet) *before* a run and then
+//! injected as first-class events on the existing event loops. Three
+//! properties make fault traces as disciplined as request traces:
+//!
+//! * **Fully deterministic.** The seeded generator
+//!   ([`FaultPlan::generate`]) draws per-device crash/recover intervals
+//!   from MTBF/MTTR exponentials on *independent RNG streams* (one per
+//!   device, one more for its straggler episodes), so the schedule for
+//!   device `d` is identical no matter how many other devices exist or
+//!   which parameters they use. Two generators with equal inputs are
+//!   bit-identical.
+//! * **Replayable.** [`FaultPlan::to_jsonl`] / [`FaultPlan::parse_jsonl`]
+//!   round-trip the schedule bit-exactly (shortest-exact float
+//!   formatting, like arrival traces), so a generated fault schedule can
+//!   be captured once and replayed under any engine configuration — or
+//!   hand-written via [`FaultPlan::scripted`].
+//! * **Confined entropy.** This module is the *only* place fault
+//!   randomness may live: pallas-lint rule `D011` bans `Rng` use
+//!   everywhere else in `rust/src/coordinator/` (workload generation in
+//!   `request.rs` excepted — arrival processes are modeled load, not
+//!   recovery logic). Retry backoff is deliberately deterministic
+//!   ([`RetryPolicy`](super::request::RetryPolicy)), so recovery paths
+//!   never sample.
+//!
+//! An empty plan ([`FaultPlan::none`]) is the engine-wide off switch:
+//! the engines push zero fault events and keep their exact pre-fault
+//! code paths, which is what makes the faults-off byte-identity property
+//! hold by construction (see `docs/ARCHITECTURE.md`).
+
+use std::collections::BTreeMap;
+
+use super::request::mix64;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One kind of injected fault. Device indexes are fleet-global when a
+/// plan is installed on a [`ShardedFleet`](super::shard::ShardedFleet)
+/// (the tier splits them across shards by its contiguous device
+/// partition) and fleet-local on a bare [`Fleet`](super::fleet::Fleet).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Device `device` crashes: the in-flight micro-batch is aborted
+    /// (partial-work cycles and energy are charged), its requests and
+    /// the device's queue enter the retry pipeline, and the device is
+    /// excluded from routing and stealing until it recovers.
+    Crash {
+        /// Index of the crashing device.
+        device: usize,
+    },
+    /// Device `device` comes back up and rejoins the routing indexes.
+    Recover {
+        /// Index of the recovering device.
+        device: usize,
+    },
+    /// Device `device` starts serving slowly: service cycles of batches
+    /// dispatched while the episode lasts are scaled by `factor`.
+    StragglerStart {
+        /// Index of the straggling device.
+        device: usize,
+        /// Service-cycle multiplier (> 1.0 slows the device down).
+        factor: f64,
+    },
+    /// Device `device` returns to nominal service speed.
+    StragglerEnd {
+        /// Index of the device leaving its straggler episode.
+        device: usize,
+    },
+    /// Shard `shard`'s front router stops forwarding: arrivals whose
+    /// router service would start inside the outage window are deferred
+    /// to its end (tier-level only; a bare fleet ignores outages).
+    RouterOutageStart {
+        /// Index of the shard whose router goes down.
+        shard: usize,
+    },
+    /// Shard `shard`'s router resumes forwarding.
+    RouterOutageEnd {
+        /// Index of the shard whose router comes back.
+        shard: usize,
+    },
+}
+
+/// One scheduled fault: a [`FaultKind`] at an absolute simulated time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute simulated time the fault fires, microseconds.
+    pub t_us: f64,
+    /// What happens at `t_us`.
+    pub kind: FaultKind,
+}
+
+/// Parameters for the seeded fault-schedule generator
+/// ([`FaultPlan::generate`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultParams {
+    /// Mean time between failures per device (exponential), microseconds.
+    pub mtbf_us: f64,
+    /// Mean time to repair per crash (exponential), microseconds.
+    pub mttr_us: f64,
+    /// Straggler service-cycle multiplier. `1.0` disables straggler
+    /// episodes; above `1.0`, each device additionally alternates
+    /// between nominal service and episodes at this factor (episode
+    /// spacing drawn from the MTBF mean, duration from the MTTR mean,
+    /// on an independent stream).
+    pub straggler_factor: f64,
+    /// RNG seed: schedules are bit-reproducible per seed.
+    pub seed: u64,
+}
+
+impl Default for FaultParams {
+    /// A moderate shape: crashes every ~2 s of simulated time, ~100 ms
+    /// repairs, no stragglers.
+    fn default() -> FaultParams {
+        FaultParams { mtbf_us: 2e6, mttr_us: 1e5, straggler_factor: 1.0, seed: 2020 }
+    }
+}
+
+/// A time-sorted, replayable fault schedule. The empty plan
+/// ([`FaultPlan::none`]) disables fault injection entirely.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, engines keep their exact pre-fault
+    /// code paths (byte-identical reports and traces).
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// Whether this plan injects nothing (the faults-off switch).
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Build a plan from an explicit event list. Events are stably
+    /// sorted by time (equal-time events keep list order), so a
+    /// hand-written schedule behaves exactly like a replayed one.
+    // pallas-lint: allow-item(D009, reason = "the asserts validate schedule config; panicking on misuse is the contract")
+    pub fn scripted(mut events: Vec<FaultEvent>) -> FaultPlan {
+        for e in &events {
+            assert!(e.t_us.is_finite() && e.t_us >= 0.0, "fault times must be finite and >= 0");
+            if let FaultKind::StragglerStart { factor, .. } = e.kind {
+                assert!(factor >= 1.0, "straggler factor must be >= 1.0");
+            }
+        }
+        events.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
+        FaultPlan { events }
+    }
+
+    /// Generate a schedule for `n_devices` devices over `[0, horizon_us)`:
+    /// per-device alternating up/down intervals (up ~ Exp(`mtbf_us`),
+    /// down ~ Exp(`mttr_us`)), plus straggler episodes when
+    /// `straggler_factor > 1.0`. Every device draws from its own RNG
+    /// streams, so schedules are stable under changes to the device
+    /// count (device `d`'s events never move when devices are added).
+    // pallas-lint: allow-item(D009, reason = "the asserts validate generator config; panicking on misuse is the contract")
+    pub fn generate(params: &FaultParams, n_devices: usize, horizon_us: f64) -> FaultPlan {
+        assert!(params.mtbf_us > 0.0, "mtbf_us must be positive");
+        assert!(params.mttr_us > 0.0, "mttr_us must be positive");
+        assert!(params.straggler_factor >= 1.0, "straggler factor must be >= 1.0");
+        assert!(horizon_us > 0.0 && horizon_us.is_finite(), "horizon must be finite and positive");
+        let exp = |rng: &mut Rng, mean_us: f64| {
+            let u = rng.unit_f64().max(1e-12);
+            -u.ln() * mean_us
+        };
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for d in 0..n_devices {
+            // independent crash/repair stream per device
+            let mut rng = Rng::new(mix64(params.seed ^ mix64(0xFA17_0000_0000_0000 ^ d as u64)));
+            let mut t = 0.0f64;
+            loop {
+                t += exp(&mut rng, params.mtbf_us);
+                if t >= horizon_us {
+                    break;
+                }
+                events.push(FaultEvent { t_us: t, kind: FaultKind::Crash { device: d } });
+                let back = t + exp(&mut rng, params.mttr_us);
+                if back >= horizon_us {
+                    break;
+                }
+                events.push(FaultEvent { t_us: back, kind: FaultKind::Recover { device: d } });
+                t = back;
+            }
+            if params.straggler_factor > 1.0 {
+                // independent straggler-episode stream per device
+                let mut rng =
+                    Rng::new(mix64(params.seed ^ mix64(0x57A6_0000_0000_0000 ^ d as u64)));
+                let factor = params.straggler_factor;
+                let mut t = 0.0f64;
+                loop {
+                    t += exp(&mut rng, params.mtbf_us);
+                    if t >= horizon_us {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        t_us: t,
+                        kind: FaultKind::StragglerStart { device: d, factor },
+                    });
+                    let end = t + exp(&mut rng, params.mttr_us);
+                    if end >= horizon_us {
+                        break;
+                    }
+                    events
+                        .push(FaultEvent { t_us: end, kind: FaultKind::StragglerEnd { device: d } });
+                    t = end;
+                }
+            }
+        }
+        FaultPlan::scripted(events)
+    }
+
+    /// The schedule, in time order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Split the plan's device-targeted events across shards, remapping
+    /// global device indexes to shard-local ones. `ranges[s]` is shard
+    /// `s`'s half-open global device range `(lo, hi)`; events targeting
+    /// a device outside every range are dropped, and router-outage
+    /// events stay at the tier (see [`FaultPlan::outage_windows`]).
+    pub(crate) fn shard_split(&self, ranges: &[(usize, usize)]) -> Vec<FaultPlan> {
+        let mut plans: Vec<FaultPlan> = vec![FaultPlan::none(); ranges.len()];
+        for e in &self.events {
+            let device = match e.kind {
+                FaultKind::Crash { device }
+                | FaultKind::Recover { device }
+                | FaultKind::StragglerStart { device, .. }
+                | FaultKind::StragglerEnd { device } => device,
+                FaultKind::RouterOutageStart { .. } | FaultKind::RouterOutageEnd { .. } => continue,
+            };
+            for (s, &(lo, hi)) in ranges.iter().enumerate() {
+                if device >= lo && device < hi {
+                    let local = device - lo;
+                    let kind = match e.kind {
+                        FaultKind::Crash { .. } => FaultKind::Crash { device: local },
+                        FaultKind::Recover { .. } => FaultKind::Recover { device: local },
+                        FaultKind::StragglerStart { factor, .. } => {
+                            FaultKind::StragglerStart { device: local, factor }
+                        }
+                        FaultKind::StragglerEnd { .. } => FaultKind::StragglerEnd { device: local },
+                        // outage kinds were skipped above; identity keeps
+                        // the match panic-free (D009)
+                        outage => outage,
+                    };
+                    plans[s].events.push(FaultEvent { t_us: e.t_us, kind });
+                    break;
+                }
+            }
+        }
+        plans
+    }
+
+    /// Collapse the plan's router-outage events into per-shard
+    /// half-open stall windows `[start, end)`, in time order. An
+    /// unmatched `RouterOutageStart` yields a window open to infinity;
+    /// events for shards `>= shards` are dropped.
+    pub fn outage_windows(&self, shards: usize) -> Vec<Vec<(f64, f64)>> {
+        let mut windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); shards];
+        let mut open: Vec<Option<f64>> = vec![None; shards];
+        for e in &self.events {
+            match e.kind {
+                FaultKind::RouterOutageStart { shard } if shard < shards => {
+                    if open[shard].is_none() {
+                        open[shard] = Some(e.t_us);
+                    }
+                }
+                FaultKind::RouterOutageEnd { shard } if shard < shards => {
+                    if let Some(start) = open[shard].take() {
+                        if e.t_us > start {
+                            windows[shard].push((start, e.t_us));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (shard, start) in open.into_iter().enumerate() {
+            if let Some(start) = start {
+                windows[shard].push((start, f64::INFINITY));
+            }
+        }
+        windows
+    }
+
+    /// Serialize the schedule as JSON lines, one
+    /// `{"t_us":..,"kind":"..",..}` object per event (target fields are
+    /// `device`, `shard`, plus `factor` for `straggler_start`).
+    /// Round-trips through [`FaultPlan::parse_jsonl`] bit-exactly.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let mut obj = BTreeMap::new();
+            obj.insert("t_us".to_string(), Json::F64(e.t_us));
+            let (kind, target_key, target) = match e.kind {
+                FaultKind::Crash { device } => ("crash", "device", device),
+                FaultKind::Recover { device } => ("recover", "device", device),
+                FaultKind::StragglerStart { device, factor } => {
+                    obj.insert("factor".to_string(), Json::F64(factor));
+                    ("straggler_start", "device", device)
+                }
+                FaultKind::StragglerEnd { device } => ("straggler_end", "device", device),
+                FaultKind::RouterOutageStart { shard } => ("router_outage_start", "shard", shard),
+                FaultKind::RouterOutageEnd { shard } => ("router_outage_end", "shard", shard),
+            };
+            obj.insert("kind".to_string(), Json::Str(kind.to_string()));
+            obj.insert(target_key.to_string(), Json::I64(target as i64));
+            out.push_str(&Json::Obj(obj).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSON-lines fault schedule (empty lines are skipped).
+    /// Round-trips [`FaultPlan::to_jsonl`] exactly; events are re-sorted
+    /// stably by time like [`FaultPlan::scripted`], which is the
+    /// identity on a dumped (already sorted) schedule.
+    pub fn parse_jsonl(text: &str) -> Result<FaultPlan, String> {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let at = |what: &str| format!("fault trace line {}: {what}", lineno + 1);
+            let j = Json::parse(line).map_err(|e| at(&e))?;
+            let t_us = j.get("t_us").as_f64().ok_or_else(|| at("missing `t_us`"))?;
+            if !t_us.is_finite() || t_us < 0.0 {
+                return Err(at("`t_us` must be finite and >= 0"));
+            }
+            let kind = j.req_str("kind").map_err(|e| at(&e))?;
+            let device = || -> Result<usize, String> {
+                j.req_usize("device").map_err(|e| at(&e))
+            };
+            let shard = || -> Result<usize, String> { j.req_usize("shard").map_err(|e| at(&e)) };
+            let kind = match kind {
+                "crash" => FaultKind::Crash { device: device()? },
+                "recover" => FaultKind::Recover { device: device()? },
+                "straggler_start" => {
+                    let factor = j.get("factor").as_f64().ok_or_else(|| at("missing `factor`"))?;
+                    if factor.is_nan() || factor < 1.0 {
+                        return Err(at("`factor` must be >= 1.0"));
+                    }
+                    FaultKind::StragglerStart { device: device()?, factor }
+                }
+                "straggler_end" => FaultKind::StragglerEnd { device: device()? },
+                "router_outage_start" => FaultKind::RouterOutageStart { shard: shard()? },
+                "router_outage_end" => FaultKind::RouterOutageEnd { shard: shard()? },
+                other => return Err(at(&format!("unknown fault kind `{other}`"))),
+            };
+            events.push(FaultEvent { t_us, kind });
+        }
+        Ok(FaultPlan::scripted(events))
+    }
+}
+
+/// Defer a timestamp out of any router-outage window that contains it:
+/// a router service that would start inside `[a, b)` starts at `b`
+/// instead (windows are scanned in time order, so a deferral that lands
+/// inside a later window is deferred again). The identity on an empty
+/// window list — which is what keeps the faults-off tier byte-identical.
+pub(crate) fn outage_defer(windows: &[(f64, f64)], mut t: f64) -> f64 {
+    for &(a, b) in windows {
+        if t >= a && t < b {
+            t = b;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn empty_plan_is_none_and_roundtrips() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert_eq!(p.to_jsonl(), "");
+        assert_eq!(FaultPlan::parse_jsonl("").unwrap(), p);
+        assert_eq!(FaultPlan::default(), p);
+    }
+
+    #[test]
+    fn scripted_sorts_stably_and_validates() {
+        let p = FaultPlan::scripted(vec![
+            FaultEvent { t_us: 50.0, kind: FaultKind::Recover { device: 0 } },
+            FaultEvent { t_us: 10.0, kind: FaultKind::Crash { device: 0 } },
+            FaultEvent { t_us: 10.0, kind: FaultKind::Crash { device: 1 } },
+        ]);
+        let kinds: Vec<f64> = p.events().iter().map(|e| e.t_us).collect();
+        assert_eq!(kinds, vec![10.0, 10.0, 50.0]);
+        // equal-time events keep list order (stable sort)
+        assert_eq!(p.events()[0].kind, FaultKind::Crash { device: 0 });
+        assert_eq!(p.events()[1].kind, FaultKind::Crash { device: 1 });
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_well_formed() {
+        let params = FaultParams { mtbf_us: 5e4, mttr_us: 1e4, straggler_factor: 3.0, seed: 7 };
+        let a = FaultPlan::generate(&params, 6, 1e6);
+        let b = FaultPlan::generate(&params, 6, 1e6);
+        assert_eq!(a, b, "same params must generate bit-identical schedules");
+        assert!(!a.is_none(), "a 20x MTBF horizon must produce crashes");
+        // sorted, in-horizon, and crash/recover alternate per device
+        let mut down = vec![false; 6];
+        let mut last = 0.0f64;
+        for e in a.events() {
+            assert!(e.t_us >= last && e.t_us < 1e6);
+            last = e.t_us;
+            match e.kind {
+                FaultKind::Crash { device } => {
+                    assert!(!down[device], "crash while already down");
+                    down[device] = true;
+                }
+                FaultKind::Recover { device } => {
+                    assert!(down[device], "recover while up");
+                    down[device] = false;
+                }
+                FaultKind::StragglerStart { factor, .. } => assert_eq!(factor, 3.0),
+                FaultKind::StragglerEnd { .. } => {}
+                _ => panic!("generator never emits router outages"),
+            }
+        }
+    }
+
+    #[test]
+    fn generator_streams_are_stable_under_device_count() {
+        // device d's schedule must not move when more devices exist
+        let params = FaultParams::default();
+        let small = FaultPlan::generate(&params, 2, 1e7);
+        let large = FaultPlan::generate(&params, 8, 1e7);
+        let only = |p: &FaultPlan, d: usize| -> Vec<FaultEvent> {
+            p.events()
+                .iter()
+                .filter(|e| {
+                    matches!(e.kind,
+                        FaultKind::Crash { device } | FaultKind::Recover { device } if device == d)
+                })
+                .copied()
+                .collect()
+        };
+        assert_eq!(only(&small, 0), only(&large, 0));
+        assert_eq!(only(&small, 1), only(&large, 1));
+    }
+
+    #[test]
+    fn prop_fault_trace_jsonl_roundtrip_is_exact() {
+        check("fault-jsonl-roundtrip", 60, |rng, _| {
+            let n = 1 + rng.below(30) as usize;
+            let events: Vec<FaultEvent> = (0..n)
+                .map(|_| {
+                    let t_us = rng.unit_f64() * 1e7;
+                    let device = rng.below(16) as usize;
+                    let kind = match rng.below(6) {
+                        0 => FaultKind::Crash { device },
+                        1 => FaultKind::Recover { device },
+                        2 => FaultKind::StragglerStart {
+                            device,
+                            factor: 1.0 + rng.unit_f64() * 7.0,
+                        },
+                        3 => FaultKind::StragglerEnd { device },
+                        4 => FaultKind::RouterOutageStart { shard: device % 4 },
+                        _ => FaultKind::RouterOutageEnd { shard: device % 4 },
+                    };
+                    FaultEvent { t_us, kind }
+                })
+                .collect();
+            let plan = FaultPlan::scripted(events);
+            let text = plan.to_jsonl();
+            let back = FaultPlan::parse_jsonl(&text).map_err(|e| format!("parse failed: {e}"))?;
+            if back != plan {
+                return Err("fault trace round-trip diverged".into());
+            }
+            if back.to_jsonl() != text {
+                return Err("fault trace re-dump diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(FaultPlan::parse_jsonl("{\"t_us\":1.0}").is_err());
+        assert!(FaultPlan::parse_jsonl("not json").is_err());
+        assert!(FaultPlan::parse_jsonl("{\"t_us\":1.0,\"kind\":\"crash\"}").is_err());
+        assert!(FaultPlan::parse_jsonl("{\"t_us\":1.0,\"kind\":\"nope\",\"device\":0}").is_err());
+        assert!(FaultPlan::parse_jsonl(
+            "{\"t_us\":-1.0,\"kind\":\"crash\",\"device\":0}"
+        )
+        .is_err());
+        assert!(FaultPlan::parse_jsonl(
+            "{\"t_us\":1.0,\"kind\":\"straggler_start\",\"device\":0,\"factor\":0.5}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn shard_split_remaps_devices_and_keeps_outages_at_tier() {
+        let plan = FaultPlan::scripted(vec![
+            FaultEvent { t_us: 10.0, kind: FaultKind::Crash { device: 0 } },
+            FaultEvent { t_us: 20.0, kind: FaultKind::Crash { device: 3 } },
+            FaultEvent { t_us: 25.0, kind: FaultKind::StragglerStart { device: 5, factor: 2.0 } },
+            FaultEvent { t_us: 30.0, kind: FaultKind::RouterOutageStart { shard: 1 } },
+            FaultEvent { t_us: 40.0, kind: FaultKind::RouterOutageEnd { shard: 1 } },
+            FaultEvent { t_us: 50.0, kind: FaultKind::Crash { device: 99 } },
+        ]);
+        // two shards: devices [0,3) and [3,6)
+        let plans = plan.shard_split(&[(0, 3), (3, 6)]);
+        assert_eq!(plans[0].events(), &[FaultEvent {
+            t_us: 10.0,
+            kind: FaultKind::Crash { device: 0 }
+        }]);
+        assert_eq!(plans[1].events(), &[
+            FaultEvent { t_us: 20.0, kind: FaultKind::Crash { device: 0 } },
+            FaultEvent { t_us: 25.0, kind: FaultKind::StragglerStart { device: 2, factor: 2.0 } },
+        ]);
+        let windows = plan.outage_windows(2);
+        assert!(windows[0].is_empty());
+        assert_eq!(windows[1], vec![(30.0, 40.0)]);
+    }
+
+    #[test]
+    fn outage_defer_steps_through_chained_windows() {
+        let w = vec![(10.0, 20.0), (20.0, 30.0), (50.0, f64::INFINITY)];
+        assert_eq!(outage_defer(&w, 5.0), 5.0);
+        assert_eq!(outage_defer(&w, 10.0), 30.0, "deferral chains through abutting windows");
+        assert_eq!(outage_defer(&w, 29.0), 30.0);
+        assert_eq!(outage_defer(&w, 30.0), 30.0, "window ends are exclusive");
+        assert_eq!(outage_defer(&w, 60.0), f64::INFINITY);
+        assert_eq!(outage_defer(&[], 42.0), 42.0, "no windows is the identity");
+    }
+
+    #[test]
+    fn unmatched_outage_start_opens_to_infinity() {
+        let plan = FaultPlan::scripted(vec![FaultEvent {
+            t_us: 7.0,
+            kind: FaultKind::RouterOutageStart { shard: 0 },
+        }]);
+        assert_eq!(plan.outage_windows(1)[0], vec![(7.0, f64::INFINITY)]);
+    }
+}

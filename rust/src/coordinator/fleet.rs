@@ -68,9 +68,11 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
 use std::ops::Bound;
 
 use crate::energy::OperatingPoint;
+// pallas-lint: allow(D011, reason = "workload-shape helpers only (random_fleet/random_devices); no recovery-path sampling")
 use crate::util::rng::Rng;
 
-use super::request::{Request, WorkloadSource};
+use super::faults::{FaultKind, FaultPlan};
+use super::request::{Request, RetryPolicy, WorkloadSource};
 use super::variant::{DegradePolicy, VariantTable};
 
 /// Routing policies.
@@ -344,6 +346,18 @@ pub struct Device {
     /// Active energy spent on residency switches (a component of
     /// `energy_uj`, tracked separately for the report).
     switch_energy_uj: f64,
+    /// Whether the node is alive. Only a [`FaultPlan`] crash event ever
+    /// clears this; down devices are excluded from every routing and
+    /// steal index until the matching recover event.
+    up: bool,
+    /// Service-time stretch factor of an active straggler episode
+    /// (`1.0` = nominal). Stretches wall-clock only — the cycle count,
+    /// and therefore the energy, of an inference is unchanged.
+    straggle: f64,
+    /// Crash generation counter: bumped on every crash so in-flight
+    /// item-finish events from the aborted batch are recognized as
+    /// stale and dropped (standard event-cancellation-by-epoch).
+    epoch: u64,
 }
 
 impl Device {
@@ -365,7 +379,15 @@ impl Device {
             resident_variant: 0,
             net_switches: 0,
             switch_energy_uj: 0.0,
+            up: true,
+            straggle: 1.0,
+            epoch: 0,
         }
+    }
+
+    /// Whether the node is alive (no un-recovered [`FaultPlan`] crash).
+    pub fn is_up(&self) -> bool {
+        self.up
     }
 
     /// Wall-clock of one inference on this node, in microseconds.
@@ -553,6 +575,24 @@ pub struct Rejection {
     pub arrival_us: f64,
 }
 
+/// A request abandoned by the recovery machinery: crash aborts (or
+/// failover dead ends) consumed its whole retry budget — the
+/// `Failed { attempts }` leaf of the
+/// [`RequestOutcome`](super::request::RequestOutcome) taxonomy.
+/// Distinct from a [`Rejection`], which is a deliberate admission-control
+/// decision on a healthy fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Failure {
+    /// The failed request's id.
+    pub id: u64,
+    /// Network the request belonged to.
+    pub net: u32,
+    /// When the final attempt was abandoned.
+    pub t_us: f64,
+    /// Attempts consumed before giving up (the retry budget in force).
+    pub attempts: u32,
+}
+
 /// One point of the queue-depth time series: device `device` held `depth`
 /// pending requests at `t_us` (sampled after every enqueue and dispatch).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -620,6 +660,17 @@ pub struct FleetReport {
     /// and EDF insert work; the shard-tier counters stay zero for a bare
     /// fleet). See [`WorkCounters`].
     pub work: WorkCounters,
+    /// Device crash events that fired during the run (from the installed
+    /// [`FaultPlan`]; 0 on a fault-free run).
+    pub faults: u64,
+    /// Retry re-injections the recovery machinery performed for requests
+    /// a crash aborted or stranded.
+    pub retries: u64,
+    /// Requests that exhausted their retry budget, in failure order.
+    pub failures: Vec<Failure>,
+    /// Device downtime samples (crash to recover, microseconds), in
+    /// recovery order — the `time_to_recovery` distribution.
+    pub recovery_us: Vec<f64>,
 }
 
 /// Floor applied to the sustained-throughput span, in microseconds.
@@ -743,6 +794,14 @@ enum EventKind {
     Arrival(Request),
     DispatchBatch { device: usize },
     Finish { device: usize },
+    /// One request of a fault-mode deferred batch reaching its finish
+    /// time (see [`Fleet::dispatch_deferred`]). Carries the device crash
+    /// epoch it was scheduled under: a crash bumps the epoch, so finishes
+    /// of the aborted batch are recognized as stale and dropped.
+    ItemFinish { device: usize, epoch: u64 },
+    /// A scheduled [`FaultPlan`] event (crash / recover / straggler).
+    /// Router outages are tier-level and never enter a fleet's heap.
+    Fault(FaultKind),
 }
 
 impl PartialEq for Event {
@@ -781,6 +840,11 @@ pub struct Departure {
     pub t_us: f64,
     /// `true` for a completion, `false` for an admission-control shed.
     pub completed: bool,
+    /// `true` when the request exhausted its retry budget after crash
+    /// aborts (`completed` is `false` too) — the fault-failure leaf of
+    /// the departure taxonomy. Always `false` on a fault-free run, and
+    /// for sheds.
+    pub failed: bool,
     /// Precision-variant level the request was served at (0 = full
     /// precision; always 0 for sheds). The sharded tier keys its result
     /// cache on this, so single-flight joins resolve to the variant that
@@ -815,10 +879,55 @@ struct RunState {
     /// Entries are removed at dispatch; lookups are get-only (never
     /// iterated), so event order cannot depend on hash order.
     variant_of: HashMap<u64, u8>,
+    /// Fault-mode only: the deferred in-flight batch per device (slab
+    /// position, so no hash iteration anywhere near event order). Always
+    /// all-`None` on a fault-free run.
+    pending: Vec<Option<PendingBatch>>,
+    /// Fault-mode retry side-map: attempts consumed per request id.
+    /// Point lookups only (never iterated); empty on a fault-free run.
+    attempts: HashMap<u64, u32>,
+    /// Crash timestamp per device (valid while the device is down).
+    down_since: Vec<f64>,
+    /// Crash events that fired.
+    faults: u64,
+    /// Retry re-injections performed.
+    retries: u64,
+    /// Requests whose retry budget drained, in failure order.
+    failures: Vec<Failure>,
+    /// Downtime samples (crash to recover), in recovery order.
+    recovery_us: Vec<f64>,
+}
+
+/// One request of a fault-mode deferred batch: the request itself (kept
+/// so a crash can re-inject it) plus its fully priced completion record
+/// (times are committed at dispatch, exactly like the legacy path).
+#[derive(Debug, Clone)]
+struct PendingItem {
+    req: Request,
+    completion: Completion,
+}
+
+/// A dispatched-but-unsettled batch under fault mode: completions,
+/// departures and the served/energy/busy totals are deferred to per-item
+/// [`EventKind::ItemFinish`] events so a crash can abort whatever has not
+/// finished yet (see [`Fleet::dispatch_deferred`]).
+#[derive(Debug, Clone)]
+struct PendingBatch {
+    /// Dispatch instant (activation start, before wake-up/switch).
+    start_us: f64,
+    /// Finish of the last item.
+    finish_us: f64,
+    /// Per-item service wall-clock (straggle-stretched).
+    item_inf_us: f64,
+    /// Per-item inference energy (unstretched — cycles are unchanged).
+    item_energy_uj: f64,
+    /// Index of the next unsettled item.
+    next: usize,
+    items: Vec<PendingItem>,
 }
 
 impl RunState {
-    fn new(record: bool) -> RunState {
+    fn new(record: bool, n_devices: usize) -> RunState {
         RunState {
             heap: BinaryHeap::new(),
             arr_seq: 0,
@@ -833,6 +942,13 @@ impl RunState {
             batched_requests: 0,
             steals: 0,
             variant_of: HashMap::new(),
+            pending: vec![None; n_devices],
+            attempts: HashMap::new(),
+            down_since: vec![0.0; n_devices],
+            faults: 0,
+            retries: 0,
+            failures: Vec::new(),
+            recovery_us: Vec::new(),
         }
     }
 
@@ -1020,7 +1136,8 @@ impl RouteIndex {
         let cfu = dev.committed_free_us;
         let inf = dev.inference_us();
         let new = DevSnap {
-            admissible: depth < bound,
+            // a down device leaves every routing set until recovery
+            admissible: depth < bound && dev.up,
             drained: cfu <= now,
             fa: fkey(cfu + inf),
             inf: fkey(inf),
@@ -1156,6 +1273,15 @@ pub struct Fleet {
     /// Precision-variant table brownout degrades through (the empty
     /// default serves everything at full precision).
     variants: VariantTable,
+    /// Deterministic fault schedule replayed into every subsequent run
+    /// (the empty default is fault-free and byte-identical to the
+    /// pre-fault engine).
+    fault_plan: FaultPlan,
+    /// Retry budget + backoff for requests a crash aborts or strands.
+    retry: RetryPolicy,
+    /// Cached `!fault_plan.is_none()`: selects the deferred dispatch
+    /// path (the legacy inline path runs untouched when this is false).
+    fault_mode: bool,
     /// The in-flight event-driven run, if one is open (see
     /// [`Fleet::begin_run`]).
     run_state: Option<RunState>,
@@ -1185,8 +1311,29 @@ impl Fleet {
             work: WorkCounters::default(),
             index: RouteIndex::default(),
             variants: VariantTable::default(),
+            fault_plan: FaultPlan::none(),
+            retry: RetryPolicy::off(),
+            fault_mode: false,
             run_state: None,
         }
+    }
+
+    /// Install a deterministic fault schedule and the retry policy the
+    /// recovery machinery applies to requests a crash aborts. The plan is
+    /// replayed into every subsequent run as first-class events on the
+    /// event queue (router-outage kinds are tier-level and ignored by a
+    /// bare fleet). Installing [`FaultPlan::none`] restores the exact
+    /// pre-fault engine: reports and traces are byte-identical
+    /// (property-tested across the scheduling matrix).
+    pub fn set_faults(&mut self, plan: FaultPlan, retry: RetryPolicy) {
+        self.fault_mode = !plan.is_none();
+        self.fault_plan = plan;
+        self.retry = retry;
+    }
+
+    /// The installed fault schedule (empty by default).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.fault_plan
     }
 
     /// Install the precision-variant table brownout serving degrades
@@ -1349,7 +1496,7 @@ impl Fleet {
         if let Some(dl) = req.deadline_us {
             for &d in &self.index.energy_order {
                 let dev = &self.devices[d];
-                if dev.queue_len() >= bound {
+                if !dev.up || dev.queue_len() >= bound {
                     continue;
                 }
                 self.work.route_device_scans += 1;
@@ -1385,7 +1532,7 @@ impl Fleet {
                 for k in 0..n {
                     let d = (self.rr_next + k) % n;
                     self.work.route_device_scans += 1;
-                    if self.devices[d].queue_len() < bound {
+                    if self.devices[d].up && self.devices[d].queue_len() < bound {
                         self.rr_next = (d + 1) % n;
                         return Some(d);
                     }
@@ -1394,11 +1541,11 @@ impl Fleet {
             }
             Policy::LeastLoaded => {
                 self.work.route_device_scans +=
-                    self.devices.iter().filter(|dev| dev.queue_len() < bound).count() as u64;
+                    self.devices.iter().filter(|dev| dev.up && dev.queue_len() < bound).count() as u64;
                 self.devices
                     .iter()
                     .enumerate()
-                    .filter(|(_, dev)| dev.queue_len() < bound)
+                    .filter(|(_, dev)| dev.up && dev.queue_len() < bound)
                     .min_by(|(_, a), (_, b)| {
                         let fa = a.committed_free_us.max(now) + a.inference_us();
                         let fb = b.committed_free_us.max(now) + b.inference_us();
@@ -1409,7 +1556,7 @@ impl Fleet {
             Policy::EnergyAware => {
                 // admissible devices, energy-sorted
                 let mut order: Vec<usize> = (0..self.devices.len())
-                    .filter(|&i| self.devices[i].queue_len() < bound)
+                    .filter(|&i| self.devices[i].up && self.devices[i].queue_len() < bound)
                     .collect();
                 self.work.route_device_scans += order.len() as u64;
                 if order.is_empty() {
@@ -1454,11 +1601,11 @@ impl Fleet {
                     Some(_) => 2,
                 };
                 self.work.route_device_scans +=
-                    self.devices.iter().filter(|dev| dev.queue_len() < bound).count() as u64;
+                    self.devices.iter().filter(|dev| dev.up && dev.queue_len() < bound).count() as u64;
                 self.devices
                     .iter()
                     .enumerate()
-                    .filter(|(_, dev)| dev.queue_len() < bound)
+                    .filter(|(_, dev)| dev.up && dev.queue_len() < bound)
                     .min_by(|(_, a), (_, b)| {
                         rank(a).cmp(&rank(b)).then_with(|| {
                             let fa = a.committed_free_us.max(now) + a.inference_us();
@@ -1492,6 +1639,9 @@ impl Fleet {
             dev.resident_variant = 0;
             dev.net_switches = 0;
             dev.switch_energy_uj = 0.0;
+            dev.up = true;
+            dev.straggle = 1.0;
+            dev.epoch = 0;
         }
         self.index.rebuild(&self.devices, self.policy, &self.config, mode);
     }
@@ -1566,7 +1716,28 @@ impl Fleet {
     /// replayable trace) and returned by [`Fleet::end_run`].
     pub fn begin_run(&mut self, record: bool) {
         self.reset();
-        self.run_state = Some(RunState::new(record));
+        let mut rs = RunState::new(record, self.devices.len());
+        // replay the fault schedule as band-0 events: at equal
+        // timestamps a fault precedes every arrival injected after
+        // begin_run (faults hold the lowest band-0 sequence numbers), so
+        // a crash at a request's exact arrival instant sheds or re-routes
+        // it, and a crash at a batch's exact finish instant loses the
+        // batch. Router-outage kinds are tier-level and skipped here.
+        for ev in self.fault_plan.events() {
+            match ev.kind {
+                FaultKind::RouterOutageStart { .. } | FaultKind::RouterOutageEnd { .. } => {}
+                kind => {
+                    rs.heap.push(Event {
+                        time: ev.t_us,
+                        band: 0,
+                        seq: rs.arr_seq,
+                        kind: EventKind::Fault(kind),
+                    });
+                    rs.arr_seq += 1;
+                }
+            }
+        }
+        self.run_state = Some(rs);
     }
 
     /// Inject an arrival into the open run. Arrivals occupy tie band 0
@@ -1635,7 +1806,10 @@ impl Fleet {
         let bound = self.config.queue_bound;
         match ev.kind {
             EventKind::Arrival(req) => {
-                if rs.record {
+                // a retry re-injection (id present in the attempts map) is
+                // the same logical request: the replay trace must not
+                // record it again. The map is empty on a fault-free run.
+                if rs.record && !rs.attempts.contains_key(&req.id) {
                     rs.injected.push(req);
                 }
                 match self.route(&req, now) {
@@ -1664,17 +1838,44 @@ impl Fleet {
                         self.index.reindex(d, &self.devices[d], bound, now);
                     }
                     None => {
-                        rs.rejections.push(Rejection { id: req.id, arrival_us: req.arrival_us });
-                        // a shed request completes (unsuccessfully) now:
-                        // closed-loop clients observe it and move on
-                        departed.push(Departure {
-                            id: req.id,
-                            t_us: now,
-                            completed: false,
-                            variant: 0,
-                        });
+                        if rs.attempts.contains_key(&req.id) {
+                            // a retried request found no admissible device
+                            // (every candidate down or full): failover
+                            // spends another attempt rather than shedding
+                            // — admission control only judges fresh work
+                            self.retry_or_fail(req, now, &mut rs, departed);
+                        } else {
+                            rs.rejections
+                                .push(Rejection { id: req.id, arrival_us: req.arrival_us });
+                            // a shed request completes (unsuccessfully) now:
+                            // closed-loop clients observe it and move on
+                            departed.push(Departure {
+                                id: req.id,
+                                t_us: now,
+                                completed: false,
+                                failed: false,
+                                variant: 0,
+                            });
+                        }
                     }
                 }
+            }
+            // fault mode defers completion commitment to per-item finish
+            // events so a crash can abort the unfinished tail; the legacy
+            // inline path below runs byte-identically when no fault plan
+            // is installed (it is never entered otherwise).
+            EventKind::DispatchBatch { device: d } if self.fault_mode => {
+                self.dispatch_deferred(d, now, &mut rs);
+            }
+            EventKind::ItemFinish { device: d, epoch } => {
+                // stale finishes from a crash-aborted batch carry the old
+                // epoch and are dropped (the crash already settled them)
+                if self.devices[d].epoch == epoch {
+                    self.settle_item(d, now, &mut rs, departed);
+                }
+            }
+            EventKind::Fault(kind) => {
+                self.apply_fault(kind, now, &mut rs, departed);
             }
             EventKind::DispatchBatch { device: d } => {
                 let wake_us = self.wakeup_us(d);
@@ -1736,6 +1937,7 @@ impl Fleet {
                             id: req.id,
                             t_us: t,
                             completed: true,
+                            failed: false,
                             variant: v,
                         });
                         rs.completions.push(Completion {
@@ -1817,6 +2019,301 @@ impl Fleet {
         true
     }
 
+    /// Fault-mode dispatch: batch selection, residency accounting and
+    /// the committed-drain projection are identical to the legacy inline
+    /// path in [`Fleet::step_into`], but the completion records,
+    /// departures and the served/energy/busy totals are deferred to
+    /// per-item [`EventKind::ItemFinish`] events so a crash can abort
+    /// whatever has not finished yet. Wake-up and residency-switch
+    /// energy are charged here — they are physically spent the moment
+    /// the activation starts. Stragglers stretch the per-item wall-clock
+    /// (cycles, and therefore energy, are unchanged); the routing
+    /// projection deliberately keeps the nominal service time, like any
+    /// load estimator that cannot see a slow node coming.
+    // pallas-lint: allow-item(D009, reason = "hot dispatch path over dense slab ids validated at rebuild")
+    fn dispatch_deferred(&mut self, d: usize, now: f64, rs: &mut RunState) {
+        let wake_us = self.wakeup_us(d);
+        let batch_max = self.config.batch_max;
+        let wakeup_cycles = self.config.wakeup_cycles;
+        let net_switch_cycles = self.config.net_switch_cycles;
+        let bound = self.config.queue_bound;
+        let dev = &mut self.devices[d];
+        if !dev.up || dev.in_flight || dev.queue_len() == 0 {
+            return; // stale dispatch (possibly scheduled before a crash)
+        }
+        let Some(&front) = dev.queue_front() else { return };
+        let net = front.net;
+        let v = rs.variant_of.get(&front.id).copied().unwrap_or(0);
+        rs.batch.clear();
+        while rs.batch.len() < batch_max
+            && dev.queue_front().is_some_and(|r| {
+                r.net == net && rs.variant_of.get(&r.id).copied().unwrap_or(0) == v
+            })
+        {
+            let Some(req) = dev.queue_pop_front() else { break };
+            rs.batch.push(req);
+        }
+        rs.series.push(QueueSample { t_us: now, device: d, depth: dev.queue_len() });
+        let switching = match dev.resident_net {
+            Some(r) => r != net || dev.resident_variant != v,
+            None => false,
+        };
+        let switch_cycles = if switching { net_switch_cycles } else { 0 };
+        let switch_us = dev.op.time_ms(switch_cycles) * 1e3;
+        if switching {
+            dev.net_switches += 1;
+            dev.switch_energy_uj += dev.op.energy_uj(switch_cycles);
+        }
+        dev.resident_net = Some(net);
+        dev.resident_variant = v;
+        let start = now;
+        let serve_cycles = self.variants.scale_cycles(v, dev.cycles_per_inference);
+        let inf = dev.inference_us_for(serve_cycles) * dev.straggle;
+        let item_energy_uj = dev.op.energy_uj(serve_cycles);
+        let mut t = start + wake_us + switch_us;
+        let mut items = Vec::with_capacity(rs.batch.len());
+        for req in &rs.batch {
+            let s = t;
+            t += inf;
+            items.push(PendingItem {
+                req: *req,
+                completion: Completion {
+                    id: req.id,
+                    device: d,
+                    net: req.net,
+                    variant: v,
+                    batch: rs.batches,
+                    arrival_us: req.arrival_us,
+                    start_us: s,
+                    finish_us: t,
+                    deadline_missed: req
+                        .deadline_us
+                        .map(|dl| t - req.arrival_us > dl)
+                        .unwrap_or(false),
+                },
+            });
+        }
+        let finish = t;
+        let k = rs.batch.len() as u64;
+        if !rs.variant_of.is_empty() {
+            for req in &rs.batch {
+                rs.variant_of.remove(&req.id);
+            }
+        }
+        dev.in_flight = true;
+        dev.busy_until_us = finish;
+        dev.energy_uj += dev.op.energy_uj(wakeup_cycles + switch_cycles);
+        dev.committed_free_us += wake_us + switch_us;
+        rs.batches += 1;
+        rs.batched_requests += k;
+        let epoch = dev.epoch;
+        for item in &items {
+            rs.push_internal(item.completion.finish_us, EventKind::ItemFinish { device: d, epoch });
+        }
+        rs.pending[d] = Some(PendingBatch {
+            start_us: start,
+            finish_us: finish,
+            item_inf_us: inf,
+            item_energy_uj,
+            next: 0,
+            items,
+        });
+        self.index.reindex(d, &self.devices[d], bound, now);
+    }
+
+    /// Settle the next unsettled item of device `d`'s deferred batch:
+    /// emit its departure and completion and charge its served/energy
+    /// share. The last item also settles the batch-level busy time and
+    /// redispatches (or steals into) the device — the fault-mode mirror
+    /// of the legacy `Finish` branch.
+    // pallas-lint: allow-item(D009, reason = "hot stepping path over dense slab ids validated at rebuild")
+    fn settle_item(&mut self, d: usize, now: f64, rs: &mut RunState, departed: &mut Vec<Departure>) {
+        let (item, item_energy, last, span) = {
+            let Some(pb) = rs.pending[d].as_mut() else { return };
+            let Some(item) = pb.items.get(pb.next) else { return };
+            let item = item.clone();
+            pb.next += 1;
+            (item, pb.item_energy_uj, pb.next == pb.items.len(), pb.finish_us - pb.start_us)
+        };
+        departed.push(Departure {
+            id: item.req.id,
+            t_us: item.completion.finish_us,
+            completed: true,
+            failed: false,
+            variant: item.completion.variant,
+        });
+        rs.completions.push(item.completion);
+        let dev = &mut self.devices[d];
+        dev.served += 1;
+        dev.energy_uj += item_energy;
+        if last {
+            dev.busy_us += span;
+            dev.in_flight = false;
+            rs.pending[d] = None;
+            if dev.queue_len() > 0 {
+                rs.push_internal(now, EventKind::DispatchBatch { device: d });
+            } else if self.config.steal {
+                self.steal_after_drain(d, now, rs);
+            }
+        }
+    }
+
+    /// Fault-mode mirror of the legacy `Finish`-branch steal block: pull
+    /// the deepest victim's tail request over to the drained thief. Down
+    /// devices are never victims by construction — a crash drains the
+    /// dead device's queue and routing excludes it until recovery, so
+    /// its depth entry is gone.
+    // pallas-lint: allow-item(D009, reason = "hot stepping path over dense slab ids validated at rebuild")
+    fn steal_after_drain(&mut self, d: usize, now: f64, rs: &mut RunState) {
+        let bound = self.config.queue_bound;
+        if let Some(victim) = self.steal_victim(d) {
+            let Some(req) = self.devices[victim].queue_pop_back() else {
+                return; // unreachable: steal_victim only returns non-empty queues
+            };
+            let v = rs.variant_of.get(&req.id).copied().unwrap_or(0);
+            let victim_inf = self.scaled_inference_us(victim, v);
+            self.devices[victim].committed_free_us =
+                (self.devices[victim].committed_free_us - victim_inf).max(now);
+            rs.series.push(QueueSample {
+                t_us: now,
+                device: victim,
+                depth: self.devices[victim].queue_len(),
+            });
+            self.index.reindex(victim, &self.devices[victim], bound, now);
+            let thief_inf = self.scaled_inference_us(d, v);
+            let thief = &mut self.devices[d];
+            thief.committed_free_us = thief.committed_free_us.max(now) + thief_inf;
+            thief.push_stolen(req);
+            rs.series.push(QueueSample { t_us: now, device: d, depth: 1 });
+            rs.steals += 1;
+            rs.push_internal(now, EventKind::DispatchBatch { device: d });
+            self.index.reindex(d, &self.devices[d], bound, now);
+        }
+    }
+
+    /// Apply one scheduled fault event.
+    ///
+    /// *Crash*: the device goes down and its crash epoch bumps (stale
+    /// item finishes cancel). The unfinished tail of the in-flight batch
+    /// is aborted under the documented abort-cost model — busy time up
+    /// to the crash instant, the in-progress inference charged pro rata,
+    /// wake-up/switch energy already paid at activation start, items not
+    /// yet started uncharged — and every aborted or queued request is
+    /// retried (deterministic backoff) or failed once its budget drains.
+    /// *Recover*: the device rejoins the routing index and a downtime
+    /// sample is recorded. *Straggler*: the service-time stretch factor
+    /// is set/cleared for subsequent dispatches (the in-flight batch
+    /// keeps its committed times).
+    // pallas-lint: allow-item(D009, reason = "fault events address devices by dense slab position")
+    fn apply_fault(
+        &mut self,
+        kind: FaultKind,
+        now: f64,
+        rs: &mut RunState,
+        departed: &mut Vec<Departure>,
+    ) {
+        let bound = self.config.queue_bound;
+        match kind {
+            FaultKind::Crash { device: d } => {
+                if d >= self.devices.len() || !self.devices[d].up {
+                    return;
+                }
+                rs.faults += 1;
+                rs.down_since[d] = now;
+                {
+                    let dev = &mut self.devices[d];
+                    dev.up = false;
+                    dev.epoch += 1;
+                    dev.in_flight = false;
+                    dev.busy_until_us = now;
+                    dev.committed_free_us = now;
+                }
+                if let Some(pb) = rs.pending[d].take() {
+                    let dev = &mut self.devices[d];
+                    dev.busy_us += (now - pb.start_us).max(0.0);
+                    if let Some(item) = pb.items.get(pb.next) {
+                        let item_start = item.completion.finish_us - pb.item_inf_us;
+                        let frac = if pb.item_inf_us > 0.0 {
+                            ((now - item_start) / pb.item_inf_us).clamp(0.0, 1.0)
+                        } else {
+                            1.0
+                        };
+                        dev.energy_uj += frac * pb.item_energy_uj;
+                    }
+                    for item in pb.items.into_iter().skip(pb.next) {
+                        self.retry_or_fail(item.req, now, rs, departed);
+                    }
+                }
+                while let Some(req) = self.devices[d].queue_pop_front() {
+                    rs.variant_of.remove(&req.id);
+                    self.retry_or_fail(req, now, rs, departed);
+                }
+                rs.series.push(QueueSample { t_us: now, device: d, depth: 0 });
+                self.index.reindex(d, &self.devices[d], bound, now);
+            }
+            FaultKind::Recover { device: d } => {
+                if d >= self.devices.len() || self.devices[d].up {
+                    return;
+                }
+                rs.recovery_us.push(now - rs.down_since[d]);
+                let dev = &mut self.devices[d];
+                dev.up = true;
+                dev.busy_until_us = now;
+                dev.committed_free_us = now;
+                self.index.reindex(d, &self.devices[d], bound, now);
+            }
+            FaultKind::StragglerStart { device: d, factor } => {
+                if d < self.devices.len() {
+                    self.devices[d].straggle = factor.max(1.0);
+                }
+            }
+            FaultKind::StragglerEnd { device: d } => {
+                if d < self.devices.len() {
+                    self.devices[d].straggle = 1.0;
+                }
+            }
+            // router outages stall the sharded tier's forwarding lanes;
+            // a bare fleet has no router to stall
+            FaultKind::RouterOutageStart { .. } | FaultKind::RouterOutageEnd { .. } => {}
+        }
+    }
+
+    /// Retry a crash-aborted (or failover-stranded) request, or fail it
+    /// once its budget drains. Retries re-enter as band-0 arrivals after
+    /// the policy's deterministic backoff, keeping their original
+    /// arrival timestamp semantics through the normal admission path;
+    /// the re-injection deliberately bypasses [`Fleet::inject`] so the
+    /// replay trace does not record the same logical request twice.
+    fn retry_or_fail(
+        &self,
+        req: Request,
+        now: f64,
+        rs: &mut RunState,
+        departed: &mut Vec<Departure>,
+    ) {
+        let attempt = rs.attempts.get(&req.id).copied().unwrap_or(0);
+        if attempt < self.retry.budget {
+            rs.attempts.insert(req.id, attempt + 1);
+            rs.retries += 1;
+            rs.heap.push(Event {
+                time: now + self.retry.backoff_us(attempt),
+                band: 0,
+                seq: rs.arr_seq,
+                kind: EventKind::Arrival(req),
+            });
+            rs.arr_seq += 1;
+        } else {
+            rs.failures.push(Failure { id: req.id, net: req.net, t_us: now, attempts: attempt });
+            departed.push(Departure {
+                id: req.id,
+                t_us: now,
+                completed: false,
+                failed: true,
+                variant: 0,
+            });
+        }
+    }
+
     /// Close the open run: finalize the [`FleetReport`] and return it
     /// together with the recorded arrival trace (empty unless
     /// [`Fleet::begin_run`] was given `record = true`).
@@ -1831,9 +2328,15 @@ impl Fleet {
             rs.completions,
             rs.rejections,
             rs.series,
-            rs.batches,
-            rs.batched_requests,
-            rs.steals,
+            RunTotals {
+                batches: rs.batches,
+                batched_requests: rs.batched_requests,
+                steals: rs.steals,
+                faults: rs.faults,
+                retries: rs.retries,
+                failures: rs.failures,
+                recovery_us: rs.recovery_us,
+            },
         );
         (report, rs.injected)
     }
@@ -1960,7 +2463,12 @@ impl Fleet {
             }
         }
         let n = completions.len() as u64;
-        self.finalize(completions, Vec::new(), Vec::new(), n, n, 0)
+        self.finalize(
+            completions,
+            Vec::new(),
+            Vec::new(),
+            RunTotals { batches: n, batched_requests: n, ..RunTotals::default() },
+        )
     }
 
     fn finalize(
@@ -1968,9 +2476,7 @@ impl Fleet {
         completions: Vec<Completion>,
         rejections: Vec<Rejection>,
         series: Vec<QueueSample>,
-        batches: u64,
-        batched_requests: u64,
-        steals: u64,
+        totals: RunTotals,
     ) -> FleetReport {
         // sustained-throughput span: first arrival to last finish (floored
         // at MIN_THROUGHPUT_SPAN_US for degenerate single-instant runs),
@@ -2019,16 +2525,38 @@ impl Fleet {
                 .map(|d| if span_us > 0.0 { (d.busy_us / span_us).min(1.0) } else { 0.0 })
                 .collect(),
             queue_depth_series: series,
-            batches,
-            mean_batch_size: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
+            batches: totals.batches,
+            mean_batch_size: if totals.batches > 0 {
+                totals.batched_requests as f64 / totals.batches as f64
+            } else {
+                0.0
+            },
             net_switches: self.devices.iter().map(|d| d.net_switches).sum(),
             switch_energy_uj: self.devices.iter().map(|d| d.switch_energy_uj).sum(),
-            steals,
+            steals: totals.steals,
             work: self.work,
+            faults: totals.faults,
+            retries: totals.retries,
+            failures: totals.failures,
+            recovery_us: totals.recovery_us,
             completions,
             rejections,
         }
     }
+}
+
+/// Scalar + fault totals of a finished run, bundled for
+/// [`Fleet::finalize`] (the synchronous baseline defaults the fault
+/// fields — it models a fault-free fleet by construction).
+#[derive(Debug, Clone, Default)]
+struct RunTotals {
+    batches: u64,
+    batched_requests: u64,
+    steals: u64,
+    faults: u64,
+    retries: u64,
+    failures: Vec<Failure>,
+    recovery_us: Vec<f64>,
 }
 
 /// Internal adapter replaying a borrowed arrival slice — what
@@ -2094,11 +2622,13 @@ pub fn gap8_mixed_devices(n: usize, cycles_per_inference: u64) -> Vec<Device> {
 }
 
 /// Randomized fleet helper for property tests.
+// pallas-lint: allow-item(D011, reason = "fleet-shape generation for property tests; not a recovery path")
 pub fn random_fleet(rng: &mut Rng, policy: Policy) -> Fleet {
     Fleet::new(random_devices(rng), policy)
 }
 
 /// Randomized device set (1-6 mixed LP/HP nodes) for property tests.
+// pallas-lint: allow-item(D011, reason = "fleet-shape generation for property tests; not a recovery path")
 pub fn random_devices(rng: &mut Rng) -> Vec<Device> {
     let n = 1 + rng.below(6) as usize;
     (0..n)
@@ -2116,6 +2646,7 @@ pub fn random_devices(rng: &mut Rng) -> Vec<Device> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::{FaultEvent, FaultParams};
     use crate::coordinator::request::{merge_streams, ClosedLoopSource, TraceSource, Workload};
     use crate::energy::{GAP8_HP, GAP8_LP};
     use crate::util::check::check;
@@ -3342,5 +3873,275 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_faults_off_matches_baseline() {
+        // the fault-machinery-off oracle: installing [`FaultPlan::none`]
+        // (with a live retry policy) must leave the engine byte-identical
+        // to a fleet that never heard of faults — the full report `Debug`
+        // rendering AND the recorded replay trace — across the whole
+        // scheduling matrix, in both the indexed engine and the retained
+        // naive-scan oracle
+        check("fleet-faults-off-vs-baseline", 30, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[2usize, 8, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 20_000]),
+                net_switch_cycles: *rng.pick(&[0u64, 40_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                degrade: if rng.chance(0.5) {
+                    DegradePolicy::Watermark { watermark: 2 }
+                } else {
+                    DegradePolicy::Off
+                },
+                ..FleetConfig::default()
+            };
+            let devices = random_devices(rng);
+            let w = Workload {
+                rate_per_s: 1000.0 + rng.below(3000) as f64,
+                deadline_us: if rng.chance(0.5) { Some(2e4) } else { None },
+                n_requests: 150,
+                seed: rng.next_u64(),
+            };
+            let variants = rng.chance(0.5);
+            let mk = |faults: bool, naive: bool| {
+                let mut f = Fleet::with_config(devices.clone(), policy, config);
+                if variants {
+                    f.set_variants(VariantTable::mobilenet_default());
+                }
+                if naive {
+                    f.set_hot_path_mode(HotPathMode::NaiveOracle);
+                }
+                if faults {
+                    f.set_faults(FaultPlan::none(), RetryPolicy::default());
+                }
+                f
+            };
+            let (want, injected) = mk(false, false).run_source_traced(&mut w.clone());
+            let want = format!("{want:?}");
+            let trace = TraceSource::to_jsonl(&injected);
+            for (name, naive) in [("indexed", false), ("naive-oracle", true)] {
+                let (got, inj) = mk(true, naive).run_source_traced(&mut w.clone());
+                if format!("{got:?}") != want {
+                    return Err(format!(
+                        "{name}: report diverged under FaultPlan::none ({policy:?})"
+                    ));
+                }
+                if TraceSource::to_jsonl(&inj) != trace {
+                    return Err(format!("{name}: replay trace diverged under FaultPlan::none"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_exactly_once_under_faults() {
+        // under any generated fault schedule: every offered request
+        // resolves to exactly one of completed / shed / failed (the
+        // outcome ids partition the offered stream, per tenant), every
+        // failure burned the whole retry budget, recovery samples are
+        // positive and bounded by the crash count, and an identical
+        // re-run reproduces the report byte for byte
+        check("fleet-exactly-once-under-faults", 25, |rng, _| {
+            let policy = *rng.pick(&[
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::EnergyAware,
+                Policy::TenancyAware,
+            ]);
+            let config = FleetConfig {
+                queue_bound: *rng.pick(&[4usize, usize::MAX]),
+                batch_max: *rng.pick(&[1usize, 4]),
+                wakeup_cycles: *rng.pick(&[0u64, 20_000]),
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default()
+            };
+            let devices = random_devices(rng);
+            let n_dev = devices.len();
+            let mk = |net: u32, seed: u64| {
+                Workload { rate_per_s: 1500.0, deadline_us: None, n_requests: 100, seed }
+                    .generate_for_net(net)
+            };
+            let reqs = merge_streams(&[mk(0, rng.next_u64()), mk(1, rng.next_u64())]);
+            let horizon = reqs.last().map(|r| r.arrival_us).unwrap_or(0.0) + 1e5;
+            let params = FaultParams {
+                mtbf_us: *rng.pick(&[3e4, 1e5, 5e5]),
+                mttr_us: *rng.pick(&[1e4, 1e5]),
+                straggler_factor: *rng.pick(&[1.0, 2.5]),
+                seed: rng.next_u64(),
+            };
+            let plan = FaultPlan::generate(&params, n_dev, horizon);
+            let retry = RetryPolicy { budget: rng.below(4), ..RetryPolicy::default() };
+            let run = || {
+                let mut f = Fleet::with_config(devices.clone(), policy, config);
+                f.set_faults(plan.clone(), retry);
+                f.run(&reqs)
+            };
+            let a = run();
+            if format!("{a:?}") != format!("{:?}", run()) {
+                return Err("identical faulted runs produced different reports".into());
+            }
+            if a.completions.len() + a.shed + a.failures.len() != reqs.len() {
+                return Err(format!(
+                    "conservation broke: {} completed + {} shed + {} failed != {} offered",
+                    a.completions.len(),
+                    a.shed,
+                    a.failures.len(),
+                    reqs.len()
+                ));
+            }
+            let mut ids: Vec<u64> = a
+                .completions
+                .iter()
+                .map(|c| c.id)
+                .chain(a.rejections.iter().map(|r| r.id))
+                .chain(a.failures.iter().map(|f| f.id))
+                .collect();
+            ids.sort_unstable();
+            let mut offered: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+            offered.sort_unstable();
+            if ids != offered {
+                return Err("outcome ids do not partition the offered stream".into());
+            }
+            for net in [0u32, 1] {
+                let offered_n = reqs.iter().filter(|r| r.net == net).count();
+                let done = a.completions.iter().filter(|c| c.net == net).count();
+                let failed = a.failures.iter().filter(|f| f.net == net).count();
+                let shed = a
+                    .rejections
+                    .iter()
+                    .filter(|rej| reqs.iter().any(|r| r.id == rej.id && r.net == net))
+                    .count();
+                if done + shed + failed != offered_n {
+                    return Err(format!("tenant {net} accounting broke"));
+                }
+            }
+            for f in &a.failures {
+                if f.attempts != retry.budget {
+                    return Err(format!(
+                        "failure gave up after {} attempts with budget {}",
+                        f.attempts, retry.budget
+                    ));
+                }
+            }
+            if a.recovery_us.len() > a.faults as usize {
+                return Err("more recovery samples than crashes".into());
+            }
+            if a.recovery_us.iter().any(|&t| t <= 0.0) {
+                return Err("non-positive time-to-recovery sample".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn crash_aborts_in_flight_work_and_retry_completes_elsewhere() {
+        // two identical devices; the only request is in flight on d0 when
+        // d0 crashes 1 us into service. The request must retry after the
+        // deterministic backoff, land on the healthy d1 and complete
+        // exactly once; the report carries the fault count, the retry
+        // count and the crash-to-recover downtime sample.
+        let devices = vec![
+            Device::new("d0".into(), GAP8_LP, 100_000),
+            Device::new("d1".into(), GAP8_LP, 100_000),
+        ];
+        let plan = FaultPlan::scripted(vec![
+            FaultEvent { t_us: 1.0, kind: FaultKind::Crash { device: 0 } },
+            FaultEvent { t_us: 50_000.0, kind: FaultKind::Recover { device: 0 } },
+        ]);
+        let reqs =
+            vec![Request { id: 7, arrival_us: 0.0, deadline_us: None, net: 0, input_digest: 9 }];
+        let mut fleet = Fleet::new(devices, Policy::LeastLoaded);
+        fleet.set_faults(plan, RetryPolicy::default());
+        let report = fleet.run(&reqs);
+        assert_eq!(report.completions.len(), 1);
+        assert_eq!(report.completions[0].id, 7);
+        assert_eq!(report.completions[0].device, 1, "retry must land on the healthy device");
+        assert_eq!(report.faults, 1);
+        assert_eq!(report.retries, 1);
+        assert!(report.failures.is_empty() && report.shed == 0);
+        assert_eq!(report.recovery_us, vec![50_000.0 - 1.0]);
+        // the retry re-enters as a fresh arrival after the first backoff
+        let backoff = RetryPolicy::default().backoff_us(0);
+        assert!(
+            (report.completions[0].start_us - (1.0 + backoff)).abs() < 1e-9,
+            "retry dispatched at {} but crash + backoff is {}",
+            report.completions[0].start_us,
+            1.0 + backoff
+        );
+    }
+
+    #[test]
+    fn exhausted_retry_budget_fails_exactly_once() {
+        // a single device that crashes mid-service and never recovers:
+        // with budget 0 the request fails on the spot; with budget 2 it
+        // burns both retries against the dead fleet and then fails with
+        // `attempts == 2`. Either way conservation holds with zero sheds.
+        for budget in [0u32, 2] {
+            let devices = vec![Device::new("d0".into(), GAP8_LP, 100_000)];
+            let plan = FaultPlan::scripted(vec![FaultEvent {
+                t_us: 1.0,
+                kind: FaultKind::Crash { device: 0 },
+            }]);
+            let reqs = vec![Request {
+                id: 3,
+                arrival_us: 0.0,
+                deadline_us: None,
+                net: 0,
+                input_digest: 4,
+            }];
+            let mut fleet = Fleet::new(devices, Policy::LeastLoaded);
+            fleet.set_faults(plan, RetryPolicy { budget, ..RetryPolicy::default() });
+            let report = fleet.run(&reqs);
+            assert!(report.completions.is_empty() && report.shed == 0);
+            assert_eq!(report.failures.len(), 1, "budget {budget}");
+            assert_eq!(report.failures[0].id, 3);
+            assert_eq!(report.failures[0].attempts, budget);
+            assert_eq!(report.retries, u64::from(budget));
+            assert!(report.recovery_us.is_empty(), "no recover event was scheduled");
+        }
+    }
+
+    #[test]
+    fn straggler_window_stretches_service_time_and_clears() {
+        // one device; a 2x straggler episode covering the first request
+        // doubles its service time, and a request dispatched after the
+        // episode closes serves at nominal speed again
+        let dev = || vec![Device::new("d0".into(), GAP8_LP, 100_000)];
+        let req = |id: u64, at: f64| Request {
+            id,
+            arrival_us: at,
+            deadline_us: None,
+            net: 0,
+            input_digest: id,
+        };
+        let base = {
+            let mut f = Fleet::new(dev(), Policy::LeastLoaded);
+            let r = f.run(&[req(1, 0.0)]);
+            r.completions[0].finish_us - r.completions[0].start_us
+        };
+        let plan = FaultPlan::scripted(vec![
+            FaultEvent { t_us: 0.0, kind: FaultKind::StragglerStart { device: 0, factor: 2.0 } },
+            FaultEvent { t_us: 5e5, kind: FaultKind::StragglerEnd { device: 0 } },
+        ]);
+        let mut f = Fleet::new(dev(), Policy::LeastLoaded);
+        f.set_faults(plan, RetryPolicy::off());
+        let r = f.run(&[req(1, 0.0), req(2, 1e6)]);
+        assert_eq!(r.completions.len(), 2);
+        let dur = |i: usize| r.completions[i].finish_us - r.completions[i].start_us;
+        assert!((dur(0) - 2.0 * base).abs() < 1e-6, "straggled: {} vs 2x{base}", dur(0));
+        assert!((dur(1) - base).abs() < 1e-6, "post-episode: {} vs {base}", dur(1));
+        // stragglers are slowdowns, not faults: nothing crashed or retried
+        assert_eq!((r.faults, r.retries, r.failures.len()), (0, 0, 0));
     }
 }

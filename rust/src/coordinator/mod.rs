@@ -104,9 +104,29 @@
 //! cross-shard interaction deterministically, byte-identical to the
 //! single-threaded loop (which remains the property-test oracle).
 //!
+//! # Fault injection & recovery
+//!
+//! The [`faults`] module is the *only* place fault-injection entropy
+//! lives (enforced by pallas-lint rule D011): a seeded [`FaultPlan`]
+//! derives per-device crash/recover intervals from MTBF/MTTR
+//! exponentials on independent RNG streams, plus straggler episodes and
+//! per-shard router outage windows — or is constructed from an explicit
+//! scripted schedule, with a JSONL round-trip so fault traces replay
+//! like request traces. [`Fleet::set_faults`] injects the plan as
+//! first-class events on the event loop: a crash aborts the in-flight
+//! micro-batch (partial work is charged), retries or fails its requests
+//! under a deterministic [`RetryPolicy`], and excludes the device from
+//! every routing/steal index until recovery. The sharded tier
+//! ([`shard::ShardedFleet::set_faults`]) splits the plan across shards,
+//! stalls router lanes through outage windows, and promotes the oldest
+//! joiner when a single-flight cache owner dies. With the empty plan the
+//! whole machinery is property-tested to be byte-identical — reports
+//! *and* traces — to the pre-fault engine across the scheduling matrix.
+//!
 //! [`OperatingPoint::power_mw`]: crate::energy::OperatingPoint::power_mw
 //! [`OperatingPoint::idle_power_mw`]: crate::energy::OperatingPoint::idle_power_mw
 
+pub mod faults;
 pub mod fleet;
 pub mod parallel;
 pub mod request;
@@ -114,14 +134,15 @@ pub mod server;
 pub mod shard;
 pub mod variant;
 
+pub use faults::{FaultEvent, FaultKind, FaultParams, FaultPlan};
 pub use fleet::{
-    gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Departure, Device, Fleet,
+    gap8_fleet, gap8_mixed_devices, random_fleet, Completion, Departure, Device, Failure, Fleet,
     FleetConfig, FleetReport, HotPathMode, Policy, QueueDiscipline, QueueSample, Rejection,
     WorkCounters, DEFAULT_WAKEUP_CYCLES, MIN_THROUGHPUT_SPAN_US,
 };
 pub use request::{
-    merge_streams, BurstyWorkload, ClosedLoopSource, Request, TraceSource, Workload,
-    WorkloadSource,
+    merge_streams, BurstyWorkload, ClosedLoopSource, Request, RequestOutcome, RetryPolicy,
+    TraceSource, Workload, WorkloadSource,
 };
 pub use server::{Served, Server, ServeStats};
 pub use shard::{

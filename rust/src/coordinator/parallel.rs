@@ -110,6 +110,7 @@ use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Mutex;
 
+use super::faults::outage_defer;
 use super::fleet::{Departure, Fleet, HotPathMode, WorkCounters};
 use super::request::{Request, WorkloadSource};
 use super::shard::{
@@ -202,6 +203,11 @@ struct TierSim<'a> {
     shed_joins: u64,
     energy_saved_uj: f64,
     shard_inference_uj: Vec<f64>,
+    /// Per-shard router outage windows from the tier's fault plan
+    /// (always length K; all-empty on fault-free tiers). Static data:
+    /// a stall only pushes router exits later, so the conservative
+    /// lookahead rule is untouched.
+    outages: &'a [Vec<(f64, f64)>],
 }
 
 impl TierSim<'_> {
@@ -219,15 +225,20 @@ impl TierSim<'_> {
         // pallas-lint: allow(D004, reason = "callers only pump the tier band after peeking a head")
         let ev = self.heap.pop().expect("the tier owns the earliest event");
         let req = ev.req;
-        if self.record {
-            self.injected.push(req);
+        if !ev.promoted {
+            if self.record {
+                self.injected.push(req);
+            }
+            self.n_tier += 1;
+            self.span_start = self.span_start.min(req.arrival_us);
         }
-        self.n_tier += 1;
-        self.span_start = self.span_start.min(req.arrival_us);
         let s = shard_for(&self.config, self.ring, self.routed.len(), &req);
         // FIFO router queue: one coordinator front-end per shard —
-        // the delay metric counts only the wait, not the service time
-        let start = self.router_free[s].max(req.arrival_us);
+        // the delay metric counts only the wait, not the service
+        // time. A router outage window stalls entry until it ends
+        // (the stall counts as router delay).
+        let start =
+            outage_defer(&self.outages[s], self.router_free[s].max(req.arrival_us));
         let exit = start + self.config.router_service_us;
         self.router_free[s] = exit;
         self.router_delay_sum += start - req.arrival_us;
@@ -237,6 +248,17 @@ impl TierSim<'_> {
         // request's budget shrinks by the time spent in the router
         if let Some(dl) = fwd.deadline_us {
             fwd.deadline_us = Some(dl - (exit - req.arrival_us));
+        }
+
+        if ev.promoted {
+            // failover re-forward of a promoted joiner: already
+            // recorded and counted at its first arrival, and its key
+            // is the pending one it now owns — skip the front-door
+            // bookkeeping and the cache probe, take ownership, and
+            // forward into the (same) owning shard
+            self.owner_key.insert(req.id, (req.net, req.input_digest));
+            self.routed[s] += 1;
+            return Ok(Some((s, fwd)));
         }
 
         if self.config.cache {
@@ -331,6 +353,38 @@ impl TierSim<'_> {
             // ...then, if it owned a pending cache key, its
             // waiting joiners settle with it
             let Some(&key) = self.owner_key.get(&d.id) else { continue };
+            if d.failed {
+                // dead single-flight owner (retry budget exhausted):
+                // detach it and promote the oldest joiner to owner —
+                // statement for statement the sequential loop's rule,
+                // so promoted arrivals get identical (time, seq) stamps
+                self.owner_key.remove(&d.id);
+                let Some(p) = self.pending.get_mut(&key) else { continue };
+                if p.waiters.is_empty() {
+                    self.pending.remove(&key);
+                    continue;
+                }
+                let w = p.waiters.remove(0);
+                let t_promo = w.exit_us.max(d.t_us);
+                let promo = Request {
+                    id: w.id,
+                    arrival_us: t_promo,
+                    // the deadline stays anchored to the joiner's
+                    // original tier arrival: its budget shrank by
+                    // the time spent waiting on the dead owner
+                    deadline_us: w.deadline_us.map(|dl| dl - (t_promo - w.arrival_us)),
+                    net: w.net,
+                    input_digest: key.1,
+                };
+                self.heap.push(TierArrival {
+                    time: t_promo,
+                    seq: self.seq,
+                    req: promo,
+                    promoted: true,
+                });
+                self.seq += 1;
+                continue;
+            }
             // pallas-lint: allow(D004, reason = "owner_key and pending are inserted together and removed together")
             let p = self.pending.get_mut(&key).expect("owner ids map to pending keys");
             p.fate = if d.completed {
@@ -582,10 +636,11 @@ pub(crate) fn run_parallel(
         shed_joins: 0,
         energy_saved_uj: 0.0,
         shard_inference_uj,
+        outages: &tier.outages,
     };
     for req in source.initial() {
         let seq = sim.seq;
-        sim.heap.push(TierArrival { time: req.arrival_us, seq, req });
+        sim.heap.push(TierArrival { time: req.arrival_us, seq, req, promoted: false });
         sim.seq += 1;
     }
 
@@ -664,7 +719,7 @@ pub(crate) fn run_parallel(
         &mut sim.pending,
         pending_order,
         &mut work,
-    );
+    )?;
 
     let reports = tier.shards.iter_mut().map(|f| f.end_run().0).collect();
     let TierSim {

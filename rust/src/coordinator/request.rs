@@ -88,6 +88,70 @@ pub(crate) fn mix64(mut x: u64) -> u64 {
     x
 }
 
+/// How a request ultimately left the system — the exactly-once outcome
+/// taxonomy of the fault-tolerant tier. Every offered request resolves
+/// to exactly one of these (conservation:
+/// `completed + shed + failed == offered`, per tenant, under any
+/// [`FaultPlan`](super::faults::FaultPlan)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served to completion (possibly after retries, possibly from the
+    /// result cache).
+    Completed,
+    /// Shed by admission control (every admissible queue full at
+    /// arrival) — a deliberate overload response, not a failure.
+    Shed,
+    /// Lost to faults: every attempt crashed or found no live device,
+    /// and the retry budget ran out after `attempts` retries.
+    Failed {
+        /// Retries attempted before giving up.
+        attempts: u32,
+    },
+}
+
+/// Deterministic retry policy for fault recovery: a bounded number of
+/// re-injections with exponential backoff. Deliberately RNG-free (no
+/// jitter): recovery paths must never sample (pallas-lint rule `D011`
+/// confines fault entropy to `coordinator/faults.rs`), and the
+/// deterministic schedule is what keeps fault-mode runs bit-replayable.
+///
+/// `budget == 0` disables recovery entirely — a crashed request fails
+/// on the spot, which is the recovery-off baseline the fault-tolerance
+/// bench compares against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum number of retries per request (0 = fail immediately).
+    pub budget: u32,
+    /// Backoff before the first retry, microseconds; retry `k` waits
+    /// `base_backoff_us * 2^k`, capped at [`RetryPolicy::max_backoff_us`].
+    pub base_backoff_us: f64,
+    /// Upper bound on a single backoff interval, microseconds.
+    pub max_backoff_us: f64,
+}
+
+impl RetryPolicy {
+    /// No retries: the recovery-off baseline.
+    pub fn off() -> RetryPolicy {
+        RetryPolicy { budget: 0, base_backoff_us: 0.0, max_backoff_us: 0.0 }
+    }
+
+    /// The backoff before retry number `attempt` (0-based): exponential
+    /// doubling from the base, capped. Deterministic — equal inputs give
+    /// equal waits on every engine.
+    pub fn backoff_us(&self, attempt: u32) -> f64 {
+        let exp = 2.0f64.powi(attempt.min(62) as i32);
+        (self.base_backoff_us * exp).min(self.max_backoff_us)
+    }
+}
+
+impl Default for RetryPolicy {
+    /// Three retries from 200 us, capped at 10 ms — a sane shape for
+    /// the microsecond-scale service times the fleet models.
+    fn default() -> RetryPolicy {
+        RetryPolicy { budget: 3, base_backoff_us: 200.0, max_backoff_us: 10_000.0 }
+    }
+}
+
 /// Poisson arrivals with optional per-request deadlines.
 #[derive(Debug, Clone)]
 pub struct Workload {
@@ -834,6 +898,25 @@ mod tests {
         let text = TraceSource::to_jsonl(&reqs);
         let back = TraceSource::parse_jsonl(&text).unwrap();
         assert_eq!(back.requests(), &reqs[..]);
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic_doubling_and_capped() {
+        let p = RetryPolicy { budget: 5, base_backoff_us: 100.0, max_backoff_us: 1_000.0 };
+        assert_eq!(p.backoff_us(0), 100.0);
+        assert_eq!(p.backoff_us(1), 200.0);
+        assert_eq!(p.backoff_us(2), 400.0);
+        assert_eq!(p.backoff_us(3), 800.0);
+        assert_eq!(p.backoff_us(4), 1_000.0, "backoff must cap");
+        assert_eq!(p.backoff_us(40), 1_000.0, "huge attempts must not overflow");
+        assert_eq!(RetryPolicy::off().budget, 0);
+        let d = RetryPolicy::default();
+        assert!(d.budget > 0 && d.backoff_us(0) > 0.0);
+        assert_ne!(
+            RequestOutcome::Failed { attempts: 2 },
+            RequestOutcome::Failed { attempts: 3 }
+        );
+        assert_ne!(RequestOutcome::Completed, RequestOutcome::Shed);
     }
 
     #[test]

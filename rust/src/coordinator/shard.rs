@@ -112,13 +112,14 @@ use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet};
 use std::fmt;
 
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, WindowedPercentiles};
 
+use super::faults::{outage_defer, FaultPlan};
 use super::fleet::{
     fkey, sustained_throughput_rps, sustained_weighted_rps, Device, Fleet, FleetConfig,
     FleetReport, HotPathMode, Policy, QueueDiscipline, SliceReplay, WorkCounters,
 };
-use super::request::{mix64, Request, WorkloadSource};
+use super::request::{mix64, Request, RetryPolicy, WorkloadSource};
 use super::variant::VariantTable;
 
 /// Virtual nodes per shard on the consistent-hash ring: enough that the
@@ -323,25 +324,42 @@ pub struct ShardedReport {
     /// counters (see
     /// [`WorkCounters`](super::fleet::WorkCounters)).
     pub work: WorkCounters,
+    /// Device crash events across all shards (from the installed
+    /// [`FaultPlan`]; zero on fault-free runs).
+    pub faults: u64,
+    /// Retry re-injections across all shards (each failed attempt that
+    /// still had budget left).
+    pub retries: u64,
+    /// Requests that exhausted their retry budget anywhere in the tier.
+    pub total_failed: usize,
+    /// Windowed `(p50, p95, p99)` percentiles over device downtime
+    /// (crash-to-recover, microseconds), concatenated across shards in
+    /// shard order with window capacity 32; the final partial window is
+    /// closed. Empty on fault-free runs.
+    pub recovery_percentiles: Vec<(f64, f64, f64)>,
 }
 
 impl ShardedReport {
     /// Every admitted request is accounted for exactly once:
-    /// `total_completed + total_shed` must equal the workload size.
+    /// `total_completed + total_shed + total_failed` must equal the
+    /// workload size (`total_failed` is zero on fault-free runs).
     pub fn check_conservation(&self, n_requests: usize) -> Result<(), String> {
-        let total = self.total_completed + self.total_shed;
+        let total = self.total_completed + self.total_shed + self.total_failed;
         if total != n_requests {
             return Err(format!(
-                "conservation violated: {} completed + {} shed = {total} != {n_requests}",
-                self.total_completed, self.total_shed
+                "conservation violated: {} completed + {} shed + {} failed = {total} != {n_requests}",
+                self.total_completed, self.total_shed, self.total_failed
             ));
         }
         let forwarded: usize = self.per_shard_routed.iter().sum();
-        let fleet_total: usize =
-            self.shards.iter().map(|r| r.completions.len() + r.shed).sum();
+        let fleet_total: usize = self
+            .shards
+            .iter()
+            .map(|r| r.completions.len() + r.shed + r.failures.len())
+            .sum();
         if forwarded != fleet_total {
             return Err(format!(
-                "forwarded {forwarded} != fleet completed+shed {fleet_total}"
+                "forwarded {forwarded} != fleet completed+shed+failed {fleet_total}"
             ));
         }
         Ok(())
@@ -673,6 +691,20 @@ pub enum TierError {
     /// owners by id, so ids must be workload-unique (merge tenant
     /// streams with [`merge_streams`](super::request::merge_streams)).
     DuplicateRequestId(u64),
+    /// Joiners were still waiting on a pending single-flight key when
+    /// both event heaps drained — an owner never departed. The engine
+    /// guarantees every owner departs exactly once (completed, shed, or
+    /// failed with its joiners promoted or failed in turn), so this
+    /// surfaces a broken settlement invariant as a typed error instead
+    /// of silently dropping the stranded requests.
+    StrandedJoiners {
+        /// Tenant network of the stranded cache key.
+        net: u32,
+        /// Input digest of the stranded cache key.
+        digest: u64,
+        /// Joiners left waiting when the run drained.
+        waiters: usize,
+    },
 }
 
 impl fmt::Display for TierError {
@@ -682,6 +714,11 @@ impl fmt::Display for TierError {
                 f,
                 "duplicate request id {id} — the result cache keys in-flight owners by id; \
                  merge tenant streams with merge_streams first"
+            ),
+            TierError::StrandedJoiners { net, digest, waiters } => write!(
+                f,
+                "{waiters} joiner(s) stranded on pending cache key (net {net}, digest \
+                 {digest:#x}) after the run drained — a single-flight owner never departed"
             ),
         }
     }
@@ -697,6 +734,13 @@ pub(crate) struct TierArrival {
     pub(crate) time: f64,
     pub(crate) seq: u64,
     pub(crate) req: Request,
+    /// A failover re-forward: the oldest joiner of a single-flight key
+    /// whose owner died with its retry budget exhausted, promoted to
+    /// owner. Promoted arrivals were already recorded and counted when
+    /// they first arrived, so they skip the front-door bookkeeping and
+    /// the cache probe (their key is the pending one they now own) and
+    /// go straight through the router lane into the owning shard.
+    pub(crate) promoted: bool,
 }
 
 impl PartialEq for TierArrival {
@@ -794,7 +838,7 @@ pub(crate) fn push_feedback(
     t_us: f64,
 ) {
     for next in source.on_done(id, t_us) {
-        heap.push(TierArrival { time: next.arrival_us, seq: *seq, req: next });
+        heap.push(TierArrival { time: next.arrival_us, seq: *seq, req: next, promoted: false });
         *seq += 1;
     }
 }
@@ -840,6 +884,11 @@ pub struct ShardedFleet {
     /// quality weight of each cache hit. Empty by default — one probe
     /// per lookup, every weight exactly 1.0.
     pub(crate) variants: VariantTable,
+    /// Per-shard router outage windows (absolute `[start, end)` pairs in
+    /// ascending start order) from the installed fault plan: an arrival
+    /// whose router-entry instant lands inside a window stalls until the
+    /// window ends. Always length K; all-empty on fault-free tiers.
+    pub(crate) outages: Vec<Vec<(f64, f64)>>,
 }
 
 /// [`ShardedFleet::shard_of`] with the shard count passed explicitly —
@@ -918,6 +967,15 @@ pub(crate) fn enforce_cache_bounds_parts(
 /// cache, in first-miss order — the shared reconciliation step of the
 /// single-threaded and parallel engines (promotion order is what keeps
 /// eviction decisions bit-identical across engines and oracles).
+///
+/// A key may legitimately be gone already: when an owner dies with its
+/// retry budget exhausted and no joiners are waiting, the failover path
+/// drops the cohort and removes the key mid-run (its `pending_order`
+/// entry is left behind and tolerated here). A key that still holds
+/// waiters, however, means an owner never departed — that is a broken
+/// settlement invariant and surfaces as [`TierError::StrandedJoiners`]
+/// instead of the former debug-only assert (requests must never be
+/// silently dropped).
 pub(crate) fn reconcile_pending(
     cache: &mut ResultCache,
     config: &ShardConfig,
@@ -925,18 +983,24 @@ pub(crate) fn reconcile_pending(
     pending: &mut HashMap<(u32, u64), PendingKey>,
     pending_order: Vec<(u32, u64)>,
     work: &mut WorkCounters,
-) -> u64 {
+) -> Result<u64, TierError> {
     let mut evictions = 0u64;
     for key in pending_order {
-        // pallas-lint: allow(D004, reason = "pending_order records exactly the keys inserted into pending")
-        let p = pending.remove(&key).expect("pending keys are recorded in order");
-        debug_assert!(p.waiters.is_empty(), "all owners depart before the heaps drain");
+        // settled early by the failed-owner unwind: nothing to promote
+        let Some(p) = pending.remove(&key) else { continue };
+        if !p.waiters.is_empty() {
+            return Err(TierError::StrandedJoiners {
+                net: key.0,
+                digest: key.1,
+                waiters: p.waiters.len(),
+            });
+        }
         if let OwnerFate::Finished(_, v) = p.fate {
             cache.promote((key.0, key.1, v));
             evictions += enforce_cache_bounds_parts(cache, config, naive, key.0, work);
         }
     }
-    evictions
+    Ok(evictions)
 }
 
 impl ShardedFleet {
@@ -984,6 +1048,31 @@ impl ShardedFleet {
             cache: ResultCache::default(),
             mode: HotPathMode::default(),
             variants: VariantTable::default(),
+            outages: vec![Vec::new(); k],
+        }
+    }
+
+    /// Install a deterministic fault schedule and retry policy on the
+    /// tier. Device-scoped events (crash / recover / straggler) are split
+    /// to the shard owning that device under the contiguous partition
+    /// [`ShardedFleet::new`] built (global device ids remap to each
+    /// shard's local ids); router outage windows stay at the tier and
+    /// stall the affected shard's forwarding lane for their duration.
+    /// Every shard gets the same retry policy. Installing
+    /// [`FaultPlan::none`] restores the exact pre-fault engine —
+    /// property-tested byte-identical, reports and traces.
+    pub fn set_faults(&mut self, plan: FaultPlan, retry: RetryPolicy) {
+        let mut ranges = Vec::with_capacity(self.shards.len());
+        let mut start = 0usize;
+        for f in &self.shards {
+            let end = start + f.devices.len();
+            ranges.push((start, end));
+            start = end;
+        }
+        self.outages = plan.outage_windows(self.shards.len());
+        let locals = plan.shard_split(&ranges);
+        for (f, local) in self.shards.iter_mut().zip(locals) {
+            f.set_faults(local, retry);
         }
     }
 
@@ -1172,7 +1261,7 @@ impl ShardedFleet {
         let mut heap: BinaryHeap<TierArrival> = BinaryHeap::new();
         let mut seq = 0u64;
         for req in source.initial() {
-            heap.push(TierArrival { time: req.arrival_us, seq, req });
+            heap.push(TierArrival { time: req.arrival_us, seq, req, promoted: false });
             seq += 1;
         }
         let mut injected: Vec<Request> = Vec::new();
@@ -1267,6 +1356,43 @@ impl ShardedFleet {
                     // ...then, if it owned a pending cache key, its
                     // waiting joiners settle with it
                     let Some(&key) = owner_key.get(&d.id) else { continue };
+                    if d.failed {
+                        // dead single-flight owner (retry budget
+                        // exhausted): detach it and promote the oldest
+                        // joiner to owner — it re-enters the router lane
+                        // as a promoted arrival and the key stays
+                        // InFlight. With nobody waiting the cohort is
+                        // dropped (the key's pending_order entry stays;
+                        // reconcile_pending tolerates it).
+                        owner_key.remove(&d.id);
+                        let Some(p) = pending.get_mut(&key) else { continue };
+                        if p.waiters.is_empty() {
+                            pending.remove(&key);
+                            continue;
+                        }
+                        let w = p.waiters.remove(0);
+                        let t_promo = w.exit_us.max(d.t_us);
+                        let promo = Request {
+                            id: w.id,
+                            arrival_us: t_promo,
+                            // the deadline stays anchored to the joiner's
+                            // original tier arrival: its budget shrank by
+                            // the time spent waiting on the dead owner
+                            deadline_us: w
+                                .deadline_us
+                                .map(|dl| dl - (t_promo - w.arrival_us)),
+                            net: w.net,
+                            input_digest: key.1,
+                        };
+                        heap.push(TierArrival {
+                            time: t_promo,
+                            seq,
+                            req: promo,
+                            promoted: true,
+                        });
+                        seq += 1;
+                        continue;
+                    }
                     // pallas-lint: allow(D004, reason = "owner_key and pending are inserted together and removed together")
                     let p = pending.get_mut(&key).expect("owner ids map to pending keys");
                     p.fate = if d.completed {
@@ -1298,15 +1424,19 @@ impl ShardedFleet {
             // pallas-lint: allow(D004, reason = "take_tier == true implies heap.peek() was Some in the match above")
             let ev = heap.pop().expect("the tier owns the earliest event");
             let req = ev.req;
-            if record {
-                injected.push(req);
+            if !ev.promoted {
+                if record {
+                    injected.push(req);
+                }
+                n_tier += 1;
+                span_start = span_start.min(req.arrival_us);
             }
-            n_tier += 1;
-            span_start = span_start.min(req.arrival_us);
             let s = self.shard_of(&req);
             // FIFO router queue: one coordinator front-end per shard —
-            // the delay metric counts only the wait, not the service time
-            let start = router_free[s].max(req.arrival_us);
+            // the delay metric counts only the wait, not the service
+            // time. A router outage window stalls entry until it ends
+            // (the stall counts as router delay).
+            let start = outage_defer(&self.outages[s], router_free[s].max(req.arrival_us));
             let exit = start + self.config.router_service_us;
             router_free[s] = exit;
             router_delay_sum += start - req.arrival_us;
@@ -1316,6 +1446,22 @@ impl ShardedFleet {
             // request's budget shrinks by the time spent in the router
             if let Some(dl) = fwd.deadline_us {
                 fwd.deadline_us = Some(dl - (exit - req.arrival_us));
+            }
+
+            if ev.promoted {
+                // failover re-forward of a promoted joiner: already
+                // recorded and counted at its first arrival, and its key
+                // is the pending one it now owns — skip the front-door
+                // bookkeeping and the cache probe, take ownership, and
+                // forward into the (same) owning shard
+                owner_key.insert(req.id, (req.net, req.input_digest));
+                routed[s] += 1;
+                self.shards[s].inject(fwd);
+                if !naive {
+                    let next = self.shards[s].next_event_us();
+                    refresh_clock(&mut clock, &mut clock_entry, s, next, &mut work);
+                }
+                continue;
             }
 
             if self.config.cache {
@@ -1412,7 +1558,7 @@ impl ShardedFleet {
             &mut pending,
             pending_order,
             &mut work,
-        );
+        )?;
 
         let reports: Vec<FleetReport> =
             self.shards.iter_mut().map(|f| f.end_run().0).collect();
@@ -1445,9 +1591,19 @@ impl ShardedFleet {
     /// (`prop_unified_loop_matches_two_phase_oracle`). It cannot serve
     /// closed-loop sources (no feedback path) and new code should call
     /// [`ShardedFleet::run`] / [`ShardedFleet::run_source`] instead.
+    ///
+    /// The oracle predates fault injection and models neither router
+    /// outages nor dead-owner promotion, so it panics if a fault plan is
+    /// installed — the faults-off byte-identity property is exactly what
+    /// keeps it a valid oracle for the unified loop.
     // pallas-lint: allow-item(D009, reason = "retained two-phase oracle: dense ids plus the phase-parity assert")
     pub fn run_two_phase_oracle(&mut self, requests: &[Request]) -> ShardedReport {
         let k = self.shards.len();
+        assert!(
+            self.outages.iter().all(|w| w.is_empty())
+                && self.shards.iter().all(|f| f.fault_plan().is_none()),
+            "the two-phase oracle predates fault injection; run it on fault-free tiers only"
+        );
         let mut sub: Vec<Vec<Request>> = vec![Vec::new(); k];
         let mut router_free = vec![0.0f64; k];
         let mut router_delay_sum = 0.0f64;
@@ -1672,6 +1828,18 @@ impl ShardedFleet {
             + cache_hits.iter().map(|h| self.variants.quality(h.variant)).sum::<f64>();
         let degraded = reports.iter().map(|r| r.degraded).sum::<usize>()
             + cache_hits.iter().filter(|h| h.variant > 0).count();
+        // fault accounting: shard sums plus windowed recovery-time
+        // percentiles over the concatenated per-shard downtime samples
+        // (shard order — deterministic; the partial tail window is
+        // closed by flush)
+        let total_failed: usize = reports.iter().map(|r| r.failures.len()).sum();
+        let mut recovery = WindowedPercentiles::new(32);
+        for r in &reports {
+            for &rt in &r.recovery_us {
+                recovery.push(rt);
+            }
+        }
+        let recovery_percentiles = recovery.flush().to_vec();
         ShardedReport {
             per_shard_routed,
             total_completed,
@@ -1699,6 +1867,10 @@ impl ShardedFleet {
             queue_depth_p95: p95,
             queue_depth_p99: p99,
             work,
+            faults: reports.iter().map(|r| r.faults).sum(),
+            retries: reports.iter().map(|r| r.retries).sum(),
+            total_failed,
+            recovery_percentiles,
             cache_hits,
             cache,
             shards: reports,
@@ -1709,6 +1881,7 @@ impl ShardedFleet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::{FaultEvent, FaultKind, FaultParams};
     use crate::coordinator::fleet::{gap8_mixed_devices, random_devices};
     use crate::coordinator::request::{merge_streams, Workload};
     use crate::util::check::check;
@@ -2947,5 +3120,250 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// A generated device-fault schedule for the 8-device test tier plus
+    /// a scripted router brownout on shard 0 partway through the run.
+    fn faulty_plan(rng: &mut Rng, horizon_us: f64, straggler: f64) -> FaultPlan {
+        let params = FaultParams {
+            mtbf_us: *rng.pick(&[5e4, 2e5]),
+            mttr_us: 5e4,
+            straggler_factor: straggler,
+            seed: rng.next_u64(),
+        };
+        let mut events = FaultPlan::generate(&params, 8, horizon_us).events().to_vec();
+        events.push(FaultEvent {
+            t_us: horizon_us * 0.2,
+            kind: FaultKind::RouterOutageStart { shard: 0 },
+        });
+        events.push(FaultEvent {
+            t_us: horizon_us * 0.4,
+            kind: FaultKind::RouterOutageEnd { shard: 0 },
+        });
+        FaultPlan::scripted(events)
+    }
+
+    #[test]
+    fn prop_tier_faults_off_matches_baseline() {
+        // installing [`FaultPlan::none`] (with a live retry policy) must
+        // leave the tier byte-identical — report and recorded trace — to
+        // a tier that never heard of faults, across the whole matrix:
+        // shard count x router cost x caching x discipline x stealing x
+        // hot-path mode x exec mode
+        use crate::coordinator::request::{ClosedLoopSource, TraceSource};
+        check("tier-faults-off-vs-baseline", 12, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: if rng.chance(0.5) { 120.0 } else { 0.0 },
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.5),
+                cache_capacity: *rng.pick(&[4usize, usize::MAX]),
+                exec: if rng.chance(0.5) {
+                    ExecMode::SingleThread
+                } else {
+                    ExecMode::Parallel { threads: 3 }
+                },
+                ..ShardConfig::default()
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 8,
+                batch_max: 4,
+                wakeup_cycles: 10_000,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default()
+            };
+            let naive = rng.chance(0.3);
+            let seed = rng.next_u64();
+            let mut run = |faults: bool| -> Result<(String, String), String> {
+                let mut src =
+                    ClosedLoopSource::new(6, 800.0, 80, seed).with_nets(3).with_input_universe(5);
+                let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
+                if naive {
+                    t.set_hot_path_mode(HotPathMode::NaiveOracle);
+                }
+                if faults {
+                    t.set_faults(FaultPlan::none(), RetryPolicy::default());
+                }
+                let (report, trace) = t
+                    .run_source_traced(&mut src)
+                    .map_err(|e| format!("tier run failed: {e}"))?;
+                Ok((format!("{report:?}"), TraceSource::to_jsonl(&trace)))
+            };
+            let want = run(false)?;
+            let got = run(true)?;
+            if want.0 != got.0 {
+                return Err("tier report diverged under FaultPlan::none".into());
+            }
+            if want.1 != got.1 {
+                return Err("tier trace diverged under FaultPlan::none".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tier_exactly_once_under_faults() {
+        // under an active fault schedule (device crashes, stragglers and
+        // a router brownout): conservation holds at the tier — completed
+        // + shed + failed == offered, forwarded splits exactly across
+        // outcomes — every failure burned the whole retry budget, the
+        // recovery percentiles are well formed, and an identical re-run
+        // reproduces the report byte for byte
+        check("tier-exactly-once-under-faults", 16, |rng, _| {
+            let k = *rng.pick(&[1usize, 2, 4]);
+            let config = ShardConfig {
+                shards: k,
+                router_service_us: 120.0,
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: rng.chance(0.5),
+                cache_capacity: *rng.pick(&[4usize, usize::MAX]),
+                ..ShardConfig::default()
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 8,
+                batch_max: 4,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default()
+            };
+            let reqs = tenant_workload(3, 600.0, 100, 0.4, rng.next_u64());
+            let horizon = reqs.last().map(|r| r.arrival_us).unwrap_or(0.0) + 1e5;
+            let plan = faulty_plan(rng, horizon, *rng.pick(&[1.0, 2.0]));
+            let retry = RetryPolicy { budget: rng.below(3), ..RetryPolicy::default() };
+            let run = || {
+                let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
+                t.set_faults(plan.clone(), retry);
+                t.run(&reqs)
+            };
+            let a = run();
+            if format!("{a:?}") != format!("{:?}", run()) {
+                return Err("identical faulted tier runs produced different reports".into());
+            }
+            a.check_conservation(reqs.len())?;
+            for f in a.shards.iter().flat_map(|r| r.failures.iter()) {
+                if f.attempts != retry.budget {
+                    return Err(format!(
+                        "failure gave up after {} attempts with budget {}",
+                        f.attempts, retry.budget
+                    ));
+                }
+            }
+            for &(p50, p95, p99) in &a.recovery_percentiles {
+                if !(p50 <= p95 && p95 <= p99 && p50 > 0.0) {
+                    return Err(format!("malformed recovery window ({p50}, {p95}, {p99})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tier_parallel_matches_single_thread_under_faults() {
+        // the PR's bit-exactness obligation for fault injection: with an
+        // active plan — crashes, retries, owner handoffs, a router
+        // brownout — [`ExecMode::Parallel`] must reproduce the
+        // single-threaded report AND recorded trace byte for byte, for
+        // any worker count
+        use crate::coordinator::request::TraceSource;
+        check("tier-parallel-vs-single-under-faults", 10, |rng, _| {
+            let k = *rng.pick(&[2usize, 4]);
+            let base = ShardConfig {
+                shards: k,
+                router_service_us: 120.0,
+                tenancy_aware_routing: rng.chance(0.5),
+                cache: true,
+                cache_capacity: *rng.pick(&[4usize, usize::MAX]),
+                ..ShardConfig::default()
+            };
+            let fleet_config = FleetConfig {
+                queue_bound: 8,
+                batch_max: 4,
+                discipline: *rng.pick(&[QueueDiscipline::Fifo, QueueDiscipline::Edf]),
+                steal: rng.chance(0.5),
+                ..FleetConfig::default()
+            };
+            let reqs = tenant_workload(3, 700.0, 90, 0.4, rng.next_u64());
+            let horizon = reqs.last().map(|r| r.arrival_us).unwrap_or(0.0) + 1e5;
+            let plan = faulty_plan(rng, horizon, *rng.pick(&[1.0, 2.0]));
+            let retry = RetryPolicy { budget: rng.below(3), ..RetryPolicy::default() };
+            let mut run = |exec: ExecMode| -> Result<(String, String), String> {
+                let config = ShardConfig { exec, ..base };
+                let mut t = tier(8, k, Policy::TenancyAware, fleet_config, config);
+                t.set_faults(plan.clone(), retry);
+                let (report, trace) = t
+                    .run_source_traced(&mut SliceReplay(&reqs))
+                    .map_err(|e| format!("tier run failed: {e}"))?;
+                Ok((format!("{report:?}"), TraceSource::to_jsonl(&trace)))
+            };
+            let a = run(ExecMode::SingleThread)?;
+            for threads in [1usize, 3] {
+                let b = run(ExecMode::Parallel { threads })?;
+                if a.0 != b.0 {
+                    return Err(format!("Parallel {{ threads: {threads} }} report diverged"));
+                }
+                if a.1 != b.1 {
+                    return Err(format!("Parallel {{ threads: {threads} }} trace diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dead_owner_departure_promotes_oldest_joiner() {
+        // single-flight handoff: request 1 owns the cache key and is in
+        // flight on d0 when d0 crashes with a zero retry budget, so the
+        // owner fails. Request 2 — same (net, digest) — joined the
+        // pending entry while the owner was in flight. Departure
+        // settlement must detect the dead owner and promote the joiner
+        // to a fresh owner attempt, which lands on the healthy d1 and
+        // completes; nothing hangs, nothing is double-counted.
+        let config = ShardConfig {
+            shards: 1,
+            router_service_us: 50.0,
+            cache: true,
+            ..ShardConfig::default()
+        };
+        let mut t = ShardedFleet::new(
+            gap8_mixed_devices(2, 300_000),
+            Policy::RoundRobin,
+            FleetConfig::default(),
+            config,
+        );
+        let plan = FaultPlan::scripted(vec![FaultEvent {
+            t_us: 500.0,
+            kind: FaultKind::Crash { device: 0 },
+        }]);
+        t.set_faults(plan, RetryPolicy::off());
+        let req = |id: u64, at: f64| Request {
+            id,
+            arrival_us: at,
+            deadline_us: None,
+            net: 0,
+            input_digest: 42,
+        };
+        let report = t.run(&[req(1, 0.0), req(2, 100.0)]);
+        report.check_conservation(2).expect("conservation under owner handoff");
+        assert_eq!(report.faults, 1);
+        assert_eq!(report.total_failed, 1);
+        let failed: Vec<u64> =
+            report.shards.iter().flat_map(|r| r.failures.iter().map(|f| f.id)).collect();
+        assert_eq!(failed, vec![1], "the crashed owner must fail (budget 0)");
+        let done: Vec<u64> =
+            report.shards.iter().flat_map(|r| r.completions.iter().map(|c| c.id)).collect();
+        assert_eq!(done, vec![2], "the promoted joiner must complete as the new owner");
+        assert_eq!(done.len() + failed.len(), 2);
+        assert!(
+            report.cache_hits.is_empty(),
+            "the joiner was promoted to owner, not served from the cache"
+        );
+        assert_eq!(report.retries, 0, "promotion is an ownership handoff, not a retry");
+        assert_eq!(
+            report.shards[0].completions[0].device,
+            1,
+            "the promoted attempt must route to the healthy device"
+        );
     }
 }

@@ -8,11 +8,12 @@
 
 use pulpnn_mp::bench::{ablate, figures};
 use pulpnn_mp::coordinator::{
-    gap8_mixed_devices, merge_streams, ClosedLoopSource, DegradePolicy, Device, ExecMode, Fleet,
-    FleetConfig, Policy, QueueDiscipline, Request, ShardConfig, ShardedFleet, TraceSource,
-    VariantTable, Workload, DEFAULT_WAKEUP_CYCLES,
+    gap8_mixed_devices, merge_streams, ClosedLoopSource, DegradePolicy, Device, ExecMode,
+    FaultParams, FaultPlan, Fleet, FleetConfig, Policy, QueueDiscipline, Request, RetryPolicy,
+    ShardConfig, ShardedFleet, TraceSource, VariantTable, Workload, DEFAULT_WAKEUP_CYCLES,
 };
 use pulpnn_mp::energy::{DeviceClass, GAP8_HP, GAP8_LP};
+use pulpnn_mp::util::stats::percentile;
 use pulpnn_mp::kernels::netrun::GapBackend;
 use pulpnn_mp::qnn::network::demo_cnn;
 use pulpnn_mp::qnn::tensor::QTensor;
@@ -59,7 +60,13 @@ networks & runtime:
               precision variant instead of shedding once a queue passes
               the watermark (--floors NET:MINQ,.. pins per-tenant
               accuracy floors), and --device-classes lp,hp,m7,l4 builds
-              a heterogeneous fleet from the paper's measured classes
+              a heterogeneous fleet from the paper's measured classes;
+              fault injection: --mtbf-us US generates seeded per-device
+              crash/recover cycles (--mttr-us US mean repair,
+              --straggler F stretches a recovering device's service by F)
+              recovered by bounded retries (--retry-budget N, 0 = fail on
+              first crash), and --fault-trace-in/--fault-trace-out FILE
+              replay/record the fault schedule as JSONL
   emit-spec   print the demo network spec JSON (shared rust/python format)
 
 maintenance:
@@ -453,6 +460,13 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     let think_us = args.opt_f64("think-us", 5_000.0);
     let trace_in = args.opt_maybe("trace-in");
     let trace_out = args.opt_maybe("trace-out");
+    // fault-injection knobs (all absent = the byte-identical fault-free engine)
+    let mtbf_us = args.opt_f64("mtbf-us", 0.0); // 0 = no generated crashes
+    let mttr_us = args.opt_f64("mttr-us", 100_000.0);
+    let straggler = args.opt_f64("straggler", 1.0);
+    let retry_budget = args.opt_u64("retry-budget", 3) as u32;
+    let fault_trace_in = args.opt_maybe("fault-trace-in");
+    let fault_trace_out = args.opt_maybe("fault-trace-out");
     // per-inference cycles from the simulated demo CNN
     let net = demo_cnn().materialize().unwrap();
     let mut rng = Rng::new(seed);
@@ -587,10 +601,66 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         0
     };
 
+    // the fault schedule: a replayed trace beats generation; generation
+    // engages only when --mtbf-us is given, over the horizon of the
+    // offered arrivals (closed loops generate arrivals inside the run,
+    // so their horizon is estimated from the request budget and rate)
+    let fault_plan: Option<FaultPlan> = if let Some(path) = &fault_trace_in {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error reading fault trace {path}: {e}");
+                return 1;
+            }
+        };
+        match FaultPlan::parse_jsonl(&text) {
+            Ok(p) => {
+                println!("replaying fault trace {path}: {} events", p.events().len());
+                Some(p)
+            }
+            Err(e) => {
+                eprintln!("error parsing fault trace {path}: {e}");
+                return 1;
+            }
+        }
+    } else if mtbf_us > 0.0 {
+        let horizon_us = requests
+            .last()
+            .map(|r| r.arrival_us)
+            .unwrap_or(n as f64 * 1e6 / rate.max(1e-9));
+        let p = FaultPlan::generate(
+            &FaultParams { mtbf_us, mttr_us, straggler_factor: straggler, seed },
+            devices,
+            horizon_us,
+        );
+        println!(
+            "fault injection: mtbf {} us / mttr {} us over {devices} device(s) \
+             -> {} scheduled events (retry budget {retry_budget})",
+            f(mtbf_us, 0),
+            f(mttr_us, 0),
+            p.events().len()
+        );
+        Some(p)
+    } else {
+        None
+    };
+    if let Some(path) = &fault_trace_out {
+        let p = fault_plan.clone().unwrap_or_else(FaultPlan::none);
+        if let Err(e) = std::fs::write(path, p.to_jsonl()) {
+            eprintln!("error writing fault trace {path}: {e}");
+            return 1;
+        }
+        println!("dumped {} fault events to {path}", p.events().len());
+    }
+    let retry = RetryPolicy { budget: retry_budget, ..RetryPolicy::default() };
+
     if !sharded {
         let mut fleet = Fleet::with_config(nodes, policy, config);
         if let Some(table) = variants.clone() {
             fleet.set_variants(table);
+        }
+        if let Some(plan) = &fault_plan {
+            fleet.set_faults(plan.clone(), retry);
         }
         let (report, offered) = if closed_loop > 0 {
             let mut src = ClosedLoopSource::new(closed_loop, think_us, n, seed)
@@ -632,6 +702,22 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         );
         println!("  deadline misses: {}", report.deadline_misses);
         println!("  shed requests  : {}", report.shed);
+        if fault_plan.is_some() {
+            println!(
+                "  faults         : {} crash(es), {} retry(ies), {} failed",
+                report.faults,
+                report.retries,
+                report.failures.len()
+            );
+            if !report.recovery_us.is_empty() {
+                println!(
+                    "  recovery       : p50 {} / p95 {} / p99 {} ms",
+                    f(percentile(&report.recovery_us, 50.0) / 1e3, 2),
+                    f(percentile(&report.recovery_us, 95.0) / 1e3, 2),
+                    f(percentile(&report.recovery_us, 99.0) / 1e3, 2)
+                );
+            }
+        }
         if brownout > 0 {
             println!("  degraded       : {}", report.degraded);
             println!("  quality goodput: {} rps", f(report.quality_weighted_goodput, 1));
@@ -678,6 +764,9 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
     if let Some(table) = variants.clone() {
         tier.set_variants(table);
     }
+    if let Some(plan) = &fault_plan {
+        tier.set_faults(plan.clone(), retry);
+    }
     let (report, offered) = if closed_loop > 0 {
         // the unified tier event loop closes the feedback edge across
         // routers, shards and the result cache, so the client pool
@@ -723,9 +812,23 @@ fn cmd_serve(args: &mut Args, seed: u64) -> i32 {
         if cache { "on" } else { "off" }
     );
     println!(
-        "  completed      : {} of {offered} ({} shed)",
-        report.total_completed, report.total_shed
+        "  completed      : {} of {offered} ({} shed, {} failed)",
+        report.total_completed, report.total_shed, report.total_failed
     );
+    if fault_plan.is_some() {
+        println!(
+            "  faults         : {} crash(es), {} retry(ies), {} failed",
+            report.faults, report.retries, report.total_failed
+        );
+        for (w, (p50, p95, p99)) in report.recovery_percentiles.iter().enumerate() {
+            println!(
+                "  recovery w{w}    : p50 {} / p95 {} / p99 {} ms",
+                f(p50 / 1e3, 2),
+                f(p95 / 1e3, 2),
+                f(p99 / 1e3, 2)
+            );
+        }
+    }
     println!("  throughput     : {} rps", f(report.throughput_rps, 1));
     if brownout > 0 {
         println!("  degraded       : {}", report.degraded);

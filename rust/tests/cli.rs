@@ -263,6 +263,51 @@ fn serve_trace_roundtrip_through_files() {
 }
 
 #[test]
+fn serve_fault_injection_reports_and_replays_the_schedule() {
+    // a generated fault schedule is recorded as JSONL and replayed
+    // bit-exactly through --fault-trace-in
+    let path = std::env::temp_dir().join(format!("pulpnn_faults_{}.jsonl", std::process::id()));
+    let path_s = path.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "serve",
+        "--devices",
+        "2",
+        "--requests",
+        "300",
+        "--rate",
+        "400",
+        "--mtbf-us",
+        "200000",
+        "--mttr-us",
+        "20000",
+        "--retry-budget",
+        "2",
+        "--fault-trace-out",
+        path_s,
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("fault injection: mtbf"), "{out}");
+    assert!(out.contains("faults         :"), "{out}");
+    assert!(out.contains("fault events to"), "{out}");
+    assert!(!err.contains("unknown option"), "{err}");
+    let (out2, err2, ok2) = run(&[
+        "serve",
+        "--devices",
+        "2",
+        "--requests",
+        "300",
+        "--rate",
+        "400",
+        "--fault-trace-in",
+        path_s,
+    ]);
+    assert!(ok2, "{err2}");
+    assert!(out2.contains("replaying fault trace"), "{out2}");
+    assert!(out2.contains("faults         :"), "{out2}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn serve_bounded_cache_reports_evictions() {
     let (out, err, ok) = run(&[
         "serve",

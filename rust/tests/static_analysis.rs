@@ -1,5 +1,5 @@
 //! Tier-1 enforcement of the `pallas-lint` determinism & invariant
-//! rules (D001–D010, `docs/STATIC_ANALYSIS.md`): the whole `rust/` +
+//! rules (D001–D011, `docs/STATIC_ANALYSIS.md`): the whole `rust/` +
 //! `examples/` tree must lint clean — every diagnostic is either fixed
 //! or carries a reviewed `allow(<rules>, reason = "...")` annotation
 //! (suppressed diagnostics are retained with `allowed = true` and do
